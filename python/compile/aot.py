@@ -1,0 +1,280 @@
+"""AOT exporter: train the tiny LMs, dump weight bundles + golden vectors,
+and lower the decode/prefill/kernel computations to HLO **text** for the
+rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published `xla` crate) rejects; the text parser reassigns ids.
+See /opt/xla-example/README.md.
+
+Outputs under --out (default ../artifacts):
+  manifest.json                 shapes/configs for every artifact
+  model_<name>.{json,bin}       weight bundles (rust tensor_io format)
+  golden_<name>.{json,bin}      parity vectors: tokens + expected logits
+  decode_step_<name>.hlo.txt    dense decode step (token, pos, caches)
+  prefill_<name>.hlo.txt        prompt prefill (tokens -> logits + caches)
+  masked_softmax_attn.hlo.txt   L1 pallas masked softmax (gathered layout)
+  masked_relu_attn.hlo.txt      L1 pallas masked ReLU^alpha
+  train_log.json                loss curves of the build-time training
+
+Idempotent: `make artifacts` skips everything if the manifest exists and
+is newer than the python sources (the Makefile handles staleness).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from . import train as train_mod
+from .kernels import hsr_attn
+
+# Context length the dense decode-step artifact is compiled for.
+DECODE_N_CTX = 512
+PREFILL_T = 256
+# Gathered-block capacity of the exported masked-attention kernels.
+KERNEL_R_MAX = 256
+KERNEL_D_HEAD = 32
+KERNEL_HEADS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the model weights are baked into the
+    # HLO as constants; the default printer elides them to "{...}" which
+    # parses back as garbage on the rust side.
+    return comp.as_hlo_text(True)
+
+
+def save_bundle(stem: str, tensors: dict[str, np.ndarray], meta: dict) -> None:
+    """Write the rust `tensor_io` format: <stem>.json + <stem>.bin."""
+    blob = bytearray()
+    manifest_tensors = {}
+    for name in sorted(tensors):
+        arr = np.asarray(tensors[name], dtype=np.float32)
+        manifest_tensors[name] = {
+            "offset": len(blob) // 4,
+            "shape": list(arr.shape),
+        }
+        blob.extend(arr.astype("<f4").tobytes())
+    manifest = {"dtype": "f32", "byte_len": len(blob), "tensors": manifest_tensors}
+    manifest.update(meta)
+    with open(stem + ".json", "w") as f:
+        json.dump(manifest, f)
+    with open(stem + ".bin", "wb") as f:
+        f.write(bytes(blob))
+
+
+def export_model(cfg, params, losses, out_dir: str) -> dict:
+    """Weights + golden vectors + HLO artifacts for one model size."""
+    name = cfg.name
+    np_params = {k: np.asarray(v) for k, v in params.items()}
+    meta = {
+        "config": {
+            "name": cfg.name,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ffn": cfg.d_ffn,
+            "vocab": model_mod.VOCAB_SIZE,
+            "rope_theta": model_mod.ROPE_THETA,
+            "rms_eps": model_mod.RMS_EPS,
+        },
+        "final_loss": losses[-1] if losses else None,
+    }
+    save_bundle(os.path.join(out_dir, f"model_{name}"), np_params, meta)
+
+    # Golden vectors: two fixed token sequences and their logits, plus a
+    # decode-step check (prefill 31 tokens, decode the 32nd).
+    golden_tokens = data_mod.eval_document(seed=7, length=64).astype(np.int32)
+    seq_a = golden_tokens[:32]
+    seq_b = golden_tokens[32:64]
+    logits_a = np.asarray(model_mod.forward(params, cfg, jnp.asarray(seq_a)))
+    logits_b = np.asarray(model_mod.forward(params, cfg, jnp.asarray(seq_b)))
+    # Decode-step golden: cache from prefill of seq_a[:31], then step.
+    _, k_cache, v_cache = model_mod.prefill(params, cfg, jnp.asarray(seq_a[:31]))
+    pad = DECODE_N_CTX - 31
+    k_pad = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v_pad = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    step_logits, _, _ = model_mod.decode_step(
+        params, cfg, jnp.asarray(seq_a[31]), jnp.asarray(31), k_pad, v_pad
+    )
+    save_bundle(
+        os.path.join(out_dir, f"golden_{name}"),
+        {
+            "tokens_a": seq_a.astype(np.float32),
+            "tokens_b": seq_b.astype(np.float32),
+            "logits_a": logits_a,
+            "logits_b": logits_b,
+            "decode_logits": np.asarray(step_logits),
+        },
+        {"decode_pos": 31, "n_ctx": DECODE_N_CTX},
+    )
+    return meta["config"]
+
+
+def export_hlo(cfg, params, out_dir: str) -> dict:
+    """Lower decode-step and prefill for this model to HLO text. Weights
+    are baked in as constants (closure capture) so the rust side only
+    feeds activations — one compiled executable per model, like a real
+    serving deployment."""
+    name = cfg.name
+    entries = {}
+
+    def decode_fn(token, pos, k_cache, v_cache):
+        return model_mod.decode_step(params, cfg, token, pos, k_cache, v_cache)
+
+    cache_shape = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.n_heads, DECODE_N_CTX, cfg.d_head), jnp.float32
+    )
+    lowered = jax.jit(decode_fn).lower(
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        cache_shape,
+        cache_shape,
+    )
+    path = os.path.join(out_dir, f"decode_step_{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[f"decode_step_{name}"] = {
+        "file": os.path.basename(path),
+        "inputs": [
+            {"name": "token", "shape": [], "dtype": "s32"},
+            {"name": "pos", "shape": [], "dtype": "s32"},
+            {"name": "k_cache", "shape": list(cache_shape.shape), "dtype": "f32"},
+            {"name": "v_cache", "shape": list(cache_shape.shape), "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "logits", "shape": [model_mod.VOCAB_SIZE], "dtype": "f32"},
+            {"name": "new_k", "shape": [cfg.n_layers, cfg.n_heads, cfg.d_head], "dtype": "f32"},
+            {"name": "new_v", "shape": [cfg.n_layers, cfg.n_heads, cfg.d_head], "dtype": "f32"},
+        ],
+        "n_ctx": DECODE_N_CTX,
+    }
+
+    def prefill_fn(tokens):
+        return model_mod.prefill(params, cfg, tokens)
+
+    lowered = jax.jit(prefill_fn).lower(
+        jax.ShapeDtypeStruct((PREFILL_T,), jnp.int32)
+    )
+    path = os.path.join(out_dir, f"prefill_{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries[f"prefill_{name}"] = {
+        "file": os.path.basename(path),
+        "inputs": [{"name": "tokens", "shape": [PREFILL_T], "dtype": "s32"}],
+        "outputs": [
+            {"name": "logits", "shape": [PREFILL_T, model_mod.VOCAB_SIZE], "dtype": "f32"},
+            {
+                "name": "k_cache",
+                "shape": [cfg.n_layers, cfg.n_heads, PREFILL_T, cfg.d_head],
+                "dtype": "f32",
+            },
+            {
+                "name": "v_cache",
+                "shape": [cfg.n_layers, cfg.n_heads, PREFILL_T, cfg.d_head],
+                "dtype": "f32",
+            },
+        ],
+    }
+    return entries
+
+
+def export_kernels(out_dir: str) -> dict:
+    """Standalone L1 pallas kernels in the gathered layout (DESIGN.md
+    §Hardware-Adaptation): the rust engine can execute the paper's hot
+    spot through PJRT directly."""
+    entries = {}
+    h, r, dh = KERNEL_HEADS, KERNEL_R_MAX, KERNEL_D_HEAD
+    q_s = jax.ShapeDtypeStruct((h, dh), jnp.float32)
+    g_s = jax.ShapeDtypeStruct((h, r, dh), jnp.float32)
+    c_s = jax.ShapeDtypeStruct((h,), jnp.int32)
+
+    def softmax_fn(q, kg, vg, count):
+        return (hsr_attn.masked_softmax_attention(q, kg, vg, count),)
+
+    lowered = jax.jit(softmax_fn).lower(q_s, g_s, g_s, c_s)
+    path = os.path.join(out_dir, "masked_softmax_attn.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries["masked_softmax_attn"] = {
+        "file": os.path.basename(path),
+        "heads": h,
+        "r_max": r,
+        "d_head": dh,
+    }
+
+    def relu_fn(q, kg, vg, count):
+        return (hsr_attn.masked_relu_attention(q, kg, vg, count, bias=0.0, alpha=2),)
+
+    lowered = jax.jit(relu_fn).lower(q_s, g_s, g_s, c_s)
+    path = os.path.join(out_dir, "masked_relu_attn.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    entries["masked_relu_attn"] = {
+        "file": os.path.basename(path),
+        "heads": h,
+        "r_max": r,
+        "d_head": dh,
+        "alpha": 2,
+        "bias": 0.0,
+    }
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--models", default="mini,small,base")
+    ap.add_argument("--hlo-model", default="small", help="model whose decode/prefill HLO is exported")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--fast", action="store_true", help="tiny training run for CI/tests")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: dict = {"models": {}, "hlo": {}, "kernel_r_max": KERNEL_R_MAX}
+    train_log: dict = {}
+    for name in args.models.split(","):
+        cfg = model_mod.CONFIGS[name]
+        steps = 30 if args.fast else args.steps
+        corpus = 60_000 if args.fast else 400_000
+        print(f"=== training {name} ({cfg.param_count():,} params, {steps} steps)", flush=True)
+        params, losses = train_mod.train(
+            cfg, seed=42, steps=steps, corpus_bytes=corpus,
+            seq_len=96 if args.fast else 192,
+            batch_size=8 if args.fast else 12,
+        )
+        manifest["models"][name] = export_model(cfg, params, losses, out_dir)
+        train_log[name] = losses
+        if name == args.hlo_model:
+            print(f"=== lowering HLO for {name}", flush=True)
+            manifest["hlo"].update(export_hlo(cfg, params, out_dir))
+
+    manifest["hlo"].update(export_kernels(out_dir))
+    with open(os.path.join(out_dir, "train_log.json"), "w") as f:
+        json.dump(train_log, f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts written to {out_dir}", flush=True)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

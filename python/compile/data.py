@@ -1,0 +1,125 @@
+"""Synthetic training corpus with long-range structure.
+
+Stand-in for the paper's PaulGrahamEssays / NeedleInAHaystack evaluation
+data (Section 7): no dataset or network access exists in this environment,
+so we synthesize byte-level text that (a) has enough local structure for a
+tiny char-LM to learn something non-trivial, and (b) contains *long-range
+dependencies* — "needle" facts stated once and referenced much later — so
+that attention over distant context genuinely matters, which is the
+property the top-r experiments need (see DESIGN.md §3).
+
+Everything is deterministic from the seed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB_SIZE = 256  # byte-level
+
+_SUBJECTS = [
+    "the merchant", "a courier", "the archivist", "our captain",
+    "the gardener", "a scholar", "the engineer", "that piper",
+    "the warden", "an envoy", "the mason", "a herald",
+]
+_VERBS = [
+    "carries", "guards", "studies", "repairs", "paints", "sells",
+    "hides", "records", "collects", "delivers", "forges", "maps",
+]
+_OBJECTS = [
+    "copper coins", "sealed letters", "glass lenses", "star charts",
+    "dried herbs", "iron keys", "silk banners", "clay tablets",
+    "silver rings", "oak barrels", "wax seals", "old ledgers",
+]
+_PLACES = [
+    "by the river", "near the gate", "under the bridge", "in the tower",
+    "at the market", "beside the mill", "within the vault", "on the hill",
+]
+
+_NAMES = [
+    "alder", "brook", "cedar", "dahlia", "ember", "fennel", "garnet",
+    "hazel", "iris", "juniper", "koa", "laurel", "maple", "nettle",
+]
+_SECRETS = [
+    "amber", "basalt", "cobalt", "dusk", "echo", "flint", "glow",
+    "harbor", "ink", "jade", "kelp", "lumen", "moss", "nectar",
+]
+
+
+def _sentence(rng: np.random.Generator) -> str:
+    return "{} {} {} {}. ".format(
+        _SUBJECTS[rng.integers(len(_SUBJECTS))],
+        _VERBS[rng.integers(len(_VERBS))],
+        _OBJECTS[rng.integers(len(_OBJECTS))],
+        _PLACES[rng.integers(len(_PLACES))],
+    )
+
+
+def _needle_fact(rng: np.random.Generator) -> tuple[str, str, str]:
+    """A (statement, question, answer) needle triple."""
+    name = _NAMES[rng.integers(len(_NAMES))]
+    secret = _SECRETS[rng.integers(len(_SECRETS))]
+    statement = f"remember: {name} keeps the {secret} token. "
+    question = f"the {name} token is "
+    answer = secret
+    return statement, question, answer
+
+
+def generate_document(rng: np.random.Generator, length: int, needle_period: int = 6) -> str:
+    """One document: filler sentences with periodic needle statements whose
+    answers are queried later in the same document."""
+    parts: list[str] = []
+    pending: list[tuple[str, str]] = []  # (question, answer) to emit later
+    total = 0
+    i = 0
+    while total < length:
+        if i % needle_period == needle_period - 1:
+            statement, question, answer = _needle_fact(rng)
+            parts.append(statement)
+            total += len(statement)
+            pending.append((question, answer))
+        elif pending and rng.random() < 0.35:
+            question, answer = pending.pop(rng.integers(len(pending)))
+            ref = question + answer + ". "
+            parts.append(ref)
+            total += len(ref)
+        else:
+            s = _sentence(rng)
+            parts.append(s)
+            total += len(s)
+        i += 1
+    return "".join(parts)[:length]
+
+
+def corpus_bytes(seed: int, total_bytes: int) -> np.ndarray:
+    """Concatenated documents as a uint8 array of exactly `total_bytes`."""
+    rng = np.random.default_rng(seed)
+    chunks: list[np.ndarray] = []
+    remaining = total_bytes
+    while remaining > 0:
+        doc_len = int(min(remaining, rng.integers(2_000, 6_000)))
+        doc = generate_document(rng, doc_len)
+        arr = np.frombuffer(doc.encode("ascii", errors="replace"), dtype=np.uint8)
+        chunks.append(arr[:doc_len])
+        remaining -= doc_len
+    out = np.concatenate(chunks)[:total_bytes]
+    assert out.dtype == np.uint8 and len(out) == total_bytes
+    return out
+
+
+def batches(data: np.ndarray, seq_len: int, batch_size: int, steps: int, seed: int):
+    """Yield (inputs, targets) int32 batches for next-byte prediction."""
+    rng = np.random.default_rng(seed)
+    n = len(data) - seq_len - 1
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch_size)
+        x = np.stack([data[s : s + seq_len] for s in starts]).astype(np.int32)
+        y = np.stack([data[s + 1 : s + seq_len + 1] for s in starts]).astype(np.int32)
+        yield x, y
+
+
+def eval_document(seed: int, length: int) -> np.ndarray:
+    """A held-out document (distinct seed space) for perplexity evals."""
+    rng = np.random.default_rng(seed + 10_000_019)
+    doc = generate_document(rng, length)
+    return np.frombuffer(doc.encode("ascii", errors="replace"), dtype=np.uint8)[:length]

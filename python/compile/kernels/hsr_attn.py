@@ -1,0 +1,218 @@
+"""L1 Pallas kernels for HSR-sparse attention.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the HSR report set
+is ragged and data-dependent — hostile to systolic-array tiling — so the
+kernels take a *padded gathered layout*: the L3 coordinator gathers the
+reported K/V rows into fixed-size [r_max, d] tiles and passes a valid-row
+count; masking replaces control flow inside the kernel. BlockSpec streams
+key tiles through VMEM; accumulation runs in fp32.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, so interpret mode is the correctness
+path, and real-TPU efficiency is *estimated* from the block shapes
+(EXPERIMENTS.md §Perf). Kernels deliberately use only TPU-friendly
+primitives (matmul on [block, d] tiles, elementwise, masked reductions).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Key-tile size: 128 rows keeps q-block x k-tile MXU-shaped and bounds the
+# VMEM working set at (block_q + 2*BLOCK_K) * d * 4 bytes.
+BLOCK_K = 128
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax attention over a padded gathered block (Definition B.2).
+# ---------------------------------------------------------------------------
+
+def _masked_softmax_kernel(q_ref, kg_ref, vg_ref, count_ref, o_ref, *, r_max):
+    """One query row per program. Streaming (flash-style) softmax over
+    BLOCK_K-sized tiles of the gathered keys."""
+    q = q_ref[...]  # [d]
+    count = count_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    num_tiles = r_max // BLOCK_K
+
+    def body(t, carry):
+        m_prev, l_prev, acc = carry
+        kg = kg_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]  # [BLOCK_K, d]
+        vg = vg_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]
+        s = kg @ q * scale  # [BLOCK_K]
+        idx = t * BLOCK_K + jnp.arange(BLOCK_K)
+        valid = idx < count
+        s = jnp.where(valid, s, -jnp.inf)
+        m_new = jnp.maximum(m_prev, s.max())
+        # Guard the all-invalid tile: keep the old maximum.
+        m_new = jnp.where(jnp.isfinite(m_new), m_new, m_prev)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # [BLOCK_K]
+        l_new = l_prev * corr + p.sum()
+        acc = acc * corr + p @ vg  # [d]
+        return m_new, l_new, acc
+
+    # m starts at a large negative *finite* value so exp(m_prev - m_new)
+    # is well-defined before the first valid tile.
+    init = (jnp.float32(-1e30), jnp.float32(0.0), jnp.zeros((d,), jnp.float32))
+    m_fin, l_fin, acc = jax.lax.fori_loop(0, num_tiles, body, init)
+    safe = jnp.where(l_fin > 0.0, l_fin, 1.0)
+    o_ref[...] = jnp.where(l_fin > 0.0, acc / safe, 0.0)
+
+
+def masked_softmax_attention(q, kg, vg, count, *, interpret: bool = True):
+    """Pallas masked softmax attention.
+
+    q: [m, d]; kg, vg: [m, r_max, d]; count: [m] int32 -> [m, d].
+    r_max is padded up to a BLOCK_K multiple internally.
+    """
+    m, d = q.shape
+    r_max = kg.shape[1]
+    r_pad = _ceil_to(max(r_max, BLOCK_K), BLOCK_K)
+    if r_pad != r_max:
+        pad = [(0, 0), (0, r_pad - r_max), (0, 0)]
+        kg = jnp.pad(kg, pad)
+        vg = jnp.pad(vg, pad)
+    kernel = functools.partial(_masked_softmax_kernel, r_max=r_pad)
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+            pl.BlockSpec((None, r_pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, r_pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(q, kg, vg, count)
+
+
+# ---------------------------------------------------------------------------
+# Masked ReLU^alpha attention over a padded gathered block (Definition 1.2
+# restricted to the HSR report set — exact, no approximation error).
+# ---------------------------------------------------------------------------
+
+def _masked_relu_kernel(q_ref, kg_ref, vg_ref, count_ref, o_ref, *, r_max, alpha, bias):
+    q = q_ref[...]
+    count = count_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    num_tiles = r_max // BLOCK_K
+
+    def body(t, carry):
+        denom, acc = carry
+        kg = kg_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]
+        vg = vg_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]
+        s = kg @ q * scale - bias
+        idx = t * BLOCK_K + jnp.arange(BLOCK_K)
+        valid = idx < count
+        a = jnp.where(valid, jnp.maximum(s, 0.0) ** alpha, 0.0)
+        return denom + a.sum(), acc + a @ vg
+
+    denom, acc = jax.lax.fori_loop(
+        0, num_tiles, body, (jnp.float32(0.0), jnp.zeros((d,), jnp.float32))
+    )
+    safe = jnp.where(denom > 0.0, denom, 1.0)
+    o_ref[...] = jnp.where(denom > 0.0, acc / safe, 0.0)
+
+
+def masked_relu_attention(q, kg, vg, count, bias, alpha: int = 1, *, interpret: bool = True):
+    """Pallas masked ReLU^alpha attention (same layout as softmax)."""
+    m, d = q.shape
+    r_max = kg.shape[1]
+    r_pad = _ceil_to(max(r_max, BLOCK_K), BLOCK_K)
+    if r_pad != r_max:
+        pad = [(0, 0), (0, r_pad - r_max), (0, 0)]
+        kg = jnp.pad(kg, pad)
+        vg = jnp.pad(vg, pad)
+    kernel = functools.partial(
+        _masked_relu_kernel, r_max=r_pad, alpha=alpha, bias=float(bias)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+            pl.BlockSpec((None, r_pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, r_pad, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(q, kg, vg, count)
+
+
+# ---------------------------------------------------------------------------
+# Dense attention kernels (naive-baseline shape): full K/V, flash-style
+# streaming over key tiles. Used for the dense decode-step artifact and as
+# the L1 comparator in kernel tests.
+# ---------------------------------------------------------------------------
+
+def _dense_softmax_kernel(q_ref, k_ref, v_ref, o_ref, *, n):
+    q = q_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    num_tiles = n // BLOCK_K
+
+    def body(t, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]
+        v = v_ref[pl.dslice(t * BLOCK_K, BLOCK_K), :]
+        s = k @ q * scale
+        m_new = jnp.maximum(m_prev, s.max())
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        return m_new, l_prev * corr + p.sum(), acc * corr + p @ v
+
+    init = (jnp.float32(-1e30), jnp.float32(0.0), jnp.zeros((d,), jnp.float32))
+    _, l_fin, acc = jax.lax.fori_loop(0, num_tiles, body, init)
+    o_ref[...] = acc / l_fin
+
+
+def dense_softmax_attention(q, k, v, *, interpret: bool = True):
+    """Pallas dense softmax attention. q: [m,d]; k,v: [n,d] (n must be a
+    BLOCK_K multiple — the AOT exporter pads caches to this)."""
+    m, d = q.shape
+    n = k.shape[0]
+    assert n % BLOCK_K == 0, f"n={n} must be a multiple of {BLOCK_K}"
+    kernel = functools.partial(_dense_softmax_kernel, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((None, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(r_max: int, d: int, block_q: int = 1) -> int:
+    """Estimated VMEM working set of the masked kernels: the q block, one
+    K tile, one V tile, and the accumulator (fp32)."""
+    return 4 * (block_q * d + 2 * BLOCK_K * d + block_q * d)
+
+
+def mxu_utilization_estimate(r_max: int, d: int) -> float:
+    """Fraction of MXU-shaped work in the masked kernel: the [BLOCK_K, d]
+    x [d] matvecs dominate; utilization is bounded by d/128 lane fill for
+    d < 128 (8x128x128 MXU tiles)."""
+    lane_fill = min(d, 128) / 128.0
+    sublane_fill = min(BLOCK_K, 128) / 128.0
+    return lane_fill * sublane_fill

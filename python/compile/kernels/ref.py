@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in `hsr_attn.py` has its reference here, written as
+plainly as possible straight from the paper's definitions:
+
+* ``softmax_attention``        — Definition 1.1.
+* ``relu_attention``           — Definition 1.2 (ReLU^alpha with bias b).
+* ``masked_softmax_attention`` — Definition B.2 via a padded index layout
+  (the serving engine gathers the HSR-reported rows and pads to r_max).
+* ``masked_relu_attention``    — the ReLU^alpha counterpart.
+
+pytest (`python/tests/test_kernel.py`) asserts allclose between these and
+the Pallas implementations across hypothesis-generated shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax_attention(q, k, v):
+    """Definition 1.1: Softmax(QK^T/sqrt(d)) V.
+
+    q: [m, d], k: [n, d], v: [n, d] -> [m, d]
+    """
+    d = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.float32(d))
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v
+
+
+def relu_attention(q, k, v, bias, alpha: int = 1):
+    """Definition 1.2: D^{-1} ReLU^alpha(QK^T/sqrt(d) - b) V.
+
+    Zero rows (nothing activated) produce zero output rows, matching the
+    rust implementation's convention.
+    """
+    d = q.shape[-1]
+    scores = q @ k.T / jnp.sqrt(jnp.float32(d)) - bias
+    act = jnp.maximum(scores, 0.0) ** alpha
+    denom = act.sum(axis=-1, keepdims=True)
+    safe = jnp.where(denom > 0.0, denom, 1.0)
+    out = (act / safe) @ v
+    return jnp.where(denom > 0.0, out, 0.0)
+
+
+def masked_softmax_attention(q, kg, vg, count):
+    """Softmax attention over a padded gathered block (Definition B.2).
+
+    q: [m, d]; kg/vg: [m, r_max, d] gathered rows per query; count: [m]
+    number of valid rows (rows >= count are padding and must be ignored).
+    """
+    d = q.shape[-1]
+    r_max = kg.shape[1]
+    scores = jnp.einsum("md,mrd->mr", q, kg) / jnp.sqrt(jnp.float32(d))
+    valid = jnp.arange(r_max)[None, :] < count[:, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = scores.max(axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # all-padded row guard
+    w = jnp.where(valid, jnp.exp(scores - m), 0.0)
+    denom = w.sum(axis=-1, keepdims=True)
+    safe = jnp.where(denom > 0.0, denom, 1.0)
+    out = jnp.einsum("mr,mrd->md", w / safe, vg)
+    return jnp.where(denom > 0.0, out, 0.0)
+
+
+def masked_relu_attention(q, kg, vg, count, bias, alpha: int = 1):
+    """ReLU^alpha attention over a padded gathered block."""
+    d = q.shape[-1]
+    r_max = kg.shape[1]
+    scores = jnp.einsum("md,mrd->mr", q, kg) / jnp.sqrt(jnp.float32(d)) - bias
+    valid = jnp.arange(r_max)[None, :] < count[:, None]
+    act = jnp.where(valid, jnp.maximum(scores, 0.0) ** alpha, 0.0)
+    denom = act.sum(axis=-1, keepdims=True)
+    safe = jnp.where(denom > 0.0, denom, 1.0)
+    out = jnp.einsum("mr,mrd->md", act / safe, vg)
+    return jnp.where(denom > 0.0, out, 0.0)
+
+
+def causal_softmax_attention(q, k, v):
+    """Causal variant used by the transformer (L2): position i attends to
+    keys 0..i. q/k/v: [t, d]."""
+    t, d = q.shape
+    scores = q @ k.T / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    weights = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    weights = weights / weights.sum(axis=-1, keepdims=True)
+    return weights @ v

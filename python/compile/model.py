@@ -1,0 +1,244 @@
+"""L2: the JAX transformer (byte-level char-LM) used by every experiment.
+
+Architecture (chosen to be exactly mirrorable by the rust native forward
+in `rust/src/model/transformer.rs` — parity is asserted via golden vectors
+exported by `aot.py`):
+
+  token embedding  ->  L x [ RMSNorm -> RoPE multi-head causal softmax
+  attention -> residual -> RMSNorm -> SwiGLU MLP -> residual ]
+  -> RMSNorm -> output projection (untied)
+
+No biases anywhere; fp32 everywhere (the CPU PJRT plugin and the rust
+mirror both run fp32 — bfloat16 is a TPU-only concern noted in
+DESIGN.md §Hardware-Adaptation).
+
+The attention inner loop can be routed through the L1 Pallas kernels
+(``use_pallas=True``) so the exported decode-step HLO exercises the same
+kernel code path the paper's hot spot lives in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import hsr_attn, ref
+
+VOCAB_SIZE = 256
+RMS_EPS = 1e-5
+ROPE_THETA = 10000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    ffn_mult: int = 3  # SwiGLU hidden = ffn_mult * d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self) -> int:
+        return self.ffn_mult * self.d_model
+
+    def param_count(self) -> int:
+        per_layer = (
+            2 * self.d_model  # two norms
+            + 4 * self.d_model * self.d_model  # wq wk wv wo
+            + 3 * self.d_model * self.d_ffn  # w1 w3 w2
+        )
+        return (
+            VOCAB_SIZE * self.d_model
+            + self.n_layers * per_layer
+            + self.d_model
+            + self.d_model * VOCAB_SIZE
+        )
+
+
+# The three model sizes standing in for the paper's three LLMs (Figure 3);
+# see DESIGN.md §3 substitution note.
+CONFIGS = {
+    "mini": ModelConfig("mini", d_model=64, n_layers=2, n_heads=2),
+    "small": ModelConfig("small", d_model=128, n_layers=4, n_heads=4),
+    "base": ModelConfig("base", d_model=192, n_layers=5, n_heads=6),
+}
+
+
+def init_params(cfg: ModelConfig, seed: int) -> dict[str, jax.Array]:
+    """Scaled-normal init; names are the contract with the rust loader."""
+    rng = np.random.default_rng(seed)
+
+    def normal(shape, scale):
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    p: dict[str, jax.Array] = {}
+    p["tok_emb"] = normal((VOCAB_SIZE, cfg.d_model), 0.02)
+    attn_scale = 1.0 / math.sqrt(cfg.d_model)
+    out_scale = 1.0 / math.sqrt(2.0 * cfg.n_layers * cfg.d_model)
+    for i in range(cfg.n_layers):
+        p[f"attn_norm.{i}"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"wq.{i}"] = normal((cfg.d_model, cfg.d_model), attn_scale)
+        p[f"wk.{i}"] = normal((cfg.d_model, cfg.d_model), attn_scale)
+        p[f"wv.{i}"] = normal((cfg.d_model, cfg.d_model), attn_scale)
+        p[f"wo.{i}"] = normal((cfg.d_model, cfg.d_model), out_scale)
+        p[f"mlp_norm.{i}"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"w1.{i}"] = normal((cfg.d_model, cfg.d_ffn), attn_scale)
+        p[f"w3.{i}"] = normal((cfg.d_model, cfg.d_ffn), attn_scale)
+        p[f"w2.{i}"] = normal((cfg.d_ffn, cfg.d_model), out_scale)
+    p["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["w_out"] = normal((cfg.d_model, VOCAB_SIZE), attn_scale)
+    return p
+
+
+def rms_norm(x, w):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + RMS_EPS) * w
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rope_angles(positions, d_head: int):
+    """positions: [...]; returns cos/sin of shape [..., d_head//2]."""
+    half = d_head // 2
+    freqs = ROPE_THETA ** (-(jnp.arange(half, dtype=jnp.float32) * 2.0 / d_head))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions):
+    """x: [..., d_head] with consecutive-pair layout (x0,x1),(x2,x3),...;
+    positions broadcastable to x[..., 0]'s shape."""
+    d_head = x.shape[-1]
+    cos, sin = rope_angles(positions, d_head)
+    x_even = x[..., 0::2]
+    x_odd = x[..., 1::2]
+    out_even = x_even * cos - x_odd * sin
+    out_odd = x_even * sin + x_odd * cos
+    out = jnp.stack([out_even, out_odd], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _split_heads(x, n_heads: int):
+    """[t, d_model] -> [n_heads, t, d_head]."""
+    t, dm = x.shape
+    return x.reshape(t, n_heads, dm // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    """[n_heads, t, d_head] -> [t, d_model]."""
+    h, t, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * dh)
+
+
+def forward(params: dict[str, Any], cfg: ModelConfig, tokens):
+    """Full-sequence forward (training / prefill). tokens: [t] int32 ->
+    logits [t, VOCAB_SIZE]."""
+    t = tokens.shape[0]
+    x = params["tok_emb"][tokens]  # [t, d]
+    positions = jnp.arange(t)
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, params[f"attn_norm.{i}"])
+        q = _split_heads(h @ params[f"wq.{i}"], cfg.n_heads)
+        k = _split_heads(h @ params[f"wk.{i}"], cfg.n_heads)
+        v = _split_heads(h @ params[f"wv.{i}"], cfg.n_heads)
+        q = apply_rope(q, positions[None, :])
+        k = apply_rope(k, positions[None, :])
+        att = jax.vmap(ref.causal_softmax_attention)(q, k, v)  # [H, t, dh]
+        x = x + _merge_heads(att) @ params[f"wo.{i}"]
+        h = rms_norm(x, params[f"mlp_norm.{i}"])
+        x = x + (silu(h @ params[f"w1.{i}"]) * (h @ params[f"w3.{i}"])) @ params[f"w2.{i}"]
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["w_out"]
+
+
+def forward_batch(params, cfg: ModelConfig, tokens):
+    """tokens: [b, t] -> [b, t, vocab]."""
+    return jax.vmap(lambda tk: forward(params, cfg, tk))(tokens)
+
+
+def loss_fn(params, cfg: ModelConfig, inputs, targets):
+    """Mean next-token cross entropy. inputs/targets: [b, t] int32."""
+    logits = forward_batch(params, cfg, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Decode step with KV cache — the generation-decoding scenario (m = Θ(1)).
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, token, pos, k_cache, v_cache, *, use_pallas=False):
+    """One autoregressive step against a fixed-size cache.
+
+    token: [] int32; pos: [] int32 (0-based position of this token);
+    k_cache/v_cache: [L, H, N, dh] with rows >= pos unused.
+    Returns (logits [vocab], new_k [L, H, dh], new_v [L, H, dh]).
+    The caller owns cache writes (functional style keeps the HLO lean).
+    """
+    x = params["tok_emb"][token]  # [d]
+    new_ks = []
+    new_vs = []
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, params[f"attn_norm.{i}"])
+        q = (h @ params[f"wq.{i}"]).reshape(cfg.n_heads, cfg.d_head)
+        k = (h @ params[f"wk.{i}"]).reshape(cfg.n_heads, cfg.d_head)
+        v = (h @ params[f"wv.{i}"]).reshape(cfg.n_heads, cfg.d_head)
+        q = apply_rope(q, jnp.full((cfg.n_heads,), pos))
+        k = apply_rope(k, jnp.full((cfg.n_heads,), pos))
+        new_ks.append(k)
+        new_vs.append(v)
+        # Attend over cache rows [0, pos) plus the current token's k/v,
+        # which is placed (functionally) at row `pos` of the cache.
+        keys = jax.lax.dynamic_update_slice(
+            k_cache[i], k[:, None, :], (0, pos, 0)
+        )  # [H, N, dh]
+        vals = jax.lax.dynamic_update_slice(v_cache[i], v[:, None, :], (0, pos, 0))
+        count = jnp.full((cfg.n_heads,), pos + 1, jnp.int32)
+        if use_pallas:
+            att = hsr_attn.masked_softmax_attention(q, keys, vals, count)
+        else:
+            att = ref.masked_softmax_attention(q, keys, vals, count)
+        x = x + att.reshape(cfg.d_model) @ params[f"wo.{i}"]
+        h = rms_norm(x, params[f"mlp_norm.{i}"])
+        x = x + (silu(h @ params[f"w1.{i}"]) * (h @ params[f"w3.{i}"])) @ params[f"w2.{i}"]
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["w_out"]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    """Prompt prefilling: returns (logits [t, vocab], k_cache [L,H,t,dh],
+    v_cache [L,H,t,dh]) — the caches Algorithm 1 is initialized with."""
+    t = tokens.shape[0]
+    x = params["tok_emb"][tokens]
+    positions = jnp.arange(t)
+    ks = []
+    vs = []
+    for i in range(cfg.n_layers):
+        h = rms_norm(x, params[f"attn_norm.{i}"])
+        q = _split_heads(h @ params[f"wq.{i}"], cfg.n_heads)
+        k = _split_heads(h @ params[f"wk.{i}"], cfg.n_heads)
+        v = _split_heads(h @ params[f"wv.{i}"], cfg.n_heads)
+        q = apply_rope(q, positions[None, :])
+        k = apply_rope(k, positions[None, :])
+        ks.append(k)
+        vs.append(v)
+        att = jax.vmap(ref.causal_softmax_attention)(q, k, v)
+        x = x + _merge_heads(att) @ params[f"wo.{i}"]
+        h = rms_norm(x, params[f"mlp_norm.{i}"])
+        x = x + (silu(h @ params[f"w1.{i}"]) * (h @ params[f"w3.{i}"])) @ params[f"w2.{i}"]
+    x = rms_norm(x, params["final_norm"])
+    return x @ params["w_out"], jnp.stack(ks), jnp.stack(vs)

@@ -1,0 +1,80 @@
+"""Build-time training of the tiny char-LMs (the Figure-3 model substitutes).
+
+Hand-rolled Adam (the environment has no optax) with cosine decay and
+linear warmup; next-byte cross entropy on the synthetic corpus of
+`data.py`. Runs once under `make artifacts` and never at serving time.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new_params = {
+        k: params[k] - lr * (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps) for k in params
+    }
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, steps, peak):
+    warmup = max(1, steps // 10)
+    lin = peak * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(1, steps - warmup), 0.0, 1.0)
+    cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, lin, cos)
+
+
+def train(
+    cfg: model_mod.ModelConfig,
+    *,
+    seed: int = 0,
+    steps: int = 300,
+    seq_len: int = 192,
+    batch_size: int = 12,
+    corpus_bytes: int = 400_000,
+    peak_lr: float = 3e-3,
+    log_every: int = 50,
+):
+    """Train and return (params, final_loss_history)."""
+    corpus = data_mod.corpus_bytes(seed, corpus_bytes)
+    params = model_mod.init_params(cfg, seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, x, y, lr):
+        loss, grads = jax.value_and_grad(model_mod.loss_fn)(params, cfg, x, y)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    losses = []
+    t0 = time.time()
+    for step, (x, y) in enumerate(
+        data_mod.batches(corpus, seq_len, batch_size, steps, seed + 1)
+    ):
+        lr = lr_schedule(jnp.float32(step), steps, peak_lr)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y), lr)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(
+                f"[train {cfg.name}] step {step:4d}/{steps} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    return params, losses

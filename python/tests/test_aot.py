@@ -1,0 +1,78 @@
+"""AOT pipeline: weight-bundle format, golden vectors, HLO text emission.
+
+Runs the full exporter in --fast mode into a temp dir (slow-ish but the
+whole L2→L3 contract depends on it)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+@pytest.fixture(scope="module")
+def fast_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--models", "mini", "--hlo-model", "mini", "--fast"],
+        cwd=os.path.join(REPO, "python"),
+        env=env,
+        check=True,
+        timeout=900,
+    )
+    return out
+
+
+def test_manifest_contents(fast_artifacts):
+    with open(fast_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    assert "mini" in manifest["models"]
+    cfg = manifest["models"]["mini"]
+    assert cfg["d_model"] == 64 and cfg["vocab"] == 256
+    assert "decode_step_mini" in manifest["hlo"]
+    assert "masked_softmax_attn" in manifest["hlo"]
+
+
+def test_weight_bundle_roundtrip(fast_artifacts):
+    with open(fast_artifacts / "model_mini.json") as f:
+        man = json.load(f)
+    blob = np.fromfile(fast_artifacts / "model_mini.bin", dtype="<f4")
+    assert man["dtype"] == "f32"
+    assert man["byte_len"] == blob.nbytes
+    # Every tensor fits and the embedding has the right shape.
+    emb = man["tensors"]["tok_emb"]
+    assert emb["shape"] == [256, 64]
+    for name, spec in man["tensors"].items():
+        numel = int(np.prod(spec["shape"]))
+        assert spec["offset"] + numel <= len(blob), name
+
+
+def test_golden_vectors_present(fast_artifacts):
+    with open(fast_artifacts / "golden_mini.json") as f:
+        man = json.load(f)
+    t = man["tensors"]
+    assert t["logits_a"]["shape"] == [32, 256]
+    assert t["decode_logits"]["shape"] == [256]
+    assert man["decode_pos"] == 31
+
+
+def test_hlo_text_is_parseable_hlo(fast_artifacts):
+    txt = (fast_artifacts / "decode_step_mini.hlo.txt").read_text()
+    assert txt.startswith("HloModule"), txt[:80]
+    assert "ENTRY" in txt
+    # 64-bit ids would start around 4e9; text form keeps small ids.
+    txt2 = (fast_artifacts / "masked_softmax_attn.hlo.txt").read_text()
+    assert txt2.startswith("HloModule")
+
+
+def test_train_log_has_decreasing_loss(fast_artifacts):
+    with open(fast_artifacts / "train_log.json") as f:
+        log = json.load(f)
+    losses = log["mini"]
+    assert losses[-1] < losses[0]

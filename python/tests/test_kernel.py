@@ -1,0 +1,161 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes/dtypes per deliverable (c): the kernel is the
+paper's compute hot-spot, so this is the core correctness signal for L1.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hsr_attn as K
+from compile.kernels import ref
+
+ATOL = 2e-5
+RTOL = 2e-4
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    r_max=st.integers(1, 300),
+    d=st.sampled_from([4, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_softmax_matches_ref(m, r_max, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, m, d)
+    kg = _rand(rng, m, r_max, d)
+    vg = _rand(rng, m, r_max, d)
+    count = jnp.asarray(rng.integers(0, r_max + 1, size=m), jnp.int32)
+    got = K.masked_softmax_attention(q, kg, vg, count)
+    want = ref.masked_softmax_attention(q, kg, vg, count)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 5),
+    r_max=st.integers(1, 300),
+    d=st.sampled_from([4, 16, 32]),
+    alpha=st.sampled_from([1, 2, 3]),
+    bias=st.floats(-1.0, 1.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_relu_matches_ref(m, r_max, d, alpha, bias, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, m, d)
+    kg = _rand(rng, m, r_max, d)
+    vg = _rand(rng, m, r_max, d)
+    count = jnp.asarray(rng.integers(0, r_max + 1, size=m), jnp.int32)
+    got = K.masked_relu_attention(q, kg, vg, count, bias=bias, alpha=alpha)
+    want = ref.masked_relu_attention(q, kg, vg, count, bias=bias, alpha=alpha)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 4),
+    n_tiles=st.integers(1, 4),
+    d=st.sampled_from([8, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_softmax_matches_ref(m, n_tiles, d, seed):
+    rng = np.random.default_rng(seed)
+    n = n_tiles * K.BLOCK_K
+    q = _rand(rng, m, d)
+    k = _rand(rng, n, d)
+    v = _rand(rng, n, d)
+    got = K.dense_softmax_attention(q, k, v)
+    want = ref.softmax_attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+def test_zero_count_rows_are_zero():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, 2, 8)
+    kg = _rand(rng, 2, 64, 8)
+    vg = _rand(rng, 2, 64, 8)
+    count = jnp.asarray([0, 0], jnp.int32)
+    out_s = K.masked_softmax_attention(q, kg, vg, count)
+    out_r = K.masked_relu_attention(q, kg, vg, count, bias=0.0, alpha=1)
+    assert np.all(np.asarray(out_s) == 0.0)
+    assert np.all(np.asarray(out_r) == 0.0)
+
+
+def test_padding_rows_do_not_leak():
+    """Huge values in padded rows must not affect the output."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, 1, 16)
+    kg = np.asarray(_rand(rng, 1, 128, 16))
+    vg = np.asarray(_rand(rng, 1, 128, 16))
+    count = jnp.asarray([40], jnp.int32)
+    base_s = K.masked_softmax_attention(jnp.asarray(q), jnp.asarray(kg), jnp.asarray(vg), count)
+    kg2 = kg.copy()
+    vg2 = vg.copy()
+    kg2[:, 40:, :] = 1e4
+    vg2[:, 40:, :] = -1e4
+    poisoned = K.masked_softmax_attention(
+        jnp.asarray(q), jnp.asarray(kg2), jnp.asarray(vg2), count
+    )
+    np.testing.assert_allclose(base_s, poisoned, atol=1e-6)
+
+
+def test_relu_padding_rows_do_not_leak():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, 1, 8)
+    kg = np.asarray(_rand(rng, 1, 64, 8))
+    vg = np.asarray(_rand(rng, 1, 64, 8))
+    count = jnp.asarray([10], jnp.int32)
+    base = K.masked_relu_attention(jnp.asarray(q), jnp.asarray(kg), jnp.asarray(vg), count, bias=0.1, alpha=2)
+    kg2 = kg.copy()
+    kg2[:, 10:, :] = 50.0
+    poisoned = K.masked_relu_attention(
+        jnp.asarray(q), jnp.asarray(kg2), jnp.asarray(vg), count, bias=0.1, alpha=2
+    )
+    np.testing.assert_allclose(base, poisoned, atol=1e-6)
+
+
+def test_relu_sparse_equals_dense_on_activated_superset():
+    """The paper's exactness claim: ReLU attention over any superset of
+    the activated set equals the full computation (Section 2.2)."""
+    rng = np.random.default_rng(3)
+    n, d, bias, alpha = 200, 16, 0.3, 2
+    q = _rand(rng, 1, d)
+    k = _rand(rng, n, d)
+    v = _rand(rng, n, d)
+    dense = ref.relu_attention(q, k, v, bias=bias, alpha=alpha)
+    scores = np.asarray(q @ k.T / np.sqrt(d))[0]
+    act = np.where(scores - bias > 0)[0]
+    # Superset: activated plus 7 random extras.
+    extra = rng.choice(np.setdiff1d(np.arange(n), act), size=min(7, n - len(act)), replace=False)
+    idx = np.concatenate([act, extra]).astype(np.int32)
+    kg = jnp.asarray(np.asarray(k)[idx])[None]
+    vg = jnp.asarray(np.asarray(v)[idx])[None]
+    got = K.masked_relu_attention(q, kg, vg, jnp.asarray([len(idx)], jnp.int32), bias=bias, alpha=alpha)
+    np.testing.assert_allclose(got, dense, atol=1e-5, rtol=1e-4)
+
+
+def test_vmem_footprint_within_budget():
+    """§Hardware-Adaptation: decode-step tile must fit VMEM (16 MB)."""
+    r_max = 2 * int(65536 ** 0.8)  # Lemma 6.1 budget at n = 64k
+    bytes_needed = K.vmem_footprint_bytes(r_max, 64)
+    assert bytes_needed < 16 * 2**20
+    assert 0.0 < K.mxu_utilization_estimate(r_max, 64) <= 1.0
+
+
+@pytest.mark.parametrize("r_max", [1, 127, 128, 129, 256])
+def test_nonmultiple_r_max_padding(r_max):
+    rng = np.random.default_rng(4)
+    q = _rand(rng, 2, 8)
+    kg = _rand(rng, 2, r_max, 8)
+    vg = _rand(rng, 2, r_max, 8)
+    count = jnp.asarray([r_max, max(0, r_max - 1)], jnp.int32)
+    got = K.masked_softmax_attention(q, kg, vg, count)
+    want = ref.masked_softmax_attention(q, kg, vg, count)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)

@@ -1,0 +1,120 @@
+"""L2 correctness: transformer shapes, decode-step/prefill parity, RoPE
+properties, and that a short training run actually reduces loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    cfg = M.CONFIGS["mini"]
+    params = M.init_params(cfg, 3)
+    tokens = jnp.asarray(D.eval_document(5, 48).astype(np.int32))
+    return cfg, params, tokens
+
+
+def test_forward_shapes(small_setup):
+    cfg, params, tokens = small_setup
+    logits = M.forward(params, cfg, tokens)
+    assert logits.shape == (48, M.VOCAB_SIZE)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_prefill_matches_forward(small_setup):
+    cfg, params, tokens = small_setup
+    full = M.forward(params, cfg, tokens)
+    pre, k_cache, v_cache = M.prefill(params, cfg, tokens)
+    np.testing.assert_allclose(pre, full, atol=1e-5, rtol=1e-4)
+    assert k_cache.shape == (cfg.n_layers, cfg.n_heads, 48, cfg.d_head)
+    assert v_cache.shape == k_cache.shape
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_decode_step_matches_forward(small_setup, use_pallas):
+    """Autoregressive decode with a KV cache reproduces the full forward
+    logits at every step — the invariant Algorithm 1 relies on."""
+    cfg, params, tokens = small_setup
+    t = 16
+    n_ctx = 32
+    full = M.forward(params, cfg, tokens[:t])
+    k_cache = jnp.zeros((cfg.n_layers, cfg.n_heads, n_ctx, cfg.d_head))
+    v_cache = jnp.zeros_like(k_cache)
+    for pos in range(t):
+        logits, new_k, new_v = M.decode_step(
+            params, cfg, tokens[pos], jnp.asarray(pos), k_cache, v_cache,
+            use_pallas=use_pallas,
+        )
+        np.testing.assert_allclose(
+            logits, full[pos], atol=2e-4, rtol=1e-3,
+            err_msg=f"pos={pos} pallas={use_pallas}",
+        )
+        k_cache = k_cache.at[:, :, pos, :].set(new_k)
+        v_cache = v_cache.at[:, :, pos, :].set(new_v)
+
+
+def test_rope_preserves_norm_and_relative_property(small_setup):
+    cfg, _, _ = small_setup
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(cfg.d_head,)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(cfg.d_head,)), jnp.float32)
+    # Norm preservation (rotation).
+    for pos in [0, 3, 77]:
+        rx = M.apply_rope(x, jnp.asarray(pos))
+        assert abs(float(jnp.linalg.norm(rx) - jnp.linalg.norm(x))) < 1e-4
+    # Relative property: <R_p x, R_q y> depends only on p - q.
+    a = float(M.apply_rope(x, jnp.asarray(5)) @ M.apply_rope(y, jnp.asarray(2)))
+    b = float(M.apply_rope(x, jnp.asarray(13)) @ M.apply_rope(y, jnp.asarray(10)))
+    assert abs(a - b) < 1e-3
+
+
+def test_rope_at_zero_is_identity(small_setup):
+    cfg, _, _ = small_setup
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(cfg.d_head,)), jnp.float32)
+    np.testing.assert_allclose(M.apply_rope(x, jnp.asarray(0)), x, atol=1e-6)
+
+
+def test_loss_decreases_with_training():
+    cfg = M.CONFIGS["mini"]
+    _, losses = T.train(
+        cfg, seed=11, steps=25, seq_len=64, batch_size=8,
+        corpus_bytes=40_000, log_every=100,
+    )
+    first = np.mean(losses[:3])
+    last = np.mean(losses[-3:])
+    assert last < first - 0.5, f"no learning: {first:.3f} -> {last:.3f}"
+    # Byte-level uniform is ln(256) ≈ 5.55; must start near it.
+    assert 4.5 < losses[0] < 7.0
+
+
+def test_param_count_formula():
+    cfg = M.CONFIGS["small"]
+    params = M.init_params(cfg, 0)
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == cfg.param_count()
+
+
+def test_corpus_properties():
+    c = D.corpus_bytes(0, 50_000)
+    assert len(c) == 50_000
+    assert c.dtype == np.uint8
+    # ASCII text only.
+    assert int(c.max()) < 128
+    # Deterministic.
+    assert np.array_equal(c, D.corpus_bytes(0, 50_000))
+    # Needles present.
+    text = bytes(c).decode("ascii")
+    assert "remember:" in text and "token is" in text
+
+
+def test_batches_are_next_byte_shifted():
+    c = D.corpus_bytes(1, 10_000)
+    for x, y in D.batches(c, seq_len=16, batch_size=4, steps=3, seed=0):
+        assert x.shape == (4, 16) and y.shape == (4, 16)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])

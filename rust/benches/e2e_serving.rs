@@ -1,0 +1,135 @@
+//! Bench/reproduction: **headline claim** — end-to-end serving
+//! throughput/latency with HSR-sparse attention vs the dense baseline,
+//! on the trained char-LM, plus the batching-policy ablation.
+//!
+//! Run after `make artifacts`. Skips gracefully if artifacts are missing.
+
+use hsr_attn::bench::banner;
+use hsr_attn::engine::serving::{Engine, EngineConfig};
+use hsr_attn::engine::{GenerationParams, SchedulerConfig};
+use hsr_attn::hsr::HsrBackend;
+use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::Model;
+use hsr_attn::util::cli::Args;
+use hsr_attn::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct RunResult {
+    wall_s: f64,
+    gen_tokens: u64,
+    attended_frac: f64,
+    p50_step_ns: u64,
+}
+
+fn run(
+    model: Arc<Model>,
+    policy: AttentionPolicy,
+    backend: Option<HsrBackend>,
+    requests: usize,
+    prompt_len: usize,
+    gen: usize,
+    max_batch: usize,
+) -> RunResult {
+    let mut rng = Rng::new(11);
+    let mut eng = Engine::new(
+        model,
+        EngineConfig {
+            policy,
+            hsr_backend: backend,
+            scheduler: SchedulerConfig { max_batch, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let corpus: Vec<u32> = "the merchant carries copper coins by the river. \
+        remember: alder keeps the amber token. the alder token is amber. "
+        .bytes()
+        .cycle()
+        .take(8192)
+        .map(|b| b as u32)
+        .collect();
+    for _ in 0..requests {
+        let s = rng.below(corpus.len() - prompt_len);
+        eng.submit(
+            corpus[s..s + prompt_len].to_vec(),
+            GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None },
+        );
+    }
+    let t0 = Instant::now();
+    eng.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
+    RunResult {
+        wall_s,
+        gen_tokens: eng.metrics.generated_tokens + requests as u64, // + seeded
+        attended_frac: eng.metrics.attended_fraction(),
+        p50_step_ns: eng.metrics.step_latency.percentile_ns(50.0),
+    }
+}
+
+fn main() {
+    banner("e2e_serving", "headline: sparse vs dense serving throughput/latency");
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let model_name = args.str_or("model", "small");
+    let requests = args.usize_or("requests", 12);
+    let prompt_len = args.usize_or("prompt", 384);
+    let gen = args.usize_or("gen", 96);
+    let model = Arc::new(Model::load_named(&artifacts_dir(), model_name).unwrap());
+    println!(
+        "model '{}', {} requests x (prompt {} + gen {})\n",
+        model_name, requests, prompt_len, gen
+    );
+
+    println!(
+        "{:<44} {:>9} {:>12} {:>11} {:>10}",
+        "configuration", "wall s", "gen tok/s", "p50 step", "attended"
+    );
+    let cases: Vec<(String, AttentionPolicy, Option<HsrBackend>, usize)> = vec![
+        ("dense baseline (batch 8)".into(), AttentionPolicy::Dense, None, 8),
+        (
+            "sparse top-r=n^0.8, balltree (batch 8)".into(),
+            AttentionPolicy::TopR(RSpec::paper()),
+            Some(HsrBackend::BallTree),
+            8,
+        ),
+        (
+            "sparse top-r=n^0.8, brute scan (ablation)".into(),
+            AttentionPolicy::TopR(RSpec::paper()),
+            None,
+            8,
+        ),
+        (
+            "sparse top-r=64 fixed, balltree (batch 8)".into(),
+            AttentionPolicy::TopR(RSpec::Fixed(64)),
+            Some(HsrBackend::BallTree),
+            8,
+        ),
+        (
+            "sparse top-r=n^0.8, balltree (batch 1 ablation)".into(),
+            AttentionPolicy::TopR(RSpec::paper()),
+            Some(HsrBackend::BallTree),
+            1,
+        ),
+    ];
+    for (name, policy, backend, batch) in cases {
+        let r = run(model.clone(), policy, backend, requests, prompt_len, gen, batch);
+        println!(
+            "{:<44} {:>9.2} {:>12.1} {:>11} {:>9.1}%",
+            name,
+            r.wall_s,
+            r.gen_tokens as f64 / r.wall_s,
+            hsr_attn::util::stats::fmt_ns(r.p50_step_ns as f64),
+            r.attended_frac * 100.0
+        );
+    }
+    println!("\nexpected: sparse attends a small fraction of entries; wall-clock");
+    println!("gains grow with context length (see decode_time bench for scaling).");
+}

@@ -1,0 +1,104 @@
+//! Bench/reproduction: **Corollary 3.1** — HSR init/query scaling across
+//! backends, plus the dynamic-update amortization of Theorem B.11.
+//!
+//! Expected shapes:
+//!  * init: brute O(n), ball-tree / layers2d O(n log n)-ish.
+//!  * query: output-sensitive for ball-tree (low d) and layers2d (d = 2),
+//!    degrading toward linear as d grows (the AEM n^{1-1/⌊d/2⌋} story).
+//!  * dynamic inserts: amortized ~log² n.
+
+use hsr_attn::bench::{banner, black_box, Bencher};
+use hsr_attn::hsr::dynamic::DynamicHsr;
+use hsr_attn::hsr::{build_hsr, gaussian_points, HsrBackend, QueryStats};
+use hsr_attn::util::rng::Rng;
+use hsr_attn::util::stats::{fmt_ns, power_fit};
+
+fn main() {
+    banner("hsr_structures", "paper Corollary 3.1 / Theorem B.11 (HSR costs)");
+    let bench = Bencher::quick();
+    let ns = [4_096usize, 16_384, 65_536];
+
+    // ---- init + query across backends ----
+    for d in [2usize, 8, 16] {
+        println!("\n== d = {d} ==");
+        println!(
+            "{:>9} {:>10} | {:>11} {:>11} | {:>10} {:>10}",
+            "backend", "n", "init", "query", "scanned", "reported"
+        );
+        let backends: Vec<HsrBackend> = if d == 2 {
+            vec![HsrBackend::Brute, HsrBackend::BallTree, HsrBackend::Layers2d]
+        } else {
+            vec![HsrBackend::Brute, HsrBackend::BallTree, HsrBackend::Projected]
+        };
+        for backend in backends {
+            let mut q_times = Vec::new();
+            let mut sizes = Vec::new();
+            for &n in &ns {
+                let mut rng = Rng::new(n as u64);
+                let pts = gaussian_points(&mut rng, n, d, 1.0);
+                let init = bench.run(&format!("{}/init/n={n}", backend.name()), || {
+                    black_box(build_hsr(backend, &pts, d));
+                });
+                let index = build_hsr(backend, &pts, d);
+                // Threshold reporting ~n^{4/5} entries (Lemma 6.1 regime).
+                let q = rng.gaussian_vec_f32(d, 1.0);
+                let qn = hsr_attn::hsr::norm(&q) as f64;
+                let b = (qn / (d as f64).sqrt() * (0.4 * (n as f64).ln()).sqrt()
+                    * (d as f64).sqrt()) as f32;
+                let mut out = Vec::new();
+                let mut stats = QueryStats::default();
+                index.query_into(&q, b, &mut out, &mut stats);
+                let query = bench.run(&format!("{}/query/n={n}", backend.name()), || {
+                    let mut o = Vec::new();
+                    let mut s = QueryStats::default();
+                    index.query_into(&q, b, &mut o, &mut s);
+                    black_box(o.len());
+                });
+                println!(
+                    "{:>9} {:>10} | {:>11} {:>11} | {:>10} {:>10}",
+                    backend.name(),
+                    n,
+                    fmt_ns(init.median_ns),
+                    fmt_ns(query.median_ns),
+                    stats.points_scanned,
+                    stats.reported
+                );
+                q_times.push(query.median_ns);
+                sizes.push(n as f64);
+            }
+            if let Some((e, r2)) = power_fit(&sizes, &q_times) {
+                println!(
+                    "{:>9}   query-time exponent fit: n^{e:.2} (r2={r2:.3})",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    // ---- dynamic updates (logarithmic method) ----
+    println!("\n== dynamic inserts (Theorem B.11 amortized updates), d = 8 ==");
+    println!("{:>9} | {:>12} {:>14} {:>10}", "n", "total", "per-insert", "rebuilds");
+    for &n in &ns {
+        let mut rng = Rng::new(n as u64 + 1);
+        let points: Vec<Vec<f32>> = (0..n).map(|_| rng.gaussian_vec_f32(8, 1.0)).collect();
+        let r = bench.run(&format!("dynamic_insert/n={n}"), || {
+            let mut dynamic = DynamicHsr::new(HsrBackend::BallTree, 8);
+            for p in &points {
+                dynamic.insert(p);
+            }
+            black_box(&dynamic);
+        });
+        let mut dynamic = DynamicHsr::new(HsrBackend::BallTree, 8);
+        for p in &points {
+            dynamic.insert(p);
+        }
+        println!(
+            "{:>9} | {:>12} {:>14} {:>10}",
+            n,
+            fmt_ns(r.median_ns),
+            fmt_ns(r.median_ns / n as f64),
+            dynamic.rebuilds
+        );
+    }
+    println!("\nexpected: per-insert cost grows ~log^2 n, not with n.");
+}

@@ -1,0 +1,91 @@
+//! Bench/reproduction: **Theorems 5.1 / 5.2** — prompt prefilling time
+//! (m = Θ(n)), HSR-sparse vs naive dense, across n.
+//!
+//! Claim shape: naive is O(n²); Algorithm 2 is
+//! O(n^{2−1/⌊d/2⌋} + n^{1+4/5}) — a lower fitted exponent, widening gap.
+
+use hsr_attn::attention::relu::relu_attention;
+use hsr_attn::attention::softmax::softmax_attention;
+use hsr_attn::attention::AttentionKind;
+use hsr_attn::bench::{banner, black_box, Bencher};
+use hsr_attn::engine::PromptPrefilling;
+use hsr_attn::hsr::HsrBackend;
+use hsr_attn::util::cli::Args;
+use hsr_attn::util::rng::Rng;
+use hsr_attn::util::stats::{fmt_ns, power_fit};
+use hsr_attn::workloads::gaussian::AttentionInstance;
+
+fn main() {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    banner("prefill_time", "paper Theorems 5.1/5.2 (prefill, m = Θ(n))");
+    let bench = Bencher::quick();
+    let d = args.usize_or("d", 8);
+    let ns = args.usize_list_or("ns", &[1_024, 2_048, 4_096, 8_192]);
+
+    for (label, kind) in [
+        ("ReLU^2 (Thm 5.1)", AttentionKind::Relu { alpha: 2, bias: 0.0 }),
+        ("Softmax top-r (Thm 5.2)", AttentionKind::Softmax),
+    ] {
+        println!("\n== {label}, d = {d}, m = n ==");
+        println!(
+            "{:>7} | {:>11} {:>11} {:>8} | {:>10}",
+            "n", "naive", "hsr", "speedup", "fired/row"
+        );
+        let mut xs = Vec::new();
+        let mut dense_t = Vec::new();
+        let mut sparse_t = Vec::new();
+        for &n in &ns {
+            let mut rng = Rng::new(n as u64);
+            let inst = AttentionInstance::gaussian(&mut rng, n, n, d);
+            let bias = inst.params.practical_bias(n) as f32;
+            let kind = match kind {
+                AttentionKind::Relu { alpha, .. } => AttentionKind::Relu { alpha, bias },
+                s => s,
+            };
+            let naive = bench.run(&format!("naive/n={n}"), || match kind {
+                AttentionKind::Relu { alpha, bias } => {
+                    black_box(relu_attention(&inst.q, &inst.k, &inst.v, d, alpha, bias));
+                }
+                AttentionKind::Softmax => {
+                    black_box(softmax_attention(&inst.q, &inst.k, &inst.v, d));
+                }
+            });
+            let mut pp = PromptPrefilling::new(kind, HsrBackend::BallTree);
+            pp.bias_override = Some(bias);
+            if matches!(kind, AttentionKind::Softmax) {
+                pp.top_r = Some((n as f64).powf(0.8) as usize);
+                pp.bias_override = Some(hsr_attn::attention::threshold::practical_bias_for_target(
+                    &inst.params,
+                    n,
+                    (n as f64).powf(0.8) * 2.0,
+                ) as f32);
+            }
+            let sparse = bench.run(&format!("hsr/n={n}"), || {
+                // Algorithm 2 builds the HSR structure inside INFERENCE —
+                // the Part-1 init cost is part of the measured time.
+                black_box(pp.inference(&inst.q, &inst.k, &inst.v, n, n, d));
+            });
+            let res = pp.inference(&inst.q, &inst.k, &inst.v, n, n, d);
+            let fired = res.fired.iter().sum::<usize>() / n;
+            println!(
+                "{:>7} | {:>11} {:>11} {:>7.2}x | {:>10}",
+                n,
+                fmt_ns(naive.median_ns),
+                fmt_ns(sparse.median_ns),
+                naive.median_ns / sparse.median_ns,
+                fired
+            );
+            xs.push(n as f64);
+            dense_t.push(naive.median_ns);
+            sparse_t.push(sparse.median_ns);
+        }
+        if let (Some((ed, r2d)), Some((es, r2s))) =
+            (power_fit(&xs, &dense_t), power_fit(&xs, &sparse_t))
+        {
+            println!(
+                "fitted exponents: naive n^{ed:.2} (r2={r2d:.3})  hsr n^{es:.2} (r2={r2s:.3})"
+            );
+            println!("paper claim: naive ~n^2.0, Algorithm 2 ~n^1.8 (d small)");
+        }
+    }
+}

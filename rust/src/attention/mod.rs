@@ -1,0 +1,115 @@
+//! Attention mathematics: the paper's two mechanisms and their sparse
+//! counterparts.
+//!
+//! * [`softmax`] — conventional Softmax attention (Definition 1.1) and
+//!   Softmax attention restricted to an index set / top-r indices
+//!   (Definitions B.1, B.2).
+//! * [`relu`] — ReLU^α attention with threshold bias b (Definition 1.2),
+//!   dense and sparse-from-indices.
+//! * [`topk`] — NN(r, q, K) selection (Definition B.2).
+//! * [`threshold`] — the Lemma 6.1 threshold b = σ_a·sqrt(0.4·ln n) and
+//!   the predicted activated-entry counts behind Table 1.
+//! * [`error`] — approximation-error machinery: the general bound of
+//!   Lemma G.1, the massive-activation bound of Theorem 4.3, and a
+//!   checker for the (γ, β₁, β₂) property of Definition B.3.
+//!
+//! Conventions: all matrices are row-major `f32` slices; `Q` is m×d,
+//! `K`/`V` are n×d, outputs are m×d. Scores are `<q, k>/sqrt(d)` exactly
+//! as in Definitions 1.1/1.2.
+
+pub mod activations;
+pub mod error;
+pub mod relu;
+pub mod softmax;
+pub mod threshold;
+pub mod topk;
+
+use crate::hsr::dot;
+
+/// Which attention mechanism a component should use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttentionKind {
+    /// Softmax attention (Definition 1.1), optionally restricted to the
+    /// top-r indices (Definition B.2).
+    Softmax,
+    /// ReLU^α attention (Definition 1.2) with threshold bias `b`.
+    Relu { alpha: u32, bias: f32 },
+}
+
+/// Compute one row of raw attention scores s_j = <q, K_j>/sqrt(d).
+/// `scores` must have length n.
+pub fn scores_into(q: &[f32], keys: &[f32], d: usize, scores: &mut [f32]) {
+    let n = keys.len() / d;
+    debug_assert_eq!(scores.len(), n);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for (j, s) in scores.iter_mut().enumerate() {
+        *s = dot(q, &keys[j * d..(j + 1) * d]) * inv_sqrt_d;
+    }
+}
+
+/// Scores for a subset of key indices: s_t = <q, K_{idx_t}>/sqrt(d).
+pub fn scores_subset_into(
+    q: &[f32],
+    keys: &[f32],
+    d: usize,
+    idx: &[u32],
+    scores: &mut Vec<f32>,
+) {
+    scores.clear();
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for &j in idx {
+        let j = j as usize;
+        scores.push(dot(q, &keys[j * d..(j + 1) * d]) * inv_sqrt_d);
+    }
+}
+
+/// out += w * V_j for a single value row.
+#[inline]
+pub fn axpy_row(out: &mut [f32], values: &[f32], d: usize, j: usize, w: f32) {
+    let row = &values[j * d..(j + 1) * d];
+    for (o, &v) in out.iter_mut().zip(row) {
+        *o += w * v;
+    }
+}
+
+/// Max absolute difference between two equal-length slices (the ℓ∞ metric
+/// used by every error theorem in the paper).
+pub fn linf(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_scale_by_sqrt_d() {
+        let q = [2.0f32, 0.0, 0.0, 0.0];
+        let keys = [3.0f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let mut s = [0f32; 2];
+        scores_into(&q, &keys, 4, &mut s);
+        assert!((s[0] - 3.0).abs() < 1e-6); // 6 / sqrt(4)
+        assert!((s[1] - 0.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn subset_scores_match_dense() {
+        let q = [1.0f32, -1.0];
+        let keys = [1.0f32, 0.0, 0.0, 1.0, 2.0, 2.0];
+        let mut dense = [0f32; 3];
+        scores_into(&q, &keys, 2, &mut dense);
+        let mut sub = Vec::new();
+        scores_subset_into(&q, &keys, 2, &[2, 0], &mut sub);
+        assert_eq!(sub, vec![dense[2], dense[0]]);
+    }
+
+    #[test]
+    fn linf_basic() {
+        assert_eq!(linf(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(linf(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,242 @@
+//! ReLU^α attention (Definition 1.2).
+//!
+//! A_r = ReLU^α(QK^T/√d − b), D = diag(A_r·1_n), out = D^{-1} A_r V.
+//! The crucial property the paper exploits: entries with score ≤ b
+//! contribute *exactly zero*, so evaluating only the HSR-reported set
+//! {j : <q,K_j>/√d ≥ b} is **error-free** (unlike the softmax case which
+//! pays the Theorem 4.3 approximation error).
+//!
+//! Rows whose activations are all zero have D_ii = 0; we define the output
+//! row as zero in that case (the paper's D^{-1} is undefined there — the
+//! Lemma 6.1 threshold makes this a measure-zero event for Gaussian data,
+//! but the engine must not NaN on it).
+
+use super::{axpy_row, scores_into, scores_subset_into};
+
+/// ReLU(x)^α for integer α ≥ 1.
+#[inline]
+pub fn relu_pow(x: f32, alpha: u32) -> f32 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    match alpha {
+        1 => x,
+        2 => x * x,
+        3 => x * x * x,
+        a => x.powi(a as i32),
+    }
+}
+
+/// Dense ReLU^α attention for one query row (naive O(nd) baseline).
+/// `out` length d.
+pub fn relu_attention_row(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    alpha: u32,
+    bias: f32,
+    scores_buf: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let n = keys.len() / d;
+    scores_buf.resize(n, 0.0);
+    scores_into(q, keys, d, scores_buf);
+    out.fill(0.0);
+    let mut denom = 0f32;
+    for s in scores_buf.iter_mut() {
+        *s = relu_pow(*s - bias, alpha);
+        denom += *s;
+    }
+    if denom <= 0.0 {
+        return;
+    }
+    let inv = 1.0 / denom;
+    for (j, &a) in scores_buf.iter().enumerate() {
+        if a > 0.0 {
+            axpy_row(out, values, d, j, a * inv);
+        }
+    }
+}
+
+/// Sparse ReLU^α attention evaluated only on `idx` — exact whenever `idx`
+/// is a superset of the activated set {j : score_j > b} (Algorithm 1
+/// line 17-18 / Algorithm 2 line 12-13).
+pub fn relu_attention_row_sparse(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    alpha: u32,
+    bias: f32,
+    idx: &[u32],
+    scores_buf: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    scores_subset_into(q, keys, d, idx, scores_buf);
+    out.fill(0.0);
+    let mut denom = 0f32;
+    for s in scores_buf.iter_mut() {
+        *s = relu_pow(*s - bias, alpha);
+        denom += *s;
+    }
+    if denom <= 0.0 {
+        return;
+    }
+    let inv = 1.0 / denom;
+    for (t, &a) in scores_buf.iter().enumerate() {
+        if a > 0.0 {
+            axpy_row(out, values, d, idx[t] as usize, a * inv);
+        }
+    }
+}
+
+/// Dense ReLU^α attention over full Q (m×d): Definition 1.2 verbatim.
+pub fn relu_attention(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    alpha: u32,
+    bias: f32,
+) -> Vec<f32> {
+    let m = q.len() / d;
+    let mut out = vec![0f32; m * d];
+    let mut buf = Vec::new();
+    for i in 0..m {
+        relu_attention_row(
+            &q[i * d..(i + 1) * d],
+            keys,
+            values,
+            d,
+            alpha,
+            bias,
+            &mut buf,
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+    out
+}
+
+/// Count activated entries per row of the attention matrix — the
+/// \tilde{k}_i of Lemma 6.1, measured exactly.
+pub fn count_activated(q: &[f32], keys: &[f32], d: usize, bias: f32) -> Vec<usize> {
+    let m = q.len() / d;
+    let n = keys.len() / d;
+    let mut buf = vec![0f32; n];
+    let mut counts = Vec::with_capacity(m);
+    for i in 0..m {
+        scores_into(&q[i * d..(i + 1) * d], keys, d, &mut buf);
+        counts.push(buf.iter().filter(|&&s| s - bias > 0.0).count());
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::linf;
+    use crate::hsr::dot;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn relu_pow_cases() {
+        assert_eq!(relu_pow(-1.0, 1), 0.0);
+        assert_eq!(relu_pow(0.0, 3), 0.0);
+        assert_eq!(relu_pow(2.0, 1), 2.0);
+        assert_eq!(relu_pow(2.0, 2), 4.0);
+        assert_eq!(relu_pow(2.0, 3), 8.0);
+        assert_eq!(relu_pow(2.0, 4), 16.0);
+    }
+
+    /// The core exactness property: evaluating only the activated set
+    /// reproduces the dense result bit-for-bit up to float associativity.
+    #[test]
+    fn sparse_on_activated_set_is_exact() {
+        let mut rng = Rng::new(19);
+        for alpha in [1u32, 2, 3] {
+            let (m, n, d) = (4usize, 120usize, 8usize);
+            let q = rng.gaussian_vec_f32(m * d, 1.0);
+            let k = rng.gaussian_vec_f32(n * d, 1.0);
+            let v = rng.gaussian_vec_f32(n * d, 1.0);
+            let bias = 0.4f32;
+            let dense = relu_attention(&q, &k, &v, d, alpha, bias);
+            let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+            let mut buf = Vec::new();
+            for i in 0..m {
+                let qi = &q[i * d..(i + 1) * d];
+                // Activated set computed independently.
+                let idx: Vec<u32> = (0..n)
+                    .filter(|&j| dot(qi, &k[j * d..(j + 1) * d]) * inv_sqrt_d - bias > 0.0)
+                    .map(|j| j as u32)
+                    .collect();
+                let mut out = vec![0f32; d];
+                relu_attention_row_sparse(qi, &k, &v, d, alpha, bias, &idx, &mut buf, &mut out);
+                assert!(
+                    linf(&out, &dense[i * d..(i + 1) * d]) < 1e-5,
+                    "alpha={alpha} row={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn superset_indices_still_exact() {
+        // Extra non-activated indices must not change the result: their
+        // ReLU contribution is zero by construction.
+        let mut rng = Rng::new(20);
+        let (n, d) = (60usize, 4usize);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let k = rng.gaussian_vec_f32(n * d, 1.0);
+        let v = rng.gaussian_vec_f32(n * d, 1.0);
+        let bias = 0.3f32;
+        let dense = relu_attention(&q, &k, &v, d, 2, bias);
+        let all: Vec<u32> = (0..n as u32).collect();
+        let mut buf = Vec::new();
+        let mut out = vec![0f32; d];
+        relu_attention_row_sparse(&q, &k, &v, d, 2, bias, &all, &mut buf, &mut out);
+        assert!(linf(&out, &dense) < 1e-5);
+    }
+
+    #[test]
+    fn all_below_threshold_yields_zero_row() {
+        let q = [1.0f32, 0.0];
+        let k = [-5.0f32, 0.0, -3.0, 0.0];
+        let v = [1.0f32, 1.0, 1.0, 1.0];
+        let out = relu_attention(&q, &k, &v, 2, 1, 0.0);
+        assert_eq!(out, vec![0.0, 0.0]);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn weights_are_convex_combination() {
+        // With V = all-ones, any normalized attention returns ones.
+        let mut rng = Rng::new(21);
+        let (n, d) = (50usize, 6usize);
+        let q = rng.gaussian_vec_f32(d, 2.0);
+        let k = rng.gaussian_vec_f32(n * d, 1.0);
+        let v = vec![1f32; n * d];
+        let out = relu_attention(&q, &k, &v, d, 2, -10.0);
+        for &x in &out {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn count_activated_matches_manual() {
+        let mut rng = Rng::new(22);
+        let (m, n, d) = (3usize, 200usize, 4usize);
+        let q = rng.gaussian_vec_f32(m * d, 1.0);
+        let k = rng.gaussian_vec_f32(n * d, 1.0);
+        let counts = count_activated(&q, &k, d, 0.5);
+        assert_eq!(counts.len(), m);
+        let inv = 1.0 / (d as f32).sqrt();
+        for i in 0..m {
+            let qi = &q[i * d..(i + 1) * d];
+            let manual = (0..n)
+                .filter(|&j| dot(qi, &k[j * d..(j + 1) * d]) * inv > 0.5)
+                .count();
+            assert_eq!(counts[i], manual);
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Softmax attention (Definition 1.1) and its index-set restriction
+//! (Definitions B.1/B.2 — "top-r nearest-neighbors Softmax attention").
+//!
+//! The dense path is the O(mn) naive baseline of Theorems 4.2/5.2; the
+//! index-set path computes `Softmax(q Ĥ)V̂` over only the selected rows,
+//! which is what Algorithm 1/2 evaluate after the HSR report.
+//! All softmaxes are computed in the numerically stable max-subtracted
+//! form; restricted and dense paths therefore agree exactly on full index
+//! sets (tested below).
+
+use super::{axpy_row, scores_into, scores_subset_into};
+
+/// Dense softmax attention for a single query row: out = Softmax(qK^T/√d)V.
+/// `out` must be zeroed, length d.
+pub fn softmax_attention_row(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    scores_buf: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let n = keys.len() / d;
+    scores_buf.resize(n, 0.0);
+    scores_into(q, keys, d, scores_buf);
+    softmax_weighted_sum(scores_buf, None, values, d, out);
+}
+
+/// Softmax attention restricted to `idx` (Definition B.2):
+/// out = Softmax(q K̂^T/√d) V̂ where K̂, V̂ are the selected rows.
+pub fn softmax_attention_row_subset(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    idx: &[u32],
+    scores_buf: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    scores_subset_into(q, keys, d, idx, scores_buf);
+    softmax_weighted_sum(scores_buf, Some(idx), values, d, out);
+}
+
+/// Shared stable-softmax weighted sum. When `idx` is None the weights map
+/// to value rows 0..n; otherwise to the given indices.
+fn softmax_weighted_sum(
+    scores: &[f32],
+    idx: Option<&[u32]>,
+    values: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    out.fill(0.0);
+    if scores.is_empty() {
+        return;
+    }
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0f32;
+    // Two passes: exp-sum, then weighted accumulation. Keeping exps in a
+    // stack-local reusable buffer would need another scratch vec; the
+    // second pass recomputes exp which profiles faster than an extra
+    // allocation for the row sizes the engine uses (k ≈ n^{4/5}).
+    for &s in scores {
+        denom += (s - max).exp();
+    }
+    if denom == 0.0 || !denom.is_finite() {
+        return;
+    }
+    let inv = 1.0 / denom;
+    for (t, &s) in scores.iter().enumerate() {
+        let w = (s - max).exp() * inv;
+        let row = match idx {
+            Some(ix) => ix[t] as usize,
+            None => t,
+        };
+        axpy_row(out, values, d, row, w);
+    }
+}
+
+/// Dense softmax attention for a full Q (m×d): the naive O(mnd) baseline.
+pub fn softmax_attention(q: &[f32], keys: &[f32], values: &[f32], d: usize) -> Vec<f32> {
+    let m = q.len() / d;
+    let mut out = vec![0f32; m * d];
+    let mut buf = Vec::new();
+    for i in 0..m {
+        softmax_attention_row(
+            &q[i * d..(i + 1) * d],
+            keys,
+            values,
+            d,
+            &mut buf,
+            &mut out[i * d..(i + 1) * d],
+        );
+    }
+    out
+}
+
+/// Softmax probabilities of a score row (stable). Used by the model's
+/// sampling head and by tests.
+pub fn softmax(scores: &[f32]) -> Vec<f32> {
+    if scores.is_empty() {
+        return Vec::new();
+    }
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = scores.iter().map(|&s| (s - max).exp()).collect();
+    let denom: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / denom).collect()
+}
+
+/// log(Σ exp(scores)) computed stably; the building block for perplexity.
+pub fn log_sum_exp(scores: &[f32]) -> f32 {
+    if scores.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !max.is_finite() {
+        return max;
+    }
+    let sum: f32 = scores.iter().map(|&s| (s - max).exp()).sum();
+    max + sum.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::linf;
+    use crate::util::rng::Rng;
+
+    fn rand_qkv(rng: &mut Rng, m: usize, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (
+            rng.gaussian_vec_f32(m * d, 1.0),
+            rng.gaussian_vec_f32(n * d, 1.0),
+            rng.gaussian_vec_f32(n * d, 1.0),
+        )
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let p = softmax(&[0.1, 2.0, -3.0, 0.7]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[101.0, 102.0, 103.0]);
+        assert!(linf(&a, &b) < 1e-6);
+    }
+
+    #[test]
+    fn full_subset_equals_dense() {
+        let mut rng = Rng::new(8);
+        let (m, n, d) = (3usize, 40usize, 8usize);
+        let (q, k, v) = rand_qkv(&mut rng, m, n, d);
+        let dense = softmax_attention(&q, &k, &v, d);
+        let idx: Vec<u32> = (0..n as u32).collect();
+        let mut buf = Vec::new();
+        for i in 0..m {
+            let mut out = vec![0f32; d];
+            softmax_attention_row_subset(&q[i * d..(i + 1) * d], &k, &v, d, &idx, &mut buf, &mut out);
+            assert!(linf(&out, &dense[i * d..(i + 1) * d]) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn subset_is_permutation_invariant() {
+        let mut rng = Rng::new(9);
+        let (_, n, d) = (1usize, 30usize, 4usize);
+        let (q, k, v) = rand_qkv(&mut rng, 1, n, d);
+        let mut idx: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let mut buf = Vec::new();
+        let mut out1 = vec![0f32; d];
+        softmax_attention_row_subset(&q, &k, &v, d, &idx, &mut buf, &mut out1);
+        idx.reverse();
+        let mut out2 = vec![0f32; d];
+        softmax_attention_row_subset(&q, &k, &v, d, &idx, &mut buf, &mut out2);
+        assert!(linf(&out1, &out2) < 1e-5);
+    }
+
+    #[test]
+    fn single_key_attends_fully() {
+        let q = [1.0f32, 0.0];
+        let k = [5.0f32, 5.0];
+        let v = [7.0f32, -3.0];
+        let mut buf = Vec::new();
+        let mut out = vec![0f32; 2];
+        softmax_attention_row(&q, &k, &v, 2, &mut buf, &mut out);
+        assert!(linf(&out, &v) < 1e-6);
+    }
+
+    #[test]
+    fn empty_index_set_gives_zero() {
+        let q = [1.0f32, 0.0];
+        let k = [5.0f32, 5.0];
+        let v = [7.0f32, -3.0];
+        let mut buf = Vec::new();
+        let mut out = vec![1f32; 2];
+        softmax_attention_row_subset(&q, &k, &v, 2, &[], &mut buf, &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn extreme_scores_are_stable() {
+        // Large-magnitude q/k would overflow naive exp.
+        let q = [100.0f32, 100.0];
+        let k = [100.0f32, 100.0, -100.0, -100.0];
+        let v = [1.0f32, 0.0, 0.0, 1.0];
+        let mut buf = Vec::new();
+        let mut out = vec![0f32; 2];
+        softmax_attention_row(&q, &k, &v, 2, &mut buf, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!((out[0] - 1.0).abs() < 1e-6); // all mass on key 0
+    }
+
+    #[test]
+    fn log_sum_exp_matches_naive_in_safe_range() {
+        let s = [0.3f32, -1.2, 2.0];
+        let naive = (s.iter().map(|&x| x.exp()).sum::<f32>()).ln();
+        assert!((log_sum_exp(&s) - naive).abs() < 1e-5);
+        assert_eq!(log_sum_exp(&[]), f32::NEG_INFINITY);
+    }
+}

@@ -1,0 +1,132 @@
+//! Top-k index selection: NN(r, q, K) of Definition B.2 — the indices of
+//! the r largest attention scores. Two paths:
+//!
+//! * [`top_r_indices`] — dense O(n) selection via `select_nth_unstable`
+//!   (used by baselines and by Figure-3 evaluation).
+//! * [`top_r_of_subset`] — selection restricted to an HSR-reported
+//!   candidate set, the "report superset, then top-r" step Theorem 4.2
+//!   needs when the threshold b over-reports.
+
+/// Indices of the r largest values in `scores` (ties broken arbitrarily),
+/// returned sorted by index. r is clamped to n.
+pub fn top_r_indices(scores: &[f32], r: usize) -> Vec<u32> {
+    let n = scores.len();
+    let r = r.min(n);
+    if r == 0 {
+        return Vec::new();
+    }
+    if r == n {
+        return (0..n as u32).collect();
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    // Partition so the r largest are in front.
+    idx.select_nth_unstable_by(r - 1, |&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(r);
+    idx.sort_unstable();
+    idx
+}
+
+/// Top-r of a candidate subset: `candidates` are key indices, `scores[t]`
+/// is the score of `candidates[t]`. Returns global indices, sorted.
+pub fn top_r_of_subset(candidates: &[u32], scores: &[f32], r: usize) -> Vec<u32> {
+    assert_eq!(candidates.len(), scores.len());
+    let k = candidates.len();
+    let r = r.min(k);
+    if r == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    if r < k {
+        order.select_nth_unstable_by(r - 1, |&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order.truncate(r);
+    }
+    let mut out: Vec<u32> = order.into_iter().map(|t| candidates[t as usize]).collect();
+    out.sort_unstable();
+    out
+}
+
+/// The r-th largest value of `scores` (the selection threshold): the
+/// smallest score still inside NN(r, ·, ·). Returns -inf for r == 0.
+pub fn rth_largest(scores: &[f32], r: usize) -> f32 {
+    if r == 0 || scores.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let r = r.min(scores.len());
+    let mut v = scores.to_vec();
+    let (_, nth, _) = v.select_nth_unstable_by(r - 1, |a, b| {
+        b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    *nth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn brute_top_r(scores: &[f32], r: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(r.min(scores.len()));
+        idx.sort_unstable();
+        idx
+    }
+
+    #[test]
+    fn matches_brute_force_without_ties() {
+        let mut rng = Rng::new(31);
+        for _ in 0..50 {
+            let n = rng.range(1, 300);
+            let r = rng.range(0, n + 3);
+            // Gaussian draws: ties have probability ~0.
+            let scores = rng.gaussian_vec_f32(n, 1.0);
+            assert_eq!(top_r_indices(&scores, r), brute_top_r(&scores, r));
+        }
+    }
+
+    #[test]
+    fn with_ties_returns_correct_count_and_threshold() {
+        let scores = vec![1.0f32, 2.0, 2.0, 2.0, 0.0];
+        let got = top_r_indices(&scores, 2);
+        assert_eq!(got.len(), 2);
+        for &i in &got {
+            assert!(scores[i as usize] >= 2.0);
+        }
+    }
+
+    #[test]
+    fn subset_selection_matches_dense_when_subset_covers_topr() {
+        let mut rng = Rng::new(33);
+        let n = 200;
+        let scores: Vec<f32> = rng.gaussian_vec_f32(n, 1.0);
+        let r = 10;
+        let dense = top_r_indices(&scores, r);
+        // Candidate set = top 50 (a superset of top 10).
+        let cands = top_r_indices(&scores, 50);
+        let sub_scores: Vec<f32> = cands.iter().map(|&i| scores[i as usize]).collect();
+        assert_eq!(top_r_of_subset(&cands, &sub_scores, r), dense);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert!(top_r_indices(&[], 5).is_empty());
+        assert!(top_r_indices(&[1.0], 0).is_empty());
+        assert_eq!(top_r_indices(&[1.0, 2.0], 10), vec![0, 1]);
+        assert_eq!(rth_largest(&[], 3), f32::NEG_INFINITY);
+        assert_eq!(rth_largest(&[5.0, 1.0, 3.0], 2), 3.0);
+        assert_eq!(rth_largest(&[5.0, 1.0, 3.0], 100), 1.0);
+    }
+}

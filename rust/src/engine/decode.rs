@@ -1,0 +1,321 @@
+//! Algorithm 1 — Generation Decoding.
+//!
+//! The paper's `GenerationDecoding` data structure, verbatim:
+//!
+//! ```text
+//! INIT({K_i}, V, n, d):   b ← σ_a √(0.4 log n);  HSR.INIT({K_i}, n, d)
+//! INFERENCE(Q, m):        for i in 1..m:
+//!                           S̃_i,fire ← HSR.QUERY(Q_i, b)
+//!                           A_{i,j} ← ReLU^α(⟨Q_i,K_j⟩/√d − b)  (or Softmax)
+//!                         return D^{-1} A V
+//! ```
+//!
+//! The KV cache (K, V) is fixed at INIT (generation-decoding scenario,
+//! m = Θ(1) queries per step); the paper's Part-2 HSR (heavy
+//! preprocessing, cheap queries) maps to whichever backend the caller
+//! selects — see DESIGN.md §3 for the substitution. Support for appending
+//! freshly generated keys (the auto-regressive loop of Theorem D.2) comes
+//! from the dynamic logarithmic-method wrapper.
+
+use crate::attention::relu::relu_attention_row_sparse;
+use crate::attention::softmax::softmax_attention_row_subset;
+use crate::attention::threshold::ThresholdParams;
+use crate::attention::topk::top_r_of_subset;
+use crate::attention::AttentionKind;
+use crate::hsr::dynamic::DynamicHsr;
+use crate::hsr::{HalfSpaceReport, HsrBackend, QueryStats};
+
+/// The paper's Algorithm 1 over raw K/V matrices.
+pub struct GenerationDecoding {
+    /// HSR structure over the keys (dynamic: supports appends).
+    hsr: DynamicHsr,
+    /// Keys, row-major [n, d] (grows on append).
+    keys: Vec<f32>,
+    /// Values, row-major [n, d].
+    values: Vec<f32>,
+    d: usize,
+    /// Threshold b on the scaled score ⟨q,k⟩/√d (Lemma 6.1).
+    pub bias: f32,
+    /// Which attention to evaluate on the reported set.
+    pub kind: AttentionKind,
+    /// For softmax: restrict to top-r of the report (Theorem 4.2);
+    /// None → use the whole reported set.
+    pub top_r: Option<usize>,
+    /// Key std σ_k for the per-query adaptive softmax threshold.
+    pub sigma_k: f64,
+    /// Accumulated query-work counters.
+    pub stats: QueryStats,
+}
+
+impl GenerationDecoding {
+    /// INIT: build the HSR structure over the KV cache.
+    /// `bias` is on the scaled score; pass
+    /// `ThresholdParams::practical_bias` / `bias` / a calibrated value.
+    pub fn init(
+        keys: &[f32],
+        values: &[f32],
+        d: usize,
+        bias: f32,
+        kind: AttentionKind,
+        backend: HsrBackend,
+    ) -> GenerationDecoding {
+        assert_eq!(keys.len(), values.len());
+        assert_eq!(keys.len() % d, 0);
+        GenerationDecoding {
+            hsr: DynamicHsr::from_points(backend, keys, d),
+            keys: keys.to_vec(),
+            values: values.to_vec(),
+            d,
+            bias,
+            kind,
+            top_r: None,
+            sigma_k: 1.0,
+            stats: QueryStats::default(),
+        }
+    }
+
+    /// INIT with the paper's Lemma 6.1 threshold for Gaussian K/Q.
+    pub fn init_gaussian(
+        keys: &[f32],
+        values: &[f32],
+        d: usize,
+        m: usize,
+        kind: AttentionKind,
+        backend: HsrBackend,
+    ) -> GenerationDecoding {
+        let n = keys.len() / d;
+        let params = ThresholdParams::standard(d, m);
+        let bias = params.practical_bias(n.max(2)) as f32;
+        GenerationDecoding::init(keys, values, d, bias, kind, backend)
+    }
+
+    /// Number of cached (key, value) rows.
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Append a generated token's (k, v) — Theorem D.2's auto-regressive
+    /// cache growth, amortized-logarithmic via the dynamic HSR.
+    pub fn append(&mut self, key: &[f32], value: &[f32]) {
+        assert_eq!(key.len(), self.d);
+        assert_eq!(value.len(), self.d);
+        self.hsr.insert(key);
+        self.keys.extend_from_slice(key);
+        self.values.extend_from_slice(value);
+    }
+
+    /// INFERENCE for a single query row; writes the attention output into
+    /// `out` (length d) and returns the activated-set size k̃.
+    pub fn inference_row(&mut self, q: &[f32], out: &mut [f32]) -> usize {
+        assert_eq!(q.len(), self.d);
+        // HSR threshold is on the raw inner product: ⟨q,k⟩ ≥ b·√d.
+        // Softmax top-r uses a *per-query adaptive* threshold instead:
+        // <q,k> | q ~ N(0, ‖q‖²σ_k²), so aiming the expected report at 2r
+        // needs b_raw = ‖q‖σ_k√(2 ln(n/2r)) — a fixed b under-reports for
+        // small-norm queries (and triggers costly full-scan fallbacks).
+        let b_raw = match (self.kind, self.top_r) {
+            (AttentionKind::Softmax, Some(r)) => {
+                let n = self.len().max(2) as f64;
+                let target = (2 * r).max(1) as f64;
+                let t = (2.0 * (n / target).ln()).max(0.0).sqrt();
+                (crate::hsr::norm(q) as f64 * self.sigma_k * t) as f32
+            }
+            _ => self.bias * (self.d as f32).sqrt(),
+        };
+        let mut fire: Vec<u32> = Vec::new();
+        self.hsr.query_into(q, b_raw, &mut fire, &mut self.stats);
+        let mut scores_buf = Vec::new();
+        match self.kind {
+            AttentionKind::Relu { alpha, bias } => {
+                debug_assert!(
+                    (bias - self.bias).abs() < 1e-6,
+                    "ReLU bias must equal the HSR threshold for exactness"
+                );
+                relu_attention_row_sparse(
+                    q,
+                    &self.keys,
+                    &self.values,
+                    self.d,
+                    alpha,
+                    self.bias,
+                    &fire,
+                    &mut scores_buf,
+                    out,
+                );
+                fire.len()
+            }
+            AttentionKind::Softmax => {
+                // Theorem 4.2 needs R = NN(r, q, K): if the threshold
+                // under-reported (|fire| < r), fall back to the full
+                // half-space so the top-r below is exact.
+                if let Some(r) = self.top_r {
+                    if fire.len() < r.min(self.len()) {
+                        fire.clear();
+                        self.hsr
+                            .query_into(q, f32::NEG_INFINITY, &mut fire, &mut self.stats);
+                    }
+                }
+                let selected = match self.top_r {
+                    Some(r) if r < fire.len() => {
+                        let mut raw = Vec::with_capacity(fire.len());
+                        for &j in &fire {
+                            raw.push(crate::hsr::dot(
+                                q,
+                                &self.keys[j as usize * self.d..(j as usize + 1) * self.d],
+                            ));
+                        }
+                        top_r_of_subset(&fire, &raw, r)
+                    }
+                    _ => fire,
+                };
+                softmax_attention_row_subset(
+                    q,
+                    &self.keys,
+                    &self.values,
+                    self.d,
+                    &selected,
+                    &mut scores_buf,
+                    out,
+                );
+                selected.len()
+            }
+        }
+    }
+
+    /// INFERENCE over a full Q (m × d): returns the m × d output.
+    pub fn inference(&mut self, q: &[f32]) -> Vec<f32> {
+        let m = q.len() / self.d;
+        let mut out = vec![0f32; m * self.d];
+        for i in 0..m {
+            let (qs, qe) = (i * self.d, (i + 1) * self.d);
+            // Split borrow: copy the row (d is small).
+            let qrow: Vec<f32> = q[qs..qe].to_vec();
+            self.inference_row(&qrow, &mut out[qs..qe]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::relu::relu_attention;
+    use crate::attention::softmax::softmax_attention;
+    use crate::attention::{linf, AttentionKind};
+    use crate::util::rng::Rng;
+    use crate::workloads::gaussian::AttentionInstance;
+
+    /// Algorithm 1 with ReLU attention is *exact* vs the naive dense
+    /// computation (the paper's "no error for ReLU" claim).
+    #[test]
+    fn relu_matches_dense_exactly() {
+        let mut rng = Rng::new(101);
+        for backend in [HsrBackend::Brute, HsrBackend::BallTree, HsrBackend::Projected] {
+            let inst = AttentionInstance::gaussian(&mut rng, 4, 600, 8);
+            let bias = inst.params.practical_bias(inst.n) as f32;
+            for alpha in [1u32, 2] {
+                let mut gd = GenerationDecoding::init(
+                    &inst.k,
+                    &inst.v,
+                    inst.d,
+                    bias,
+                    AttentionKind::Relu { alpha, bias },
+                    backend,
+                );
+                let got = gd.inference(&inst.q);
+                let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, alpha, bias);
+                assert!(
+                    linf(&got, &want) < 1e-4,
+                    "backend={backend:?} alpha={alpha}: {}",
+                    linf(&got, &want)
+                );
+            }
+        }
+    }
+
+    /// Softmax with top-r over the report is close to dense and the error
+    /// shrinks as r grows (Theorem 4.3's shape).
+    #[test]
+    fn softmax_topr_error_shrinks() {
+        let mut rng = Rng::new(102);
+        let inst = AttentionInstance::gaussian(&mut rng, 2, 800, 8);
+        let dense = softmax_attention(&inst.q, &inst.k, &inst.v, inst.d);
+        let mut last_err = f32::INFINITY;
+        for r in [8usize, 64, 512, 800] {
+            let mut gd = GenerationDecoding::init(
+                &inst.k,
+                &inst.v,
+                inst.d,
+                f32::NEG_INFINITY, // report everything; top-r selects
+                AttentionKind::Softmax,
+                HsrBackend::BallTree,
+            );
+            gd.top_r = Some(r);
+            let got = gd.inference(&inst.q);
+            let err = linf(&got, &dense);
+            assert!(err <= last_err * 1.25 + 1e-6, "r={r} err={err} last={last_err}");
+            last_err = last_err.min(err);
+        }
+        assert!(last_err < 1e-5, "full r must be exact: {last_err}");
+    }
+
+    /// Appending keys (auto-regressive growth) stays consistent with a
+    /// from-scratch build.
+    #[test]
+    fn append_matches_rebuild() {
+        let mut rng = Rng::new(103);
+        let d = 6;
+        let inst = AttentionInstance::gaussian(&mut rng, 1, 200, d);
+        let bias = 0.2f32;
+        let kind = AttentionKind::Relu { alpha: 1, bias };
+        let mut grown = GenerationDecoding::init(
+            &inst.k[..100 * d],
+            &inst.v[..100 * d],
+            d,
+            bias,
+            kind,
+            HsrBackend::BallTree,
+        );
+        for j in 100..200 {
+            grown.append(&inst.k[j * d..(j + 1) * d], &inst.v[j * d..(j + 1) * d]);
+        }
+        let mut fresh =
+            GenerationDecoding::init(&inst.k, &inst.v, d, bias, kind, HsrBackend::BallTree);
+        let mut out_a = vec![0f32; d];
+        let mut out_b = vec![0f32; d];
+        let q: Vec<f32> = inst.q[..d].to_vec();
+        grown.inference_row(&q, &mut out_a);
+        fresh.inference_row(&q, &mut out_b);
+        assert!(linf(&out_a, &out_b) < 1e-5);
+    }
+
+    /// The activated-set size tracks Lemma 6.1: k̃ ≤ 2 n^{4/5}.
+    #[test]
+    fn activated_count_respects_lemma() {
+        let mut rng = Rng::new(104);
+        let inst = AttentionInstance::gaussian(&mut rng, 8, 4096, 16);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let mut gd = GenerationDecoding::init(
+            &inst.k,
+            &inst.v,
+            inst.d,
+            bias,
+            AttentionKind::Relu { alpha: 1, bias },
+            HsrBackend::BallTree,
+        );
+        let bound = inst.params.row_bound(inst.n) as usize;
+        let mut out = vec![0f32; inst.d];
+        let mut any = 0usize;
+        for i in 0..inst.m {
+            let q: Vec<f32> = inst.query_row(i).to_vec();
+            let fired = gd.inference_row(&q, &mut out);
+            assert!(fired <= bound, "row {i}: fired {fired} > bound {bound}");
+            any += fired;
+        }
+        assert!(any > 0, "nothing fired at the practical threshold");
+    }
+}

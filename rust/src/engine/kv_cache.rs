@@ -1,0 +1,148 @@
+//! Paged KV-cache accounting: a block allocator in the vLLM style.
+//!
+//! Sequences allocate fixed-size token blocks as they grow; admission and
+//! preemption decisions are driven by pool pressure. The float payload
+//! itself lives in each sequence's [`crate::model::kv::KvState`] (the HSR
+//! index needs contiguous per-head key rows); this allocator is the
+//! capacity authority — a sequence may only hold tokens it has blocks
+//! for, which tests enforce.
+
+/// Fixed-size block allocator over an abstract pool of token slots.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    block_tokens: usize,
+    free: Vec<u32>,
+    total_blocks: usize,
+}
+
+impl BlockAllocator {
+    /// Pool sized for `capacity_tokens` tokens in `block_tokens`-sized
+    /// blocks.
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> BlockAllocator {
+        assert!(block_tokens > 0);
+        let total_blocks = capacity_tokens / block_tokens;
+        BlockAllocator {
+            block_tokens,
+            free: (0..total_blocks as u32).rev().collect(),
+            total_blocks,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    /// Tokens currently allocatable without eviction.
+    pub fn free_tokens(&self) -> usize {
+        self.free.len() * self.block_tokens
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Allocate `count` blocks; None if the pool cannot satisfy it.
+    pub fn alloc(&mut self, count: usize) -> Option<Vec<u32>> {
+        if self.free.len() < count {
+            return None;
+        }
+        Some(self.free.split_off(self.free.len() - count))
+    }
+
+    /// Grow a sequence's holding from `held` blocks to cover
+    /// `needed_tokens`; appends new blocks to `blocks`.
+    pub fn ensure(&mut self, blocks: &mut Vec<u32>, needed_tokens: usize) -> bool {
+        let need = self.blocks_for(needed_tokens);
+        if blocks.len() >= need {
+            return true;
+        }
+        match self.alloc(need - blocks.len()) {
+            Some(mut extra) => {
+                blocks.append(&mut extra);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Return blocks to the pool.
+    pub fn release(&mut self, blocks: &mut Vec<u32>) {
+        self.free.append(blocks);
+        debug_assert!(self.free.len() <= self.total_blocks);
+    }
+
+    /// Pool utilization in [0, 1].
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 0.0;
+        }
+        1.0 - self.free.len() as f64 / self.total_blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = BlockAllocator::new(1024, 16);
+        assert_eq!(a.total_blocks(), 64);
+        let mut b1 = a.alloc(10).unwrap();
+        assert_eq!(a.free_blocks(), 54);
+        a.release(&mut b1);
+        assert_eq!(a.free_blocks(), 64);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = BlockAllocator::new(64, 16);
+        assert!(a.alloc(4).is_some());
+        assert!(a.alloc(1).is_none());
+    }
+
+    #[test]
+    fn ensure_grows_incrementally() {
+        let mut a = BlockAllocator::new(160, 16);
+        let mut blocks = Vec::new();
+        assert!(a.ensure(&mut blocks, 1)); // 1 block
+        assert_eq!(blocks.len(), 1);
+        assert!(a.ensure(&mut blocks, 16)); // still 1 block
+        assert_eq!(blocks.len(), 1);
+        assert!(a.ensure(&mut blocks, 17)); // 2 blocks
+        assert_eq!(blocks.len(), 2);
+        assert!(a.ensure(&mut blocks, 160));
+        assert_eq!(blocks.len(), 10);
+        assert!(!a.ensure(&mut blocks, 176)); // pool exhausted
+        assert_eq!(blocks.len(), 10);
+    }
+
+    #[test]
+    fn no_double_allocation() {
+        let mut a = BlockAllocator::new(64, 8);
+        let b1 = a.alloc(4).unwrap();
+        let b2 = a.alloc(4).unwrap();
+        for x in &b1 {
+            assert!(!b2.contains(x), "block {x} double-allocated");
+        }
+    }
+
+    #[test]
+    fn utilization_tracks() {
+        let mut a = BlockAllocator::new(100, 10);
+        assert_eq!(a.utilization(), 0.0);
+        let mut b = a.alloc(5).unwrap();
+        assert!((a.utilization() - 0.5).abs() < 1e-12);
+        a.release(&mut b);
+        assert_eq!(a.utilization(), 0.0);
+    }
+}

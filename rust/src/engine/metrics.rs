@@ -1,0 +1,112 @@
+//! Engine metrics: counters + latency histograms, cheap enough for the
+//! token hot loop, merged across workers by the router.
+
+use crate::util::stats::Histogram;
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests_submitted: u64,
+    pub requests_completed: u64,
+    pub requests_preempted: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    /// Per decode-step wall time across batches.
+    pub step_latency: Histogram,
+    /// End-to-end request latency.
+    pub request_latency: Histogram,
+    /// Time to first token.
+    pub ttft: Histogram,
+    /// HSR instrumentation totals.
+    pub hsr_points_scanned: u64,
+    pub hsr_reported: u64,
+    pub attended_entries: u64,
+    pub dense_equivalent_entries: u64,
+    pub calibration_fallbacks: u64,
+}
+
+impl Metrics {
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.requests_preempted += other.requests_preempted;
+        self.prompt_tokens += other.prompt_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.step_latency.merge(&other.step_latency);
+        self.request_latency.merge(&other.request_latency);
+        self.ttft.merge(&other.ttft);
+        self.hsr_points_scanned += other.hsr_points_scanned;
+        self.hsr_reported += other.hsr_reported;
+        self.attended_entries += other.attended_entries;
+        self.dense_equivalent_entries += other.dense_equivalent_entries;
+        self.calibration_fallbacks += other.calibration_fallbacks;
+    }
+
+    pub fn record_step_stats(&mut self, s: &crate::model::transformer::StepStats) {
+        self.hsr_points_scanned += s.hsr.points_scanned as u64;
+        self.hsr_reported += s.hsr.reported as u64;
+        self.attended_entries += s.attended as u64;
+        self.dense_equivalent_entries += s.dense_equivalent as u64;
+        self.calibration_fallbacks += s.fallbacks as u64;
+    }
+
+    /// Fraction of attention entries actually computed vs dense
+    /// (1 − this = the Table-1 "sparsity ratio" realized by the engine).
+    pub fn attended_fraction(&self) -> f64 {
+        if self.dense_equivalent_entries == 0 {
+            return 1.0;
+        }
+        self.attended_entries as f64 / self.dense_equivalent_entries as f64
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests: {} submitted / {} completed / {} preempted\n\
+             tokens:   {} prompt / {} generated\n\
+             latency:  p50 {} p90 {} p99 {} (request)  ttft p50 {}\n\
+             step:     p50 {} p99 {}\n\
+             sparsity: attended {:.2}% of dense ({} fallbacks)",
+            self.requests_submitted,
+            self.requests_completed,
+            self.requests_preempted,
+            self.prompt_tokens,
+            self.generated_tokens,
+            crate::util::stats::fmt_ns(self.request_latency.percentile_ns(50.0) as f64),
+            crate::util::stats::fmt_ns(self.request_latency.percentile_ns(90.0) as f64),
+            crate::util::stats::fmt_ns(self.request_latency.percentile_ns(99.0) as f64),
+            crate::util::stats::fmt_ns(self.ttft.percentile_ns(50.0) as f64),
+            crate::util::stats::fmt_ns(self.step_latency.percentile_ns(50.0) as f64),
+            crate::util::stats::fmt_ns(self.step_latency.percentile_ns(99.0) as f64),
+            100.0 * self.attended_fraction(),
+            self.calibration_fallbacks,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.requests_completed = 3;
+        b.requests_completed = 4;
+        b.generated_tokens = 10;
+        a.merge(&b);
+        assert_eq!(a.requests_completed, 7);
+        assert_eq!(a.generated_tokens, 10);
+    }
+
+    #[test]
+    fn attended_fraction_bounds() {
+        let mut m = Metrics::default();
+        assert_eq!(m.attended_fraction(), 1.0);
+        m.dense_equivalent_entries = 100;
+        m.attended_entries = 25;
+        assert!((m.attended_fraction() - 0.25).abs() < 1e-12);
+        assert!(m.summary().contains("25.00%"));
+    }
+}

@@ -1,0 +1,26 @@
+//! The serving engine — the L3 coordination layer.
+//!
+//! * [`decode`] / [`prefill`] — the paper's Algorithm 1 and Algorithm 2 as
+//!   standalone data structures over raw Q/K/V (what the theorem-level
+//!   benches exercise).
+//! * [`serving`] — the continuous-batching engine integrating Algorithm 1
+//!   into real LM serving: paged KV cache ([`kv_cache`]), chunked
+//!   prefill, preemption ([`scheduler`]), per-(layer, head) dynamic HSR
+//!   indices, and [`metrics`].
+//! * [`router`] — multi-worker request routing.
+
+pub mod decode;
+pub mod kv_cache;
+pub mod metrics;
+pub mod prefill;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod serving;
+
+pub use decode::GenerationDecoding;
+pub use prefill::{PrefillResult, PromptPrefilling};
+pub use request::{FinishReason, GenerationParams, Request, RequestId, Response};
+pub use router::Router;
+pub use scheduler::{PreemptPolicy, SchedulerConfig};
+pub use serving::{Engine, EngineConfig};

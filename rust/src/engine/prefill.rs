@@ -1,0 +1,198 @@
+//! Algorithm 2 — Prompt Prefilling.
+//!
+//! The paper's `PromptPrefilling` data structure: both Q and K vary per
+//! call (m = Θ(n)), so the HSR structure is built *inside* INFERENCE with
+//! the cheap Part-1 build and queried once per query row:
+//!
+//! ```text
+//! INFERENCE({K_i}, {Q_r}, V, n, m, d):
+//!   b ← σ_a √(0.4 log n)
+//!   HSR.INIT({K_i}, n, d)                       (O(n log n))
+//!   for i in 1..m:  S̃_i,fire ← HSR.QUERY(Q_i, b)
+//!                   A_{i,j} ← ReLU^α(…)  or Softmax(…)
+//!   return D^{-1} A V
+//! ```
+
+use crate::attention::relu::relu_attention_row_sparse;
+use crate::attention::softmax::softmax_attention_row_subset;
+use crate::attention::threshold::ThresholdParams;
+use crate::attention::topk::top_r_of_subset;
+use crate::attention::AttentionKind;
+use crate::hsr::{build_hsr, HsrBackend, QueryStats};
+
+/// Output of one prefill run.
+pub struct PrefillResult {
+    /// Attention output, row-major [m, d].
+    pub out: Vec<f32>,
+    /// Activated entries per query row (the k̃_i of Lemma 6.1).
+    pub fired: Vec<usize>,
+    /// HSR work counters.
+    pub stats: QueryStats,
+}
+
+/// Algorithm 2 configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PromptPrefilling {
+    pub kind: AttentionKind,
+    pub backend: HsrBackend,
+    /// Softmax: keep only the top-r of each report (Theorem 5.2).
+    pub top_r: Option<usize>,
+    /// Override the Lemma 6.1 threshold (scaled-score units).
+    pub bias_override: Option<f32>,
+}
+
+impl PromptPrefilling {
+    pub fn new(kind: AttentionKind, backend: HsrBackend) -> PromptPrefilling {
+        PromptPrefilling { kind, backend, top_r: None, bias_override: None }
+    }
+
+    /// INFERENCE: full attention of Q, K, V (non-causal — the paper's
+    /// prompt-prefilling / cross-attention setting).
+    pub fn inference(
+        &self,
+        q: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        n: usize,
+        m: usize,
+        d: usize,
+    ) -> PrefillResult {
+        assert_eq!(q.len(), m * d);
+        assert_eq!(keys.len(), n * d);
+        assert_eq!(values.len(), n * d);
+        let params = ThresholdParams::standard(d, m.max(1));
+        let bias = self
+            .bias_override
+            .unwrap_or_else(|| params.practical_bias(n.max(2)) as f32);
+        // Part-1 build: O(n log n)-shaped.
+        let hsr = build_hsr(self.backend, keys, d);
+        let b_raw = bias * (d as f32).sqrt();
+
+        let mut out = vec![0f32; m * d];
+        let mut fired = Vec::with_capacity(m);
+        let mut stats = QueryStats::default();
+        let mut fire: Vec<u32> = Vec::new();
+        let mut scores_buf: Vec<f32> = Vec::new();
+        for i in 0..m {
+            let qi = &q[i * d..(i + 1) * d];
+            fire.clear();
+            hsr.query_into(qi, b_raw, &mut fire, &mut stats);
+            let orow = &mut out[i * d..(i + 1) * d];
+            match self.kind {
+                AttentionKind::Relu { alpha, .. } => {
+                    relu_attention_row_sparse(
+                        qi, keys, values, d, alpha, bias, &fire, &mut scores_buf, orow,
+                    );
+                    fired.push(fire.len());
+                }
+                AttentionKind::Softmax => {
+                    // Under-reported threshold: fall back to the full
+                    // half-space so top-r is exact (Theorem 5.2).
+                    if let Some(r) = self.top_r {
+                        if fire.len() < r.min(n) {
+                            fire.clear();
+                            hsr.query_into(qi, f32::NEG_INFINITY, &mut fire, &mut stats);
+                        }
+                    }
+                    let selected = match self.top_r {
+                        Some(r) if r < fire.len() => {
+                            let mut raw = Vec::with_capacity(fire.len());
+                            for &j in &fire {
+                                raw.push(crate::hsr::dot(
+                                    qi,
+                                    &keys[j as usize * d..(j as usize + 1) * d],
+                                ));
+                            }
+                            top_r_of_subset(&fire, &raw, r)
+                        }
+                        _ => std::mem::take(&mut fire),
+                    };
+                    softmax_attention_row_subset(
+                        qi, keys, values, d, &selected, &mut scores_buf, orow,
+                    );
+                    fired.push(selected.len());
+                }
+            }
+        }
+        PrefillResult { out, fired, stats }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::relu::relu_attention;
+    use crate::attention::{linf, AttentionKind};
+    use crate::util::rng::Rng;
+    use crate::workloads::gaussian::AttentionInstance;
+
+    #[test]
+    fn relu_prefill_matches_dense() {
+        let mut rng = Rng::new(111);
+        let inst = AttentionInstance::gaussian(&mut rng, 150, 150, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        for backend in [HsrBackend::Brute, HsrBackend::BallTree] {
+            let pp = PromptPrefilling {
+                kind: AttentionKind::Relu { alpha: 2, bias },
+                backend,
+                top_r: None,
+                bias_override: Some(bias),
+            };
+            let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+            let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, 2, bias);
+            assert!(linf(&res.out, &want) < 1e-4, "backend={backend:?}");
+            assert_eq!(res.fired.len(), inst.m);
+        }
+    }
+
+    #[test]
+    fn layers2d_backend_for_d2() {
+        let mut rng = Rng::new(112);
+        let inst = AttentionInstance::gaussian(&mut rng, 60, 200, 2);
+        let bias = 0.1f32;
+        let pp = PromptPrefilling {
+            kind: AttentionKind::Relu { alpha: 1, bias },
+            backend: HsrBackend::Layers2d,
+            top_r: None,
+            bias_override: Some(bias),
+        };
+        let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+        let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, 1, bias);
+        assert!(linf(&res.out, &want) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_topr_stays_close_to_dense() {
+        let mut rng = Rng::new(113);
+        let inst = AttentionInstance::gaussian(&mut rng, 100, 400, 8);
+        let mut pp = PromptPrefilling::new(AttentionKind::Softmax, HsrBackend::BallTree);
+        pp.bias_override = Some(f32::NEG_INFINITY);
+        pp.top_r = Some(128);
+        let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+        let dense = crate::attention::softmax::softmax_attention(&inst.q, &inst.k, &inst.v, inst.d);
+        // 128 of 400 top entries carries most of the exp mass; isotropic
+        // Gaussian scores are the *worst* case for top-r truncation (no
+        // massive activation), so the tolerance here is loose. The
+        // massive-activation sweep in benches/error_topr.rs is the sharp
+        // version of this check.
+        assert!(linf(&res.out, &dense) < 0.3, "err={}", linf(&res.out, &dense));
+        assert!(res.fired.iter().all(|&f| f <= 128));
+    }
+
+    #[test]
+    fn fired_counts_respect_lemma_bound() {
+        let mut rng = Rng::new(114);
+        let inst = AttentionInstance::gaussian(&mut rng, 64, 2048, 16);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let pp = PromptPrefilling {
+            kind: AttentionKind::Relu { alpha: 1, bias },
+            backend: HsrBackend::BallTree,
+            top_r: None,
+            bias_override: Some(bias),
+        };
+        let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+        let bound = inst.params.row_bound(inst.n) as usize;
+        assert!(res.fired.iter().all(|&f| f <= bound));
+        assert!(res.fired.iter().sum::<usize>() > 0);
+    }
+}

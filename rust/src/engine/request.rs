@@ -1,0 +1,82 @@
+//! Request/response types of the serving engine.
+
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Sampling / generation parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GenerationParams {
+    pub max_new_tokens: usize,
+    /// 0.0 → greedy.
+    pub temperature: f32,
+    /// Stop at this token if produced (byte value); None → length only.
+    pub stop_token: Option<u32>,
+}
+
+impl Default for GenerationParams {
+    fn default() -> Self {
+        GenerationParams { max_new_tokens: 64, temperature: 0.0, stop_token: None }
+    }
+}
+
+/// An inbound generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub params: GenerationParams,
+}
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    Length,
+    StopToken,
+    /// Engine shut down before completion.
+    Aborted,
+}
+
+/// Completed request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Wall time from submission to completion.
+    pub latency_ms: f64,
+    /// Time to first generated token.
+    pub ttft_ms: f64,
+    pub prompt_len: usize,
+}
+
+/// Engine-internal sequence state.
+pub(crate) struct Sequence {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub params: GenerationParams,
+    pub generated: Vec<u32>,
+    pub kv: crate::model::kv::KvState,
+    pub submitted: Instant,
+    pub first_token_at: Option<Instant>,
+    /// Blocks held in the cache pool.
+    pub blocks: Vec<u32>,
+    /// Number of prompt tokens already prefilled (chunked prefill cursor).
+    pub prefilled: usize,
+    /// Submission order; lower = older. Preemption only ever evicts
+    /// strictly-younger sequences, which guarantees scheduler progress.
+    pub priority: u64,
+}
+
+impl Sequence {
+    /// Total tokens this sequence holds in cache.
+    pub fn cached_tokens(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// Next token to feed: prompt remainder, else last generated.
+    pub fn done(&self) -> bool {
+        self.generated.len() >= self.params.max_new_tokens
+    }
+}

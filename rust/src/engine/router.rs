@@ -1,0 +1,191 @@
+//! Request router: shards requests across engine worker threads
+//! (vllm-project/router-shaped, scaled to this testbed). Each worker owns
+//! one [`Engine`] replica; the router picks the least-loaded worker,
+//! tracks in-flight counts, and merges metrics/responses.
+
+use super::request::{GenerationParams, RequestId, Response};
+use super::serving::{Engine, EngineConfig};
+use crate::model::Model;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+enum WorkerMsg {
+    Submit { prompt: Vec<u32>, params: GenerationParams, reply_id: Sender<RequestId> },
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    handle: Option<JoinHandle<super::metrics::Metrics>>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+/// Multi-worker router.
+pub struct Router {
+    workers: Vec<Worker>,
+    responses: Arc<Mutex<Vec<Response>>>,
+    completed: Arc<AtomicUsize>,
+    submitted: AtomicUsize,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Router {
+    /// Spawn `n_workers` engines over a shared model.
+    pub fn new(model: Arc<Model>, cfg: EngineConfig, n_workers: usize) -> Router {
+        assert!(n_workers >= 1);
+        let responses: Arc<Mutex<Vec<Response>>> = Arc::default();
+        let completed = Arc::new(AtomicUsize::new(0));
+        let stopping = Arc::new(AtomicBool::new(false));
+        let workers = (0..n_workers)
+            .map(|w| {
+                let (tx, rx) = channel::<WorkerMsg>();
+                let in_flight = Arc::new(AtomicUsize::new(0));
+                let handle = std::thread::Builder::new()
+                    .name(format!("engine-{w}"))
+                    .spawn({
+                        let model = model.clone();
+                        let mut wcfg = cfg;
+                        wcfg.seed = cfg.seed.wrapping_add(w as u64);
+                        wcfg.id_offset = (w as u64) << 40;
+                        let responses = responses.clone();
+                        let completed = completed.clone();
+                        let in_flight = in_flight.clone();
+                        let stopping = stopping.clone();
+                        move || {
+                            worker_loop(model, wcfg, rx, responses, completed, in_flight, stopping)
+                        }
+                    })
+                    .expect("spawn engine worker");
+                Worker { tx, handle: Some(handle), in_flight }
+            })
+            .collect();
+        Router {
+            workers,
+            responses,
+            completed,
+            submitted: AtomicUsize::new(0),
+            stopping,
+        }
+    }
+
+    /// Submit to the least-loaded worker; blocks only for id assignment.
+    pub fn submit(&self, prompt: Vec<u32>, params: GenerationParams) -> RequestId {
+        let widx = self
+            .workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| w.in_flight.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+            .unwrap();
+        let w = &self.workers[widx];
+        w.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        w.tx
+            .send(WorkerMsg::Submit { prompt, params, reply_id: reply_tx })
+            .expect("worker alive");
+        // Ids are globally unique: each engine numbers from widx << 40.
+        reply_rx.recv().expect("worker replies")
+    }
+
+    /// Completed / submitted counts.
+    pub fn progress(&self) -> (usize, usize) {
+        (
+            self.completed.load(Ordering::Relaxed),
+            self.submitted.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Drain all responses accumulated so far.
+    pub fn take_responses(&self) -> Vec<Response> {
+        std::mem::take(&mut *self.responses.lock().unwrap())
+    }
+
+    /// Remove and return the response with the given id, if present.
+    pub fn take_response_by_id(&self, id: RequestId) -> Option<Response> {
+        let mut guard = self.responses.lock().unwrap();
+        let pos = guard.iter().position(|r| r.id == id)?;
+        Some(guard.swap_remove(pos))
+    }
+
+    /// Block until every submitted request completes.
+    pub fn wait_idle(&self) {
+        loop {
+            let (done, sub) = self.progress();
+            if done >= sub {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    /// Stop workers and merge their metrics.
+    pub fn shutdown(mut self) -> super::metrics::Metrics {
+        self.stopping.store(true, Ordering::SeqCst);
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        let mut merged = super::metrics::Metrics::default();
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                if let Ok(m) = h.join() {
+                    merged.merge(&m);
+                }
+            }
+        }
+        merged
+    }
+}
+
+fn worker_loop(
+    model: Arc<Model>,
+    cfg: EngineConfig,
+    rx: Receiver<WorkerMsg>,
+    responses: Arc<Mutex<Vec<Response>>>,
+    completed: Arc<AtomicUsize>,
+    in_flight: Arc<AtomicUsize>,
+    stopping: Arc<AtomicBool>,
+) -> super::metrics::Metrics {
+    let mut engine = Engine::new(model, cfg);
+    let mut shutdown = false;
+    loop {
+        // Drain the inbox (non-blocking while busy; blocking when idle).
+        loop {
+            let msg = if engine.has_work() || shutdown {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                }
+            } else {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        shutdown = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                WorkerMsg::Submit { prompt, params, reply_id } => {
+                    let id = engine.submit(prompt, params);
+                    let _ = reply_id.send(id);
+                }
+                WorkerMsg::Shutdown => shutdown = true,
+            }
+        }
+        if engine.has_work() {
+            engine.step();
+            let done = engine.take_finished();
+            if !done.is_empty() {
+                completed.fetch_add(done.len(), Ordering::Relaxed);
+                in_flight.fetch_sub(done.len(), Ordering::Relaxed);
+                responses.lock().unwrap().extend(done);
+            }
+        } else if shutdown || stopping.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    engine.metrics.clone()
+}

@@ -1,0 +1,77 @@
+//! Scheduling policy for the continuous-batching engine: admission order,
+//! per-step token budget, and preemption victim selection.
+
+/// Preemption victim policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptPolicy {
+    /// Evict the most recently admitted sequence (vLLM default: oldest
+    /// requests finish first, recomputation cost is smallest for young
+    /// sequences).
+    Youngest,
+    /// Evict the sequence holding the most cache (frees the most room).
+    Largest,
+}
+
+/// Scheduler knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// Max sequences decoding concurrently.
+    pub max_batch: usize,
+    /// Max prompt tokens prefixed per sequence per step (chunked prefill).
+    pub prefill_chunk: usize,
+    /// Max total tokens (prefill + decode) processed per step.
+    pub step_token_budget: usize,
+    pub preempt: PreemptPolicy,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_batch: 8,
+            prefill_chunk: 64,
+            step_token_budget: 256,
+            preempt: PreemptPolicy::Youngest,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    /// Pick a preemption victim among eligible sequences, given
+    /// (index, cached_tokens, priority) triples (the caller pre-filters
+    /// to strictly-younger sequences). Returns the index.
+    pub fn pick_victim(&self, seqs: &[(usize, usize, u64)]) -> Option<usize> {
+        if seqs.is_empty() {
+            return None;
+        }
+        let chosen = match self.preempt {
+            PreemptPolicy::Youngest => seqs.iter().max_by_key(|&&(_, _, prio)| prio),
+            PreemptPolicy::Largest => seqs.iter().max_by_key(|&&(_, cached, _)| cached),
+        };
+        chosen.map(|&(idx, _, _)| idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn youngest_picks_latest_admission() {
+        let cfg = SchedulerConfig { preempt: PreemptPolicy::Youngest, ..Default::default() };
+        let seqs = vec![(0, 100, 5), (1, 900, 2), (2, 50, 9)];
+        assert_eq!(cfg.pick_victim(&seqs), Some(2));
+    }
+
+    #[test]
+    fn largest_picks_biggest_cache() {
+        let cfg = SchedulerConfig { preempt: PreemptPolicy::Largest, ..Default::default() };
+        let seqs = vec![(0, 100, 5), (1, 900, 2), (2, 50, 9)];
+        assert_eq!(cfg.pick_victim(&seqs), Some(1));
+    }
+
+    #[test]
+    fn empty_has_no_victim() {
+        let cfg = SchedulerConfig::default();
+        assert_eq!(cfg.pick_victim(&[]), None);
+    }
+}

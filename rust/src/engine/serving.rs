@@ -1,0 +1,380 @@
+//! The continuous-batching serving engine: Algorithm 1 integrated with a
+//! paged KV cache, chunked prefill, preemption and metrics — the L3
+//! system the paper's decoding/prefilling scenarios live inside.
+//!
+//! One `Engine` drives one model replica single-threaded (the router in
+//! `router.rs` shards requests across engines/threads). Each `step()`:
+//!
+//! 1. **Admit** waiting requests while the batch and the block pool have
+//!    room (prompt blocks are reserved up front — no mid-prefill OOM).
+//! 2. **Prefill** admitted sequences in chunks (budgeted per step so long
+//!    prompts cannot starve decodes — "chunked prefill").
+//! 3. **Decode** one token for every running sequence whose prompt is
+//!    done, via the HSR-sparse attention policy.
+//! 4. **Preempt** (release blocks, drop KV, requeue) when the pool is
+//!    exhausted, per the configured victim policy.
+
+use super::kv_cache::BlockAllocator;
+use super::metrics::Metrics;
+use super::request::{
+    FinishReason, GenerationParams, Request, RequestId, Response, Sequence,
+};
+use super::scheduler::SchedulerConfig;
+use crate::hsr::HsrBackend;
+use crate::model::kv::KvState;
+use crate::model::transformer::{sample, AttentionPolicy, StepStats, Workspace};
+use crate::model::Model;
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub policy: AttentionPolicy,
+    /// HSR backend for per-head indices; None → brute scans inside the
+    /// sparse policy (ablation) — ignored under `AttentionPolicy::Dense`.
+    pub hsr_backend: Option<HsrBackend>,
+    /// Total KV-cache capacity in tokens (across all sequences).
+    pub cache_capacity_tokens: usize,
+    /// Block granularity of the pool.
+    pub block_tokens: usize,
+    pub scheduler: SchedulerConfig,
+    /// Sampling seed (deterministic engines → reproducible serving runs).
+    pub seed: u64,
+    /// Base of the request-id space (routers give each worker a disjoint
+    /// range so ids are globally unique).
+    pub id_offset: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: AttentionPolicy::Dense,
+            hsr_backend: Some(HsrBackend::BallTree),
+            cache_capacity_tokens: 1 << 20,
+            block_tokens: 64,
+            scheduler: SchedulerConfig::default(),
+            seed: 0,
+            id_offset: 0,
+        }
+    }
+}
+
+/// A single-replica serving engine.
+pub struct Engine {
+    pub model: Arc<Model>,
+    pub cfg: EngineConfig,
+    allocator: BlockAllocator,
+    waiting: VecDeque<Sequence>,
+    running: Vec<Sequence>,
+    finished: Vec<Response>,
+    ws: Workspace,
+    rng: crate::util::rng::Rng,
+    pub metrics: Metrics,
+    next_id: RequestId,
+}
+
+impl Engine {
+    pub fn new(model: Arc<Model>, cfg: EngineConfig) -> Engine {
+        let ws = Workspace::new(&model);
+        Engine {
+            allocator: BlockAllocator::new(cfg.cache_capacity_tokens, cfg.block_tokens),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            ws,
+            rng: crate::util::rng::Rng::new(cfg.seed),
+            metrics: Metrics::default(),
+            next_id: cfg.id_offset + 1,
+            model,
+            cfg,
+        }
+    }
+
+    fn new_sequence(&self, req: Request) -> Sequence {
+        let c = &self.model.cfg;
+        Sequence {
+            id: req.id,
+            priority: req.id, // submission order
+            kv: KvState::new(c.n_layers, c.n_heads, c.d_head, self.cfg.hsr_backend),
+            prompt: req.prompt,
+            params: req.params,
+            generated: Vec::new(),
+            submitted: Instant::now(),
+            first_token_at: None,
+            blocks: Vec::new(),
+            prefilled: 0,
+        }
+    }
+
+    /// Submit a request; returns its id.
+    pub fn submit(&mut self, prompt: Vec<u32>, params: GenerationParams) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request { id, prompt, params };
+        self.metrics.requests_submitted += 1;
+        self.metrics.prompt_tokens += req.prompt.len() as u64;
+        let seq = self.new_sequence(req);
+        self.waiting.push_back(seq);
+        id
+    }
+
+    /// Whether any work remains.
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Sequences currently decoding/prefilling.
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Drain completed responses.
+    pub fn take_finished(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// One scheduler iteration; returns the number of tokens processed.
+    ///
+    /// Sequences are served strictly in priority (submission) order and a
+    /// sequence may only preempt strictly-younger ones, so the oldest
+    /// running sequence always makes progress — no preemption livelock.
+    pub fn step(&mut self) -> usize {
+        let t0 = Instant::now();
+        self.admit();
+        let mut tokens = 0usize;
+        let budget = self.cfg.scheduler.step_token_budget.max(1);
+        let mut stats = StepStats::default();
+
+        // Serve in priority order; `running` mutates during the loop, so
+        // look sequences up by id.
+        let mut order: Vec<(u64, RequestId)> =
+            self.running.iter().map(|s| (s.priority, s.id)).collect();
+        order.sort_unstable();
+        for (_, sid) in order {
+            if tokens >= budget {
+                break;
+            }
+            let Some(i) = self.running.iter().position(|s| s.id == sid) else {
+                continue; // finished or preempted earlier in this step
+            };
+            // Reserve capacity for this sequence's next chunk; preempt
+            // younger sequences if the pool is exhausted.
+            let needed_now = {
+                let seq = &self.running[i];
+                if seq.prefilled < seq.prompt.len() {
+                    let chunk = self
+                        .cfg
+                        .scheduler
+                        .prefill_chunk
+                        .min(seq.prompt.len() - seq.prefilled)
+                        .min(budget - tokens)
+                        .max(1);
+                    seq.cached_tokens() + chunk
+                } else {
+                    seq.cached_tokens() + 1
+                }
+            };
+            if !self.reserve_for(i, needed_now) {
+                continue; // cannot make room without evicting elders: wait
+            }
+            let i = self
+                .running
+                .iter()
+                .position(|s| s.id == sid)
+                .expect("sequence survives its own reservation");
+            let seq = &mut self.running[i];
+            if seq.prefilled < seq.prompt.len() {
+                // --- chunked prefill ---
+                let chunk = self
+                    .cfg
+                    .scheduler
+                    .prefill_chunk
+                    .min(seq.prompt.len() - seq.prefilled)
+                    .min(budget - tokens)
+                    .max(1);
+                for t in 0..chunk {
+                    let tok = seq.prompt[seq.prefilled + t];
+                    let logits = self.model.decode_step(
+                        tok,
+                        &mut seq.kv,
+                        self.cfg.policy,
+                        &mut self.ws,
+                        &mut stats,
+                    );
+                    // Logits of the last prompt token seed the first
+                    // generated token.
+                    if seq.prefilled + t + 1 == seq.prompt.len() {
+                        let next = sample(&logits, seq.params.temperature, &mut self.rng);
+                        seq.generated.push(next);
+                        seq.first_token_at = Some(Instant::now());
+                    }
+                }
+                seq.prefilled += chunk;
+                tokens += chunk;
+            } else {
+                // --- decode one token ---
+                let last = *seq
+                    .generated
+                    .last()
+                    .expect("prefill always seeds one generated token");
+                let finished_by_stop = seq.params.stop_token == Some(last);
+                if finished_by_stop || seq.done() {
+                    self.finish(i, if finished_by_stop { FinishReason::StopToken } else { FinishReason::Length });
+                    continue; // running[i] replaced by swap_remove
+                }
+                let logits = self.model.decode_step(
+                    last,
+                    &mut seq.kv,
+                    self.cfg.policy,
+                    &mut self.ws,
+                    &mut stats,
+                );
+                let next = sample(&logits, seq.params.temperature, &mut self.rng);
+                seq.generated.push(next);
+                if seq.first_token_at.is_none() {
+                    seq.first_token_at = Some(Instant::now());
+                }
+                tokens += 1;
+                self.metrics.generated_tokens += 1;
+            }
+        }
+        self.metrics.record_step_stats(&stats);
+        if tokens > 0 {
+            self.metrics.step_latency.record(t0.elapsed());
+        }
+        tokens
+    }
+
+    /// Drive until all submitted work completes.
+    pub fn run_to_completion(&mut self) {
+        while self.has_work() {
+            let processed = self.step();
+            if processed > 0 {
+                continue;
+            }
+            // No progress: abort whatever can provably never run.
+            // (a) A running sequence larger than the whole pool.
+            let seq_too_big = self.running.iter().position(|s| {
+                self.allocator.blocks_for(s.prompt.len() + s.params.max_new_tokens)
+                    > self.allocator.total_blocks()
+            });
+            if let Some(idx) = seq_too_big {
+                self.finish(idx, FinishReason::Aborted);
+                continue;
+            }
+            // (b) Nothing running and the head-of-line waiting request can
+            // never be admitted (prompt exceeds the pool).
+            if self.running.is_empty() {
+                if let Some(seq) = self.waiting.front() {
+                    if self.allocator.blocks_for(seq.prompt.len() + 1)
+                        > self.allocator.total_blocks()
+                    {
+                        let mut seq = self.waiting.pop_front().unwrap();
+                        self.allocator.release(&mut seq.blocks);
+                        self.emit_response(seq, FinishReason::Aborted);
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Admit waiting sequences while there is batch room and pool room
+    /// for their prompts.
+    fn admit(&mut self) {
+        while self.running.len() < self.cfg.scheduler.max_batch {
+            let Some(seq) = self.waiting.front() else { break };
+            // Reserve the full prompt + one decode block up front.
+            let need = self.allocator.blocks_for(seq.prompt.len() + 1);
+            if need > self.allocator.free_blocks() {
+                break;
+            }
+            let mut seq = self.waiting.pop_front().unwrap();
+            let mut blocks = self.allocator.alloc(need).expect("checked free_blocks");
+            seq.blocks.append(&mut blocks);
+            self.running.push(seq);
+        }
+    }
+
+    /// Ensure sequence `idx` holds blocks for `needed_tokens`, preempting
+    /// strictly-younger sequences if necessary. Returns false if room
+    /// could not be made. The requesting sequence is never evicted here.
+    fn reserve_for(&mut self, idx: usize, needed_tokens: usize) -> bool {
+        let sid = self.running[idx].id;
+        loop {
+            let i = self
+                .running
+                .iter()
+                .position(|s| s.id == sid)
+                .expect("requester is never preempted by reserve_for");
+            let my_priority = self.running[i].priority;
+            let seq = &mut self.running[i];
+            if self.allocator.ensure(&mut seq.blocks, needed_tokens) {
+                return true;
+            }
+            // Evict a strictly-younger sequence, if any.
+            let candidates: Vec<(usize, usize, u64)> = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|&(_, s)| s.priority > my_priority)
+                .map(|(j, s)| (j, s.cached_tokens(), s.priority))
+                .collect();
+            match self.cfg.scheduler.pick_victim(&candidates) {
+                Some(victim) => self.preempt(victim),
+                None => return false, // only elders left: wait our turn
+            }
+        }
+    }
+
+    /// Preempt: release blocks, drop KV, requeue for full recompute.
+    fn preempt(&mut self, idx: usize) {
+        let mut seq = self.running.swap_remove(idx);
+        self.allocator.release(&mut seq.blocks);
+        let c = &self.model.cfg;
+        seq.kv = KvState::new(c.n_layers, c.n_heads, c.d_head, self.cfg.hsr_backend);
+        seq.prefilled = 0;
+        // Generated tokens so far are preserved: they are re-fed as part
+        // of the (extended) prompt on re-admission.
+        let mut prompt = std::mem::take(&mut seq.prompt);
+        prompt.extend(seq.generated.iter().copied());
+        // The last generated token must be re-generated after recompute;
+        // keep it in the prompt and let decode continue from there.
+        seq.prompt = prompt;
+        self.metrics.requests_preempted += 1;
+        self.waiting.push_front(seq);
+    }
+
+    /// Finish running[idx] with the given reason.
+    fn finish(&mut self, idx: usize, reason: FinishReason) {
+        let mut seq = self.running.swap_remove(idx);
+        self.allocator.release(&mut seq.blocks);
+        self.emit_response(seq, reason);
+    }
+
+    fn emit_response(&mut self, seq: Sequence, reason: FinishReason) {
+        let latency = seq.submitted.elapsed();
+        let ttft = seq
+            .first_token_at
+            .map(|t| t.duration_since(seq.submitted))
+            .unwrap_or(latency);
+        self.metrics.requests_completed += 1;
+        self.metrics.request_latency.record(latency);
+        self.metrics.ttft.record(ttft);
+        self.finished.push(Response {
+            id: seq.id,
+            tokens: seq.generated,
+            finish: reason,
+            latency_ms: latency.as_secs_f64() * 1e3,
+            ttft_ms: ttft.as_secs_f64() * 1e3,
+            prompt_len: seq.prompt.len(),
+        });
+    }
+
+    /// Pool utilization (diagnostics).
+    pub fn cache_utilization(&self) -> f64 {
+        self.allocator.utilization()
+    }
+}

@@ -1,0 +1,98 @@
+//! Brute-force HSR: the naive O(n·d) scan.
+//!
+//! This is both the correctness oracle for the other backends and the
+//! "naive O(mn)" baseline that every running-time theorem in the paper
+//! compares against (Theorems 4.1, 4.2, 5.1, 5.2).
+
+use super::{dot, HalfSpaceReport, QueryStats};
+
+/// A flat copy of the points; every query scans all of them.
+#[derive(Debug, Clone)]
+pub struct BruteHsr {
+    points: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl BruteHsr {
+    /// O(n) build: copy the points.
+    pub fn build(points: &[f32], d: usize) -> BruteHsr {
+        assert!(d > 0, "dimension must be positive");
+        assert_eq!(points.len() % d, 0, "points length must be a multiple of d");
+        BruteHsr { points: points.to_vec(), n: points.len() / d, d }
+    }
+
+    /// Raw point row.
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.points[i * self.d..(i + 1) * self.d]
+    }
+}
+
+impl HalfSpaceReport for BruteHsr {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        assert_eq!(a.len(), self.d);
+        stats.points_scanned += self.n;
+        for i in 0..self.n {
+            if dot(self.point(i), a) >= b {
+                out.push(i as u32);
+                stats.reported += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::reference_query;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn simple_halfplane() {
+        // Points on the x-axis: query "x >= 1.5" reports indices 2, 3.
+        let pts = vec![0.0f32, 0.0, 1.0, 0.0, 2.0, 0.0, 3.0, 0.0];
+        let h = BruteHsr::build(&pts, 2);
+        assert_eq!(h.query(&[1.0, 0.0], 1.5), vec![2, 3]);
+        assert_eq!(h.query(&[1.0, 0.0], -1.0), vec![0, 1, 2, 3]);
+        assert_eq!(h.query(&[1.0, 0.0], 100.0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn boundary_is_inclusive() {
+        // sgn(<a,x> - b) >= 0 includes equality (paper Algorithm 3).
+        let pts = vec![2.0f32, 0.0];
+        let h = BruteHsr::build(&pts, 2);
+        assert_eq!(h.query(&[1.0, 0.0], 2.0), vec![0]);
+    }
+
+    #[test]
+    fn matches_reference_and_counts_work() {
+        let mut r = Rng::new(5);
+        let d = 6;
+        let n = 500;
+        let pts = r.gaussian_vec_f32(n * d, 1.0);
+        let h = BruteHsr::build(&pts, d);
+        let a = r.gaussian_vec_f32(d, 1.0);
+        let mut out = Vec::new();
+        let mut stats = QueryStats::default();
+        h.query_into(&a, 0.5, &mut out, &mut stats);
+        out.sort_unstable();
+        assert_eq!(out, reference_query(&pts, d, &a, 0.5));
+        assert_eq!(stats.points_scanned, n);
+        assert_eq!(stats.reported, out.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_length_panics() {
+        let _ = BruteHsr::build(&[1.0, 2.0, 3.0], 2);
+    }
+}

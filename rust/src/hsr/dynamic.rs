@@ -1,0 +1,259 @@
+//! Dynamic HSR via the logarithmic method.
+//!
+//! Theorem B.11 ([AEM92]) includes amortized updates; the decode engine
+//! needs them because every generated token appends a key to the cache
+//! (Algorithm 1's KV-cache grows during generation). We layer insertions
+//! on top of any *static* backend with the classic Bentley–Saxe
+//! logarithmic method: maintain buckets of static structures with sizes
+//! that double; inserting merges full prefixes of buckets and rebuilds one
+//! static structure. A decomposable query (half-space reporting is a union
+//! — trivially decomposable) runs over all O(log n) buckets.
+//!
+//! Amortized insert cost: O((build(n)/n) · log n); with the O(n log n)
+//! ball-tree build this is O(log^2 n) per insert.
+
+use super::{build_hsr, HalfSpaceReport, HsrBackend, QueryStats};
+
+/// Base bucket capacity: inserts below this sit in a brute-scanned tail,
+/// so tiny caches never pay rebuild costs.
+const BASE: usize = 64;
+
+struct Bucket {
+    /// Static structure over this bucket's points.
+    index: Box<dyn HalfSpaceReport>,
+    /// Global ids, parallel to the static structure's local indices.
+    ids: Vec<u32>,
+    /// Row-major points (kept to allow merging into bigger buckets).
+    points: Vec<f32>,
+}
+
+/// A growable half-space reporting structure.
+pub struct DynamicHsr {
+    backend: HsrBackend,
+    d: usize,
+    /// buckets[i] holds exactly BASE << i points (or is None).
+    buckets: Vec<Option<Bucket>>,
+    /// Un-indexed tail, scanned brute-force (size < BASE).
+    tail_points: Vec<f32>,
+    tail_ids: Vec<u32>,
+    len: usize,
+    /// Total points rebuilt over the structure's lifetime (cost metric).
+    pub rebuilt_points: u64,
+    /// Number of static rebuilds performed.
+    pub rebuilds: u64,
+}
+
+impl DynamicHsr {
+    pub fn new(backend: HsrBackend, d: usize) -> DynamicHsr {
+        assert!(d > 0);
+        DynamicHsr {
+            backend,
+            d,
+            buckets: Vec::new(),
+            tail_points: Vec::new(),
+            tail_ids: Vec::new(),
+            len: 0,
+            rebuilt_points: 0,
+            rebuilds: 0,
+        }
+    }
+
+    /// Build from an initial batch (e.g. the prompt's keys), assigning
+    /// global ids 0..n. The batch goes into a *single* static structure
+    /// parked in the top bucket slot — one build, one tree to query —
+    /// instead of replaying n inserts (which would cascade O(log n)
+    /// rebuilds and leave the points shredded across O(log n) buckets).
+    pub fn from_points(backend: HsrBackend, points: &[f32], d: usize) -> DynamicHsr {
+        let mut s = DynamicHsr::new(backend, d);
+        let n = points.len() / d;
+        if n == 0 {
+            return s;
+        }
+        let index = build_hsr(backend, points, d);
+        s.rebuilt_points += n as u64;
+        s.rebuilds += 1;
+        // Slot chosen so that lower slots absorb ~n further inserts before
+        // a carry ever reaches (and merges) this bucket.
+        let slot = (n / BASE).max(1).ilog2() as usize + 1;
+        while s.buckets.len() <= slot {
+            s.buckets.push(None);
+        }
+        s.buckets[slot] = Some(Bucket {
+            index,
+            ids: (0..n as u32).collect(),
+            points: points.to_vec(),
+        });
+        s.len = n;
+        s
+    }
+
+    /// Insert one point; its global id is its insertion order.
+    pub fn insert(&mut self, point: &[f32]) -> u32 {
+        assert_eq!(point.len(), self.d);
+        let id = self.len as u32;
+        self.len += 1;
+        self.tail_points.extend_from_slice(point);
+        self.tail_ids.push(id);
+        if self.tail_ids.len() >= BASE {
+            self.carry();
+        }
+        id
+    }
+
+    /// Merge the tail plus every full prefix of buckets into the first
+    /// free slot (binary carry).
+    fn carry(&mut self) {
+        let mut points = std::mem::take(&mut self.tail_points);
+        let mut ids = std::mem::take(&mut self.tail_ids);
+        let mut slot = 0;
+        loop {
+            if slot == self.buckets.len() {
+                self.buckets.push(None);
+            }
+            match self.buckets[slot].take() {
+                None => {
+                    let index = build_hsr(self.backend, &points, self.d);
+                    self.rebuilt_points += ids.len() as u64;
+                    self.rebuilds += 1;
+                    self.buckets[slot] = Some(Bucket { index, ids, points });
+                    return;
+                }
+                Some(b) => {
+                    points.extend_from_slice(&b.points);
+                    ids.extend_from_slice(&b.ids);
+                    slot += 1;
+                }
+            }
+        }
+    }
+
+    /// Number of active buckets (for tests/metrics).
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.iter().filter(|b| b.is_some()).count()
+    }
+}
+
+impl HalfSpaceReport for DynamicHsr {
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        assert_eq!(a.len(), self.d);
+        // Tail: brute scan.
+        for (slot, &id) in self.tail_ids.iter().enumerate() {
+            stats.points_scanned += 1;
+            let p = &self.tail_points[slot * self.d..(slot + 1) * self.d];
+            if super::dot(p, a) >= b {
+                out.push(id);
+                stats.reported += 1;
+            }
+        }
+        // Buckets: query each static structure, remap local → global ids.
+        let mut local = Vec::new();
+        for bucket in self.buckets.iter().flatten() {
+            local.clear();
+            let before = stats.reported;
+            bucket.index.query_into(a, b, &mut local, stats);
+            let _ = before;
+            for &l in &local {
+                out.push(bucket.ids[l as usize]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::{reference_query, HsrBackend};
+    use crate::util::rng::Rng;
+
+    fn check_against_reference(backend: HsrBackend, d: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let mut dynamic = DynamicHsr::new(backend, d);
+        let mut all_points: Vec<f32> = Vec::new();
+        for step in 0..700 {
+            let p = rng.gaussian_vec_f32(d, 1.0);
+            let id = dynamic.insert(&p);
+            assert_eq!(id as usize, step);
+            all_points.extend_from_slice(&p);
+            if step % 97 == 0 || step == 699 {
+                let a = rng.gaussian_vec_f32(d, 1.0);
+                let b = rng.normal(0.0, 1.0) as f32;
+                assert_eq!(
+                    dynamic.query(&a, b),
+                    reference_query(&all_points, d, &a, b),
+                    "step={step}"
+                );
+            }
+        }
+        assert_eq!(dynamic.len(), 700);
+    }
+
+    #[test]
+    fn balltree_backend_incremental() {
+        check_against_reference(HsrBackend::BallTree, 8, 31);
+    }
+
+    #[test]
+    fn brute_backend_incremental() {
+        check_against_reference(HsrBackend::Brute, 3, 32);
+    }
+
+    #[test]
+    fn layers2d_backend_incremental() {
+        check_against_reference(HsrBackend::Layers2d, 2, 33);
+    }
+
+    #[test]
+    fn bucket_structure_is_binary() {
+        let mut rng = Rng::new(1);
+        let mut s = DynamicHsr::new(HsrBackend::Brute, 2);
+        for _ in 0..(BASE * 5) {
+            let p = rng.gaussian_vec_f32(2, 1.0);
+            s.insert(&p);
+        }
+        // 5 * BASE points = binary 101 → exactly two full buckets.
+        assert_eq!(s.bucket_count(), 2);
+        assert_eq!(s.len(), BASE * 5);
+    }
+
+    #[test]
+    fn amortized_rebuild_cost_is_logarithmic() {
+        let mut rng = Rng::new(2);
+        let n = 16 * BASE * 8;
+        let mut s = DynamicHsr::new(HsrBackend::BallTree, 4);
+        for _ in 0..n {
+            let p = rng.gaussian_vec_f32(4, 1.0);
+            s.insert(&p);
+        }
+        // Total rebuilt points is O(n log(n/BASE)); assert a generous bound.
+        let log_factor = ((n / BASE) as f64).log2();
+        assert!(
+            (s.rebuilt_points as f64) < 2.0 * n as f64 * log_factor,
+            "rebuilt {} for n={n}",
+            s.rebuilt_points
+        );
+    }
+
+    #[test]
+    fn from_points_matches_batch() {
+        let mut rng = Rng::new(3);
+        let d = 5;
+        let pts = rng.gaussian_vec_f32(333 * d, 1.0);
+        let s = DynamicHsr::from_points(HsrBackend::BallTree, &pts, d);
+        let a = rng.gaussian_vec_f32(d, 1.0);
+        assert_eq!(s.query(&a, 0.3), reference_query(&pts, d, &a, 0.3));
+    }
+
+    #[test]
+    fn empty_query() {
+        let s = DynamicHsr::new(HsrBackend::BallTree, 4);
+        assert!(s.query(&[1.0, 0.0, 0.0, 0.0], 0.0).is_empty());
+    }
+}

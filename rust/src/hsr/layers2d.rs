@@ -1,0 +1,391 @@
+//! Convex-layers halfplane reporting — the Part-2 analogue of
+//! Corollary 3.1, exact for d = 2.
+//!
+//! Build: peel convex layers (repeated Andrew monotone chain over the
+//! lexicographically pre-sorted points). Query for H = {x : <a,x> >= b}:
+//! walk layers outermost-in; on each layer find the vertex maximizing
+//! <a, v> by binary search on the (monotone) edge-direction angles of the
+//! CCW hull, then collect the contiguous arc of qualifying vertices. Every
+//! point of layer i+1 lies inside the hull of layer i, so the first layer
+//! whose maximum falls below b terminates the query: total cost
+//! O(Σ_{touched layers} (log h_ℓ + k_ℓ)) — the O(log n + k) *shape* of
+//! AEM92 Part 2, with O(n log n) build instead of O(n^{⌊d/2⌋}) space.
+//!
+//! (Chazelle's O(n log n) convex-layers construction exists; we use the
+//! simpler O(n · L) peeling, L = number of layers, which is ~n^{2/3} for
+//! Gaussian clouds — fine for the n this structure is benchmarked at.)
+
+use super::{HalfSpaceReport, QueryStats};
+
+#[derive(Debug, Clone)]
+struct Layer {
+    /// CCW hull vertices: (x, y, original index).
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    ids: Vec<u32>,
+    /// Unwrapped edge-direction angles; strictly within one 2π turn.
+    angles: Vec<f64>,
+}
+
+/// Convex-layers structure over 2-D points.
+#[derive(Debug, Clone)]
+pub struct ConvexLayers2d {
+    layers: Vec<Layer>,
+    n: usize,
+}
+
+#[inline]
+fn cross(ox: f64, oy: f64, ax: f64, ay: f64, bx: f64, by: f64) -> f64 {
+    (ax - ox) * (by - oy) - (ay - oy) * (bx - ox)
+}
+
+/// Andrew monotone chain over points given *already sorted* lexicographic
+/// order. Returns hull as indices into `pts`, CCW, no duplicated endpoint.
+fn monotone_chain(pts: &[(f64, f64, u32)]) -> Vec<usize> {
+    let n = pts.len();
+    if n <= 2 {
+        return (0..n).collect();
+    }
+    let mut hull: Vec<usize> = Vec::with_capacity(2 * n);
+    // Lower hull.
+    for i in 0..n {
+        while hull.len() >= 2 {
+            let a = pts[hull[hull.len() - 2]];
+            let b = pts[hull[hull.len() - 1]];
+            if cross(a.0, a.1, b.0, b.1, pts[i].0, pts[i].1) <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(i);
+    }
+    // Upper hull.
+    let lower_len = hull.len() + 1;
+    for i in (0..n - 1).rev() {
+        while hull.len() >= lower_len {
+            let a = pts[hull[hull.len() - 2]];
+            let b = pts[hull[hull.len() - 1]];
+            if cross(a.0, a.1, b.0, b.1, pts[i].0, pts[i].1) <= 0.0 {
+                hull.pop();
+            } else {
+                break;
+            }
+        }
+        hull.push(i);
+    }
+    hull.pop(); // last point == first point
+    hull
+}
+
+impl ConvexLayers2d {
+    /// Build by convex-layer peeling. `points` is row-major (x, y) pairs.
+    pub fn build(points: &[f32]) -> ConvexLayers2d {
+        assert_eq!(points.len() % 2, 0);
+        let n = points.len() / 2;
+        let mut pts: Vec<(f64, f64, u32)> = (0..n)
+            .map(|i| (points[2 * i] as f64, points[2 * i + 1] as f64, i as u32))
+            .collect();
+        pts.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                .then(a.1.partial_cmp(&b.1).unwrap())
+        });
+
+        let mut layers = Vec::new();
+        let mut alive = pts;
+        while !alive.is_empty() {
+            let hull = monotone_chain(&alive);
+            let mut layer = Layer {
+                xs: Vec::with_capacity(hull.len()),
+                ys: Vec::with_capacity(hull.len()),
+                ids: Vec::with_capacity(hull.len()),
+                angles: Vec::new(),
+            };
+            let mut on_hull = vec![false; alive.len()];
+            for &h in &hull {
+                on_hull[h] = true;
+                layer.xs.push(alive[h].0 as f32);
+                layer.ys.push(alive[h].1 as f32);
+                layer.ids.push(alive[h].2);
+            }
+            layer.compute_angles();
+            layers.push(layer);
+            let mut next = Vec::with_capacity(alive.len() - hull.len());
+            for (i, p) in alive.into_iter().enumerate() {
+                if !on_hull[i] {
+                    next.push(p);
+                }
+            }
+            alive = next;
+        }
+        ConvexLayers2d { layers, n }
+    }
+
+    /// Number of convex layers.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+impl Layer {
+    fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Unwrapped CCW edge angles for binary-searching the extreme vertex.
+    fn compute_angles(&mut self) {
+        let h = self.len();
+        if h < 3 {
+            return;
+        }
+        let mut angles = Vec::with_capacity(h);
+        let mut prev: Option<f64> = None;
+        let mut offset = 0.0f64;
+        for i in 0..h {
+            let j = (i + 1) % h;
+            let ex = (self.xs[j] - self.xs[i]) as f64;
+            let ey = (self.ys[j] - self.ys[i]) as f64;
+            let mut th = ey.atan2(ex) + offset;
+            if let Some(p) = prev {
+                while th < p {
+                    th += 2.0 * std::f64::consts::PI;
+                    offset += 2.0 * std::f64::consts::PI;
+                }
+            }
+            prev = Some(th);
+            angles.push(th);
+        }
+        self.angles = angles;
+    }
+
+    #[inline]
+    fn proj(&self, i: usize, ax: f32, ay: f32) -> f32 {
+        self.xs[i] * ax + self.ys[i] * ay
+    }
+
+    /// Vertex maximizing <a, v>: binary search on edge angles + a local
+    /// hill-climb for exactness under collinearity/rounding.
+    fn extreme_vertex(&self, ax: f32, ay: f32, stats: &mut QueryStats) -> usize {
+        let h = self.len();
+        if h <= 8 || self.angles.len() != h {
+            // Small layer (or degenerate): direct scan.
+            stats.points_scanned += h;
+            let mut best = 0;
+            for i in 1..h {
+                if self.proj(i, ax, ay) > self.proj(best, ax, ay) {
+                    best = i;
+                }
+            }
+            return best;
+        }
+        // <a, e_i> changes sign from + to − at the extreme vertex; edge i
+        // ascends iff its angle is within (φ−π/2, φ+π/2) where φ = angle(a).
+        // With unwrapped monotone angles we search the first edge whose
+        // angle exceeds φ + π/2 (mod the unwrap offset).
+        let phi = (ay as f64).atan2(ax as f64);
+        let two_pi = 2.0 * std::f64::consts::PI;
+        let base = self.angles[0];
+        // Candidate cut values φ + π/2 + 2πk that land within angle range.
+        let mut cut = phi + std::f64::consts::FRAC_PI_2;
+        while cut < base {
+            cut += two_pi;
+        }
+        while cut - two_pi >= base {
+            cut -= two_pi;
+        }
+        let idx = match self
+            .angles
+            .binary_search_by(|x| x.partial_cmp(&cut).unwrap())
+        {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        let mut best = idx % self.len();
+        stats.nodes_visited += 1;
+        // Hill-climb to the true max (O(1) expected; guards edge cases).
+        loop {
+            let fwd = (best + 1) % h;
+            let bwd = (best + h - 1) % h;
+            let cur = self.proj(best, ax, ay);
+            stats.points_scanned += 2;
+            if self.proj(fwd, ax, ay) > cur {
+                best = fwd;
+            } else if self.proj(bwd, ax, ay) > cur {
+                best = bwd;
+            } else {
+                return best;
+            }
+        }
+    }
+
+    /// Report the contiguous arc of vertices with <a,v> >= b around the
+    /// extreme vertex. Returns the maximum projection found.
+    fn report(&self, ax: f32, ay: f32, b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) -> f32 {
+        let h = self.len();
+        if h == 0 {
+            return f32::NEG_INFINITY;
+        }
+        let m = self.extreme_vertex(ax, ay, stats);
+        let maxp = self.proj(m, ax, ay);
+        if maxp < b {
+            return maxp;
+        }
+        out.push(self.ids[m]);
+        stats.reported += 1;
+        // Walk forward.
+        let mut i = (m + 1) % h;
+        while i != m {
+            stats.points_scanned += 1;
+            if self.proj(i, ax, ay) >= b {
+                out.push(self.ids[i]);
+                stats.reported += 1;
+                i = (i + 1) % h;
+            } else {
+                break;
+            }
+        }
+        if i == m {
+            // Forward walk wrapped the whole hull: everything reported.
+            return maxp;
+        }
+        // Walk backward (stop before re-reporting the forward arc).
+        let stop = i;
+        let mut j = (m + h - 1) % h;
+        while j != m && j != stop {
+            stats.points_scanned += 1;
+            if self.proj(j, ax, ay) >= b {
+                out.push(self.ids[j]);
+                stats.reported += 1;
+                j = (j + h - 1) % h;
+            } else {
+                break;
+            }
+        }
+        maxp
+    }
+}
+
+impl HalfSpaceReport for ConvexLayers2d {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        assert_eq!(a.len(), 2);
+        let (ax, ay) = (a[0], a[1]);
+        if ax == 0.0 && ay == 0.0 {
+            // Degenerate direction: <a,x> = 0 for all x.
+            if 0.0 >= b {
+                for layer in &self.layers {
+                    out.extend_from_slice(&layer.ids);
+                    stats.reported += layer.len();
+                }
+            }
+            return;
+        }
+        for layer in &self.layers {
+            stats.nodes_visited += 1;
+            let maxp = layer.report(ax, ay, b, out, stats);
+            if maxp < b {
+                // Everything deeper is inside this hull → cannot qualify.
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::{gaussian_points, reference_query};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn square_hull() {
+        // Unit square corners + center.
+        let pts = vec![0.0f32, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 0.5, 0.5];
+        let cl = ConvexLayers2d::build(&pts);
+        assert_eq!(cl.depth(), 2);
+        // Halfplane x >= 0.9 → the two right corners.
+        assert_eq!(cl.query(&[1.0, 0.0], 0.9), vec![1, 2]);
+        // x + y >= 1.9 → top-right corner only.
+        assert_eq!(cl.query(&[1.0, 1.0], 1.9), vec![2]);
+        // everything.
+        assert_eq!(cl.query(&[1.0, 0.0], -1.0), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn matches_reference_random() {
+        let mut rng = Rng::new(17);
+        for _ in 0..40 {
+            let n = rng.range(0, 500);
+            let pts = gaussian_points(&mut rng, n, 2, 1.0);
+            let cl = ConvexLayers2d::build(&pts);
+            for _ in 0..6 {
+                let a = rng.gaussian_vec_f32(2, 1.0);
+                let b = rng.normal(0.0, 1.0) as f32;
+                assert_eq!(cl.query(&a, b), reference_query(&pts, 2, &a, b), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn collinear_points() {
+        // All on a line: peeling must terminate and queries stay exact.
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            pts.extend_from_slice(&[i as f32, 2.0 * i as f32]);
+        }
+        let cl = ConvexLayers2d::build(&pts);
+        for b in [-5.0f32, 0.0, 10.0, 30.0] {
+            assert_eq!(cl.query(&[1.0, 0.0], b), reference_query(&pts, 2, &[1.0, 0.0], b));
+        }
+    }
+
+    #[test]
+    fn duplicates_and_tiny_inputs() {
+        for n in [0usize, 1, 2, 3] {
+            let pts: Vec<f32> = (0..2 * n).map(|i| (i % 3) as f32).collect();
+            let cl = ConvexLayers2d::build(&pts);
+            let a = [0.3f32, -0.7];
+            assert_eq!(cl.query(&a, 0.0), reference_query(&pts, 2, &a, 0.0));
+        }
+        let pts = vec![1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let cl = ConvexLayers2d::build(&pts);
+        assert_eq!(cl.query(&[1.0, 0.0], 0.5).len(), 3);
+    }
+
+    #[test]
+    fn zero_direction() {
+        let pts = vec![1.0f32, 2.0, -3.0, 4.0];
+        let cl = ConvexLayers2d::build(&pts);
+        assert_eq!(cl.query(&[0.0, 0.0], 0.0).len(), 2);
+        assert_eq!(cl.query(&[0.0, 0.0], 1.0).len(), 0);
+    }
+
+    #[test]
+    fn early_termination_touches_few_layers() {
+        let mut rng = Rng::new(23);
+        let n = 20_000;
+        let pts = gaussian_points(&mut rng, n, 2, 1.0);
+        let cl = ConvexLayers2d::build(&pts);
+        // A far-out halfplane: only a handful of outer-layer points.
+        let a = [1.0f32, 0.0];
+        let mut out = Vec::new();
+        let mut stats = QueryStats::default();
+        cl.query_into(&a, 3.0, &mut out, &mut stats);
+        out.sort_unstable();
+        assert_eq!(out, reference_query(&pts, 2, &a, 3.0));
+        assert!(
+            stats.work() < n / 10,
+            "work {} should be far below n={n}",
+            stats.work()
+        );
+        assert!(cl.depth() > 10);
+    }
+}

@@ -1,0 +1,274 @@
+//! Half-Space Reporting (HSR) data structures — the paper's core substrate.
+//!
+//! The half-space range reporting problem (Definition B.10 of the paper,
+//! after Agarwal–Eppstein–Matoušek [AEM92]): preprocess a set S of n points
+//! in R^d so that, given a query half-space H = {x : <a, x> >= b}, all
+//! points of S ∩ H are reported quickly. The paper's Algorithm 3 interface:
+//!
+//! ```text
+//! INIT(S, n, d)     — build over the key vectors
+//! QUERY(a, b)       — report {x in S : sgn(<a,x> - b) >= 0}
+//! ```
+//!
+//! The paper only *cites* the AEM92 asymptotics (Corollary 3.1) and notes
+//! (Appendix A) that no implementation of the original structure exists.
+//! This module provides working structures spanning the same design space:
+//!
+//! * [`brute::BruteHsr`] — the naive O(n) scan, the comparator every
+//!   theorem's "naive O(mn)" baseline refers to.
+//! * [`balltree::BallTreeHsr`] — Part-1 analogue: O(n log n) build,
+//!   output-sensitive queries via ball pruning and whole-subtree reporting.
+//! * [`layers2d::ConvexLayers2d`] — Part-2 analogue, exact for d = 2:
+//!   O(n log n) build, O((1 + k_layers) log n + k) query via convex-layer
+//!   peeling — genuinely O(log n + k)-shaped where it is computable.
+//! * [`dynamic::DynamicHsr`] — the logarithmic method over any static
+//!   backend, giving amortized-logarithmic inserts (Theorem B.11's update
+//!   clause); this is what the decode engine uses as keys are appended.
+//!
+//! All queries are **exact** (no approximate nearest-neighbour relaxation —
+//! the paper contrasts itself with [FA23] on precisely this point).
+
+pub mod balltree;
+pub mod brute;
+pub mod dynamic;
+pub mod layers2d;
+pub mod projected;
+
+use crate::util::rng::Rng;
+
+/// Instrumentation counters filled in by `query_into`, used by tests and
+/// benches to verify output-sensitivity (e.g. that a ball-tree query
+/// touches o(n) points on the paper's Gaussian workloads).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Internal nodes / layers visited.
+    pub nodes_visited: usize,
+    /// Points whose inner product was explicitly evaluated.
+    pub points_scanned: usize,
+    /// Points reported without evaluation (whole-subtree reports).
+    pub bulk_reported: usize,
+    /// Total points reported.
+    pub reported: usize,
+}
+
+impl QueryStats {
+    /// Total work proxy: evaluated points + visited nodes.
+    pub fn work(&self) -> usize {
+        self.nodes_visited + self.points_scanned
+    }
+
+    pub fn add(&mut self, other: &QueryStats) {
+        self.nodes_visited += other.nodes_visited;
+        self.points_scanned += other.points_scanned;
+        self.bulk_reported += other.bulk_reported;
+        self.reported += other.reported;
+    }
+}
+
+/// The HSR interface (paper Algorithm 3). Implementations are immutable
+/// after construction; dynamic insertion is layered on via
+/// [`dynamic::DynamicHsr`].
+pub trait HalfSpaceReport: Send + Sync {
+    /// Number of indexed points.
+    fn len(&self) -> usize;
+
+    /// True if no points are indexed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point dimensionality d.
+    fn dim(&self) -> usize;
+
+    /// Report every index i with `<a, x_i> >= b`, appending to `out`
+    /// (order unspecified). `stats` accumulates work counters.
+    fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats);
+
+    /// Convenience wrapper returning a fresh, sorted index vector.
+    fn query(&self, a: &[f32], b: f32) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut stats = QueryStats::default();
+        self.query_into(a, b, &mut out, &mut stats);
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Which static HSR backend to use. The engine and every bench take this
+/// as a config knob so backends can be ablated against each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HsrBackend {
+    /// Naive linear scan (the paper's O(mn) baseline).
+    Brute,
+    /// Ball-tree partition structure (Part-1 analogue, any d).
+    BallTree,
+    /// Convex-layers halfplane reporting (Part-2 analogue, d = 2 only).
+    Layers2d,
+    /// Projection-augmented ball tree (exact; prunes on anisotropic keys).
+    Projected,
+}
+
+impl HsrBackend {
+    pub fn parse(s: &str) -> Option<HsrBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "brute" | "naive" => Some(HsrBackend::Brute),
+            "balltree" | "ball" | "tree" => Some(HsrBackend::BallTree),
+            "layers2d" | "layers" | "convex" => Some(HsrBackend::Layers2d),
+            "projected" | "proj" | "pca" => Some(HsrBackend::Projected),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            HsrBackend::Brute => "brute",
+            HsrBackend::BallTree => "balltree",
+            HsrBackend::Layers2d => "layers2d",
+            HsrBackend::Projected => "projected",
+        }
+    }
+}
+
+/// Build a static HSR structure over `n` points stored row-major in
+/// `points` (length n*d). Panics if `Layers2d` is requested with d != 2.
+pub fn build_hsr(
+    backend: HsrBackend,
+    points: &[f32],
+    d: usize,
+) -> Box<dyn HalfSpaceReport> {
+    match backend {
+        HsrBackend::Brute => Box::new(brute::BruteHsr::build(points, d)),
+        HsrBackend::BallTree => Box::new(balltree::BallTreeHsr::build(points, d)),
+        HsrBackend::Layers2d => {
+            assert_eq!(d, 2, "ConvexLayers2d requires d = 2 (got d = {d})");
+            Box::new(layers2d::ConvexLayers2d::build(points))
+        }
+        HsrBackend::Projected => {
+            // Default projection rank: enough for trained-key anisotropy.
+            Box::new(projected::ProjectedHsr::build(points, d, 6.min(d)))
+        }
+    }
+}
+
+/// Inner product of two equal-length slices.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // Unrolled-by-4 accumulation: the hottest scalar loop in the crate.
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] * b[j];
+        acc1 += a[j + 1] * b[j + 1];
+        acc2 += a[j + 2] * b[j + 2];
+        acc3 += a[j + 3] * b[j + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for j in chunks * 4..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Generate `n` Gaussian points N(0, sigma^2)^d, row-major — the workload
+/// of Lemma 6.1. Shared helper for tests and benches.
+pub fn gaussian_points(rng: &mut Rng, n: usize, d: usize, sigma: f64) -> Vec<f32> {
+    rng.gaussian_vec_f32(n * d, sigma)
+}
+
+/// Reference implementation used to cross-check every backend in tests:
+/// a straight scan over the raw points.
+pub fn reference_query(points: &[f32], d: usize, a: &[f32], b: f32) -> Vec<u32> {
+    let n = points.len() / d;
+    let mut out = Vec::new();
+    for i in 0..n {
+        if dot(&points[i * d..(i + 1) * d], a) >= b {
+            out.push(i as u32);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut r = Rng::new(1);
+        for len in [0usize, 1, 3, 4, 7, 16, 65] {
+            let a = r.gaussian_vec_f32(len, 1.0);
+            let b = r.gaussian_vec_f32(len, 1.0);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(HsrBackend::parse("balltree"), Some(HsrBackend::BallTree));
+        assert_eq!(HsrBackend::parse("BRUTE"), Some(HsrBackend::Brute));
+        assert_eq!(HsrBackend::parse("convex"), Some(HsrBackend::Layers2d));
+        assert_eq!(HsrBackend::parse("??"), None);
+    }
+
+    /// Property test: every backend agrees with the reference scan on
+    /// random Gaussian instances across dimensions and thresholds.
+    #[test]
+    fn backends_match_reference() {
+        let mut rng = Rng::new(42);
+        for trial in 0..30 {
+            let d = [2usize, 3, 8, 16][trial % 4];
+            let n = rng.range(1, 400);
+            let points = gaussian_points(&mut rng, n, d, 1.0);
+            let backends: Vec<Box<dyn HalfSpaceReport>> = if d == 2 {
+                vec![
+                    build_hsr(HsrBackend::Brute, &points, d),
+                    build_hsr(HsrBackend::BallTree, &points, d),
+                    build_hsr(HsrBackend::Layers2d, &points, d),
+                ]
+            } else {
+                vec![
+                    build_hsr(HsrBackend::Brute, &points, d),
+                    build_hsr(HsrBackend::BallTree, &points, d),
+                ]
+            };
+            for _ in 0..5 {
+                let a = rng.gaussian_vec_f32(d, 1.0);
+                let b = rng.normal(0.0, 1.5) as f32;
+                let expect = reference_query(&points, d, &a, b);
+                for be in &backends {
+                    let got = be.query(&a, b);
+                    assert_eq!(got, expect, "n={n} d={d} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let points: Vec<f32> = vec![];
+        for be in [HsrBackend::Brute, HsrBackend::BallTree] {
+            let h = build_hsr(be, &points, 4);
+            assert!(h.is_empty());
+            assert!(h.query(&[1.0, 0.0, 0.0, 0.0], 0.0).is_empty());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn layers2d_requires_d2() {
+        let points = vec![0.0f32; 12];
+        let _ = build_hsr(HsrBackend::Layers2d, &points, 3);
+    }
+}

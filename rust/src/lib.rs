@@ -1,0 +1,38 @@
+//! # hsr-attn — HSR-Enhanced Sparse Attention Acceleration
+//!
+//! A production-shaped reproduction of *"HSR-Enhanced Sparse Attention
+//! Acceleration"* (Chen, Liang, Sha, Shi, Song; 2024): half-space
+//! reporting (HSR) data structures used to identify the activated /
+//! "massively activated" entries of ReLU^α and Softmax attention, wrapped
+//! in a continuous-batching serving engine.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`hsr`] — the HSR substrate (Algorithm 3, Corollary 3.1).
+//! * [`attention`] — ReLU^α / Softmax attention math, thresholds
+//!   (Lemma 6.1), top-r selection (Definition B.2), error bounds
+//!   (Theorem 4.3).
+//! * [`engine`] — Algorithm 1 (generation decoding) and Algorithm 2
+//!   (prompt prefilling) integrated with a paged KV cache, a
+//!   continuous-batching scheduler and a request router.
+//! * [`model`] — the native transformer forward used by the serving hot
+//!   path (weights trained & exported by the Python build step).
+//! * [`runtime`] — PJRT CPU client executing the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py`.
+//! * [`workloads`] — the paper's Gaussian / massive-activation workload
+//!   generators and serving traces.
+//! * [`bench`] — the micro-benchmark harness used by `cargo bench`.
+
+pub mod attention;
+pub mod bench;
+pub mod engine;
+pub mod hsr;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workloads;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

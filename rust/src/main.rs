@@ -1,0 +1,136 @@
+//! hsr-attn CLI: serve the trained model over TCP, generate one-shot,
+//! or print reproduction tables.
+//!
+//!   hsr-attn serve   --model small --addr 127.0.0.1:7070 --workers 2
+//!                    --policy sparse|dense --backend balltree
+//!   hsr-attn generate --model small --prompt "text" --gen 48
+//!   hsr-attn table1  [--max-n 1048576]
+//!   hsr-attn info
+
+use anyhow::{Context, Result};
+use hsr_attn::engine::{EngineConfig, GenerationParams, Router};
+use hsr_attn::hsr::HsrBackend;
+use hsr_attn::model::tokenizer::ByteTokenizer;
+use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::Model;
+use hsr_attn::server::Server;
+use hsr_attn::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or(
+        "artifacts",
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+    ))
+}
+
+fn policy_from(args: &Args) -> AttentionPolicy {
+    match args.str_or("policy", "sparse") {
+        "dense" => AttentionPolicy::Dense,
+        "sparse" => AttentionPolicy::TopR(RSpec::paper()),
+        other => {
+            if let Some(r) = other.strip_prefix("topr=").and_then(|s| s.parse().ok()) {
+                AttentionPolicy::TopR(RSpec::Fixed(r))
+            } else {
+                eprintln!("unknown --policy '{other}', using sparse");
+                AttentionPolicy::TopR(RSpec::paper())
+            }
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    EngineConfig {
+        policy: policy_from(args),
+        hsr_backend: HsrBackend::parse(args.str_or("backend", "balltree")),
+        cache_capacity_tokens: args.usize_or("cache-tokens", 1 << 20),
+        block_tokens: args.usize_or("block-tokens", 64),
+        ..Default::default()
+    }
+}
+
+fn load_model(args: &Args) -> Result<Arc<Model>> {
+    let dir = artifacts_dir(args);
+    let name = args.str_or("model", "small");
+    Ok(Arc::new(Model::load_named(&dir, name).with_context(
+        || format!("loading model '{name}' from {} — run `make artifacts`?", dir.display()),
+    )?))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let workers = args.usize_or("workers", 2);
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let router = Arc::new(Router::new(model, engine_config(args), workers));
+    let server = Server::bind(router, addr)?;
+    println!("hsr-attn serving on {} ({} workers)", server.local_addr()?, workers);
+    println!("protocol: one JSON object per line, e.g.");
+    println!("  {{\"prompt\":\"the merchant carries \",\"max_new_tokens\":32}}");
+    server.serve()
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let model = load_model(args)?;
+    let prompt_text = args.str_or("prompt", "the merchant carries ");
+    let tokenizer = ByteTokenizer;
+    let router = Router::new(model, engine_config(args), 1);
+    router.submit(
+        tokenizer.encode(prompt_text),
+        GenerationParams {
+            max_new_tokens: args.usize_or("gen", 48),
+            temperature: args.f64_or("temperature", 0.0) as f32,
+            stop_token: None,
+        },
+    );
+    router.wait_idle();
+    let resp = router.take_responses().pop().context("no response")?;
+    println!("prompt: {prompt_text}");
+    println!("output: {}", tokenizer.decode(&resp.tokens));
+    println!("({} tokens, {:.1} ms, ttft {:.1} ms)", resp.tokens.len(), resp.latency_ms, resp.ttft_ms);
+    let m = router.shutdown();
+    println!("{}", m.summary());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) {
+    let max_n = args.usize_or("max-n", 1 << 20);
+    let ns: Vec<usize> = (10..=20).map(|p| 1usize << p).filter(|&n| n <= max_n).collect();
+    println!("{:>10} {:>14} {:>10}", "n", "activated", "sparsity");
+    for row in hsr_attn::attention::threshold::sparsity_table(&ns) {
+        println!("{:>10} {:>14.0} {:>9.2}%", row.n, row.activated, row.sparsity * 100.0);
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    println!("hsr-attn {}", hsr_attn::version());
+    println!("artifacts dir: {}", dir.display());
+    if dir.join("manifest.json").exists() {
+        let rt = hsr_attn::runtime::Runtime::new(&dir)?;
+        println!("PJRT platform: {}", rt.platform());
+        println!("models: {:?}", rt.manifest.models.keys().collect::<Vec<_>>());
+        println!("hlo artifacts: {:?}", rt.manifest.hlo.keys().collect::<Vec<_>>());
+    } else {
+        println!("artifacts not built — run `make artifacts`");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("table1") => {
+            cmd_table1(&args);
+            Ok(())
+        }
+        Some("info") | None => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            eprintln!("usage: hsr-attn <serve|generate|table1|info> [--flags]");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Per-sequence KV state with optional per-(layer, head) dynamic HSR
+//! indices — the data structure Algorithm 1 calls "KV Cache" plus the
+//! HSR side-index its INIT procedure builds.
+//!
+//! Keys are stored *post-RoPE* (matching the JAX cache convention), one
+//! contiguous `[n, d_head]` buffer per (layer, head) so HSR gathers and
+//! attention reads are cache-friendly. When HSR indexing is enabled, the
+//! same key rows are inserted into a [`DynamicHsr`] (logarithmic-method)
+//! structure as they are appended — the amortized-update clause of
+//! Theorem B.11 in action.
+
+use crate::hsr::dynamic::DynamicHsr;
+use crate::hsr::{HalfSpaceReport, HsrBackend, QueryStats};
+
+/// KV + HSR state for one (layer, head).
+pub struct HeadKv {
+    /// Post-RoPE keys, row-major [n, d_head].
+    pub keys: Vec<f32>,
+    /// Values, row-major [n, d_head].
+    pub values: Vec<f32>,
+    /// Optional HSR index over the keys.
+    pub hsr: Option<DynamicHsr>,
+    /// Adaptive HSR threshold (raw inner-product scale), maintained by the
+    /// top-r attention calibrator in `transformer.rs`.
+    pub calib_threshold: Option<f32>,
+    d_head: usize,
+}
+
+impl HeadKv {
+    fn new(d_head: usize, hsr_backend: Option<HsrBackend>) -> HeadKv {
+        HeadKv {
+            keys: Vec::new(),
+            values: Vec::new(),
+            hsr: hsr_backend.map(|b| DynamicHsr::new(b, d_head)),
+            calib_threshold: None,
+            d_head,
+        }
+    }
+
+    /// Number of cached tokens.
+    pub fn len(&self) -> usize {
+        self.keys.len() / self.d_head
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Append one (key, value) row, updating the HSR index.
+    pub fn append(&mut self, key: &[f32], value: &[f32]) {
+        debug_assert_eq!(key.len(), self.d_head);
+        debug_assert_eq!(value.len(), self.d_head);
+        if let Some(hsr) = &mut self.hsr {
+            hsr.insert(key);
+        }
+        self.keys.extend_from_slice(key);
+        self.values.extend_from_slice(value);
+    }
+
+    /// HSR query over the cached keys: all indices with <q, K_j> >= b_raw
+    /// (b_raw is on the *unscaled* inner product). Falls back to a brute
+    /// scan when no index is attached.
+    pub fn hsr_query(&self, q: &[f32], b_raw: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        match &self.hsr {
+            Some(hsr) => hsr.query_into(q, b_raw, out, stats),
+            None => {
+                let n = self.len();
+                stats.points_scanned += n;
+                for j in 0..n {
+                    if crate::hsr::dot(q, self.key_row(j)) >= b_raw {
+                        out.push(j as u32);
+                        stats.reported += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn key_row(&self, j: usize) -> &[f32] {
+        &self.keys[j * self.d_head..(j + 1) * self.d_head]
+    }
+
+    #[inline]
+    pub fn value_row(&self, j: usize) -> &[f32] {
+        &self.values[j * self.d_head..(j + 1) * self.d_head]
+    }
+}
+
+/// Full per-sequence KV state: `n_layers × n_heads` of [`HeadKv`].
+pub struct KvState {
+    pub heads: Vec<HeadKv>, // layer-major: heads[layer * n_heads + head]
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+}
+
+impl KvState {
+    pub fn new(
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+        hsr_backend: Option<HsrBackend>,
+    ) -> KvState {
+        let heads = (0..n_layers * n_heads)
+            .map(|_| HeadKv::new(d_head, hsr_backend))
+            .collect();
+        KvState { heads, n_layers, n_heads, d_head }
+    }
+
+    /// Cached sequence length (tokens).
+    pub fn len(&self) -> usize {
+        self.heads[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heads[0].is_empty()
+    }
+
+    #[inline]
+    pub fn head(&self, layer: usize, head: usize) -> &HeadKv {
+        &self.heads[layer * self.n_heads + head]
+    }
+
+    #[inline]
+    pub fn head_mut(&mut self, layer: usize, head: usize) -> &mut HeadKv {
+        &mut self.heads[layer * self.n_heads + head]
+    }
+
+    /// Approximate memory footprint in bytes (keys + values only).
+    pub fn bytes(&self) -> usize {
+        self.heads
+            .iter()
+            .map(|h| (h.keys.len() + h.values.len()) * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn append_and_query_consistency() {
+        let mut rng = Rng::new(1);
+        let d = 8;
+        let mut kv = KvState::new(2, 2, d, Some(HsrBackend::BallTree));
+        for _ in 0..300 {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let k = rng.gaussian_vec_f32(d, 1.0);
+                    let v = rng.gaussian_vec_f32(d, 1.0);
+                    kv.head_mut(l, h).append(&k, &v);
+                }
+            }
+        }
+        assert_eq!(kv.len(), 300);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let head = kv.head(1, 0);
+        let mut via_hsr = Vec::new();
+        let mut stats = QueryStats::default();
+        head.hsr_query(&q, 1.0, &mut via_hsr, &mut stats);
+        via_hsr.sort_unstable();
+        // Brute-force over stored rows must agree.
+        let mut brute = Vec::new();
+        for j in 0..head.len() {
+            if crate::hsr::dot(&q, head.key_row(j)) >= 1.0 {
+                brute.push(j as u32);
+            }
+        }
+        assert_eq!(via_hsr, brute);
+    }
+
+    #[test]
+    fn no_index_falls_back_to_scan() {
+        let mut rng = Rng::new(2);
+        let d = 4;
+        let mut kv = KvState::new(1, 1, d, None);
+        for _ in 0..50 {
+            let k = rng.gaussian_vec_f32(d, 1.0);
+            kv.head_mut(0, 0).append(&k.clone(), &k);
+        }
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let mut out = Vec::new();
+        let mut stats = QueryStats::default();
+        kv.head(0, 0).hsr_query(&q, 0.0, &mut out, &mut stats);
+        assert_eq!(stats.points_scanned, 50);
+    }
+
+    #[test]
+    fn bytes_accounts_keys_and_values() {
+        let kv = KvState::new(2, 3, 16, None);
+        assert_eq!(kv.bytes(), 0);
+        let mut kv = kv;
+        kv.head_mut(0, 0).append(&[0.0; 16], &[0.0; 16]);
+        assert_eq!(kv.bytes(), 2 * 16 * 4);
+    }
+}

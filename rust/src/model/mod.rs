@@ -1,0 +1,105 @@
+//! The native transformer mirror of `python/compile/model.py`.
+//!
+//! The serving hot path needs *data-dependent* sparse attention — the HSR
+//! report set differs per query — which a fixed-shape XLA executable
+//! cannot express without padding to the worst case. So the engine runs
+//! the model natively in rust (this module), with weights trained and
+//! exported by the Python build step, while the [`crate::runtime`] path
+//! executes the AOT-compiled dense artifacts for baseline comparison and
+//! cross-validation. Golden-vector tests assert the two agree.
+//!
+//! Architecture contract (must match model.py exactly): byte-level
+//! embedding → L × [RMSNorm → RoPE MHA → residual → RMSNorm → SwiGLU →
+//! residual] → RMSNorm → untied output projection. No biases, fp32.
+
+pub mod kv;
+pub mod tokenizer;
+pub mod transformer;
+
+use crate::util::tensor_io::TensorBundle;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Model hyperparameters (mirrors `ModelConfig` in model.py; loaded from
+/// the weight bundle's `config` metadata).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    fn from_meta(meta: &crate::util::json::Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: meta.req_str("name")?.to_string(),
+            d_model: meta.req_usize("d_model")?,
+            n_layers: meta.req_usize("n_layers")?,
+            n_heads: meta.req_usize("n_heads")?,
+            d_head: meta.req_usize("d_head")?,
+            d_ffn: meta.req_usize("d_ffn")?,
+            vocab: meta.req_usize("vocab")?,
+            rope_theta: meta.req_f64("rope_theta")?,
+            rms_eps: meta.req_f64("rms_eps")? as f32,
+        })
+    }
+}
+
+/// A loaded model: config + weights.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub weights: TensorBundle,
+}
+
+impl Model {
+    /// Load from `artifacts/model_<name>` (the `.json`/`.bin` pair).
+    pub fn load(stem: &Path) -> Result<Model> {
+        let weights = TensorBundle::load(stem)
+            .with_context(|| format!("loading model bundle {}", stem.display()))?;
+        let meta = weights
+            .meta
+            .get("config")
+            .context("model bundle missing 'config' metadata")?;
+        let cfg = ModelConfig::from_meta(meta)?;
+        // Validate the tensors we depend on exist with the right shapes.
+        let emb = weights.get("tok_emb")?;
+        anyhow::ensure!(
+            emb.shape == vec![cfg.vocab, cfg.d_model],
+            "tok_emb shape {:?} != [{}, {}]",
+            emb.shape,
+            cfg.vocab,
+            cfg.d_model
+        );
+        for i in 0..cfg.n_layers {
+            for t in ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w1", "w3", "w2"] {
+                weights
+                    .get(&format!("{t}.{i}"))
+                    .with_context(|| format!("layer {i} missing {t}"))?;
+            }
+        }
+        weights.get("final_norm")?;
+        weights.get("w_out")?;
+        Ok(Model { cfg, weights })
+    }
+
+    /// Convenience: load `model_<name>` from an artifacts directory.
+    pub fn load_named(artifacts_dir: &Path, name: &str) -> Result<Model> {
+        Model::load(&artifacts_dir.join(format!("model_{name}")))
+    }
+
+    pub fn tensor(&self, name: &str) -> &crate::util::tensor_io::Tensor {
+        self.weights.get(name).expect("validated at load")
+    }
+
+    pub fn layer_tensor(&self, name: &str, layer: usize) -> &crate::util::tensor_io::Tensor {
+        self.weights
+            .get(&format!("{name}.{layer}"))
+            .expect("validated at load")
+    }
+}

@@ -1,0 +1,49 @@
+//! Byte-level tokenizer: the model's vocabulary is exactly the 256 byte
+//! values (matching `python/compile/model.py`'s VOCAB_SIZE = 256). Kept
+//! as a type so the serving API has a stable encode/decode boundary.
+
+/// Byte-level tokenizer (identity over bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Decode tokens to text, replacing invalid UTF-8 with U+FFFD.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "the merchant carries copper coins.";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        let t = ByteTokenizer;
+        assert_eq!(t.encode("AB"), vec![65, 66]);
+        assert!(t.encode("é").iter().all(|&x| x < 256));
+    }
+
+    #[test]
+    fn invalid_utf8_is_replaced() {
+        let t = ByteTokenizer;
+        let s = t.decode(&[0xFF, 65]);
+        assert!(s.ends_with('A'));
+    }
+}

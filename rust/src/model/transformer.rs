@@ -1,0 +1,412 @@
+//! Native transformer forward + HSR-sparse decode — the serving hot path.
+//!
+//! Mirrors `python/compile/model.py` op-for-op (RMSNorm/RoPE/SwiGLU,
+//! fp32); parity is asserted against golden vectors exported by aot.py.
+//! The attention inner loop is pluggable via [`AttentionPolicy`]:
+//!
+//! * `Dense` — the naive O(n) softmax over the whole KV cache
+//!   (Definition 1.1; the baseline of Theorems 4.2/5.2).
+//! * `TopR` — Algorithm 1's inference loop: HSR query for the candidate
+//!   half-space, then exact top-r restriction (Definition B.2). The
+//!   threshold b is auto-calibrated per (layer, head) from observed score
+//!   quantiles ("choose b such that R = NN(r, q, K)" — Theorem 4.2) and
+//!   adapts as the distribution drifts during generation. Because the HSR
+//!   query is exact, candidates ⊇ top-r whenever |candidates| ≥ r, so the
+//!   selected index set equals the true NN(r, q, K).
+
+use super::kv::KvState;
+use super::Model;
+use crate::attention::softmax::{softmax_attention_row_subset, log_sum_exp};
+use crate::attention::topk::{rth_largest, top_r_of_subset};
+use crate::hsr::QueryStats;
+use crate::util::tensor_io::Tensor;
+
+/// How many candidates (relative to r) the calibrator aims to report:
+/// a 2x superset absorbs distribution drift between steps.
+const CALIBRATION_SLACK: f32 = 2.0;
+
+/// Attention policy for cached attention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttentionPolicy {
+    /// Full softmax attention over the cache.
+    Dense,
+    /// Softmax attention restricted to the top-r indices, r = spec(n).
+    TopR(RSpec),
+}
+
+/// How r scales with the cache length n.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RSpec {
+    /// Constant r.
+    Fixed(usize),
+    /// r = ceil(n^p) — the paper's n^{4/5} with p = 0.8.
+    Pow(f64),
+}
+
+impl RSpec {
+    /// The paper's r = n^{4/5}.
+    pub fn paper() -> RSpec {
+        RSpec::Pow(0.8)
+    }
+
+    pub fn r_for(&self, n: usize) -> usize {
+        match *self {
+            RSpec::Fixed(r) => r.max(1),
+            RSpec::Pow(p) => (n as f64).powf(p).ceil().max(1.0) as usize,
+        }
+    }
+}
+
+/// Per-step instrumentation aggregated across layers/heads.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepStats {
+    /// HSR work counters summed over heads.
+    pub hsr: QueryStats,
+    /// Total attended (selected) entries.
+    pub attended: usize,
+    /// Total cache entries that a dense pass would have attended.
+    pub dense_equivalent: usize,
+    /// Number of calibration fallbacks (full re-scans).
+    pub fallbacks: usize,
+}
+
+/// Reusable scratch buffers for a forward step (no allocation on the
+/// token hot path).
+pub struct Workspace {
+    x: Vec<f32>,
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    ffn_a: Vec<f32>,
+    ffn_b: Vec<f32>,
+    scores: Vec<f32>,
+    cand: Vec<u32>,
+    cand_scores: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new(model: &Model) -> Workspace {
+        let c = &model.cfg;
+        Workspace {
+            x: vec![0.0; c.d_model],
+            h: vec![0.0; c.d_model],
+            q: vec![0.0; c.d_model],
+            k: vec![0.0; c.d_model],
+            v: vec![0.0; c.d_model],
+            att: vec![0.0; c.d_model],
+            proj: vec![0.0; c.d_model],
+            ffn_a: vec![0.0; c.d_ffn],
+            ffn_b: vec![0.0; c.d_ffn],
+            scores: Vec::new(),
+            cand: Vec::new(),
+            cand_scores: Vec::new(),
+            logits: vec![0.0; c.vocab],
+        }
+    }
+}
+
+/// out = x @ W for row-major W [d_in, d_out].
+fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    let d_in = w.shape[0];
+    let d_out = w.shape[1];
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(out.len(), d_out);
+    out.fill(0.0);
+    for i in 0..d_in {
+        let xi = x[i];
+        let row = &w.data[i * d_out..(i + 1) * d_out];
+        // axpy over the row: autovectorizes well.
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xi * wv;
+        }
+    }
+}
+
+/// RMSNorm: x * rsqrt(mean(x^2) + eps) * w.
+fn rms_norm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let scale = 1.0 / (ms + eps).sqrt();
+    for ((o, &xv), &wv) in out.iter_mut().zip(x).zip(w) {
+        *o = xv * scale * wv;
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place RoPE on one head vector (consecutive-pair layout, matching
+/// model.py's apply_rope).
+pub fn apply_rope(x: &mut [f32], pos: usize, theta: f64) {
+    let d_head = x.len();
+    let half = d_head / 2;
+    for i in 0..half {
+        let freq = theta.powf(-((2 * i) as f64) / d_head as f64);
+        let ang = pos as f64 * freq;
+        let (sin, cos) = (ang.sin() as f32, ang.cos() as f32);
+        let e = x[2 * i];
+        let o = x[2 * i + 1];
+        x[2 * i] = e * cos - o * sin;
+        x[2 * i + 1] = e * sin + o * cos;
+    }
+}
+
+impl Model {
+    /// One autoregressive step: appends this token's K/V to the cache and
+    /// returns the next-token logits. `pos` must equal `kv.len()`.
+    pub fn decode_step(
+        &self,
+        token: u32,
+        kv: &mut KvState,
+        policy: AttentionPolicy,
+        ws: &mut Workspace,
+        stats: &mut StepStats,
+    ) -> Vec<f32> {
+        let c = &self.cfg;
+        let pos = kv.len();
+        // Embedding.
+        let emb = self.tensor("tok_emb");
+        ws.x.copy_from_slice(emb.row(token as usize));
+
+        for layer in 0..c.n_layers {
+            // --- attention block ---
+            rms_norm(&ws.x, &self.layer_tensor("attn_norm", layer).data, c.rms_eps, &mut ws.h);
+            matvec(&ws.h, self.layer_tensor("wq", layer), &mut ws.q);
+            matvec(&ws.h, self.layer_tensor("wk", layer), &mut ws.k);
+            matvec(&ws.h, self.layer_tensor("wv", layer), &mut ws.v);
+            for head in 0..c.n_heads {
+                let s = head * c.d_head;
+                let e = s + c.d_head;
+                apply_rope(&mut ws.q[s..e], pos, c.rope_theta);
+                apply_rope(&mut ws.k[s..e], pos, c.rope_theta);
+                // Append current token so it participates in attention.
+                let hk = kv.head_mut(layer, head);
+                hk.append(&ws.k[s..e], &ws.v[s..e]);
+                attend_head(
+                    hk,
+                    &ws.q[s..e],
+                    c.d_head,
+                    policy,
+                    &mut ws.scores,
+                    &mut ws.cand,
+                    &mut ws.cand_scores,
+                    &mut ws.att[s..e],
+                    stats,
+                );
+            }
+            matvec(&ws.att, self.layer_tensor("wo", layer), &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
+            }
+            // --- MLP block (SwiGLU) ---
+            rms_norm(&ws.x, &self.layer_tensor("mlp_norm", layer).data, c.rms_eps, &mut ws.h);
+            matvec(&ws.h, self.layer_tensor("w1", layer), &mut ws.ffn_a);
+            matvec(&ws.h, self.layer_tensor("w3", layer), &mut ws.ffn_b);
+            for (a, &b) in ws.ffn_a.iter_mut().zip(&ws.ffn_b) {
+                *a = silu(*a) * b;
+            }
+            matvec(&ws.ffn_a, self.layer_tensor("w2", layer), &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
+            }
+        }
+        rms_norm(&ws.x, &self.tensor("final_norm").data, c.rms_eps, &mut ws.h);
+        matvec(&ws.h, self.tensor("w_out"), &mut ws.logits);
+        ws.logits.clone()
+    }
+
+    /// Prefill a prompt through the decode path (token by token) and
+    /// return all logits [t, vocab]. `policy` applies from position
+    /// `sparse_from` onward (early positions have tiny caches where
+    /// sparsity is meaningless).
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        kv: &mut KvState,
+        policy: AttentionPolicy,
+        stats: &mut StepStats,
+    ) -> Vec<f32> {
+        let mut ws = Workspace::new(self);
+        let mut all = Vec::with_capacity(tokens.len() * self.cfg.vocab);
+        for &t in tokens {
+            let logits = self.decode_step(t, kv, policy, &mut ws, stats);
+            all.extend_from_slice(&logits);
+        }
+        all
+    }
+
+    /// Full dense forward (reference path for golden tests): [t, vocab].
+    pub fn forward_full(&self, tokens: &[u32]) -> Vec<f32> {
+        let mut kv = KvState::new(self.cfg.n_layers, self.cfg.n_heads, self.cfg.d_head, None);
+        let mut stats = StepStats::default();
+        self.prefill(tokens, &mut kv, AttentionPolicy::Dense, &mut stats)
+    }
+
+    /// Mean negative log-likelihood (nats/byte) of `tokens[1..]` given the
+    /// running prefix under the given policy — exp() of this is the
+    /// perplexity of Section 7.
+    pub fn nll(&self, tokens: &[u32], policy: AttentionPolicy) -> f64 {
+        assert!(tokens.len() >= 2);
+        let mut kv = KvState::new(
+            self.cfg.n_layers,
+            self.cfg.n_heads,
+            self.cfg.d_head,
+            Some(crate::hsr::HsrBackend::BallTree),
+        );
+        let mut ws = Workspace::new(self);
+        let mut stats = StepStats::default();
+        let mut total = 0f64;
+        for i in 0..tokens.len() - 1 {
+            let logits = self.decode_step(tokens[i], &mut kv, policy, &mut ws, &mut stats);
+            let lse = log_sum_exp(&logits);
+            total += (lse - logits[tokens[i + 1] as usize]) as f64;
+        }
+        total / (tokens.len() - 1) as f64
+    }
+}
+
+/// One head of cached attention under a policy. `out` has length d_head.
+#[allow(clippy::too_many_arguments)]
+fn attend_head(
+    hk: &mut super::kv::HeadKv,
+    q: &[f32],
+    d_head: usize,
+    policy: AttentionPolicy,
+    scores: &mut Vec<f32>,
+    cand: &mut Vec<u32>,
+    cand_scores: &mut Vec<f32>,
+    out: &mut [f32],
+    stats: &mut StepStats,
+) {
+    let n = hk.len();
+    stats.dense_equivalent += n;
+    let r = match policy {
+        AttentionPolicy::Dense => n,
+        AttentionPolicy::TopR(spec) => spec.r_for(n),
+    };
+    if r >= n {
+        // Dense (or top-r covering everything): softmax over all rows.
+        crate::attention::scores_into(q, &hk.keys, d_head, {
+            scores.resize(n, 0.0);
+            scores
+        });
+        // Reuse the subset path with the full index set? Cheaper: direct.
+        let idx_all: &mut Vec<u32> = cand;
+        idx_all.clear();
+        idx_all.extend(0..n as u32);
+        softmax_attention_row_subset(q, &hk.keys, &hk.values, d_head, idx_all, cand_scores, out);
+        stats.attended += n;
+        return;
+    }
+
+    // --- Algorithm 1 inference: HSR query, then exact top-r. ---
+    // The HSR threshold lives on the raw inner product <q, k>.
+    let mut b_raw = hk.calib_threshold.unwrap_or(f32::NEG_INFINITY);
+    cand.clear();
+    let mut q_stats = QueryStats::default();
+    hk.hsr_query(q, b_raw, cand, &mut q_stats);
+    if cand.len() < r {
+        // Calibration miss: fall back to the full half-space (b = -inf ≡
+        // brute top-r) and recalibrate. Exactness is never compromised.
+        stats.fallbacks += 1;
+        cand.clear();
+        hk.hsr_query(q, f32::NEG_INFINITY, cand, &mut q_stats);
+    }
+    stats.hsr.add(&q_stats);
+    // Raw scores of the candidates (for selection and recalibration).
+    cand_scores.clear();
+    for &j in cand.iter() {
+        cand_scores.push(crate::hsr::dot(q, hk.key_row(j as usize)));
+    }
+    // Recalibrate: aim the next report at ~CALIBRATION_SLACK * r.
+    let target = ((r as f32 * CALIBRATION_SLACK) as usize).min(cand.len());
+    if target >= 1 {
+        b_raw = rth_largest(cand_scores, target);
+        hk.calib_threshold = Some(b_raw);
+    }
+    // Exact top-r over the candidate superset (= true NN(r, q, K)).
+    let selected = top_r_of_subset(cand, cand_scores, r);
+    stats.attended += selected.len();
+    softmax_attention_row_subset(q, &hk.keys, &hk.values, d_head, &selected, cand_scores, out);
+}
+
+/// Greedy argmax sampling.
+pub fn argmax(logits: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+/// Temperature sampling with a deterministic RNG.
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut crate::util::rng::Rng) -> u32 {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
+    let probs = crate::attention::softmax::softmax(&scaled);
+    rng.categorical(&probs) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rope_zero_is_identity() {
+        let mut x = vec![0.3f32, -1.2, 0.7, 2.0];
+        let orig = x.clone();
+        apply_rope(&mut x, 0, 10000.0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rope_preserves_norm() {
+        let mut x = vec![0.3f32, -1.2, 0.7, 2.0, 1.0, -0.5, 0.1, 0.9];
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        apply_rope(&mut x, 123, 10000.0);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // <R_p x, R_q y> depends only on p − q.
+        let x = vec![0.5f32, -0.3, 1.1, 0.2];
+        let y = vec![-0.7f32, 0.9, 0.4, -1.3];
+        let ip = |p: usize, qpos: usize| {
+            let mut a = x.clone();
+            let mut b = y.clone();
+            apply_rope(&mut a, p, 10000.0);
+            apply_rope(&mut b, qpos, 10000.0);
+            crate::hsr::dot(&a, &b)
+        };
+        assert!((ip(7, 3) - ip(11, 7)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rspec_scaling() {
+        assert_eq!(RSpec::Fixed(16).r_for(1000), 16);
+        assert_eq!(RSpec::paper().r_for(1024), (1024f64.powf(0.8).ceil()) as usize);
+        assert_eq!(RSpec::Pow(0.8).r_for(1), 1);
+    }
+
+    #[test]
+    fn argmax_and_sample() {
+        let logits = vec![0.0f32, 5.0, -1.0];
+        assert_eq!(argmax(&logits), 1);
+        let mut rng = crate::util::rng::Rng::new(0);
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+        // Low temperature: overwhelmingly picks the max.
+        let picks: Vec<u32> = (0..50).map(|_| sample(&logits, 0.1, &mut rng)).collect();
+        assert!(picks.iter().filter(|&&p| p == 1).count() > 45);
+    }
+}

@@ -1,0 +1,116 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape/dtype of one executable input or output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One HLO artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Extra scalar attributes (n_ctx, r_max, heads, ...).
+    pub attrs: BTreeMap<String, f64>,
+}
+
+/// The whole manifest: model configs + HLO artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub hlo: BTreeMap<String, ArtifactSpec>,
+    /// Model-name → config object (raw JSON, parsed by `model::Model`).
+    pub models: BTreeMap<String, Json>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.req_str("name")?.to_string(),
+        shape: v
+            .req_arr("shape")?
+            .iter()
+            .map(|s| s.as_usize().context("bad shape"))
+            .collect::<Result<_>>()?,
+        dtype: v.req_str("dtype")?.to_string(),
+    })
+}
+
+impl ArtifactManifest {
+    pub fn load(path: &Path) -> Result<ArtifactManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut manifest = ArtifactManifest::default();
+        if let Some(Json::Obj(models)) = root.get("models") {
+            for (k, v) in models {
+                manifest.models.insert(k.clone(), v.clone());
+            }
+        }
+        let Some(Json::Obj(hlo)) = root.get("hlo") else {
+            anyhow::bail!("manifest missing 'hlo' object");
+        };
+        for (key, entry) in hlo {
+            let file = entry.req_str("file")?.to_string();
+            let inputs = match entry.get("inputs") {
+                Some(Json::Arr(v)) => v.iter().map(parse_io).collect::<Result<_>>()?,
+                _ => Vec::new(),
+            };
+            let outputs = match entry.get("outputs") {
+                Some(Json::Arr(v)) => v.iter().map(parse_io).collect::<Result<_>>()?,
+                _ => Vec::new(),
+            };
+            let mut attrs = BTreeMap::new();
+            if let Json::Obj(m) = entry {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        attrs.insert(k.clone(), x);
+                    }
+                }
+            }
+            manifest
+                .hlo
+                .insert(key.clone(), ArtifactSpec { file, inputs, outputs, attrs });
+        }
+        Ok(manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("hsr_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{"models":{"mini":{"d_model":64}},
+                "hlo":{"k":{"file":"k.hlo.txt","r_max":256,
+                  "inputs":[{"name":"q","shape":[4,32],"dtype":"f32"}],
+                  "outputs":[{"name":"o","shape":[4,32],"dtype":"f32"}]}}}"#,
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&path).unwrap();
+        assert_eq!(m.hlo["k"].file, "k.hlo.txt");
+        assert_eq!(m.hlo["k"].inputs[0].shape, vec![4, 32]);
+        assert_eq!(m.hlo["k"].attrs["r_max"], 256.0);
+        assert!(m.models.contains_key("mini"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(ArtifactManifest::load(Path::new("/nonexistent/m.json")).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! PJRT artifact runtime: load `artifacts/*.hlo.txt` (produced by
+//! `python/compile/aot.py`), compile on the PJRT CPU client, execute with
+//! concrete buffers. Python is never on this path — the HLO text is the
+//! only interchange (see /opt/xla-example/README.md for why text, not
+//! serialized protos).
+//!
+//! The runtime is used for (a) the dense decode/prefill *baseline*
+//! executables, (b) executing the L1 Pallas masked-attention kernels from
+//! rust, and (c) cross-validating the native rust forward against the JAX
+//! lowering (golden tests in `rust/tests/`).
+
+pub mod artifact;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use artifact::{ArtifactManifest, ArtifactSpec, IoSpec};
+
+/// A compiled HLO executable plus its I/O description.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT CPU runtime: one client, many compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    pub manifest: ArtifactManifest,
+}
+
+/// An input/output buffer for executable calls.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buffer {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Buffer {
+    pub fn scalar_i32(v: i32) -> Buffer {
+        Buffer::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Buffer {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Buffer::F32(data, shape)
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Buffer {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Buffer::I32(data, shape)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Buffer::F32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Buffer::I32(data, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        })
+    }
+
+    /// Extract f32 payload (errors on i32 buffers).
+    pub fn expect_f32(&self) -> Result<&[f32]> {
+        match self {
+            Buffer::F32(d, _) => Ok(d),
+            _ => anyhow::bail!("buffer is not f32"),
+        }
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = ArtifactManifest::load(&artifacts_dir.join("manifest.json"))?;
+        Ok(Runtime { client, artifacts_dir: artifacts_dir.to_path_buf(), manifest })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact by manifest key (e.g.
+    /// "decode_step_small"). Compilation is cached per call site — hold
+    /// the returned [`Executable`] for the serving lifetime.
+    pub fn load(&self, key: &str) -> Result<Executable> {
+        let spec = self
+            .manifest
+            .hlo
+            .get(key)
+            .with_context(|| format!("artifact '{key}' not in manifest"))?;
+        let path = self.artifacts_dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{key}'"))?;
+        Ok(Executable { name: key.to_string(), exe })
+    }
+
+    /// Execute with the given inputs; returns the flattened output tuple
+    /// as f32 buffers (all exported artifacts produce f32 outputs).
+    pub fn execute(&self, exe: &Executable, inputs: &[Buffer]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|b| b.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = exe.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let parts = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_shape_checks() {
+        let b = Buffer::f32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(b.expect_f32().unwrap(), &[1.0, 2.0]);
+        let s = Buffer::scalar_i32(42);
+        assert!(s.expect_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn buffer_shape_mismatch_panics() {
+        let _ = Buffer::f32(vec![1.0; 3], vec![2, 2]);
+    }
+}

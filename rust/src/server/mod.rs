@@ -1,0 +1,148 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
+//!   ← {"id": 7, "text": "...", "latency_ms": 12.3, "ttft_ms": 4.5,
+//!      "finish": "length", "prompt_len": 40}
+//!
+//! Connections are handled by a thread each; generation runs on the
+//! router's engine workers (std::thread + mpsc — the vendored dependency
+//! set has no tokio; see DESIGN.md).
+
+pub mod protocol;
+
+use crate::engine::{GenerationParams, Response, Router};
+use crate::model::tokenizer::ByteTokenizer;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub use protocol::{parse_request, render_response, WireRequest};
+
+/// Serving front-end over a [`Router`].
+pub struct Server {
+    router: Arc<Router>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(router: Arc<Router>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(Server { router, listener, stop: Arc::new(AtomicBool::new(false)) })
+    }
+
+    /// The bound address (for ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle that makes `serve` return after the current accept.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Accept loop; one thread per connection. Blocks until stopped.
+    pub fn serve(&self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut handles = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let router = self.router.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, router);
+                    }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, router: Arc<Router>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let tokenizer = ByteTokenizer;
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp_line = match parse_request(&line) {
+            Ok(req) => {
+                let prompt = tokenizer.encode(&req.prompt);
+                let id = router.submit(
+                    prompt,
+                    GenerationParams {
+                        max_new_tokens: req.max_new_tokens,
+                        temperature: req.temperature,
+                        stop_token: req.stop_token,
+                    },
+                );
+                // Block until *this* request's response arrives.
+                let resp = wait_for(&router, id);
+                render_response(&resp, &tokenizer)
+            }
+            Err(e) => {
+                format!("{{\"error\":{}}}", crate::util::json::Json::from(e.to_string()))
+            }
+        };
+        writer.write_all(resp_line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn wait_for(router: &Router, id: crate::engine::RequestId) -> Response {
+    loop {
+        if let Some(r) = router.take_response_by_id(id) {
+            return r;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// Minimal blocking client for tests and examples.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request and wait for the reply line.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+    ) -> Result<crate::util::json::Json> {
+        let mut req = crate::util::json::Json::obj();
+        req.set("prompt", prompt.into())
+            .set("max_new_tokens", max_new_tokens.into());
+        self.stream.write_all(req.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        crate::util::json::Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}

@@ -1,0 +1,103 @@
+//! Wire protocol (JSON lines) for the serving front-end.
+
+use crate::engine::{FinishReason, Response};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Parsed inbound request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub stop_token: Option<u32>,
+}
+
+/// Parse a request line.
+pub fn parse_request(line: &str) -> Result<WireRequest> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let prompt = v.req_str("prompt")?.to_string();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new_tokens = v
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(64)
+        .clamp(1, 4096);
+    let temperature = v
+        .get("temperature")
+        .and_then(|x| x.as_f64())
+        .unwrap_or(0.0) as f32;
+    let stop_token = v
+        .get("stop_token")
+        .and_then(|x| x.as_usize())
+        .map(|t| t as u32);
+    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token })
+}
+
+/// Render a response line.
+pub fn render_response(resp: &Response, tokenizer: &ByteTokenizer) -> String {
+    let mut o = Json::obj();
+    o.set("id", resp.id.into())
+        .set("text", tokenizer.decode(&resp.tokens).into())
+        .set("latency_ms", resp.latency_ms.into())
+        .set("ttft_ms", resp.ttft_ms.into())
+        .set("prompt_len", resp.prompt_len.into())
+        .set(
+            "finish",
+            match resp.finish {
+                FinishReason::Length => "length",
+                FinishReason::StopToken => "stop",
+                FinishReason::Aborted => "aborted",
+            }
+            .into(),
+        );
+    o.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_request() {
+        let r = parse_request(
+            r#"{"prompt":"hello","max_new_tokens":12,"temperature":0.5,"stop_token":46}"#,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, "hello");
+        assert_eq!(r.max_new_tokens, 12);
+        assert!((r.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(r.stop_token, Some(46));
+    }
+
+    #[test]
+    fn defaults_and_validation() {
+        let r = parse_request(r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 64);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.stop_token, None);
+        assert!(parse_request(r#"{"prompt":""}"#).is_err());
+        assert!(parse_request("not json").is_err());
+        // max_new_tokens clamped.
+        let r = parse_request(r#"{"prompt":"x","max_new_tokens":100000}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 4096);
+    }
+
+    #[test]
+    fn render_roundtrips_through_json() {
+        let resp = Response {
+            id: 9,
+            tokens: vec![104, 105],
+            finish: FinishReason::Length,
+            latency_ms: 1.5,
+            ttft_ms: 0.5,
+            prompt_len: 3,
+        };
+        let line = render_response(&resp, &ByteTokenizer);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.req_str("text").unwrap(), "hi");
+        assert_eq!(v.req_usize("id").unwrap(), 9);
+        assert_eq!(v.req_str("finish").unwrap(), "length");
+    }
+}

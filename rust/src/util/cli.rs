@@ -1,0 +1,139 @@
+//! Tiny command-line argument parser (the vendored dependency set has no
+//! `clap`). Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// `--key value` / `--key=value` pairs; bare `--flag` maps to "true".
+    opts: BTreeMap<String, String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (useful for tests).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: everything after is positional.
+                    args.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // Peek: if the next token is not an option, treat it as
+                    // this option's value; otherwise it is a boolean flag.
+                    let is_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if is_value {
+                        args.opts.insert(body.to_string(), it.next().unwrap());
+                    } else {
+                        args.opts.insert(body.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated usize list, e.g. `--ns 1024,2048,4096`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().replace('_', "").parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    /// First positional argument (typically a subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse("serve --port 9000 --host=127.0.0.1 --verbose");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 9000);
+        assert_eq!(a.str_or("host", "x"), "127.0.0.1");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("n", 42), 42);
+        assert_eq!(a.f64_or("sigma", 1.5), 1.5);
+    }
+
+    #[test]
+    fn lists_and_underscores() {
+        let a = parse("x --ns 1_024,2048 --big 65_536");
+        assert_eq!(a.usize_list_or("ns", &[]), vec![1024, 2048]);
+        assert_eq!(a.usize_or("big", 0), 65536);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse("cmd --opt v -- --not-an-opt pos");
+        assert_eq!(a.get("opt"), Some("v"));
+        assert_eq!(a.positional, vec!["cmd", "--not-an-opt", "pos"]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic RNG, statistics, JSON, CLI parsing,
+//! tensor I/O. These exist because the vendored dependency set is minimal
+//! (no rand / serde / clap); everything here is small, tested and owned.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tensor_io;

@@ -1,0 +1,272 @@
+//! Small statistics helpers used by benches and metrics: summary stats,
+//! percentiles, online histograms, and log-log regression for fitting
+//! scaling exponents (used to verify the paper's O(n^{4/5}) claims).
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (p in [0,100]) by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Result of an ordinary least-squares line fit y = a + b x.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LineFit {
+    /// Intercept.
+    pub a: f64,
+    /// Slope.
+    pub b: f64,
+    /// Coefficient of determination.
+    pub r2: f64,
+}
+
+/// Least-squares line fit. Returns None for < 2 points or degenerate x.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> Option<LineFit> {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    if sxx == 0.0 {
+        return None;
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let ss_tot: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let ss_res: f64 = xs
+        .iter()
+        .zip(ys)
+        .map(|(x, y)| {
+            let e = y - (a + b * x);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    let _ = n;
+    Some(LineFit { a, b, r2 })
+}
+
+/// Fit y ~ c * x^e on positive data by regressing log y on log x.
+/// Returns (exponent e, r^2). This is how benches verify the paper's
+/// exponents (e.g. decode time should fit e ≈ 4/5 in n).
+pub fn power_fit(xs: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    if xs.iter().any(|&x| x <= 0.0) || ys.iter().any(|&y| y <= 0.0) {
+        return None;
+    }
+    linear_fit(&lx, &ly).map(|f| (f.b, f.r2))
+}
+
+/// A latency histogram over fixed log-spaced buckets (nanoseconds),
+/// cheap enough for the engine hot path.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds in ns (last is +inf).
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Log-spaced buckets from 1us to ~100s.
+    pub fn new() -> Self {
+        let mut bounds = Vec::new();
+        let mut b = 1_000u64; // 1us
+        while b < 100_000_000_000 {
+            bounds.push(b);
+            b = b.saturating_mul(2);
+        }
+        let n = bounds.len() + 1;
+        Histogram { bounds, counts: vec![0; n], total: 0, sum_ns: 0, max_ns: 0 }
+    }
+
+    /// Record one observation in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        let idx = match self.bounds.binary_search(&ns) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        let last = self.counts.len() - 1;
+        self.counts[idx.min(last)] += 1;
+        self.total += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Record a duration.
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean in ns.
+    pub fn mean_ns(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.total as f64
+        }
+    }
+
+    /// Maximum observed value in ns.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Approximate percentile (bucket upper bound), p in [0,100].
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (p.clamp(0.0, 100.0) / 100.0 * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max_ns };
+            }
+        }
+        self.max_ns
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds, other.bounds);
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+}
+
+/// Pretty-print nanoseconds with a sensible unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn power_fit_recovers_exponent() {
+        let xs: Vec<f64> = (1..20).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x.powf(0.8)).collect();
+        let (e, r2) = power_fit(&xs, &ys).unwrap();
+        assert!((e - 0.8).abs() < 1e-9, "e={e}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn linear_fit_degenerate() {
+        assert!(linear_fit(&[1.0], &[1.0]).is_none());
+        assert!(linear_fit(&[2.0, 2.0], &[1.0, 5.0]).is_none());
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 10_000); // 10us..10ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_ns(50.0);
+        let p99 = h.percentile_ns(99.0);
+        assert!(p50 <= p99);
+        assert!(p50 >= 1_000_000); // >= ~1ms given log buckets
+        assert!(h.mean_ns() > 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record_ns(5_000);
+        b.record_ns(50_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000s");
+    }
+}

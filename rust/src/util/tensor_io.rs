@@ -1,0 +1,219 @@
+//! Weight / tensor blob I/O shared with the Python compile path.
+//!
+//! Format (written by `python/compile/aot.py`, read here):
+//!   <name>.json       manifest: {"tensors": {name: {"offset": o, "shape": [..]}},
+//!                                "dtype": "f32", "byte_len": N, ...extra}
+//!   <name>.bin        all tensors concatenated as little-endian f32.
+//!
+//! This avoids a dependency on npy/npz/safetensors parsers while staying
+//! trivially writable from numpy (`arr.astype('<f4').tobytes()`).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A named f32 tensor with shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row-major 2-D accessor (debug-checked).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// View row i of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.shape.len(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+}
+
+/// A bundle of named tensors plus free-form metadata.
+#[derive(Debug, Clone, Default)]
+pub struct TensorBundle {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl TensorBundle {
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not found in bundle"))
+    }
+
+    /// Load from `<stem>.json` + `<stem>.bin`.
+    pub fn load(stem: &Path) -> Result<TensorBundle> {
+        let json_path = stem.with_extension("json");
+        let bin_path = stem.with_extension("bin");
+        let manifest_text = std::fs::read_to_string(&json_path)
+            .with_context(|| format!("reading {}", json_path.display()))?;
+        let manifest = Json::parse(&manifest_text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", json_path.display()))?;
+        let dtype = manifest.req_str("dtype")?;
+        if dtype != "f32" {
+            bail!("unsupported dtype '{dtype}' (only f32)");
+        }
+        let bytes = std::fs::read(&bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        if bytes.len() % 4 != 0 {
+            bail!("blob length {} not a multiple of 4", bytes.len());
+        }
+        if let Some(expect) = manifest.get("byte_len").and_then(|v| v.as_usize()) {
+            if expect != bytes.len() {
+                bail!("blob length {} != manifest byte_len {}", bytes.len(), expect);
+            }
+        }
+        let all: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut bundle = TensorBundle::default();
+        let tensors = manifest
+            .get("tensors")
+            .context("manifest missing 'tensors'")?;
+        let Json::Obj(map) = tensors else {
+            bail!("'tensors' is not an object");
+        };
+        for (name, spec) in map {
+            let offset = spec.req_usize("offset")?;
+            let shape: Vec<usize> = spec
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("bad shape entry"))
+                .collect::<Result<_>>()?;
+            let numel: usize = shape.iter().product();
+            if offset + numel > all.len() {
+                bail!(
+                    "tensor '{name}' (offset {offset}, numel {numel}) exceeds blob ({})",
+                    all.len()
+                );
+            }
+            bundle.insert(name, Tensor::new(shape, all[offset..offset + numel].to_vec()));
+        }
+        if let Json::Obj(m) = &manifest {
+            for (k, v) in m {
+                if k != "tensors" && k != "dtype" && k != "byte_len" {
+                    bundle.meta.insert(k.clone(), v.clone());
+                }
+            }
+        }
+        Ok(bundle)
+    }
+
+    /// Save to `<stem>.json` + `<stem>.bin`.
+    pub fn save(&self, stem: &Path) -> Result<()> {
+        let mut blob: Vec<u8> = Vec::new();
+        let mut tensors = Json::obj();
+        for (name, t) in &self.tensors {
+            let offset = blob.len() / 4;
+            for &x in &t.data {
+                blob.extend_from_slice(&x.to_le_bytes());
+            }
+            let mut spec = Json::obj();
+            spec.set("offset", offset.into());
+            spec.set(
+                "shape",
+                Json::Arr(t.shape.iter().map(|&s| Json::from(s)).collect()),
+            );
+            tensors.set(name, spec);
+        }
+        let mut manifest = Json::obj();
+        manifest.set("dtype", "f32".into());
+        manifest.set("byte_len", blob.len().into());
+        manifest.set("tensors", tensors);
+        for (k, v) in &self.meta {
+            manifest.set(k, v.clone());
+        }
+        if let Some(dir) = stem.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(stem.with_extension("json"), manifest.to_string())?;
+        std::fs::write(stem.with_extension("bin"), blob)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("hsr_tio_{}", std::process::id()));
+        let stem = dir.join("weights");
+        let mut b = TensorBundle::default();
+        b.insert("w", Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        b.insert("bias", Tensor::new(vec![3], vec![-1.0, 0.5, 0.25]));
+        b.meta.insert("d_model".into(), Json::from(3usize));
+        b.save(&stem).unwrap();
+        let r = TensorBundle::load(&stem).unwrap();
+        assert_eq!(r.get("w").unwrap(), b.get("w").unwrap());
+        assert_eq!(r.get("bias").unwrap(), b.get("bias").unwrap());
+        assert_eq!(r.meta.get("d_model").unwrap().as_usize(), Some(3));
+        assert_eq!(r.get("w").unwrap().at2(1, 2), 6.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let b = TensorBundle::default();
+        assert!(b.get("nope").is_err());
+    }
+
+    #[test]
+    fn corrupt_manifest_errors() {
+        let dir = std::env::temp_dir().join(format!("hsr_tio_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("x.json"), "{not json").unwrap();
+        std::fs::write(dir.join("x.bin"), [0u8; 4]).unwrap();
+        assert!(TensorBundle::load(&dir.join("x")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_blob_errors() {
+        let dir = std::env::temp_dir().join(format!("hsr_tio_tr_{}", std::process::id()));
+        let stem = dir.join("w");
+        let mut b = TensorBundle::default();
+        b.insert("w", Tensor::new(vec![4], vec![1.0; 4]));
+        b.save(&stem).unwrap();
+        // Truncate the blob behind the manifest's back.
+        std::fs::write(stem.with_extension("bin"), [0u8; 8]).unwrap();
+        assert!(TensorBundle::load(&stem).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn row_view() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+}

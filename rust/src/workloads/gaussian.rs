@@ -1,0 +1,102 @@
+//! The paper's Gaussian attention workload: every entry of Q ~ N(0, σ_q²)
+//! and of K ~ N(0, σ_k²) i.i.d. (assumptions of Lemma 6.1, Theorem 4.1,
+//! Theorem 5.1). V is drawn N(0, 1) — Remark 4.4's subgaussian case.
+
+use crate::attention::threshold::ThresholdParams;
+use crate::util::rng::Rng;
+
+/// A generated attention problem instance.
+#[derive(Debug, Clone)]
+pub struct AttentionInstance {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub m: usize,
+    pub n: usize,
+    pub d: usize,
+    /// The Lemma 6.1 threshold parameters used to draw this instance.
+    pub params: ThresholdParams,
+}
+
+impl AttentionInstance {
+    /// Draw an instance with the standard unit-variance profile.
+    pub fn gaussian(rng: &mut Rng, m: usize, n: usize, d: usize) -> AttentionInstance {
+        let params = ThresholdParams::standard(d, m);
+        AttentionInstance {
+            q: rng.gaussian_vec_f32(m * d, params.sigma_q),
+            k: rng.gaussian_vec_f32(n * d, params.sigma_k),
+            v: rng.gaussian_vec_f32(n * d, 1.0),
+            m,
+            n,
+            d,
+            params,
+        }
+    }
+
+    /// The Lemma 6.1 threshold b for this instance's n.
+    pub fn lemma_bias(&self) -> f32 {
+        self.params.bias(self.n) as f32
+    }
+
+    /// Query row i.
+    pub fn query_row(&self, i: usize) -> &[f32] {
+        &self.q[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// Anisotropic keys: `heavy` dominant coordinates with std `scale`, the
+/// rest at std `tail`. Models the concentrated score directions of trained
+/// attention key caches (see `hsr::projected`).
+pub fn anisotropic_keys(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    heavy: usize,
+    scale: f64,
+    tail: f64,
+) -> Vec<f32> {
+    let mut pts = vec![0f32; n * d];
+    for i in 0..n {
+        for j in 0..d {
+            let sigma = if j < heavy { scale } else { tail };
+            pts[i * d + j] = rng.normal(0.0, sigma) as f32;
+        }
+    }
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_shapes() {
+        let mut rng = Rng::new(1);
+        let inst = AttentionInstance::gaussian(&mut rng, 3, 100, 8);
+        assert_eq!(inst.q.len(), 24);
+        assert_eq!(inst.k.len(), 800);
+        assert_eq!(inst.v.len(), 800);
+        assert_eq!(inst.query_row(2).len(), 8);
+        assert!(inst.lemma_bias() > 0.0);
+    }
+
+    #[test]
+    fn anisotropic_variance_profile() {
+        let mut rng = Rng::new(2);
+        let n = 5000;
+        let d = 8;
+        let k = anisotropic_keys(&mut rng, n, d, 2, 4.0, 0.5);
+        let var = |j: usize| {
+            let mut s = 0f64;
+            let mut s2 = 0f64;
+            for i in 0..n {
+                let x = k[i * d + j] as f64;
+                s += x;
+                s2 += x * x;
+            }
+            s2 / n as f64 - (s / n as f64).powi(2)
+        };
+        assert!(var(0) > 12.0 && var(0) < 20.0);
+        assert!(var(5) < 0.5);
+    }
+}

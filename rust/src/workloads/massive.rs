@@ -1,0 +1,155 @@
+//! Workloads with the massive-activation property (Definition B.3).
+//!
+//! Remark B.4 notes two families that satisfy the property: subexponential
+//! key distributions and mixtures of Gaussians with n^{1-γ} clusters. We
+//! implement both, plus a "planted" construction where (γ, β₁, β₂) are
+//! controlled directly — the latter is what `benches/error_topr.rs` sweeps
+//! to trace Theorem 4.3's error curve.
+
+use crate::hsr::{dot, norm};
+use crate::util::rng::Rng;
+
+/// A query/key pair engineered so that q, K satisfy the (γ, β₁, β₂)
+/// massive-activation property by construction.
+#[derive(Debug, Clone)]
+pub struct PlantedInstance {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub n: usize,
+    pub d: usize,
+    /// Number of planted massive keys = n^gamma (rounded).
+    pub top: usize,
+    pub gamma: f64,
+}
+
+/// Plant `n^gamma` keys with <q, K_i> ≈ beta1·‖q‖·ln n and the remainder
+/// with <q, K_i> ≤ beta2·‖q‖·ln n.
+pub fn planted(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    gamma: f64,
+    beta1: f64,
+    beta2: f64,
+) -> PlantedInstance {
+    assert!(beta1 >= beta2 && beta2 >= 0.0);
+    let q = rng.gaussian_vec_f32(d, 1.0);
+    let qn = norm(&q) as f64;
+    let ln_n = (n as f64).ln();
+    let top = ((n as f64).powf(gamma).round() as usize).clamp(1, n);
+    let mut k = vec![0f32; n * d];
+    let unit: Vec<f32> = q.iter().map(|&x| x / qn as f32).collect();
+    for i in 0..n {
+        let target = if i < top {
+            // Slightly above the β₁ mean so the *average* clears it.
+            beta1 * qn * ln_n * 1.05
+        } else {
+            // Uniform in [0, β₂ ‖q‖ ln n): strictly below the cap.
+            rng.uniform(0.0, (beta2 * qn * ln_n).max(1e-6) * 0.95)
+        };
+        // K_i = (target/‖q‖)·q̂ + orthogonal noise.
+        let coeff = (target / qn) as f32;
+        let noise = rng.gaussian_vec_f32(d, 0.05);
+        // Project noise orthogonal to q so it cannot shift the score.
+        let nq = dot(&noise, &unit);
+        for j in 0..d {
+            k[i * d + j] = coeff * unit[j] + (noise[j] - nq * unit[j]);
+        }
+    }
+    let v = rng.gaussian_vec_f32(n * d, 1.0);
+    PlantedInstance { q, k, v, n, d, top, gamma }
+}
+
+/// Mixture-of-Gaussians keys (Remark B.4 case 2): `clusters` centers drawn
+/// at radius `radius`, keys scattered around them with std `spread`.
+pub fn gaussian_mixture_keys(
+    rng: &mut Rng,
+    n: usize,
+    d: usize,
+    clusters: usize,
+    radius: f64,
+    spread: f64,
+) -> Vec<f32> {
+    assert!(clusters >= 1);
+    let mut centers = vec![0f32; clusters * d];
+    for c in 0..clusters {
+        let dir = rng.gaussian_vec_f32(d, 1.0);
+        let nrm = norm(&dir).max(1e-9);
+        for j in 0..d {
+            centers[c * d + j] = dir[j] / nrm * radius as f32;
+        }
+    }
+    let mut k = vec![0f32; n * d];
+    for i in 0..n {
+        let c = rng.below(clusters);
+        for j in 0..d {
+            k[i * d + j] = centers[c * d + j] + rng.normal(0.0, spread) as f32;
+        }
+    }
+    k
+}
+
+/// Multivariate-Laplace-ish keys (Remark B.4 case 1, subexponential):
+/// Gaussian directions with Exp(1) radial lengths.
+pub fn laplace_keys(rng: &mut Rng, n: usize, d: usize, scale: f64) -> Vec<f32> {
+    let mut k = vec![0f32; n * d];
+    for i in 0..n {
+        let dir = rng.gaussian_vec_f32(d, 1.0);
+        let nrm = norm(&dir).max(1e-9);
+        let len = rng.exponential(1.0) * scale;
+        for j in 0..d {
+            k[i * d + j] = dir[j] / nrm * len as f32;
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::error::MassiveActivation;
+
+    #[test]
+    fn planted_satisfies_definition_b3() {
+        let mut rng = Rng::new(81);
+        let (n, d) = (2048usize, 16usize);
+        let inst = planted(&mut rng, n, d, 0.4, 0.8, 0.2);
+        let ma = MassiveActivation::measure(&inst.q, &inst.k, d, 0.4);
+        assert!(
+            ma.beta1 >= 0.8 * 0.95,
+            "planted beta1 {} too small",
+            ma.beta1
+        );
+        assert!(ma.beta2 <= 0.2, "planted beta2 {} too large", ma.beta2);
+        assert_eq!(ma.top, inst.top);
+    }
+
+    #[test]
+    fn mixture_keys_have_cluster_structure() {
+        let mut rng = Rng::new(82);
+        let (n, d) = (1000usize, 8usize);
+        let k = gaussian_mixture_keys(&mut rng, n, d, 4, 5.0, 0.2);
+        // Norms concentrate near the cluster radius.
+        let mut near = 0;
+        for i in 0..n {
+            let nrm = norm(&k[i * d..(i + 1) * d]);
+            if (nrm - 5.0).abs() < 1.5 {
+                near += 1;
+            }
+        }
+        assert!(near > n * 9 / 10, "only {near} near radius");
+    }
+
+    #[test]
+    fn laplace_keys_are_heavy_tailed() {
+        let mut rng = Rng::new(83);
+        let (n, d) = (20_000usize, 4usize);
+        let k = laplace_keys(&mut rng, n, d, 1.0);
+        let norms: Vec<f64> = (0..n).map(|i| norm(&k[i * d..(i + 1) * d]) as f64).collect();
+        let mean = norms.iter().sum::<f64>() / n as f64;
+        let max = norms.iter().cloned().fold(0.0, f64::max);
+        // Exponential radial: max/mean should be large (heavy tail).
+        assert!(max / mean > 5.0, "max/mean = {}", max / mean);
+    }
+}

@@ -1,0 +1,12 @@
+//! Workload generators for tests, examples and benches.
+//!
+//! * [`gaussian`] — the paper's i.i.d. Gaussian Q/K/V model (the
+//!   assumption of Lemma 6.1 and Theorems 4.1/5.1).
+//! * [`massive`] — distributions with the massive-activation property of
+//!   Definition B.3 (Remark B.4's mixture-of-Gaussians construction).
+//! * [`trace`] — serving traces (arrival process, prompt/output length
+//!   distributions) for the end-to-end engine benches.
+
+pub mod gaussian;
+pub mod massive;
+pub mod trace;

@@ -1,0 +1,125 @@
+//! Serving-trace generation for the end-to-end benches: Poisson arrivals
+//! with log-normal-ish prompt lengths and geometric output lengths,
+//! loosely shaped after public LLM serving traces.
+
+use crate::util::rng::Rng;
+
+/// One request in a serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival time in seconds from trace start.
+    pub arrival_s: f64,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Number of tokens to generate.
+    pub max_new_tokens: usize,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceParams {
+    /// Mean arrival rate (requests/second). `f64::INFINITY` → all at t=0
+    /// (closed-loop / offline batch workload).
+    pub rate: f64,
+    /// Log-space mean and std of prompt lengths.
+    pub prompt_log_mean: f64,
+    pub prompt_log_std: f64,
+    /// Clamp for prompt lengths.
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// Mean output length (geometric).
+    pub mean_new_tokens: f64,
+    pub max_new_tokens: usize,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            rate: 4.0,
+            prompt_log_mean: 5.0, // e^5 ≈ 148 tokens
+            prompt_log_std: 0.8,
+            prompt_min: 8,
+            prompt_max: 4096,
+            mean_new_tokens: 32.0,
+            max_new_tokens: 128,
+        }
+    }
+}
+
+/// Generate `count` requests.
+pub fn generate(rng: &mut Rng, params: &TraceParams, count: usize) -> Vec<TraceRequest> {
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if params.rate.is_finite() {
+            t += rng.exponential(params.rate);
+        }
+        let prompt = (rng.normal(params.prompt_log_mean, params.prompt_log_std))
+            .exp()
+            .round() as usize;
+        let prompt_len = prompt.clamp(params.prompt_min, params.prompt_max);
+        // Geometric with the given mean: p = 1/mean.
+        let p = (1.0 / params.mean_new_tokens).clamp(1e-6, 1.0);
+        let mut new_tokens = 1usize;
+        while new_tokens < params.max_new_tokens && !rng.bool(p) {
+            new_tokens += 1;
+        }
+        out.push(TraceRequest { arrival_s: t, prompt_len, max_new_tokens: new_tokens });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_matches() {
+        let mut rng = Rng::new(91);
+        let params = TraceParams { rate: 10.0, ..Default::default() };
+        let trace = generate(&mut rng, &params, 2000);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let total = trace.last().unwrap().arrival_s;
+        let rate = trace.len() as f64 / total;
+        assert!((rate - 10.0).abs() < 1.0, "rate={rate}");
+    }
+
+    #[test]
+    fn offline_trace_has_zero_arrivals() {
+        let mut rng = Rng::new(92);
+        let params = TraceParams { rate: f64::INFINITY, ..Default::default() };
+        let trace = generate(&mut rng, &params, 10);
+        assert!(trace.iter().all(|r| r.arrival_s == 0.0));
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let mut rng = Rng::new(93);
+        let params = TraceParams {
+            prompt_min: 16,
+            prompt_max: 256,
+            max_new_tokens: 64,
+            ..Default::default()
+        };
+        for r in generate(&mut rng, &params, 500) {
+            assert!((16..=256).contains(&r.prompt_len));
+            assert!((1..=64).contains(&r.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn mean_output_length_approximates_target() {
+        let mut rng = Rng::new(94);
+        let params = TraceParams {
+            mean_new_tokens: 20.0,
+            max_new_tokens: 1000,
+            ..Default::default()
+        };
+        let trace = generate(&mut rng, &params, 3000);
+        let mean: f64 =
+            trace.iter().map(|r| r.max_new_tokens as f64).sum::<f64>() / trace.len() as f64;
+        assert!((mean - 20.0).abs() < 2.0, "mean={mean}");
+    }
+}

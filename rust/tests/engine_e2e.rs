@@ -1,0 +1,245 @@
+//! End-to-end engine tests: continuous batching over the trained model,
+//! sparse-vs-dense consistency, preemption under cache pressure, and
+//! failure injection.
+
+use hsr_attn::engine::serving::Engine;
+use hsr_attn::engine::{
+    EngineConfig, FinishReason, GenerationParams, PreemptPolicy, SchedulerConfig,
+};
+use hsr_attn::hsr::HsrBackend;
+use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::Model;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn mini() -> Arc<Model> {
+    Arc::new(Model::load_named(&artifacts_dir(), "mini").expect("model"))
+}
+
+fn prompt(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+#[test]
+fn single_request_greedy_deterministic() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let model = mini();
+    let run = |policy| {
+        let mut eng = Engine::new(
+            model.clone(),
+            EngineConfig { policy, ..Default::default() },
+        );
+        eng.submit(
+            prompt("the merchant carries "),
+            GenerationParams { max_new_tokens: 24, temperature: 0.0, stop_token: None },
+        );
+        eng.run_to_completion();
+        let mut done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        let r = done.pop().unwrap();
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 24);
+        r.tokens
+    };
+    let a = run(AttentionPolicy::Dense);
+    let b = run(AttentionPolicy::Dense);
+    assert_eq!(a, b, "greedy decoding must be deterministic");
+    assert!(a.iter().all(|&t| t < 256));
+}
+
+#[test]
+fn sparse_policy_matches_dense_when_r_covers_cache() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let gen = |policy| {
+        let mut eng = Engine::new(model.clone(), EngineConfig { policy, ..Default::default() });
+        eng.submit(
+            prompt("remember: alder keeps the "),
+            GenerationParams { max_new_tokens: 16, temperature: 0.0, stop_token: None },
+        );
+        eng.run_to_completion();
+        eng.take_finished().pop().unwrap().tokens
+    };
+    let dense = gen(AttentionPolicy::Dense);
+    let covering = gen(AttentionPolicy::TopR(RSpec::Fixed(1 << 20)));
+    assert_eq!(dense, covering, "covering top-r must equal dense");
+}
+
+#[test]
+fn sparse_topr_paper_spec_generates_and_accounts() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let mut eng = Engine::new(
+        model,
+        EngineConfig {
+            policy: AttentionPolicy::TopR(RSpec::paper()),
+            hsr_backend: Some(HsrBackend::BallTree),
+            ..Default::default()
+        },
+    );
+    eng.submit(
+        prompt("the gardener sells dried herbs "),
+        GenerationParams { max_new_tokens: 32, temperature: 0.0, stop_token: None },
+    );
+    eng.run_to_completion();
+    let r = eng.take_finished().pop().unwrap();
+    assert_eq!(r.tokens.len(), 32);
+    assert!(eng.metrics.attended_entries > 0);
+    assert!(eng.metrics.attended_entries <= eng.metrics.dense_equivalent_entries);
+}
+
+#[test]
+fn batch_of_requests_all_complete() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let mut eng = Engine::new(model, EngineConfig::default());
+    let texts = [
+        "a courier guards sealed letters ",
+        "the archivist studies star charts ",
+        "our captain repairs oak barrels ",
+        "that piper paints silk banners ",
+        "the warden hides iron keys ",
+    ];
+    let mut ids = Vec::new();
+    for t in texts {
+        ids.push(eng.submit(
+            prompt(t),
+            GenerationParams { max_new_tokens: 12, temperature: 0.0, stop_token: None },
+        ));
+    }
+    eng.run_to_completion();
+    let done = eng.take_finished();
+    assert_eq!(done.len(), texts.len());
+    let mut got: Vec<u64> = done.iter().map(|r| r.id).collect();
+    got.sort_unstable();
+    assert_eq!(got, ids);
+    assert_eq!(eng.metrics.requests_completed, texts.len() as u64);
+}
+
+#[test]
+fn preemption_under_cache_pressure_still_completes() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    // Tiny pool: forces preemption with several concurrent sequences.
+    let mut eng = Engine::new(
+        model,
+        EngineConfig {
+            cache_capacity_tokens: 256,
+            block_tokens: 16,
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                prefill_chunk: 16,
+                step_token_budget: 64,
+                preempt: PreemptPolicy::Youngest,
+            },
+            ..Default::default()
+        },
+    );
+    for i in 0..4 {
+        eng.submit(
+            prompt(&format!(
+                "request number {i} with a moderately long prompt text here "
+            )),
+            GenerationParams { max_new_tokens: 40, temperature: 0.0, stop_token: None },
+        );
+    }
+    eng.run_to_completion();
+    let done = eng.take_finished();
+    assert_eq!(done.len(), 4, "all requests must complete despite preemption");
+    for r in &done {
+        assert_eq!(r.finish, FinishReason::Length);
+        assert_eq!(r.tokens.len(), 40);
+    }
+    assert!(
+        eng.metrics.requests_preempted > 0,
+        "expected preemption under a 256-token pool"
+    );
+}
+
+#[test]
+fn oversized_request_is_aborted_not_deadlocked() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let mut eng = Engine::new(
+        model,
+        EngineConfig { cache_capacity_tokens: 64, block_tokens: 16, ..Default::default() },
+    );
+    eng.submit(
+        prompt(&"x".repeat(100)),
+        GenerationParams { max_new_tokens: 8, temperature: 0.0, stop_token: None },
+    );
+    eng.run_to_completion(); // must not hang
+    let done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish, FinishReason::Aborted);
+}
+
+#[test]
+fn stop_token_halts_generation() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let mut eng = Engine::new(model, EngineConfig::default());
+    eng.submit(
+        prompt("the mason forges wax seals by the "),
+        GenerationParams {
+            max_new_tokens: 200,
+            temperature: 0.0,
+            stop_token: Some(b'.' as u32),
+        },
+    );
+    eng.run_to_completion();
+    let r = eng.take_finished().pop().unwrap();
+    if r.finish == FinishReason::StopToken {
+        assert_eq!(*r.tokens.last().unwrap(), b'.' as u32);
+        assert!(r.tokens.len() < 200);
+    } else {
+        assert_eq!(r.tokens.len(), 200);
+    }
+}
+
+#[test]
+fn router_distributes_across_workers() {
+    if !have_artifacts() {
+        return;
+    }
+    let model = mini();
+    let router = hsr_attn::engine::Router::new(model, EngineConfig::default(), 3);
+    for i in 0..9 {
+        router.submit(
+            prompt(&format!("parallel request {i} ")),
+            GenerationParams { max_new_tokens: 8, temperature: 0.0, stop_token: None },
+        );
+    }
+    router.wait_idle();
+    let responses = router.take_responses();
+    assert_eq!(responses.len(), 9);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 9, "request ids must be globally unique");
+    let metrics = router.shutdown();
+    assert_eq!(metrics.requests_completed, 9);
+}

@@ -1,0 +1,168 @@
+//! Golden-vector parity: the rust native forward must reproduce the JAX
+//! forward (exported by aot.py) on the trained weights. This is the
+//! load-bearing test for the whole L2 ↔ L3 contract — if RMSNorm, RoPE,
+//! SwiGLU or the attention differ in any detail, these fail loudly.
+
+use hsr_attn::model::transformer::AttentionPolicy;
+use hsr_attn::model::Model;
+use hsr_attn::util::tensor_io::TensorBundle;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn load_golden(name: &str) -> (Model, TensorBundle) {
+    let dir = artifacts_dir();
+    let model = Model::load_named(&dir, name).expect("model bundle");
+    let golden = TensorBundle::load(&dir.join(format!("golden_{name}"))).expect("golden bundle");
+    (model, golden)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn check_model(name: &str, tol: f32) {
+    let (model, golden) = load_golden(name);
+    for seq in ["a", "b"] {
+        let tokens: Vec<u32> = golden
+            .get(&format!("tokens_{seq}"))
+            .unwrap()
+            .data
+            .iter()
+            .map(|&t| t as u32)
+            .collect();
+        let want = &golden.get(&format!("logits_{seq}")).unwrap().data;
+        let got = model.forward_full(&tokens);
+        let err = max_abs_diff(&got, want);
+        assert!(
+            err < tol,
+            "{name}/seq_{seq}: native forward deviates from JAX by {err}"
+        );
+    }
+}
+
+#[test]
+fn native_forward_matches_jax_mini() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("mini", 2e-3);
+}
+
+#[test]
+fn native_forward_matches_jax_small() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("small", 2e-3);
+}
+
+#[test]
+fn native_forward_matches_jax_base() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    check_model("base", 3e-3);
+}
+
+#[test]
+fn native_decode_step_matches_jax_decode() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, golden) = load_golden("small");
+    let tokens: Vec<u32> = golden
+        .get("tokens_a")
+        .unwrap()
+        .data
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    let want = &golden.get("decode_logits").unwrap().data;
+    // Native: prefill 31 tokens then decode the 32nd — i.e. forward over
+    // 32 tokens and take the last row.
+    let got_all = model.forward_full(&tokens[..32]);
+    let vocab = model.cfg.vocab;
+    let got = &got_all[31 * vocab..32 * vocab];
+    let err = max_abs_diff(got, want);
+    assert!(err < 2e-3, "decode-step parity error {err}");
+}
+
+/// Sparse top-r attention with large r must match dense closely on the
+/// trained model (regression test for the calibrated HSR path).
+#[test]
+fn sparse_policy_consistent_with_dense_on_trained_model() {
+    if !have_artifacts() {
+        return;
+    }
+    let (model, golden) = load_golden("mini");
+    let tokens: Vec<u32> = golden
+        .get("tokens_a")
+        .unwrap()
+        .data
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    let dense = model.forward_full(&tokens);
+    // r covering the whole cache ≡ dense.
+    use hsr_attn::model::kv::KvState;
+    use hsr_attn::model::transformer::RSpec;
+    let mut kv = KvState::new(
+        model.cfg.n_layers,
+        model.cfg.n_heads,
+        model.cfg.d_head,
+        Some(hsr_attn::hsr::HsrBackend::BallTree),
+    );
+    let mut stats = Default::default();
+    let sparse = model.prefill(
+        &tokens,
+        &mut kv,
+        AttentionPolicy::TopR(RSpec::Fixed(4096)),
+        &mut stats,
+    );
+    let err = max_abs_diff(&sparse, &dense);
+    assert!(err < 1e-4, "top-r(covering) vs dense deviates by {err}");
+}
+
+#[test]
+fn perplexity_is_sane_and_topr_close_to_dense() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let model = Model::load_named(&dir, "mini").expect("model");
+    // Held-out-ish sample: reuse golden tokens (64 bytes).
+    let (_, golden) = load_golden("mini");
+    let mut tokens: Vec<u32> = golden
+        .get("tokens_a")
+        .unwrap()
+        .data
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    tokens.extend(
+        golden
+            .get("tokens_b")
+            .unwrap()
+            .data
+            .iter()
+            .map(|&t| t as u32),
+    );
+    use hsr_attn::model::transformer::RSpec;
+    let nll_dense = model.nll(&tokens, AttentionPolicy::Dense);
+    let nll_topr = model.nll(&tokens, AttentionPolicy::TopR(RSpec::Fixed(32)));
+    // Trained to ~0.66 nats/byte on train data; held-out short seq looser.
+    assert!(nll_dense < 4.0, "dense nll {nll_dense} too high — model broken?");
+    // r=32 over <=63-token caches is nearly dense.
+    assert!((nll_topr - nll_dense).abs() < 0.15, "topr {nll_topr} vs dense {nll_dense}");
+}

@@ -1,0 +1,209 @@
+//! Runtime integration: load the AOT HLO artifacts on the PJRT CPU
+//! client, execute them, and cross-check against the native rust forward.
+//! This proves all three layers compose: Pallas kernel (L1) → JAX model
+//! (L2) → rust execution (L3), Python nowhere at run time.
+
+use hsr_attn::model::Model;
+use hsr_attn::runtime::{Buffer, Runtime};
+use hsr_attn::util::tensor_io::TensorBundle;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn decode_step_artifact_matches_golden_and_native() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).expect("runtime");
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    let exe = rt.load("decode_step_small").expect("compile decode_step");
+
+    let golden = TensorBundle::load(&dir.join("golden_small")).unwrap();
+    let tokens: Vec<u32> = golden
+        .get("tokens_a")
+        .unwrap()
+        .data
+        .iter()
+        .map(|&t| t as u32)
+        .collect();
+    let want = &golden.get("decode_logits").unwrap().data;
+    let n_ctx = golden.meta.get("n_ctx").and_then(|v| v.as_usize()).unwrap();
+    let pos = golden.meta.get("decode_pos").and_then(|v| v.as_usize()).unwrap();
+
+    // Build the cache by running the decode-step artifact over the first
+    // `pos` tokens (pure rust + PJRT; no Python).
+    let model = Model::load_named(&dir, "small").unwrap();
+    let (l, h, dh) = (model.cfg.n_layers, model.cfg.n_heads, model.cfg.d_head);
+    let cache_shape = vec![l, h, n_ctx, dh];
+    let cache_len: usize = cache_shape.iter().product();
+    let mut k_cache = vec![0f32; cache_len];
+    let mut v_cache = vec![0f32; cache_len];
+    for p in 0..=pos {
+        let outs = rt
+            .execute(
+                &exe,
+                &[
+                    Buffer::scalar_i32(tokens[p] as i32),
+                    Buffer::scalar_i32(p as i32),
+                    Buffer::f32(k_cache.clone(), cache_shape.clone()),
+                    Buffer::f32(v_cache.clone(), cache_shape.clone()),
+                ],
+            )
+            .expect("execute decode step");
+        assert_eq!(outs.len(), 3, "decode step returns (logits, new_k, new_v)");
+        let (logits, new_k, new_v) = (&outs[0], &outs[1], &outs[2]);
+        // Write new k/v rows into the cache at position p.
+        for layer in 0..l {
+            for head in 0..h {
+                let src = (layer * h + head) * dh;
+                let dst = ((layer * h + head) * n_ctx + p) * dh;
+                k_cache[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
+                v_cache[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
+            }
+        }
+        if p == pos {
+            let err = max_abs_diff(logits, want);
+            assert!(err < 2e-3, "PJRT decode logits deviate from golden by {err}");
+            // And against the native rust forward.
+            let native = model.forward_full(&tokens[..=pos]);
+            let vocab = model.cfg.vocab;
+            let err2 = max_abs_diff(logits, &native[pos * vocab..(pos + 1) * vocab]);
+            assert!(err2 < 3e-3, "PJRT vs native deviates by {err2}");
+        }
+    }
+}
+
+#[test]
+fn prefill_artifact_matches_native() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("prefill_small").expect("compile prefill");
+    let spec = &rt.manifest.hlo["prefill_small"];
+    let t = spec.inputs[0].shape[0];
+    // Deterministic ASCII prompt padded to the artifact length.
+    let text = "the merchant carries copper coins by the river. ";
+    let mut tokens: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+    while tokens.len() < t {
+        tokens.push(b' ' as i32);
+    }
+    tokens.truncate(t);
+    let outs = rt
+        .execute(&exe, &[Buffer::i32(tokens.clone(), vec![t])])
+        .expect("execute prefill");
+    assert_eq!(outs.len(), 3);
+    let logits = &outs[0];
+    let model = Model::load_named(&dir, "small").unwrap();
+    let native = model.forward_full(&tokens.iter().map(|&x| x as u32).collect::<Vec<_>>());
+    let err = max_abs_diff(logits, &native);
+    assert!(err < 3e-3, "prefill artifact vs native deviates by {err}");
+}
+
+#[test]
+fn masked_softmax_kernel_artifact_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("masked_softmax_attn").expect("compile kernel");
+    let spec = &rt.manifest.hlo["masked_softmax_attn"];
+    let heads = spec.attrs["heads"] as usize;
+    let r_max = spec.attrs["r_max"] as usize;
+    let dh = spec.attrs["d_head"] as usize;
+
+    let mut rng = hsr_attn::util::rng::Rng::new(7);
+    let q = rng.gaussian_vec_f32(heads * dh, 1.0);
+    let kg = rng.gaussian_vec_f32(heads * r_max * dh, 1.0);
+    let vg = rng.gaussian_vec_f32(heads * r_max * dh, 1.0);
+    let counts: Vec<i32> = (0..heads).map(|i| (17 * (i + 1)) as i32).collect();
+    let outs = rt
+        .execute(
+            &exe,
+            &[
+                Buffer::f32(q.clone(), vec![heads, dh]),
+                Buffer::f32(kg.clone(), vec![heads, r_max, dh]),
+                Buffer::f32(vg.clone(), vec![heads, r_max, dh]),
+                Buffer::i32(counts.clone(), vec![heads]),
+            ],
+        )
+        .expect("execute masked softmax kernel");
+    let got = &outs[0];
+    assert_eq!(got.len(), heads * dh);
+    // Cross-check against the rust attention math per head.
+    let mut buf = Vec::new();
+    for hd in 0..heads {
+        let qh = &q[hd * dh..(hd + 1) * dh];
+        let keys = &kg[hd * r_max * dh..(hd + 1) * r_max * dh];
+        let vals = &vg[hd * r_max * dh..(hd + 1) * r_max * dh];
+        let idx: Vec<u32> = (0..counts[hd] as u32).collect();
+        let mut want = vec![0f32; dh];
+        hsr_attn::attention::softmax::softmax_attention_row_subset(
+            qh, keys, vals, dh, &idx, &mut buf, &mut want,
+        );
+        let err = max_abs_diff(&got[hd * dh..(hd + 1) * dh], &want);
+        assert!(err < 1e-4, "head {hd}: pallas-via-PJRT vs rust deviates {err}");
+    }
+}
+
+#[test]
+fn masked_relu_kernel_artifact_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("masked_relu_attn").expect("compile kernel");
+    let spec = &rt.manifest.hlo["masked_relu_attn"];
+    let heads = spec.attrs["heads"] as usize;
+    let r_max = spec.attrs["r_max"] as usize;
+    let dh = spec.attrs["d_head"] as usize;
+    let alpha = spec.attrs["alpha"] as u32;
+    let bias = spec.attrs["bias"] as f32;
+
+    let mut rng = hsr_attn::util::rng::Rng::new(8);
+    let q = rng.gaussian_vec_f32(heads * dh, 1.0);
+    let kg = rng.gaussian_vec_f32(heads * r_max * dh, 1.0);
+    let vg = rng.gaussian_vec_f32(heads * r_max * dh, 1.0);
+    let counts: Vec<i32> = (0..heads).map(|i| (31 * (i + 1)) as i32).collect();
+    let outs = rt
+        .execute(
+            &exe,
+            &[
+                Buffer::f32(q.clone(), vec![heads, dh]),
+                Buffer::f32(kg.clone(), vec![heads, r_max, dh]),
+                Buffer::f32(vg.clone(), vec![heads, r_max, dh]),
+                Buffer::i32(counts.clone(), vec![heads]),
+            ],
+        )
+        .expect("execute masked relu kernel");
+    let got = &outs[0];
+    let mut buf = Vec::new();
+    for hd in 0..heads {
+        let qh = &q[hd * dh..(hd + 1) * dh];
+        let keys = &kg[hd * r_max * dh..(hd + 1) * r_max * dh];
+        let vals = &vg[hd * r_max * dh..(hd + 1) * r_max * dh];
+        let idx: Vec<u32> = (0..counts[hd] as u32).collect();
+        let mut want = vec![0f32; dh];
+        hsr_attn::attention::relu::relu_attention_row_sparse(
+            qh, keys, vals, dh, alpha, bias, &idx, &mut buf, &mut want,
+        );
+        let err = max_abs_diff(&got[hd * dh..(hd + 1) * dh], &want);
+        assert!(err < 1e-4, "head {hd}: relu kernel deviates {err}");
+    }
+}

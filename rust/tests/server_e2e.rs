@@ -1,0 +1,95 @@
+//! TCP server end-to-end: bind an ephemeral port, serve generation
+//! requests over JSON lines, check responses and concurrent clients.
+
+use hsr_attn::engine::{EngineConfig, Router};
+use hsr_attn::model::Model;
+use hsr_attn::server::{Client, Server};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn serve_and_generate_over_tcp() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let model = Arc::new(Model::load_named(&artifacts_dir(), "mini").unwrap());
+    let router = Arc::new(Router::new(model, EngineConfig::default(), 2));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.serve());
+
+    // Two sequential requests over one connection.
+    let mut client = Client::connect(&addr.to_string()).unwrap();
+    let r1 = client.generate("the merchant carries ", 12).unwrap();
+    assert_eq!(r1.req_usize("prompt_len").unwrap(), 21);
+    assert_eq!(r1.req_str("finish").unwrap(), "length");
+    let text = r1.req_str("text").unwrap();
+    assert_eq!(text.len(), 12);
+    let r2 = client.generate("a courier guards ", 8).unwrap();
+    assert_eq!(r2.req_str("text").unwrap().len(), 8);
+
+    // Concurrent clients.
+    let mut joins = Vec::new();
+    for i in 0..4 {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let r = c.generate(&format!("concurrent client {i} says "), 6).unwrap();
+            r.req_str("text").unwrap().len()
+        }));
+    }
+    for j in joins {
+        assert_eq!(j.join().unwrap(), 6);
+    }
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    drop(client);
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_request_gets_error_line() {
+    if !have_artifacts() {
+        return;
+    }
+    use std::io::{BufRead, BufReader, Write};
+    let model = Arc::new(Model::load_named(&artifacts_dir(), "mini").unwrap());
+    let router = Arc::new(Router::new(model, EngineConfig::default(), 1));
+    let server = Server::bind(router, "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap();
+    let stop = server.stop_handle();
+    let handle = std::thread::spawn(move || server.serve());
+
+    let stream = std::net::TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut w = stream;
+    w.write_all(b"this is not json\n").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "got: {line}");
+
+    // The connection stays usable afterwards.
+    w.write_all(br#"{"prompt":"ok ","max_new_tokens":4}"#).unwrap();
+    w.write_all(b"\n").unwrap();
+    w.flush().unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("text"), "got: {line}");
+
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    // Close *both* duplicated fds so the connection thread sees EOF.
+    drop(w);
+    drop(reader);
+    handle.join().unwrap().unwrap();
+}
