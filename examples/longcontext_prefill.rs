@@ -38,6 +38,7 @@ fn main() {
             backend: HsrBackend::BallTree,
             top_r: None,
             bias_override: Some(bias),
+            threads: args.usize_or("threads", 0),
         };
         let t0 = Instant::now();
         let res = pp.inference(&inst.q, &inst.k, &inst.v, n, n, d);

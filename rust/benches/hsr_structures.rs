@@ -1,21 +1,46 @@
 //! Bench/reproduction: **Corollary 3.1** — HSR init/query scaling across
-//! backends, plus the dynamic-update amortization of Theorem B.11.
+//! backends, plus the dynamic-update amortization of Theorem B.11, plus
+//! the kernel-layer before/after microbenches (scalar/serial baseline vs
+//! SIMD/parallel) emitted machine-readably to `BENCH_kernels.json`.
 //!
 //! Expected shapes:
 //!  * init: brute O(n), ball-tree / layers2d O(n log n)-ish.
 //!  * query: output-sensitive for ball-tree (low d) and layers2d (d = 2),
 //!    degrading toward linear as d grows (the AEM n^{1-1/⌊d/2⌋} story).
 //!  * dynamic inserts: amortized ~log² n.
+//!  * kernels: ≥2x on dense scoring (n=8192, d=64), ≥1.5x end-to-end on
+//!    `PromptPrefilling::inference` (m=512, n=8192, d=16, balltree).
+//!
+//! `--kernels-only` skips the HSR-structure sections (used by
+//! scripts/verify.sh for the perf smoke run).
 
+use hsr_attn::attention::AttentionKind;
 use hsr_attn::bench::{banner, black_box, Bencher};
+use hsr_attn::engine::PromptPrefilling;
 use hsr_attn::hsr::dynamic::DynamicHsr;
 use hsr_attn::hsr::{build_hsr, gaussian_points, HsrBackend, QueryStats};
+use hsr_attn::kernel::simd;
+use hsr_attn::util::cli::Args;
+use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
 use hsr_attn::util::stats::{fmt_ns, power_fit};
+use hsr_attn::workloads::gaussian::AttentionInstance;
 
 fn main() {
-    banner("hsr_structures", "paper Corollary 3.1 / Theorem B.11 (HSR costs)");
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    banner(
+        "hsr_structures",
+        "paper Corollary 3.1 / Theorem B.11 (HSR costs) + kernel layer",
+    );
     let bench = Bencher::quick();
+    if !args.flag("kernels-only") {
+        structures_bench(&bench);
+        dynamic_bench(&bench);
+    }
+    kernel_bench(&bench);
+}
+
+fn structures_bench(bench: &Bencher) {
     let ns = [4_096usize, 16_384, 65_536];
 
     // ---- init + query across backends ----
@@ -74,7 +99,10 @@ fn main() {
             }
         }
     }
+}
 
+fn dynamic_bench(bench: &Bencher) {
+    let ns = [4_096usize, 16_384, 65_536];
     // ---- dynamic updates (logarithmic method) ----
     println!("\n== dynamic inserts (Theorem B.11 amortized updates), d = 8 ==");
     println!("{:>9} | {:>12} {:>14} {:>10}", "n", "total", "per-insert", "rebuilds");
@@ -101,4 +129,202 @@ fn main() {
         );
     }
     println!("\nexpected: per-insert cost grows ~log^2 n, not with n.");
+}
+
+/// One before/after kernel case for the JSON report.
+struct KernelCase {
+    name: &'static str,
+    baseline_ns_per_row: f64,
+    optimized_ns_per_row: f64,
+}
+
+impl KernelCase {
+    fn speedup(&self) -> f64 {
+        self.baseline_ns_per_row / self.optimized_ns_per_row.max(1e-9)
+    }
+}
+
+/// The softmax row exactly as the pre-kernel crate computed it: scalar
+/// unrolled dots, two-pass softmax that recomputes exp, scalar axpy.
+fn softmax_row_baseline(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    d: usize,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let n = keys.len() / d;
+    scores.resize(n, 0.0);
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for (j, s) in scores.iter_mut().enumerate() {
+        *s = simd::dot_scalar(q, &keys[j * d..(j + 1) * d]) * inv_sqrt_d;
+    }
+    out.fill(0.0);
+    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut denom = 0f32;
+    for &s in scores.iter() {
+        denom += (s - max).exp();
+    }
+    if denom == 0.0 || !denom.is_finite() {
+        return;
+    }
+    let inv = 1.0 / denom;
+    for (j, &s) in scores.iter().enumerate() {
+        let w = (s - max).exp() * inv;
+        for (o, &v) in out.iter_mut().zip(&values[j * d..(j + 1) * d]) {
+            *o += w * v;
+        }
+    }
+}
+
+fn kernel_bench(bench: &Bencher) {
+    println!("\n== kernel layer: scalar/serial baseline vs SIMD/parallel ==");
+    println!("dispatch: {}", simd::dispatch_name());
+    let mut cases: Vec<KernelCase> = Vec::new();
+
+    // --- dot, n=8192 rows of d=64 ---
+    {
+        let (n, d) = (8_192usize, 64usize);
+        let mut rng = Rng::new(1);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let keys = rng.gaussian_vec_f32(n * d, 1.0);
+        let base = bench.run("dot/scalar", || {
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += simd::dot_scalar(&q, &keys[j * d..(j + 1) * d]);
+            }
+            black_box(acc);
+        });
+        let opt = bench.run("dot/simd", || {
+            let mut acc = 0f32;
+            for j in 0..n {
+                acc += simd::dot(&q, &keys[j * d..(j + 1) * d]);
+            }
+            black_box(acc);
+        });
+        cases.push(KernelCase {
+            name: "dot_n8192_d64",
+            baseline_ns_per_row: base.median_ns / n as f64,
+            optimized_ns_per_row: opt.median_ns / n as f64,
+        });
+    }
+
+    // --- dense scores_into, n=8192, d=64 (acceptance: ≥2x) ---
+    {
+        let (n, d) = (8_192usize, 64usize);
+        let mut rng = Rng::new(2);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let keys = rng.gaussian_vec_f32(n * d, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = vec![0f32; n];
+        let base = bench.run("scores_into/scalar", || {
+            simd::scaled_dots_into_scalar(&q, &keys, d, scale, &mut out);
+            black_box(out[n - 1]);
+        });
+        let opt = bench.run("scores_into/simd", || {
+            simd::scaled_dots_into(&q, &keys, d, scale, &mut out);
+            black_box(out[n - 1]);
+        });
+        cases.push(KernelCase {
+            name: "scores_into_n8192_d64",
+            baseline_ns_per_row: base.median_ns / n as f64,
+            optimized_ns_per_row: opt.median_ns / n as f64,
+        });
+    }
+
+    // --- full softmax attention row, n=4096, d=64 ---
+    {
+        let (n, d) = (4_096usize, 64usize);
+        let mut rng = Rng::new(3);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let keys = rng.gaussian_vec_f32(n * d, 1.0);
+        let values = rng.gaussian_vec_f32(n * d, 1.0);
+        let mut scores = Vec::new();
+        let mut out = vec![0f32; d];
+        let base = bench.run("softmax_row/baseline", || {
+            softmax_row_baseline(&q, &keys, &values, d, &mut scores, &mut out);
+            black_box(out[0]);
+        });
+        let opt = bench.run("softmax_row/kernel", || {
+            hsr_attn::attention::softmax::softmax_attention_row(
+                &q, &keys, &values, d, &mut scores, &mut out,
+            );
+            black_box(out[0]);
+        });
+        cases.push(KernelCase {
+            name: "softmax_row_n4096_d64",
+            baseline_ns_per_row: base.median_ns,
+            optimized_ns_per_row: opt.median_ns,
+        });
+    }
+
+    // --- end-to-end prefill, m=512, n=8192, d=16, balltree (≥1.5x) ---
+    {
+        let (m, n, d) = (512usize, 8_192usize, 16usize);
+        let mut rng = Rng::new(4);
+        let inst = AttentionInstance::gaussian(&mut rng, m, n, d);
+        let bias = inst.params.practical_bias(n) as f32;
+        let mut pp = PromptPrefilling::new(
+            AttentionKind::Relu { alpha: 2, bias },
+            HsrBackend::BallTree,
+        );
+        pp.bias_override = Some(bias);
+        // Baseline: the pre-PR configuration — scalar kernels, one thread.
+        simd::force_scalar(true);
+        pp.threads = 1;
+        let base = bench.run("prefill/scalar+serial", || {
+            black_box(pp.inference(&inst.q, &inst.k, &inst.v, n, m, d).fired.len());
+        });
+        // Optimized: runtime-dispatched SIMD + parallel row shards.
+        simd::force_scalar(false);
+        pp.threads = 0;
+        let opt = bench.run("prefill/simd+parallel", || {
+            black_box(pp.inference(&inst.q, &inst.k, &inst.v, n, m, d).fired.len());
+        });
+        cases.push(KernelCase {
+            name: "prefill_m512_n8192_d16_balltree",
+            baseline_ns_per_row: base.median_ns / m as f64,
+            optimized_ns_per_row: opt.median_ns / m as f64,
+        });
+    }
+
+    println!(
+        "{:>34} | {:>14} {:>14} {:>8}",
+        "kernel", "before ns/row", "after ns/row", "speedup"
+    );
+    for c in &cases {
+        println!(
+            "{:>34} | {:>14.1} {:>14.1} {:>7.2}x",
+            c.name,
+            c.baseline_ns_per_row,
+            c.optimized_ns_per_row,
+            c.speedup()
+        );
+    }
+
+    // Machine-readable report at the repo root.
+    let mut root = Json::obj();
+    root.set("dispatch", simd::dispatch_name().into());
+    root.set(
+        "threads",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).into(),
+    );
+    let items: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("name", c.name.into())
+                .set("baseline_ns_per_row", c.baseline_ns_per_row.into())
+                .set("optimized_ns_per_row", c.optimized_ns_per_row.into())
+                .set("speedup", c.speedup().into());
+            o
+        })
+        .collect();
+    root.set("kernels", Json::Arr(items));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }

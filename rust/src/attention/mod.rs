@@ -24,7 +24,7 @@ pub mod softmax;
 pub mod threshold;
 pub mod topk;
 
-use crate::hsr::dot;
+use crate::kernel::simd;
 
 /// Which attention mechanism a component should use.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -36,18 +36,16 @@ pub enum AttentionKind {
     Relu { alpha: u32, bias: f32 },
 }
 
-/// Compute one row of raw attention scores s_j = <q, K_j>/sqrt(d).
-/// `scores` must have length n.
+/// Compute one row of raw attention scores s_j = <q, K_j>/sqrt(d) via the
+/// blocked SIMD scoring kernel. `scores` must have length n.
 pub fn scores_into(q: &[f32], keys: &[f32], d: usize, scores: &mut [f32]) {
-    let n = keys.len() / d;
-    debug_assert_eq!(scores.len(), n);
+    debug_assert_eq!(scores.len(), keys.len() / d);
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-    for (j, s) in scores.iter_mut().enumerate() {
-        *s = dot(q, &keys[j * d..(j + 1) * d]) * inv_sqrt_d;
-    }
+    simd::scaled_dots_into(q, keys, d, inv_sqrt_d, scores);
 }
 
-/// Scores for a subset of key indices: s_t = <q, K_{idx_t}>/sqrt(d).
+/// Scores for a subset of key indices: s_t = <q, K_{idx_t}>/sqrt(d)
+/// (gathered SIMD subset-dot kernel).
 pub fn scores_subset_into(
     q: &[f32],
     keys: &[f32],
@@ -55,21 +53,13 @@ pub fn scores_subset_into(
     idx: &[u32],
     scores: &mut Vec<f32>,
 ) {
-    scores.clear();
-    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-    for &j in idx {
-        let j = j as usize;
-        scores.push(dot(q, &keys[j * d..(j + 1) * d]) * inv_sqrt_d);
-    }
+    simd::gathered_scaled_dots_into(q, keys, d, idx, 1.0 / (d as f32).sqrt(), scores);
 }
 
 /// out += w * V_j for a single value row.
 #[inline]
 pub fn axpy_row(out: &mut [f32], values: &[f32], d: usize, j: usize, w: f32) {
-    let row = &values[j * d..(j + 1) * d];
-    for (o, &v) in out.iter_mut().zip(row) {
-        *o += w * v;
-    }
+    simd::axpy(out, &values[j * d..(j + 1) * d], w);
 }
 
 /// Max absolute difference between two equal-length slices (the ℓ∞ metric

@@ -74,9 +74,27 @@ pub fn relu_attention_row_sparse(
     out: &mut [f32],
 ) {
     scores_subset_into(q, keys, d, idx, scores_buf);
+    relu_attention_row_scored(idx, scores_buf, values, d, alpha, bias, out);
+}
+
+/// Sparse ReLU^α attention over an index set whose **scaled scores are
+/// already known** (carried out of a score-reporting HSR query), so no
+/// inner product is recomputed. `scaled_scores[t]` must be
+/// `<q, K_{idx_t}>/√d`; the buffer is consumed (rewritten to ReLU^α
+/// activation weights in place).
+pub fn relu_attention_row_scored(
+    idx: &[u32],
+    scaled_scores: &mut [f32],
+    values: &[f32],
+    d: usize,
+    alpha: u32,
+    bias: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(idx.len(), scaled_scores.len());
     out.fill(0.0);
     let mut denom = 0f32;
-    for s in scores_buf.iter_mut() {
+    for s in scaled_scores.iter_mut() {
         *s = relu_pow(*s - bias, alpha);
         denom += *s;
     }
@@ -84,7 +102,7 @@ pub fn relu_attention_row_sparse(
         return;
     }
     let inv = 1.0 / denom;
-    for (t, &a) in scores_buf.iter().enumerate() {
+    for (t, &a) in scaled_scores.iter().enumerate() {
         if a > 0.0 {
             axpy_row(out, values, d, idx[t] as usize, a * inv);
         }

@@ -42,9 +42,12 @@ pub fn softmax_attention_row_subset(
 }
 
 /// Shared stable-softmax weighted sum. When `idx` is None the weights map
-/// to value rows 0..n; otherwise to the given indices.
+/// to value rows 0..n; otherwise to the given indices. `scores` is
+/// consumed: the fused max/sum-exp kernel rewrites it in place to
+/// exp(s − max), so the accumulation pass reads cached exps instead of
+/// recomputing them (the pre-kernel version paid a second exp pass).
 fn softmax_weighted_sum(
-    scores: &[f32],
+    scores: &mut [f32],
     idx: Option<&[u32]>,
     values: &[f32],
     d: usize,
@@ -54,27 +57,33 @@ fn softmax_weighted_sum(
     if scores.is_empty() {
         return;
     }
-    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let mut denom = 0f32;
-    // Two passes: exp-sum, then weighted accumulation. Keeping exps in a
-    // stack-local reusable buffer would need another scratch vec; the
-    // second pass recomputes exp which profiles faster than an extra
-    // allocation for the row sizes the engine uses (k ≈ n^{4/5}).
-    for &s in scores {
-        denom += (s - max).exp();
-    }
+    let denom = crate::kernel::simd::softmax_exp_in_place(scores);
     if denom == 0.0 || !denom.is_finite() {
         return;
     }
     let inv = 1.0 / denom;
-    for (t, &s) in scores.iter().enumerate() {
-        let w = (s - max).exp() * inv;
+    for (t, &e) in scores.iter().enumerate() {
         let row = match idx {
             Some(ix) => ix[t] as usize,
             None => t,
         };
-        axpy_row(out, values, d, row, w);
+        axpy_row(out, values, d, row, e * inv);
     }
+}
+
+/// Softmax attention over an index set whose **scaled scores are already
+/// known** (e.g. carried out of a score-reporting HSR query): no inner
+/// product is recomputed. `scaled_scores[t]` must be `<q, K_{idx_t}>/√d`;
+/// the buffer is consumed (rewritten to exps in place).
+pub fn softmax_attention_row_scored(
+    idx: &[u32],
+    scaled_scores: &mut [f32],
+    values: &[f32],
+    d: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(idx.len(), scaled_scores.len());
+    softmax_weighted_sum(scaled_scores, Some(idx), values, d, out);
 }
 
 /// Dense softmax attention for a full Q (m×d): the naive O(mnd) baseline.
@@ -176,6 +185,23 @@ mod tests {
         let mut out2 = vec![0f32; d];
         softmax_attention_row_subset(&q, &k, &v, d, &idx, &mut buf, &mut out2);
         assert!(linf(&out1, &out2) < 1e-5);
+    }
+
+    #[test]
+    fn scored_path_matches_subset_path() {
+        let mut rng = Rng::new(10);
+        let (n, d) = (60usize, 8usize);
+        let (q, k, v) = rand_qkv(&mut rng, 1, n, d);
+        let idx: Vec<u32> = (0..n as u32).step_by(4).collect();
+        let mut buf = Vec::new();
+        let mut want = vec![0f32; d];
+        softmax_attention_row_subset(&q, &k, &v, d, &idx, &mut buf, &mut want);
+        // Pre-compute the scaled scores, then use the scored entry point.
+        let mut scores = Vec::new();
+        crate::attention::scores_subset_into(&q, &k, d, &idx, &mut scores);
+        let mut got = vec![0f32; d];
+        softmax_attention_row_scored(&idx, &mut scores, &v, d, &mut got);
+        assert!(linf(&got, &want) < 1e-6);
     }
 
     #[test]

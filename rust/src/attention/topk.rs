@@ -53,6 +53,48 @@ pub fn top_r_of_subset(candidates: &[u32], scores: &[f32], r: usize) -> Vec<u32>
     out
 }
 
+/// Allocation-free top-r selection that **carries scores along**: fills
+/// `out_idx` with the global indices of the r best candidates (ascending)
+/// and `out_scores` with their scores, parallel to `out_idx`. This is the
+/// hot-path variant used by decode/prefill: the caller already paid for
+/// the scores in the HSR query, and downstream softmax consumes them
+/// directly, so nothing is re-dotted. Buffers are cleared first and only
+/// their capacity is reused across rows.
+pub fn top_r_select_into(
+    candidates: &[u32],
+    scores: &[f32],
+    r: usize,
+    out_idx: &mut Vec<u32>,
+    out_scores: &mut Vec<f32>,
+) {
+    assert_eq!(candidates.len(), scores.len());
+    out_idx.clear();
+    out_scores.clear();
+    let k = candidates.len();
+    let r = r.min(k);
+    if r == 0 {
+        return;
+    }
+    if r == k {
+        out_idx.extend_from_slice(candidates);
+        out_scores.extend_from_slice(scores);
+        return;
+    }
+    // Select candidate *positions* in out_idx, then materialize.
+    out_idx.extend(0..k as u32);
+    out_idx.select_nth_unstable_by(r - 1, |&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out_idx.truncate(r);
+    out_idx.sort_unstable_by_key(|&t| candidates[t as usize]);
+    for t in out_idx.iter_mut() {
+        out_scores.push(scores[*t as usize]);
+        *t = candidates[*t as usize];
+    }
+}
+
 /// The r-th largest value of `scores` (the selection threshold): the
 /// smallest score still inside NN(r, ·, ·). Returns -inf for r == 0.
 pub fn rth_largest(scores: &[f32], r: usize) -> f32 {
@@ -118,6 +160,40 @@ mod tests {
         let cands = top_r_indices(&scores, 50);
         let sub_scores: Vec<f32> = cands.iter().map(|&i| scores[i as usize]).collect();
         assert_eq!(top_r_of_subset(&cands, &sub_scores, r), dense);
+    }
+
+    #[test]
+    fn select_into_matches_of_subset() {
+        let mut rng = Rng::new(34);
+        let mut idx_buf = Vec::new();
+        let mut score_buf = Vec::new();
+        for _ in 0..30 {
+            let k = rng.range(1, 120);
+            let r = rng.range(0, k + 4);
+            let candidates: Vec<u32> = {
+                // Distinct, unsorted global ids.
+                let mut c: Vec<u32> = (0..k as u32).map(|x| x * 3 + 1).collect();
+                for i in (1..c.len()).rev() {
+                    c.swap(i, rng.below(i + 1));
+                }
+                c
+            };
+            let scores = rng.gaussian_vec_f32(k, 1.0);
+            let want = top_r_of_subset(&candidates, &scores, r);
+            top_r_select_into(&candidates, &scores, r, &mut idx_buf, &mut score_buf);
+            if r >= k {
+                // Full take preserves candidate order instead of sorting.
+                assert_eq!(idx_buf, candidates);
+            } else {
+                assert_eq!(idx_buf, want, "k={k} r={r}");
+            }
+            assert_eq!(idx_buf.len(), score_buf.len());
+            // Carried scores must be each index's own score.
+            for (t, &g) in idx_buf.iter().enumerate() {
+                let pos = candidates.iter().position(|&c| c == g).unwrap();
+                assert_eq!(score_buf[t], scores[pos]);
+            }
+        }
     }
 
     #[test]

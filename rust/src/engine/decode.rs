@@ -17,13 +17,14 @@
 //! freshly generated keys (the auto-regressive loop of Theorem D.2) comes
 //! from the dynamic logarithmic-method wrapper.
 
-use crate::attention::relu::relu_attention_row_sparse;
-use crate::attention::softmax::softmax_attention_row_subset;
+use crate::attention::relu::relu_attention_row_scored;
+use crate::attention::softmax::softmax_attention_row_scored;
 use crate::attention::threshold::ThresholdParams;
-use crate::attention::topk::top_r_of_subset;
+use crate::attention::topk::top_r_select_into;
 use crate::attention::AttentionKind;
 use crate::hsr::dynamic::DynamicHsr;
 use crate::hsr::{HalfSpaceReport, HsrBackend, QueryStats};
+use crate::kernel::Scratch;
 
 /// The paper's Algorithm 1 over raw K/V matrices.
 pub struct GenerationDecoding {
@@ -45,6 +46,8 @@ pub struct GenerationDecoding {
     pub sigma_k: f64,
     /// Accumulated query-work counters.
     pub stats: QueryStats,
+    /// Reusable row buffers (no allocation in the decode inner loop).
+    scratch: Scratch,
 }
 
 impl GenerationDecoding {
@@ -71,6 +74,7 @@ impl GenerationDecoding {
             top_r: None,
             sigma_k: 1.0,
             stats: QueryStats::default(),
+            scratch: Scratch::new(),
         }
     }
 
@@ -126,62 +130,91 @@ impl GenerationDecoding {
             }
             _ => self.bias * (self.d as f32).sqrt(),
         };
-        let mut fire: Vec<u32> = Vec::new();
-        self.hsr.query_into(q, b_raw, &mut fire, &mut self.stats);
-        let mut scores_buf = Vec::new();
+        let inv_sqrt_d = 1.0 / (self.d as f32).sqrt();
+        // Score-carrying HSR query: the report arrives with the raw inner
+        // products, so nothing below re-dots a key the traversal already
+        // evaluated. All row buffers come from the reusable scratch.
+        self.scratch.fire.clear();
+        self.scratch.scores.clear();
+        self.hsr.query_scored_into(
+            q,
+            b_raw,
+            &mut self.scratch.fire,
+            &mut self.scratch.scores,
+            &mut self.stats,
+        );
         match self.kind {
             AttentionKind::Relu { alpha, bias } => {
                 debug_assert!(
                     (bias - self.bias).abs() < 1e-6,
                     "ReLU bias must equal the HSR threshold for exactness"
                 );
-                relu_attention_row_sparse(
-                    q,
-                    &self.keys,
+                for s in self.scratch.scores.iter_mut() {
+                    *s *= inv_sqrt_d;
+                }
+                relu_attention_row_scored(
+                    &self.scratch.fire,
+                    &mut self.scratch.scores,
                     &self.values,
                     self.d,
                     alpha,
                     self.bias,
-                    &fire,
-                    &mut scores_buf,
                     out,
                 );
-                fire.len()
+                self.scratch.fire.len()
             }
             AttentionKind::Softmax => {
                 // Theorem 4.2 needs R = NN(r, q, K): if the threshold
                 // under-reported (|fire| < r), fall back to the full
                 // half-space so the top-r below is exact.
                 if let Some(r) = self.top_r {
-                    if fire.len() < r.min(self.len()) {
-                        fire.clear();
-                        self.hsr
-                            .query_into(q, f32::NEG_INFINITY, &mut fire, &mut self.stats);
+                    if self.scratch.fire.len() < r.min(self.len()) {
+                        self.scratch.fire.clear();
+                        self.scratch.scores.clear();
+                        self.hsr.query_scored_into(
+                            q,
+                            f32::NEG_INFINITY,
+                            &mut self.scratch.fire,
+                            &mut self.scratch.scores,
+                            &mut self.stats,
+                        );
                     }
                 }
-                let selected = match self.top_r {
-                    Some(r) if r < fire.len() => {
-                        let mut raw = Vec::with_capacity(fire.len());
-                        for &j in &fire {
-                            raw.push(crate::hsr::dot(
-                                q,
-                                &self.keys[j as usize * self.d..(j as usize + 1) * self.d],
-                            ));
+                match self.top_r {
+                    Some(r) if r < self.scratch.fire.len() => {
+                        top_r_select_into(
+                            &self.scratch.fire,
+                            &self.scratch.scores,
+                            r,
+                            &mut self.scratch.selected,
+                            &mut self.scratch.exps,
+                        );
+                        for s in self.scratch.exps.iter_mut() {
+                            *s *= inv_sqrt_d;
                         }
-                        top_r_of_subset(&fire, &raw, r)
+                        softmax_attention_row_scored(
+                            &self.scratch.selected,
+                            &mut self.scratch.exps,
+                            &self.values,
+                            self.d,
+                            out,
+                        );
+                        self.scratch.selected.len()
                     }
-                    _ => fire,
-                };
-                softmax_attention_row_subset(
-                    q,
-                    &self.keys,
-                    &self.values,
-                    self.d,
-                    &selected,
-                    &mut scores_buf,
-                    out,
-                );
-                selected.len()
+                    _ => {
+                        for s in self.scratch.scores.iter_mut() {
+                            *s *= inv_sqrt_d;
+                        }
+                        softmax_attention_row_scored(
+                            &self.scratch.fire,
+                            &mut self.scratch.scores,
+                            &self.values,
+                            self.d,
+                            out,
+                        );
+                        self.scratch.fire.len()
+                    }
+                }
             }
         }
     }
@@ -192,9 +225,7 @@ impl GenerationDecoding {
         let mut out = vec![0f32; m * self.d];
         for i in 0..m {
             let (qs, qe) = (i * self.d, (i + 1) * self.d);
-            // Split borrow: copy the row (d is small).
-            let qrow: Vec<f32> = q[qs..qe].to_vec();
-            self.inference_row(&qrow, &mut out[qs..qe]);
+            self.inference_row(&q[qs..qe], &mut out[qs..qe]);
         }
         out
     }

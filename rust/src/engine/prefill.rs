@@ -12,13 +12,26 @@
 //!                   A_{i,j} ← ReLU^α(…)  or Softmax(…)
 //!   return D^{-1} A V
 //! ```
+//!
+//! Engineering beyond the pseudocode (all output-preserving):
+//!
+//! * **Score-carrying queries** — `query_scored_into` reports (index,
+//!   raw-dot) pairs, so the softmax/ReLU evaluation never recomputes an
+//!   inner product the HSR traversal already paid for.
+//! * **Scratch reuse** — one [`Scratch`] arena per worker; the per-row
+//!   loop performs no heap allocation in steady state.
+//! * **Parallel rows** — the m query rows are embarrassingly parallel
+//!   over the immutable HSR structure; they are sharded across scoped
+//!   threads (`threads` knob, 0 = auto) with per-shard `QueryStats`
+//!   merged in shard order. Output is bit-identical to the serial path.
 
-use crate::attention::relu::relu_attention_row_sparse;
-use crate::attention::softmax::softmax_attention_row_subset;
+use crate::attention::relu::relu_attention_row_scored;
+use crate::attention::softmax::softmax_attention_row_scored;
 use crate::attention::threshold::ThresholdParams;
-use crate::attention::topk::top_r_of_subset;
+use crate::attention::topk::top_r_select_into;
 use crate::attention::AttentionKind;
-use crate::hsr::{build_hsr, HsrBackend, QueryStats};
+use crate::hsr::{build_hsr, HalfSpaceReport, HsrBackend, QueryStats};
+use crate::kernel::Scratch;
 
 /// Output of one prefill run.
 pub struct PrefillResult {
@@ -39,11 +52,28 @@ pub struct PromptPrefilling {
     pub top_r: Option<usize>,
     /// Override the Lemma 6.1 threshold (scaled-score units).
     pub bias_override: Option<f32>,
+    /// Worker threads for the query-row loop: 0 → one per available
+    /// core, 1 → serial. The result is bit-identical either way.
+    pub threads: usize,
 }
 
 impl PromptPrefilling {
     pub fn new(kind: AttentionKind, backend: HsrBackend) -> PromptPrefilling {
-        PromptPrefilling { kind, backend, top_r: None, bias_override: None }
+        PromptPrefilling { kind, backend, top_r: None, bias_override: None, threads: 0 }
+    }
+
+    fn effective_threads(&self, m: usize) -> usize {
+        let t = if self.threads == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.threads
+        };
+        // Tiny batches are not worth a thread spawn.
+        if m < 4 {
+            1
+        } else {
+            t.clamp(1, m)
+        }
     }
 
     /// INFERENCE: full attention of Q, K, V (non-causal — the paper's
@@ -66,55 +96,168 @@ impl PromptPrefilling {
             .unwrap_or_else(|| params.practical_bias(n.max(2)) as f32);
         // Part-1 build: O(n log n)-shaped.
         let hsr = build_hsr(self.backend, keys, d);
+        let hsr: &dyn HalfSpaceReport = hsr.as_ref();
         let b_raw = bias * (d as f32).sqrt();
 
         let mut out = vec![0f32; m * d];
-        let mut fired = Vec::with_capacity(m);
+        let mut fired = vec![0usize; m];
         let mut stats = QueryStats::default();
-        let mut fire: Vec<u32> = Vec::new();
-        let mut scores_buf: Vec<f32> = Vec::new();
-        for i in 0..m {
-            let qi = &q[i * d..(i + 1) * d];
-            fire.clear();
-            hsr.query_into(qi, b_raw, &mut fire, &mut stats);
-            let orow = &mut out[i * d..(i + 1) * d];
-            match self.kind {
-                AttentionKind::Relu { alpha, .. } => {
-                    relu_attention_row_sparse(
-                        qi, keys, values, d, alpha, bias, &fire, &mut scores_buf, orow,
-                    );
-                    fired.push(fire.len());
+        if m == 0 {
+            return PrefillResult { out, fired, stats };
+        }
+
+        let workers = self.effective_threads(m);
+        if workers <= 1 {
+            let mut scratch = Scratch::new();
+            for i in 0..m {
+                fired[i] = self.row_inference(
+                    hsr,
+                    &q[i * d..(i + 1) * d],
+                    values,
+                    n,
+                    d,
+                    bias,
+                    b_raw,
+                    &mut out[i * d..(i + 1) * d],
+                    &mut scratch,
+                    &mut stats,
+                );
+            }
+        } else {
+            // Shard rows contiguously; each worker owns disjoint chunks
+            // of `out`/`fired` and a private Scratch + QueryStats.
+            let rows_per = (m + workers - 1) / workers;
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for (shard, (out_chunk, fired_chunk)) in out
+                    .chunks_mut(rows_per * d)
+                    .zip(fired.chunks_mut(rows_per))
+                    .enumerate()
+                {
+                    let row0 = shard * rows_per;
+                    handles.push(scope.spawn(move || {
+                        let mut scratch = Scratch::new();
+                        let mut local = QueryStats::default();
+                        for (t, (orow, f)) in out_chunk
+                            .chunks_mut(d)
+                            .zip(fired_chunk.iter_mut())
+                            .enumerate()
+                        {
+                            let i = row0 + t;
+                            *f = self.row_inference(
+                                hsr,
+                                &q[i * d..(i + 1) * d],
+                                values,
+                                n,
+                                d,
+                                bias,
+                                b_raw,
+                                orow,
+                                &mut scratch,
+                                &mut local,
+                            );
+                        }
+                        local
+                    }));
                 }
-                AttentionKind::Softmax => {
-                    // Under-reported threshold: fall back to the full
-                    // half-space so top-r is exact (Theorem 5.2).
-                    if let Some(r) = self.top_r {
-                        if fire.len() < r.min(n) {
-                            fire.clear();
-                            hsr.query_into(qi, f32::NEG_INFINITY, &mut fire, &mut stats);
-                        }
+                // Merge in shard order so the aggregate is deterministic.
+                for h in handles {
+                    stats.add(&h.join().expect("prefill worker panicked"));
+                }
+            });
+        }
+        PrefillResult { out, fired, stats }
+    }
+
+    /// One query row: score-carrying HSR report, then evaluate the
+    /// attention on exactly the reported (or top-r) set. Returns k̃_i.
+    #[allow(clippy::too_many_arguments)]
+    fn row_inference(
+        &self,
+        hsr: &dyn HalfSpaceReport,
+        qi: &[f32],
+        values: &[f32],
+        n: usize,
+        d: usize,
+        bias: f32,
+        b_raw: f32,
+        orow: &mut [f32],
+        scratch: &mut Scratch,
+        stats: &mut QueryStats,
+    ) -> usize {
+        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+        scratch.fire.clear();
+        scratch.scores.clear();
+        hsr.query_scored_into(qi, b_raw, &mut scratch.fire, &mut scratch.scores, stats);
+        match self.kind {
+            AttentionKind::Relu { alpha, .. } => {
+                for s in scratch.scores.iter_mut() {
+                    *s *= inv_sqrt_d;
+                }
+                relu_attention_row_scored(
+                    &scratch.fire,
+                    &mut scratch.scores,
+                    values,
+                    d,
+                    alpha,
+                    bias,
+                    orow,
+                );
+                scratch.fire.len()
+            }
+            AttentionKind::Softmax => {
+                // Under-reported threshold: fall back to the full
+                // half-space so top-r is exact (Theorem 5.2).
+                if let Some(r) = self.top_r {
+                    if scratch.fire.len() < r.min(n) {
+                        scratch.fire.clear();
+                        scratch.scores.clear();
+                        hsr.query_scored_into(
+                            qi,
+                            f32::NEG_INFINITY,
+                            &mut scratch.fire,
+                            &mut scratch.scores,
+                            stats,
+                        );
                     }
-                    let selected = match self.top_r {
-                        Some(r) if r < fire.len() => {
-                            let mut raw = Vec::with_capacity(fire.len());
-                            for &j in &fire {
-                                raw.push(crate::hsr::dot(
-                                    qi,
-                                    &keys[j as usize * d..(j as usize + 1) * d],
-                                ));
-                            }
-                            top_r_of_subset(&fire, &raw, r)
+                }
+                match self.top_r {
+                    Some(r) if r < scratch.fire.len() => {
+                        top_r_select_into(
+                            &scratch.fire,
+                            &scratch.scores,
+                            r,
+                            &mut scratch.selected,
+                            &mut scratch.exps,
+                        );
+                        for s in scratch.exps.iter_mut() {
+                            *s *= inv_sqrt_d;
                         }
-                        _ => std::mem::take(&mut fire),
-                    };
-                    softmax_attention_row_subset(
-                        qi, keys, values, d, &selected, &mut scores_buf, orow,
-                    );
-                    fired.push(selected.len());
+                        softmax_attention_row_scored(
+                            &scratch.selected,
+                            &mut scratch.exps,
+                            values,
+                            d,
+                            orow,
+                        );
+                        scratch.selected.len()
+                    }
+                    _ => {
+                        for s in scratch.scores.iter_mut() {
+                            *s *= inv_sqrt_d;
+                        }
+                        softmax_attention_row_scored(
+                            &scratch.fire,
+                            &mut scratch.scores,
+                            values,
+                            d,
+                            orow,
+                        );
+                        scratch.fire.len()
+                    }
                 }
             }
         }
-        PrefillResult { out, fired, stats }
     }
 }
 
@@ -137,6 +280,7 @@ mod tests {
                 backend,
                 top_r: None,
                 bias_override: Some(bias),
+                threads: 0,
             };
             let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
             let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, 2, bias);
@@ -155,6 +299,7 @@ mod tests {
             backend: HsrBackend::Layers2d,
             top_r: None,
             bias_override: Some(bias),
+            threads: 0,
         };
         let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
         let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, 1, bias);
@@ -189,10 +334,93 @@ mod tests {
             backend: HsrBackend::BallTree,
             top_r: None,
             bias_override: Some(bias),
+            threads: 0,
         };
         let res = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
         let bound = inst.params.row_bound(inst.n) as usize;
         assert!(res.fired.iter().all(|&f| f <= bound));
         assert!(res.fired.iter().sum::<usize>() > 0);
+    }
+
+    /// Parallel prefill must be **bit-identical** to serial: same `out`
+    /// floats, same per-row fired counts, same merged work counters —
+    /// for both attention kinds, with and without top-r.
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(115);
+        let inst = AttentionInstance::gaussian(&mut rng, 64, 512, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let cases: Vec<PromptPrefilling> = vec![
+            PromptPrefilling {
+                kind: AttentionKind::Relu { alpha: 2, bias },
+                backend: HsrBackend::BallTree,
+                top_r: None,
+                bias_override: Some(bias),
+                threads: 1,
+            },
+            PromptPrefilling {
+                kind: AttentionKind::Softmax,
+                backend: HsrBackend::BallTree,
+                top_r: Some(64),
+                bias_override: Some(f32::NEG_INFINITY),
+                threads: 1,
+            },
+            PromptPrefilling {
+                kind: AttentionKind::Softmax,
+                backend: HsrBackend::Brute,
+                top_r: Some(32),
+                bias_override: Some(bias),
+                threads: 1,
+            },
+        ];
+        for mut pp in cases {
+            pp.threads = 1;
+            let serial = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+            for threads in [2usize, 3, 7] {
+                pp.threads = threads;
+                let par = pp.inference(&inst.q, &inst.k, &inst.v, inst.n, inst.m, inst.d);
+                assert_eq!(serial.out, par.out, "threads={threads} kind={:?}", pp.kind);
+                assert_eq!(serial.fired, par.fired, "threads={threads}");
+                assert_eq!(serial.stats, par.stats, "threads={threads}");
+            }
+        }
+    }
+
+    /// The row loop reuses one Scratch per worker: the report buffer must
+    /// keep its capacity across rows (the pre-kernel code `mem::take`-d
+    /// the buffer, forcing a fresh allocation every subsequent row).
+    #[test]
+    fn scratch_capacity_survives_rows() {
+        let mut rng = Rng::new(116);
+        let inst = AttentionInstance::gaussian(&mut rng, 16, 256, 8);
+        let pp = PromptPrefilling {
+            kind: AttentionKind::Softmax,
+            backend: HsrBackend::BallTree,
+            top_r: Some(16),
+            bias_override: Some(f32::NEG_INFINITY),
+            threads: 1,
+        };
+        let hsr = build_hsr(pp.backend, &inst.k, inst.d);
+        let mut scratch = Scratch::new();
+        let mut stats = QueryStats::default();
+        let mut orow = vec![0f32; inst.d];
+        let b_raw = f32::NEG_INFINITY;
+        for i in 0..inst.m {
+            pp.row_inference(
+                hsr.as_ref(),
+                inst.query_row(i),
+                &inst.v,
+                inst.n,
+                inst.d,
+                0.0,
+                b_raw,
+                &mut orow,
+                &mut scratch,
+                &mut stats,
+            );
+            // Full report: the fire buffer holds all n entries and must
+            // retain that capacity for the next row.
+            assert!(scratch.fire.capacity() >= inst.n, "row {i} lost its buffer");
+        }
     }
 }

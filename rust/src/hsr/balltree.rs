@@ -160,12 +160,17 @@ impl BallTreeHsr {
 
     /// Iterative traversal with an explicit stack (the recursive version
     /// cost ~15% in call overhead on deep trees — see EXPERIMENTS.md §Perf).
+    /// With `scores: Some(_)` every reported index also gets its raw
+    /// inner product pushed: leaf scans reuse the dot the membership test
+    /// already computed, and bulk-reported subtrees are scored with a
+    /// contiguous SIMD sweep over the permuted point layout.
     fn query_iter(
         &self,
         a: &[f32],
         a_norm: f32,
         b: f32,
         out: &mut Vec<u32>,
+        mut scores: Option<&mut Vec<f32>>,
         stats: &mut QueryStats,
     ) {
         let mut stack: Vec<u32> = Vec::with_capacity(64);
@@ -182,6 +187,18 @@ impl BallTreeHsr {
             if proj - margin >= b {
                 // Whole subtree satisfies the half-space: bulk report.
                 out.extend_from_slice(&self.order[s..e]);
+                if let Some(sc) = scores.as_mut() {
+                    // Contiguous rows: dense blocked scoring, scale 1.
+                    let start = sc.len();
+                    sc.resize(start + (e - s), 0.0);
+                    crate::kernel::simd::scaled_dots_into(
+                        a,
+                        &self.points[s * self.d..e * self.d],
+                        self.d,
+                        1.0,
+                        &mut sc[start..],
+                    );
+                }
                 stats.bulk_reported += e - s;
                 stats.reported += e - s;
                 continue;
@@ -191,8 +208,12 @@ impl BallTreeHsr {
                 stats.points_scanned += e - s;
                 for slot in s..e {
                     let p = &self.points[slot * self.d..(slot + 1) * self.d];
-                    if dot(p, a) >= b {
+                    let sdot = dot(p, a);
+                    if sdot >= b {
                         out.push(self.order[slot]);
+                        if let Some(sc) = scores.as_mut() {
+                            sc.push(sdot);
+                        }
                         stats.reported += 1;
                     }
                 }
@@ -219,7 +240,23 @@ impl HalfSpaceReport for BallTreeHsr {
             return;
         }
         let a_norm = super::norm(a);
-        self.query_iter(a, a_norm, b, out, stats);
+        self.query_iter(a, a_norm, b, out, None, stats);
+    }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        assert_eq!(a.len(), self.d);
+        if self.n == 0 {
+            return;
+        }
+        let a_norm = super::norm(a);
+        self.query_iter(a, a_norm, b, out, Some(scores), stats);
     }
 }
 

@@ -47,6 +47,26 @@ impl HalfSpaceReport for BruteHsr {
             }
         }
     }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        assert_eq!(a.len(), self.d);
+        stats.points_scanned += self.n;
+        for i in 0..self.n {
+            let s = dot(self.point(i), a);
+            if s >= b {
+                out.push(i as u32);
+                scores.push(s);
+                stats.reported += 1;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -153,15 +153,44 @@ impl HalfSpaceReport for DynamicHsr {
                 stats.reported += 1;
             }
         }
-        // Buckets: query each static structure, remap local → global ids.
-        let mut local = Vec::new();
+        // Buckets: query each static structure straight into `out`, then
+        // remap the freshly appended local ids → global ids in place (no
+        // intermediate buffer — this path runs once per decoded token).
         for bucket in self.buckets.iter().flatten() {
-            local.clear();
-            let before = stats.reported;
-            bucket.index.query_into(a, b, &mut local, stats);
-            let _ = before;
-            for &l in &local {
-                out.push(bucket.ids[l as usize]);
+            let start = out.len();
+            bucket.index.query_into(a, b, out, stats);
+            for x in &mut out[start..] {
+                *x = bucket.ids[*x as usize];
+            }
+        }
+    }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        assert_eq!(a.len(), self.d);
+        // Tail: brute scan, score from the membership dot.
+        for (slot, &id) in self.tail_ids.iter().enumerate() {
+            stats.points_scanned += 1;
+            let p = &self.tail_points[slot * self.d..(slot + 1) * self.d];
+            let s = super::dot(p, a);
+            if s >= b {
+                out.push(id);
+                scores.push(s);
+                stats.reported += 1;
+            }
+        }
+        // Buckets: scores need no remapping, only the ids do.
+        for bucket in self.buckets.iter().flatten() {
+            let start = out.len();
+            bucket.index.query_scored_into(a, b, out, scores, stats);
+            for x in &mut out[start..] {
+                *x = bucket.ids[*x as usize];
             }
         }
     }

@@ -220,8 +220,17 @@ impl Layer {
     }
 
     /// Report the contiguous arc of vertices with <a,v> >= b around the
-    /// extreme vertex. Returns the maximum projection found.
-    fn report(&self, ax: f32, ay: f32, b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) -> f32 {
+    /// extreme vertex, optionally pushing each vertex's projection (= its
+    /// raw inner product) to `scores`. Returns the maximum projection.
+    fn report(
+        &self,
+        ax: f32,
+        ay: f32,
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Option<&mut Vec<f32>>,
+        stats: &mut QueryStats,
+    ) -> f32 {
         let h = self.len();
         if h == 0 {
             return f32::NEG_INFINITY;
@@ -232,13 +241,20 @@ impl Layer {
             return maxp;
         }
         out.push(self.ids[m]);
+        if let Some(sc) = scores.as_mut() {
+            sc.push(maxp);
+        }
         stats.reported += 1;
         // Walk forward.
         let mut i = (m + 1) % h;
         while i != m {
             stats.points_scanned += 1;
-            if self.proj(i, ax, ay) >= b {
+            let p = self.proj(i, ax, ay);
+            if p >= b {
                 out.push(self.ids[i]);
+                if let Some(sc) = scores.as_mut() {
+                    sc.push(p);
+                }
                 stats.reported += 1;
                 i = (i + 1) % h;
             } else {
@@ -254,8 +270,12 @@ impl Layer {
         let mut j = (m + h - 1) % h;
         while j != m && j != stop {
             stats.points_scanned += 1;
-            if self.proj(j, ax, ay) >= b {
+            let p = self.proj(j, ax, ay);
+            if p >= b {
                 out.push(self.ids[j]);
+                if let Some(sc) = scores.as_mut() {
+                    sc.push(p);
+                }
                 stats.reported += 1;
                 j = (j + h - 1) % h;
             } else {
@@ -276,6 +296,30 @@ impl HalfSpaceReport for ConvexLayers2d {
     }
 
     fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        self.query_impl(a, b, out, None, stats);
+    }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        self.query_impl(a, b, out, Some(scores), stats);
+    }
+}
+
+impl ConvexLayers2d {
+    fn query_impl(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        mut scores: Option<&mut Vec<f32>>,
+        stats: &mut QueryStats,
+    ) {
         assert_eq!(a.len(), 2);
         let (ax, ay) = (a[0], a[1]);
         if ax == 0.0 && ay == 0.0 {
@@ -283,6 +327,9 @@ impl HalfSpaceReport for ConvexLayers2d {
             if 0.0 >= b {
                 for layer in &self.layers {
                     out.extend_from_slice(&layer.ids);
+                    if let Some(sc) = scores.as_mut() {
+                        sc.resize(sc.len() + layer.len(), 0.0);
+                    }
                     stats.reported += layer.len();
                 }
             }
@@ -290,7 +337,7 @@ impl HalfSpaceReport for ConvexLayers2d {
         }
         for layer in &self.layers {
             stats.nodes_visited += 1;
-            let maxp = layer.report(ax, ay, b, out, stats);
+            let maxp = layer.report(ax, ay, b, out, &mut scores, stats);
             if maxp < b {
                 // Everything deeper is inside this hull → cannot qualify.
                 break;

@@ -84,6 +84,25 @@ pub trait HalfSpaceReport: Send + Sync {
     /// (order unspecified). `stats` accumulates work counters.
     fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats);
 
+    /// Score-carrying report: append every qualifying index to `out` AND
+    /// its raw inner product `<a, x_i>` to `scores` (parallel vectors,
+    /// order unspecified). Downstream consumers (softmax top-r, ReLU
+    /// evaluation) already need these inner products — reporting them
+    /// here means the dot the query paid for is never recomputed.
+    ///
+    /// Work counters keep [`HalfSpaceReport::query_into`] semantics:
+    /// `points_scanned` counts points evaluated *to decide membership*;
+    /// scoring a bulk-reported subtree is attention-side work and is not
+    /// counted as a scan.
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    );
+
     /// Convenience wrapper returning a fresh, sorted index vector.
     fn query(&self, a: &[f32], b: f32) -> Vec<u32> {
         let mut out = Vec::new();
@@ -91,6 +110,18 @@ pub trait HalfSpaceReport: Send + Sync {
         self.query_into(a, b, &mut out, &mut stats);
         out.sort_unstable();
         out
+    }
+
+    /// Convenience wrapper returning (index, raw-dot) pairs sorted by
+    /// index (tests / diagnostics; hot paths use `query_scored_into`).
+    fn query_scored(&self, a: &[f32], b: f32) -> Vec<(u32, f32)> {
+        let mut out = Vec::new();
+        let mut scores = Vec::new();
+        let mut stats = QueryStats::default();
+        self.query_scored_into(a, b, &mut out, &mut scores, &mut stats);
+        let mut pairs: Vec<(u32, f32)> = out.into_iter().zip(scores).collect();
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs
     }
 }
 
@@ -150,28 +181,12 @@ pub fn build_hsr(
     }
 }
 
-/// Inner product of two equal-length slices.
+/// Inner product of two equal-length slices. Thin alias for the
+/// runtime-dispatched SIMD kernel (kept here because every HSR backend
+/// and half the crate imports `hsr::dot`).
 #[inline(always)]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // Unrolled-by-4 accumulation: the hottest scalar loop in the crate.
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc0 += a[j] * b[j];
-        acc1 += a[j + 1] * b[j + 1];
-        acc2 += a[j + 2] * b[j + 2];
-        acc3 += a[j + 3] * b[j + 3];
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    for j in chunks * 4..a.len() {
-        acc += a[j] * b[j];
-    }
-    acc
+    crate::kernel::simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -219,6 +234,9 @@ mod tests {
         assert_eq!(HsrBackend::parse("balltree"), Some(HsrBackend::BallTree));
         assert_eq!(HsrBackend::parse("BRUTE"), Some(HsrBackend::Brute));
         assert_eq!(HsrBackend::parse("convex"), Some(HsrBackend::Layers2d));
+        assert_eq!(HsrBackend::parse("projected"), Some(HsrBackend::Projected));
+        assert_eq!(HsrBackend::parse("proj"), Some(HsrBackend::Projected));
+        assert_eq!(HsrBackend::parse("PCA"), Some(HsrBackend::Projected));
         assert_eq!(HsrBackend::parse("??"), None);
     }
 
@@ -231,18 +249,14 @@ mod tests {
             let d = [2usize, 3, 8, 16][trial % 4];
             let n = rng.range(1, 400);
             let points = gaussian_points(&mut rng, n, d, 1.0);
-            let backends: Vec<Box<dyn HalfSpaceReport>> = if d == 2 {
-                vec![
-                    build_hsr(HsrBackend::Brute, &points, d),
-                    build_hsr(HsrBackend::BallTree, &points, d),
-                    build_hsr(HsrBackend::Layers2d, &points, d),
-                ]
-            } else {
-                vec![
-                    build_hsr(HsrBackend::Brute, &points, d),
-                    build_hsr(HsrBackend::BallTree, &points, d),
-                ]
-            };
+            let mut backends: Vec<Box<dyn HalfSpaceReport>> = vec![
+                build_hsr(HsrBackend::Brute, &points, d),
+                build_hsr(HsrBackend::BallTree, &points, d),
+                build_hsr(HsrBackend::Projected, &points, d),
+            ];
+            if d == 2 {
+                backends.push(build_hsr(HsrBackend::Layers2d, &points, d));
+            }
             for _ in 0..5 {
                 let a = rng.gaussian_vec_f32(d, 1.0);
                 let b = rng.normal(0.0, 1.5) as f32;
@@ -250,6 +264,43 @@ mod tests {
                 for be in &backends {
                     let got = be.query(&a, b);
                     assert_eq!(got, expect, "n={n} d={d} b={b}");
+                }
+            }
+        }
+    }
+
+    /// Score-carrying queries report exactly the `query_into` set, with
+    /// each score equal to the raw inner product — on every backend.
+    #[test]
+    fn scored_queries_match_plain_plus_dots() {
+        let mut rng = Rng::new(43);
+        for trial in 0..20 {
+            let d = [2usize, 5, 8, 16][trial % 4];
+            let n = rng.range(1, 500);
+            let points = gaussian_points(&mut rng, n, d, 1.0);
+            let mut backends: Vec<Box<dyn HalfSpaceReport>> = vec![
+                build_hsr(HsrBackend::Brute, &points, d),
+                build_hsr(HsrBackend::BallTree, &points, d),
+                build_hsr(HsrBackend::Projected, &points, d),
+            ];
+            if d == 2 {
+                backends.push(build_hsr(HsrBackend::Layers2d, &points, d));
+            }
+            for _ in 0..4 {
+                let a = rng.gaussian_vec_f32(d, 1.0);
+                let b = rng.normal(0.0, 1.0) as f32;
+                let expect_idx = reference_query(&points, d, &a, b);
+                for be in &backends {
+                    let pairs = be.query_scored(&a, b);
+                    let idx: Vec<u32> = pairs.iter().map(|&(i, _)| i).collect();
+                    assert_eq!(idx, expect_idx, "n={n} d={d}");
+                    for &(i, s) in &pairs {
+                        let want = dot(&points[i as usize * d..(i as usize + 1) * d], &a);
+                        assert!(
+                            (s - want).abs() < 1e-4 * (1.0 + want.abs()),
+                            "n={n} d={d} i={i}: {s} vs {want}"
+                        );
+                    }
                 }
             }
         }

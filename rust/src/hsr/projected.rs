@@ -96,32 +96,74 @@ impl HalfSpaceReport for ProjectedHsr {
     }
 
     fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        self.query_filtered(a, b, out, None, stats);
+    }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        self.query_filtered(a, b, out, Some(scores), stats);
+    }
+}
+
+thread_local! {
+    /// Per-thread reusable (augmented-query, candidate) buffers so the
+    /// decode/prefill inner loops stay allocation-free. Reentrancy-safe:
+    /// the inner structure is a ball tree, which never queries back into
+    /// a `ProjectedHsr`.
+    static QUERY_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<u32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+}
+
+impl ProjectedHsr {
+    fn query_filtered(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        mut scores: Option<&mut Vec<f32>>,
+        stats: &mut QueryStats,
+    ) {
         assert_eq!(a.len(), self.d);
         if self.n == 0 {
             return;
         }
-        // Build the augmented query (P a, ||residual_a||).
-        let mut qa = vec![0f32; self.c + 1];
-        for (j, p) in self.proj.chunks_exact(self.d).enumerate() {
-            qa[j] = dot(p, a);
-        }
-        let head2 = dot(&qa[..self.c], &qa[..self.c]);
-        qa[self.c] = (dot(a, a) - head2).max(0.0).sqrt();
-        // Superset query on the inner structure, then exact filter.
-        let mut candidates = Vec::new();
-        self.inner.query_into(&qa, b, &mut candidates, stats);
-        // The bulk/report counters of the inner tree refer to candidates;
-        // the exact filter below is the extra scanned work.
-        stats.reported = 0;
-        stats.bulk_reported = 0;
-        for &i in &candidates {
-            stats.points_scanned += 1;
-            let x = &self.points[i as usize * self.d..(i as usize + 1) * self.d];
-            if dot(x, a) >= b {
-                out.push(i);
-                stats.reported += 1;
+        QUERY_SCRATCH.with(|cell| {
+            let (qa, candidates) = &mut *cell.borrow_mut();
+            // Build the augmented query (P a, ||residual_a||).
+            qa.clear();
+            qa.resize(self.c + 1, 0.0);
+            for (j, p) in self.proj.chunks_exact(self.d).enumerate() {
+                qa[j] = dot(p, a);
             }
-        }
+            let head2 = dot(&qa[..self.c], &qa[..self.c]);
+            qa[self.c] = (dot(a, a) - head2).max(0.0).sqrt();
+            // Superset query on the inner structure, then exact filter.
+            // The inner tree's reported/bulk counters refer to candidates,
+            // not true reports: restore them and count the filter output.
+            let (reported_before, bulk_before) = (stats.reported, stats.bulk_reported);
+            candidates.clear();
+            self.inner.query_into(qa, b, candidates, stats);
+            stats.reported = reported_before;
+            stats.bulk_reported = bulk_before;
+            for &i in candidates.iter() {
+                stats.points_scanned += 1;
+                let x = &self.points[i as usize * self.d..(i as usize + 1) * self.d];
+                let s = dot(x, a);
+                if s >= b {
+                    out.push(i);
+                    if let Some(sc) = scores.as_mut() {
+                        sc.push(s);
+                    }
+                    stats.reported += 1;
+                }
+            }
+        });
     }
 }
 

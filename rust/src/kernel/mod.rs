@@ -1,0 +1,26 @@
+//! Hardware-efficient kernel layer.
+//!
+//! The paper's speedup story is "evaluate attention only on the
+//! HSR-reported set" — which only pays off if the per-entry evaluation is
+//! itself hardware-efficient (the lesson of the SparseAccelerate /
+//! SampleAttention line of work). This module is that layer:
+//!
+//! * [`simd`] — runtime-dispatched 8-lane f32 micro-kernels (dot,
+//!   blocked dense scoring, gathered subset scoring, axpy, fused
+//!   max/sum-exp) with an AVX2+FMA path on x86_64 and a portable
+//!   unrolled fallback. Dispatch is detected once and cached; scalar
+//!   twins are exported for property tests and before/after benches.
+//! * [`scratch`] — the reusable per-thread [`Scratch`] arena (fire /
+//!   scores / selected / exp buffers) threaded through decode, prefill
+//!   and serving so the per-row inner loops perform no heap allocation.
+//!
+//! Layering: `hsr`, `attention`, `engine` and `model` all call down into
+//! this module; nothing here calls up. Every inner product in the crate
+//! (HSR pruning tests, leaf scans, score gathers, value accumulations,
+//! softmax rows) routes through these entry points, so a new ISA path
+//! added here accelerates every layer at once.
+
+pub mod scratch;
+pub mod simd;
+
+pub use scratch::Scratch;

@@ -1,0 +1,67 @@
+//! Reusable per-thread scratch arena for the attention hot paths.
+//!
+//! Algorithm 1/2 inner loops need four working buffers per query row: the
+//! HSR report, its raw scores, the top-r selection, and the activation
+//! values that the weighted sum consumes (exps for softmax, ReLU^α powers
+//! for ReLU). Allocating them per row costs more than the attention math
+//! itself at paper-regime sparsity (k ≈ n^{4/5} entries of a few bytes),
+//! so the engine threads one [`Scratch`] through every row instead:
+//! decode structures own one, serial prefill owns one, and each parallel
+//! prefill shard owns one. Buffers only ever grow (`clear` keeps
+//! capacity), so steady state performs zero heap allocation per row.
+
+/// Reusable buffers for one attention worker (one thread).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// HSR-reported key indices.
+    pub fire: Vec<u32>,
+    /// Raw inner products parallel to `fire` (score-carrying queries).
+    pub scores: Vec<f32>,
+    /// Top-r subset of `fire` (global key indices, ascending).
+    pub selected: Vec<u32>,
+    /// Activation buffer for the evaluated subset: scaled scores in,
+    /// exp/ReLU^α weights out (transformed in place by the row kernels).
+    pub exps: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Pre-size every buffer for reports of about `k` entries.
+    pub fn with_capacity(k: usize) -> Scratch {
+        Scratch {
+            fire: Vec::with_capacity(k),
+            scores: Vec::with_capacity(k),
+            selected: Vec::with_capacity(k),
+            exps: Vec::with_capacity(k),
+        }
+    }
+
+    /// Clear all buffers, retaining capacity.
+    pub fn clear(&mut self) {
+        self.fire.clear();
+        self.scores.clear();
+        self.selected.clear();
+        self.exps.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clear_retains_capacity() {
+        let mut s = Scratch::with_capacity(64);
+        s.fire.extend(0..100u32);
+        s.scores.extend((0..100).map(|x| x as f32));
+        let cap_fire = s.fire.capacity();
+        let cap_scores = s.scores.capacity();
+        s.clear();
+        assert!(s.fire.is_empty() && s.scores.is_empty());
+        assert_eq!(s.fire.capacity(), cap_fire);
+        assert_eq!(s.scores.capacity(), cap_scores);
+    }
+}

@@ -1,0 +1,567 @@
+//! Runtime-dispatched 8-lane f32 micro-kernels.
+//!
+//! Every inner product, gathered score, weighted accumulation and softmax
+//! row in the crate funnels through these entry points. On x86_64 with
+//! AVX2+FMA (detected once at first use, cached in an atomic) the wide
+//! paths run 8 lanes per instruction with fused multiply-add; everywhere
+//! else a portable unrolled scalar path is used. The scalar twins are
+//! `pub` so property tests and the before/after kernel benches can pin a
+//! path explicitly.
+//!
+//! Numerical contract: SIMD and scalar paths may differ by float
+//! associativity/FMA rounding only (≤ ~1e-6 relative on attention-scale
+//! inputs; asserted to 1e-5 in the property tests below). Within one
+//! process every call site uses the *same* dispatched path, so exactness
+//! arguments that compare two sparse evaluations (e.g. ReLU sparse vs
+//! dense) are unaffected.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNKNOWN: u8 = 0;
+const SCALAR: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const AVX2: u8 = 2;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNKNOWN);
+
+#[inline(always)]
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != UNKNOWN {
+        l
+    } else {
+        detect()
+    }
+}
+
+#[cold]
+fn detect() -> u8 {
+    #[cfg(target_arch = "x86_64")]
+    let l = if std::arch::is_x86_64_feature_detected!("avx2")
+        && std::arch::is_x86_64_feature_detected!("fma")
+    {
+        AVX2
+    } else {
+        SCALAR
+    };
+    #[cfg(not(target_arch = "x86_64"))]
+    let l = SCALAR;
+    LEVEL.store(l, Ordering::Relaxed);
+    l
+}
+
+/// Name of the active dispatch path (for bench reports / diagnostics).
+pub fn dispatch_name() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return "avx2+fma";
+    }
+    "scalar"
+}
+
+/// Force the scalar path on (or restore auto-detection with `false`).
+/// Process-global; intended ONLY for single-threaded benches that need a
+/// pre-SIMD baseline and for dispatch tests.
+pub fn force_scalar(enable: bool) {
+    LEVEL.store(if enable { SCALAR } else { UNKNOWN }, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// dot
+// ---------------------------------------------------------------------------
+
+/// Inner product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // Hard assert: the AVX2 path walks raw pointers over both slices, so
+    // a length mismatch would be OOB UB, not a panic, without this.
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::dot(a, b) };
+    }
+    dot_scalar(a, b)
+}
+
+/// Portable unrolled-by-4 inner product (the pre-SIMD hot loop).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] * b[j];
+        acc1 += a[j + 1] * b[j + 1];
+        acc2 += a[j + 2] * b[j + 2];
+        acc3 += a[j + 3] * b[j + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for j in chunks * 4..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------------
+// axpy
+// ---------------------------------------------------------------------------
+
+/// out += w * x (equal lengths).
+#[inline]
+pub fn axpy(out: &mut [f32], x: &[f32], w: f32) {
+    // Hard assert: guards the raw-pointer AVX2 store loop (see `dot`).
+    assert_eq!(out.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::axpy(out, x, w) };
+    }
+    axpy_scalar(out, x, w)
+}
+
+/// Portable out += w * x.
+#[inline]
+pub fn axpy_scalar(out: &mut [f32], x: &[f32], w: f32) {
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += w * v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// blocked dense scoring
+// ---------------------------------------------------------------------------
+
+/// Dense scoring: out[j] = <q, keys[j]> * scale for j in 0..out.len().
+/// The AVX2 path processes key rows in blocks of 4 sharing each 8-lane
+/// load of q (the "blocked" kernel the dense scan and brute HSR use).
+#[inline]
+pub fn scaled_dots_into(q: &[f32], keys: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+    // Hard asserts (once per call): the AVX2 path walks raw pointers over
+    // `q` and all key rows, so these bounds are the only OOB guard.
+    assert!(keys.len() >= out.len() * d);
+    assert_eq!(q.len(), d);
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::scaled_dots_into(q, keys, d, scale, out) };
+    }
+    scaled_dots_into_scalar(q, keys, d, scale, out)
+}
+
+/// Portable dense scoring.
+#[inline]
+pub fn scaled_dots_into_scalar(q: &[f32], keys: &[f32], d: usize, scale: f32, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(q, &keys[j * d..(j + 1) * d]) * scale;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gathered subset scoring
+// ---------------------------------------------------------------------------
+
+/// Gathered scoring: for each index j in `idx`, push <q, keys[j]> * scale.
+/// `out` is cleared first.
+#[inline]
+pub fn gathered_scaled_dots_into(
+    q: &[f32],
+    keys: &[f32],
+    d: usize,
+    idx: &[u32],
+    scale: f32,
+    out: &mut Vec<f32>,
+) {
+    // Hard assert: each gathered row has length d; the AVX2 dot walks raw
+    // pointers over q as well, so q must match exactly.
+    assert_eq!(q.len(), d);
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        out.clear();
+        out.reserve(idx.len());
+        for &j in idx {
+            let j = j as usize;
+            out.push(unsafe { x86::dot(q, &keys[j * d..(j + 1) * d]) } * scale);
+        }
+        return;
+    }
+    gathered_scaled_dots_into_scalar(q, keys, d, idx, scale, out)
+}
+
+/// Portable gathered scoring.
+#[inline]
+pub fn gathered_scaled_dots_into_scalar(
+    q: &[f32],
+    keys: &[f32],
+    d: usize,
+    idx: &[u32],
+    scale: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(idx.len());
+    for &j in idx {
+        let j = j as usize;
+        out.push(dot_scalar(q, &keys[j * d..(j + 1) * d]) * scale);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// max / fused softmax row
+// ---------------------------------------------------------------------------
+
+/// Maximum element (NEG_INFINITY for an empty slice).
+#[inline]
+pub fn max(xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::max(xs) };
+    }
+    max_scalar(xs)
+}
+
+/// Portable maximum element.
+#[inline]
+pub fn max_scalar(xs: &[f32]) -> f32 {
+    xs.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// Fused stable-softmax row primitive: finds the max (SIMD), replaces each
+/// score with exp(score − max) **in place** (caching the exps so the
+/// weighted-sum pass never recomputes them), and returns the sum of exps.
+/// Returns 0.0 for an empty slice.
+#[inline]
+pub fn softmax_exp_in_place(scores: &mut [f32]) -> f32 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let m = max(scores);
+    exp_sub_in_place_sum(scores, m)
+}
+
+/// Scalar twin of [`softmax_exp_in_place`].
+#[inline]
+pub fn softmax_exp_in_place_scalar(scores: &mut [f32]) -> f32 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let m = max_scalar(scores);
+    exp_sub_in_place_sum(scores, m)
+}
+
+/// s_i ← exp(s_i − m), returning Σ exp(s_i − m). exp itself is scalar on
+/// every path (no vector exp without libm); the win is caching.
+#[inline]
+fn exp_sub_in_place_sum(scores: &mut [f32], m: f32) -> f32 {
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut() {
+        let e = (*s - m).exp();
+        *s = e;
+        sum += e;
+    }
+    sum
+}
+
+// ---------------------------------------------------------------------------
+// x86_64 AVX2+FMA paths
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0x55>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hmax256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let lo = _mm256_castps256_ps128(v);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+        _mm_cvtss_f32(m)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let bp = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i)),
+                _mm256_loadu_ps(bp.add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i + 8)),
+                _mm256_loadu_ps(bp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(ap.add(i)),
+                _mm256_loadu_ps(bp.add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let mut acc = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            acc += *ap.add(i) * *bp.add(i);
+            i += 1;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(out: &mut [f32], x: &[f32], w: f32) {
+        let n = out.len();
+        let op = out.as_mut_ptr();
+        let xp = x.as_ptr();
+        let vw = _mm256_set1_ps(w);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vo = _mm256_loadu_ps(op.add(i));
+            let vx = _mm256_loadu_ps(xp.add(i));
+            _mm256_storeu_ps(op.add(i), _mm256_fmadd_ps(vw, vx, vo));
+            i += 8;
+        }
+        while i < n {
+            *op.add(i) += w * *xp.add(i);
+            i += 1;
+        }
+    }
+
+    /// Blocked dense scoring: 4 key rows per outer step share each 8-lane
+    /// load of q, quadrupling FMA throughput per load.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scaled_dots_into(
+        q: &[f32],
+        keys: &[f32],
+        d: usize,
+        scale: f32,
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let qp = q.as_ptr();
+        let kp = keys.as_ptr();
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let r0 = kp.add(j * d);
+            let r1 = kp.add((j + 1) * d);
+            let r2 = kp.add((j + 2) * d);
+            let r3 = kp.add((j + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= d {
+                let vq = _mm256_loadu_ps(qp.add(i));
+                a0 = _mm256_fmadd_ps(vq, _mm256_loadu_ps(r0.add(i)), a0);
+                a1 = _mm256_fmadd_ps(vq, _mm256_loadu_ps(r1.add(i)), a1);
+                a2 = _mm256_fmadd_ps(vq, _mm256_loadu_ps(r2.add(i)), a2);
+                a3 = _mm256_fmadd_ps(vq, _mm256_loadu_ps(r3.add(i)), a3);
+                i += 8;
+            }
+            let mut s0 = hsum256(a0);
+            let mut s1 = hsum256(a1);
+            let mut s2 = hsum256(a2);
+            let mut s3 = hsum256(a3);
+            while i < d {
+                let qv = *qp.add(i);
+                s0 += qv * *r0.add(i);
+                s1 += qv * *r1.add(i);
+                s2 += qv * *r2.add(i);
+                s3 += qv * *r3.add(i);
+                i += 1;
+            }
+            *out.get_unchecked_mut(j) = s0 * scale;
+            *out.get_unchecked_mut(j + 1) = s1 * scale;
+            *out.get_unchecked_mut(j + 2) = s2 * scale;
+            *out.get_unchecked_mut(j + 3) = s3 * scale;
+            j += 4;
+        }
+        while j < n {
+            *out.get_unchecked_mut(j) = dot(q, &keys[j * d..(j + 1) * d]) * scale;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn max(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        if n == 0 {
+            return f32::NEG_INFINITY;
+        }
+        let xp = xs.as_ptr();
+        let mut i = 0usize;
+        let mut m = f32::NEG_INFINITY;
+        if n >= 8 {
+            let mut acc = _mm256_loadu_ps(xp);
+            i = 8;
+            while i + 8 <= n {
+                acc = _mm256_max_ps(acc, _mm256_loadu_ps(xp.add(i)));
+                i += 8;
+            }
+            m = hmax256(acc);
+        }
+        while i < n {
+            m = m.max(*xp.add(i));
+            i += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    fn close(got: f32, want: f64, len: usize) -> bool {
+        // 1e-5 relative to the magnitude scale of a length-`len` Gaussian
+        // inner product; absolute floor covers near-cancellation cases.
+        let scale = 1.0 + want.abs() + (len as f64).sqrt();
+        ((got as f64) - want).abs() < 1e-5 * scale
+    }
+
+    /// SIMD and scalar dot agree to 1e-5 on random lengths, covering every
+    /// remainder-lane count 0–7 and the 16/8-stride main loops.
+    #[test]
+    fn dot_simd_matches_scalar_all_remainders() {
+        let mut rng = Rng::new(71);
+        let mut lens: Vec<usize> = (0..=40).collect();
+        lens.extend([63, 64, 65, 127, 128, 129, 1000]);
+        for &len in &lens {
+            let a = rng.gaussian_vec_f32(len, 1.0);
+            let b = rng.gaussian_vec_f32(len, 1.0);
+            let want = naive_dot(&a, &b);
+            let simd = dot(&a, &b);
+            let scalar = dot_scalar(&a, &b);
+            assert!(close(simd, want, len), "simd len={len}: {simd} vs {want}");
+            assert!(close(scalar, want, len), "scalar len={len}");
+            assert!(
+                (simd - scalar).abs() < 1e-5 * (1.0 + scalar.abs() + (len as f32).sqrt()),
+                "len={len}: simd {simd} scalar {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_simd_matches_scalar() {
+        let mut rng = Rng::new(72);
+        for len in [0usize, 1, 5, 7, 8, 9, 16, 31, 64, 100] {
+            let x = rng.gaussian_vec_f32(len, 1.0);
+            let base = rng.gaussian_vec_f32(len, 1.0);
+            let w = rng.normal(0.0, 2.0) as f32;
+            let mut a = base.clone();
+            let mut b = base.clone();
+            axpy(&mut a, &x, w);
+            axpy_scalar(&mut b, &x, w);
+            for i in 0..len {
+                assert!((a[i] - b[i]).abs() < 1e-5, "len={len} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_dots_simd_matches_scalar() {
+        let mut rng = Rng::new(73);
+        for &(n, d) in &[(0usize, 4usize), (1, 3), (3, 8), (4, 16), (5, 7), (17, 64), (33, 11)] {
+            let q = rng.gaussian_vec_f32(d, 1.0);
+            let keys = rng.gaussian_vec_f32(n * d, 1.0);
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut simd = vec![0f32; n];
+            let mut scalar = vec![0f32; n];
+            scaled_dots_into(&q, &keys, d, scale, &mut simd);
+            scaled_dots_into_scalar(&q, &keys, d, scale, &mut scalar);
+            for j in 0..n {
+                let tol = 1e-5 * (1.0 + scalar[j].abs() + (d as f32).sqrt());
+                assert!((simd[j] - scalar[j]).abs() < tol, "n={n} d={d} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gathered_dots_match_dense() {
+        let mut rng = Rng::new(74);
+        let (n, d) = (50usize, 13usize);
+        let q = rng.gaussian_vec_f32(d, 1.0);
+        let keys = rng.gaussian_vec_f32(n * d, 1.0);
+        let scale = 0.25f32;
+        let mut dense = vec![0f32; n];
+        scaled_dots_into(&q, &keys, d, scale, &mut dense);
+        let idx: Vec<u32> = (0..n as u32).step_by(3).collect();
+        let mut gathered = Vec::new();
+        gathered_scaled_dots_into(&q, &keys, d, &idx, scale, &mut gathered);
+        let mut gathered_sc = Vec::new();
+        gathered_scaled_dots_into_scalar(&q, &keys, d, &idx, scale, &mut gathered_sc);
+        for (t, &j) in idx.iter().enumerate() {
+            assert!((gathered[t] - dense[j as usize]).abs() < 1e-5);
+            assert!((gathered[t] - gathered_sc[t]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn max_simd_matches_scalar() {
+        let mut rng = Rng::new(75);
+        assert_eq!(max(&[]), f32::NEG_INFINITY);
+        for len in [1usize, 2, 7, 8, 9, 15, 16, 17, 100] {
+            let xs = rng.gaussian_vec_f32(len, 3.0);
+            assert_eq!(max(&xs), max_scalar(&xs), "len={len}");
+        }
+    }
+
+    #[test]
+    fn softmax_exp_in_place_matches_two_pass() {
+        let mut rng = Rng::new(76);
+        for len in [0usize, 1, 5, 8, 13, 64, 200] {
+            let scores = rng.gaussian_vec_f32(len, 2.0);
+            let m = max_scalar(&scores);
+            let want_denom: f32 = scores.iter().map(|&s| (s - m).exp()).sum();
+            let mut cached = scores.clone();
+            let denom = softmax_exp_in_place(&mut cached);
+            let mut cached_sc = scores.clone();
+            let denom_sc = softmax_exp_in_place_scalar(&mut cached_sc);
+            if len == 0 {
+                assert_eq!(denom, 0.0);
+                continue;
+            }
+            assert!((denom - want_denom).abs() < 1e-4 * (1.0 + want_denom.abs()));
+            assert!((denom - denom_sc).abs() < 1e-4 * (1.0 + want_denom.abs()));
+            for i in 0..len {
+                assert!((cached[i] - (scores[i] - m).exp()).abs() < 1e-6);
+            }
+        }
+    }
+
+    // NOTE: `force_scalar` is deliberately not exercised here — cargo
+    // runs tests concurrently and flipping the process-global dispatch
+    // mid-run would race the exact-equality assertions of other tests.
+    // The single-threaded bench binary is its only intended caller.
+    #[test]
+    fn dispatch_reports_a_known_path() {
+        let name = dispatch_name();
+        assert!(name == "avx2+fma" || name == "scalar", "unexpected: {name}");
+    }
+}

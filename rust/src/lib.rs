@@ -7,6 +7,8 @@
 //! in a continuous-batching serving engine.
 //!
 //! Layer map (see DESIGN.md):
+//! * [`kernel`] — runtime-dispatched SIMD micro-kernels and the
+//!   per-thread scratch arena every hot path above is built on.
 //! * [`hsr`] — the HSR substrate (Algorithm 3, Corollary 3.1).
 //! * [`attention`] — ReLU^α / Softmax attention math, thresholds
 //!   (Lemma 6.1), top-r selection (Definition B.2), error bounds
@@ -26,6 +28,7 @@ pub mod attention;
 pub mod bench;
 pub mod engine;
 pub mod hsr;
+pub mod kernel;
 pub mod model;
 pub mod runtime;
 pub mod server;

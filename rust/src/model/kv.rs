@@ -76,6 +76,34 @@ impl HeadKv {
         }
     }
 
+    /// Score-carrying HSR query: like [`HeadKv::hsr_query`] but also
+    /// reports each index's raw inner product, so the attention evaluator
+    /// never recomputes dots the query already paid for.
+    pub fn hsr_query_scored(
+        &self,
+        q: &[f32],
+        b_raw: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        match &self.hsr {
+            Some(hsr) => hsr.query_scored_into(q, b_raw, out, scores, stats),
+            None => {
+                let n = self.len();
+                stats.points_scanned += n;
+                for j in 0..n {
+                    let s = crate::hsr::dot(q, self.key_row(j));
+                    if s >= b_raw {
+                        out.push(j as u32);
+                        scores.push(s);
+                        stats.reported += 1;
+                    }
+                }
+            }
+        }
+    }
+
     #[inline]
     pub fn key_row(&self, j: usize) -> &[f32] {
         &self.keys[j * self.d_head..(j + 1) * self.d_head]

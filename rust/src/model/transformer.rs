@@ -16,8 +16,8 @@
 
 use super::kv::KvState;
 use super::Model;
-use crate::attention::softmax::{softmax_attention_row_subset, log_sum_exp};
-use crate::attention::topk::{rth_largest, top_r_of_subset};
+use crate::attention::softmax::{log_sum_exp, softmax_attention_row_scored};
+use crate::attention::topk::{rth_largest, top_r_select_into};
 use crate::hsr::QueryStats;
 use crate::util::tensor_io::Tensor;
 
@@ -85,6 +85,7 @@ pub struct Workspace {
     scores: Vec<f32>,
     cand: Vec<u32>,
     cand_scores: Vec<f32>,
+    selected: Vec<u32>,
     logits: Vec<f32>,
 }
 
@@ -104,6 +105,7 @@ impl Workspace {
             scores: Vec::new(),
             cand: Vec::new(),
             cand_scores: Vec::new(),
+            selected: Vec::new(),
             logits: vec![0.0; c.vocab],
         }
     }
@@ -119,10 +121,7 @@ fn matvec(x: &[f32], w: &Tensor, out: &mut [f32]) {
     for i in 0..d_in {
         let xi = x[i];
         let row = &w.data[i * d_out..(i + 1) * d_out];
-        // axpy over the row: autovectorizes well.
-        for (o, &wv) in out.iter_mut().zip(row) {
-            *o += xi * wv;
-        }
+        crate::kernel::simd::axpy(out, row, xi);
     }
 }
 
@@ -195,6 +194,7 @@ impl Model {
                     &mut ws.scores,
                     &mut ws.cand,
                     &mut ws.cand_scores,
+                    &mut ws.selected,
                     &mut ws.att[s..e],
                     stats,
                 );
@@ -271,6 +271,9 @@ impl Model {
 }
 
 /// One head of cached attention under a policy. `out` has length d_head.
+/// All buffers come from the per-engine [`Workspace`]; the HSR query
+/// carries raw scores out with the report, so no inner product is ever
+/// computed twice on this path.
 #[allow(clippy::too_many_arguments)]
 fn attend_head(
     hk: &mut super::kv::HeadKv,
@@ -280,59 +283,57 @@ fn attend_head(
     scores: &mut Vec<f32>,
     cand: &mut Vec<u32>,
     cand_scores: &mut Vec<f32>,
+    selected: &mut Vec<u32>,
     out: &mut [f32],
     stats: &mut StepStats,
 ) {
     let n = hk.len();
+    let inv_sqrt_d = 1.0 / (d_head as f32).sqrt();
     stats.dense_equivalent += n;
     let r = match policy {
         AttentionPolicy::Dense => n,
         AttentionPolicy::TopR(spec) => spec.r_for(n),
     };
     if r >= n {
-        // Dense (or top-r covering everything): softmax over all rows.
-        crate::attention::scores_into(q, &hk.keys, d_head, {
-            scores.resize(n, 0.0);
-            scores
-        });
-        // Reuse the subset path with the full index set? Cheaper: direct.
-        let idx_all: &mut Vec<u32> = cand;
-        idx_all.clear();
-        idx_all.extend(0..n as u32);
-        softmax_attention_row_subset(q, &hk.keys, &hk.values, d_head, idx_all, cand_scores, out);
+        // Dense (or top-r covering everything): one blocked scoring pass,
+        // one fused softmax — no index set, no second dot pass.
+        crate::attention::softmax::softmax_attention_row(
+            q, &hk.keys, &hk.values, d_head, scores, out,
+        );
         stats.attended += n;
         return;
     }
 
-    // --- Algorithm 1 inference: HSR query, then exact top-r. ---
+    // --- Algorithm 1 inference: scored HSR query, then exact top-r. ---
     // The HSR threshold lives on the raw inner product <q, k>.
     let mut b_raw = hk.calib_threshold.unwrap_or(f32::NEG_INFINITY);
     cand.clear();
+    cand_scores.clear();
     let mut q_stats = QueryStats::default();
-    hk.hsr_query(q, b_raw, cand, &mut q_stats);
+    hk.hsr_query_scored(q, b_raw, cand, cand_scores, &mut q_stats);
     if cand.len() < r {
         // Calibration miss: fall back to the full half-space (b = -inf ≡
         // brute top-r) and recalibrate. Exactness is never compromised.
         stats.fallbacks += 1;
         cand.clear();
-        hk.hsr_query(q, f32::NEG_INFINITY, cand, &mut q_stats);
+        cand_scores.clear();
+        hk.hsr_query_scored(q, f32::NEG_INFINITY, cand, cand_scores, &mut q_stats);
     }
     stats.hsr.add(&q_stats);
-    // Raw scores of the candidates (for selection and recalibration).
-    cand_scores.clear();
-    for &j in cand.iter() {
-        cand_scores.push(crate::hsr::dot(q, hk.key_row(j as usize)));
-    }
     // Recalibrate: aim the next report at ~CALIBRATION_SLACK * r.
     let target = ((r as f32 * CALIBRATION_SLACK) as usize).min(cand.len());
     if target >= 1 {
         b_raw = rth_largest(cand_scores, target);
         hk.calib_threshold = Some(b_raw);
     }
-    // Exact top-r over the candidate superset (= true NN(r, q, K)).
-    let selected = top_r_of_subset(cand, cand_scores, r);
+    // Exact top-r over the candidate superset (= true NN(r, q, K)),
+    // carrying the already-paid-for scores into the softmax.
+    top_r_select_into(cand, cand_scores, r, selected, scores);
+    for s in scores.iter_mut() {
+        *s *= inv_sqrt_d;
+    }
     stats.attended += selected.len();
-    softmax_attention_row_subset(q, &hk.keys, &hk.values, d_head, &selected, cand_scores, out);
+    softmax_attention_row_scored(selected, scores, &hk.values, d_head, out);
 }
 
 /// Greedy argmax sampling.

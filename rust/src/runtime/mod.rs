@@ -8,22 +8,33 @@
 //! executables, (b) executing the L1 Pallas masked-attention kernels from
 //! rust, and (c) cross-validating the native rust forward against the JAX
 //! lowering (golden tests in `rust/tests/`).
+//!
+//! The `xla` bindings crate is not part of the hermetic dependency set,
+//! so the real client is gated behind the `pjrt` cargo feature. Without
+//! it this module compiles to a stub whose constructor returns an error —
+//! callers (CLI `info`, runtime tests) already handle the
+//! artifacts-unavailable path gracefully.
 
 pub mod artifact;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::path::{Path, PathBuf};
+
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
 pub use artifact::{ArtifactManifest, ArtifactSpec, IoSpec};
 
 /// A compiled HLO executable plus its I/O description.
 pub struct Executable {
     pub name: String,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The PJRT CPU runtime: one client, many compiled artifacts.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     pub artifacts_dir: PathBuf,
     pub manifest: ArtifactManifest,
@@ -51,6 +62,7 @@ impl Buffer {
         Buffer::I32(data, shape)
     }
 
+    #[cfg(feature = "pjrt")]
     fn to_literal(&self) -> Result<xla::Literal> {
         Ok(match self {
             Buffer::F32(data, shape) => {
@@ -73,6 +85,7 @@ impl Buffer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client and read the artifact manifest.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
@@ -126,6 +139,35 @@ impl Runtime {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub constructor: the manifest is still parsed (so `info`-style
+    /// callers see the artifact inventory in the error path), but no PJRT
+    /// client exists without the `pjrt` feature.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let _manifest = ArtifactManifest::load(&artifacts_dir.join("manifest.json"))?;
+        anyhow::bail!(
+            "PJRT runtime unavailable: hsr-attn was built without the `pjrt` \
+             feature (the xla bindings are not in the hermetic dependency set)"
+        )
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt)".to_string()
+    }
+
+    /// Stub: always errors.
+    pub fn load(&self, key: &str) -> Result<Executable> {
+        anyhow::bail!("cannot load artifact '{key}': built without the `pjrt` feature")
+    }
+
+    /// Stub: always errors.
+    pub fn execute(&self, _exe: &Executable, _inputs: &[Buffer]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("cannot execute: built without the `pjrt` feature")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,5 +184,17 @@ mod tests {
     #[should_panic]
     fn buffer_shape_mismatch_panics() {
         let _ = Buffer::f32(vec![1.0; 3], vec![2, 2]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_errors_cleanly() {
+        // Missing manifest errors first; either way it must not panic.
+        match Runtime::new(std::path::Path::new("/nonexistent")) {
+            Err(e) => {
+                let _ = e.to_string();
+            }
+            Ok(_) => panic!("stub Runtime::new must error"),
+        }
     }
 }

@@ -1,0 +1,175 @@
+//! Local shim for the `anyhow` API surface this workspace uses.
+//!
+//! The repo's dependency policy is "no crates.io fetches" — every build
+//! input lives in-tree. This crate provides the subset of `anyhow` that
+//! hsr-attn relies on (`Error`, `Result`, `anyhow!`, `bail!`, `ensure!`,
+//! `Context`) with the same calling conventions, so application code is
+//! source-compatible with the real crate should it ever be vendored.
+//!
+//! Differences from upstream: errors carry a flattened message string
+//! (context frames are prefixed `"{context}: {cause}"`) instead of a
+//! source chain, and there is no downcasting.
+
+use std::fmt;
+
+/// A flattened error value. Like upstream `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error` — that is what
+/// makes the blanket `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix a context frame onto the message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result` with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(,)?) => {
+        $crate::Error::msg(format!($fmt))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(format!(
+                "condition failed: {}",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e)?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn inner(x: usize) -> Result<usize> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(inner(3).unwrap(), 3);
+        assert!(inner(0).unwrap_err().to_string().contains("positive"));
+        assert!(inner(11).unwrap_err().to_string().contains("too big"));
+        let with_ctx: Result<usize> = inner(0).context("parsing config");
+        let msg = with_ctx.unwrap_err().to_string();
+        assert!(msg.starts_with("parsing config: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(err.to_string(), "missing field");
+        assert_eq!(Some(5u32).context("x").unwrap(), 5);
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        let b = anyhow!("fmt {} {}", 1, 2);
+        let e = "boom";
+        let c = anyhow!("{e}");
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "fmt 1 2");
+        assert_eq!(c.to_string(), "boom");
+    }
+}

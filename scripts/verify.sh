@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Repo verification: format, build, tests, and the kernel perf smoke run.
+#
+# Usage: scripts/verify.sh [--no-bench]
+#
+# The bench step runs only the kernel section of benches/hsr_structures.rs
+# and emits BENCH_kernels.json at the repo root (before/after ns-per-row
+# for dot, scores_into, the softmax row, and end-to-end prefill), so the
+# perf trajectory across PRs is machine-readable.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [[ "${1:-}" != "--no-bench" ]]; then
+    echo "== kernel perf smoke (BENCH_kernels.json) =="
+    cargo bench --bench hsr_structures -- --kernels-only
+    echo "report: $(cd .. && pwd)/BENCH_kernels.json"
+fi
+
+echo "verify: OK"
