@@ -12,14 +12,117 @@ use hsr_attn::bench::{banner, black_box, Bencher};
 use hsr_attn::engine::GenerationDecoding;
 use hsr_attn::hsr::HsrBackend;
 use hsr_attn::util::cli::Args;
+use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
 use hsr_attn::util::stats::{fmt_ns, power_fit};
 use hsr_attn::workloads::gaussian::AttentionInstance;
+
+struct BatchCase {
+    backend: &'static str,
+    batch: usize,
+    serial_ns_per_token: f64,
+    batched_ns_per_token: f64,
+}
+
+impl BatchCase {
+    fn speedup(&self) -> f64 {
+        self.serial_ns_per_token / self.batched_ns_per_token
+    }
+}
+
+/// Batched vs serial continuous-batch decode: B query rows over one KV
+/// cache, `inference_row` loop (serial) against `inference_batch`
+/// (fused union/bucket gathers + sharded worker threads). Outputs are
+/// bit-identical (asserted in `engine::decode` tests); this measures the
+/// wall-clock side and emits `BENCH_decode.json` at the repo root.
+fn batched_decode_section(args: &Args, bench: &Bencher) {
+    let d = args.usize_or("d", 8);
+    let n = args.usize_or("batch-n", 65_536);
+    let batches = args.usize_list_or("batches", &[1, 8, 32]);
+    let backends = [HsrBackend::BallTree, HsrBackend::Projected, HsrBackend::Brute];
+    let max_b = batches.iter().copied().max().unwrap_or(1);
+    let mut rng = Rng::new(90);
+    let inst = AttentionInstance::gaussian(&mut rng, max_b, n, d);
+    let bias = inst.params.practical_bias(n) as f32;
+    let kind = AttentionKind::Relu { alpha: 2, bias };
+
+    println!("\n== batched vs serial decode, ReLU^2, n = {n}, d = {d} ==");
+    println!(
+        "{:>10} {:>6} | {:>14} {:>14} {:>8}",
+        "backend", "B", "serial ns/tok", "batched ns/tok", "speedup"
+    );
+    let mut cases: Vec<BatchCase> = Vec::new();
+    for backend in backends {
+        let mut gd = GenerationDecoding::init(&inst.k, &inst.v, d, bias, kind, backend);
+        for &b in &batches {
+            let q = &inst.q[..b * d];
+            let mut out = vec![0f32; b * d];
+            let mut fired = vec![0usize; b];
+            let serial = bench.run(&format!("serial/{}/b={b}", backend.name()), || {
+                for i in 0..b {
+                    let (s, e) = (i * d, (i + 1) * d);
+                    black_box(gd.inference_row(&q[s..e], &mut out[s..e]));
+                }
+            });
+            let batched = bench.run(&format!("batched/{}/b={b}", backend.name()), || {
+                gd.inference_batch_into(q, &mut out, &mut fired);
+                black_box(fired[0]);
+            });
+            let case = BatchCase {
+                backend: backend.name(),
+                batch: b,
+                serial_ns_per_token: serial.median_ns / b as f64,
+                batched_ns_per_token: batched.median_ns / b as f64,
+            };
+            println!(
+                "{:>10} {:>6} | {:>14.1} {:>14.1} {:>7.2}x",
+                case.backend,
+                case.batch,
+                case.serial_ns_per_token,
+                case.batched_ns_per_token,
+                case.speedup()
+            );
+            cases.push(case);
+        }
+    }
+
+    // Machine-readable report at the repo root.
+    let mut root = Json::obj();
+    root.set("dispatch", hsr_attn::kernel::simd::dispatch_name().into());
+    root.set(
+        "threads",
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).into(),
+    );
+    root.set("n", n.into());
+    root.set("d", d.into());
+    let items: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("backend", c.backend.into())
+                .set("batch", c.batch.into())
+                .set("serial_ns_per_token", c.serial_ns_per_token.into())
+                .set("batched_ns_per_token", c.batched_ns_per_token.into())
+                .set("speedup", c.speedup().into());
+            o
+        })
+        .collect();
+    root.set("cases", Json::Arr(items));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
 
 fn main() {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
     banner("decode_time", "paper Theorems 4.1/4.2 (decode O(mn^{4/5}) vs O(mn))");
     let bench = Bencher::quick();
+    if args.flag("batched-only") {
+        batched_decode_section(&args, &bench);
+        return;
+    }
     let d = args.usize_or("d", 8);
     let m = args.usize_or("m", 8);
     let ns = args.usize_list_or("ns", &[4_096, 16_384, 65_536, 262_144]);
@@ -55,8 +158,12 @@ fn main() {
             });
             // Algorithm 1 (init outside the timed loop: the decoding
             // scenario amortizes INIT over the whole generation).
+            // threads = 1: this section measures the single-threaded
+            // algorithmic n^0.8 scaling; the batched section below is
+            // where threading is benchmarked explicitly.
             let mut gd =
                 GenerationDecoding::init(&inst.k, &inst.v, d, bias, kind, HsrBackend::BallTree);
+            gd.threads = 1;
             if matches!(kind, AttentionKind::Softmax) {
                 gd.top_r = Some((n as f64).powf(0.8) as usize);
                 // Softmax needs b s.t. R ⊇ NN(r, q, K): calibrate from the
@@ -117,6 +224,7 @@ fn main() {
             AttentionKind::Softmax,
             HsrBackend::BallTree,
         );
+        gd.threads = 1; // single-threaded: isolates the algorithmic win
         gd.top_r = Some(64);
         let sparse = bench.run(&format!("hsr64/n={n}"), || {
             black_box(gd.inference(&inst.q));
@@ -129,4 +237,6 @@ fn main() {
             naive.median_ns / sparse.median_ns
         );
     }
+
+    batched_decode_section(&args, &bench);
 }

@@ -23,6 +23,12 @@ fn artifacts_dir() -> PathBuf {
 struct RunResult {
     wall_s: f64,
     gen_tokens: u64,
+    /// Decode throughput measured only over steps that started in steady
+    /// state (all admitted prompts prefilled, nothing waiting) — the
+    /// batching win, undiluted by prefill.
+    steady_tok_per_s: f64,
+    /// Time to first token, p50 across requests.
+    ttft_p50_ns: u64,
     attended_frac: f64,
     p50_step_ns: u64,
 }
@@ -61,11 +67,35 @@ fn run(
         );
     }
     let t0 = Instant::now();
-    eng.run_to_completion();
+    // Drive manually so steps that start in steady state (post-admission,
+    // all prompts prefilled) can be timed separately from prefill-heavy
+    // ones — time-to-first-token must not dilute the decode throughput.
+    let mut steady_ns: u128 = 0;
+    let mut steady_tok: u64 = 0;
+    while eng.has_work() {
+        let was_steady = eng.steady_state();
+        let g0 = eng.metrics.generated_tokens;
+        let ts = Instant::now();
+        let processed = eng.step();
+        if was_steady {
+            steady_ns += ts.elapsed().as_nanos();
+            steady_tok += eng.metrics.generated_tokens - g0;
+        }
+        if processed == 0 {
+            eng.run_to_completion(); // stuck-work fallback (aborts)
+            break;
+        }
+    }
     let wall_s = t0.elapsed().as_secs_f64();
     RunResult {
         wall_s,
         gen_tokens: eng.metrics.generated_tokens + requests as u64, // + seeded
+        steady_tok_per_s: if steady_ns > 0 {
+            steady_tok as f64 / (steady_ns as f64 * 1e-9)
+        } else {
+            0.0
+        },
+        ttft_p50_ns: eng.metrics.ttft.percentile_ns(50.0),
         attended_frac: eng.metrics.attended_fraction(),
         p50_step_ns: eng.metrics.step_latency.percentile_ns(50.0),
     }
@@ -89,8 +119,8 @@ fn main() {
     );
 
     println!(
-        "{:<44} {:>9} {:>12} {:>11} {:>10}",
-        "configuration", "wall s", "gen tok/s", "p50 step", "attended"
+        "{:<44} {:>9} {:>12} {:>13} {:>10} {:>11} {:>10}",
+        "configuration", "wall s", "gen tok/s", "steady tok/s", "ttft p50", "p50 step", "attended"
     );
     let cases: Vec<(String, AttentionPolicy, Option<HsrBackend>, usize)> = vec![
         ("dense baseline (batch 8)".into(), AttentionPolicy::Dense, None, 8),
@@ -122,14 +152,17 @@ fn main() {
     for (name, policy, backend, batch) in cases {
         let r = run(model.clone(), policy, backend, requests, prompt_len, gen, batch);
         println!(
-            "{:<44} {:>9.2} {:>12.1} {:>11} {:>9.1}%",
+            "{:<44} {:>9.2} {:>12.1} {:>13.1} {:>10} {:>11} {:>9.1}%",
             name,
             r.wall_s,
             r.gen_tokens as f64 / r.wall_s,
+            r.steady_tok_per_s,
+            hsr_attn::util::stats::fmt_ns(r.ttft_p50_ns as f64),
             hsr_attn::util::stats::fmt_ns(r.p50_step_ns as f64),
             r.attended_frac * 100.0
         );
     }
-    println!("\nexpected: sparse attends a small fraction of entries; wall-clock");
-    println!("gains grow with context length (see decode_time bench for scaling).");
+    println!("\nexpected: sparse attends a small fraction of entries; steady tok/s");
+    println!("isolates the batched decode win from prefill (ttft reported apart);");
+    println!("wall-clock gains grow with context (see decode_time for scaling).");
 }

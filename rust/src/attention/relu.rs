@@ -93,11 +93,7 @@ pub fn relu_attention_row_scored(
 ) {
     debug_assert_eq!(idx.len(), scaled_scores.len());
     out.fill(0.0);
-    let mut denom = 0f32;
-    for s in scaled_scores.iter_mut() {
-        *s = relu_pow(*s - bias, alpha);
-        denom += *s;
-    }
+    let denom = relu_weights_in_place(scaled_scores, alpha, bias);
     if denom <= 0.0 {
         return;
     }
@@ -107,6 +103,19 @@ pub fn relu_attention_row_scored(
             axpy_row(out, values, d, idx[t] as usize, a * inv);
         }
     }
+}
+
+/// Weight phase of the scored ReLU row shared with the batched decode
+/// path: rewrites each scaled score s to ReLU(s − bias)^α in place and
+/// returns the normalizer Σ weights (≤ 0 means an all-inactive row).
+#[inline]
+pub fn relu_weights_in_place(scaled_scores: &mut [f32], alpha: u32, bias: f32) -> f32 {
+    let mut denom = 0f32;
+    for s in scaled_scores.iter_mut() {
+        *s = relu_pow(*s - bias, alpha);
+        denom += *s;
+    }
+    denom
 }
 
 /// Dense ReLU^α attention over full Q (m×d): Definition 1.2 verbatim.

@@ -105,28 +105,36 @@ pub fn softmax_attention(q: &[f32], keys: &[f32], values: &[f32], d: usize) -> V
 }
 
 /// Softmax probabilities of a score row (stable). Used by the model's
-/// sampling head and by tests.
+/// sampling head and by tests. The max-subtract/exp/sum runs through the
+/// fused [`crate::kernel::simd::softmax_exp_in_place`] kernel — a single
+/// vectorized pass instead of the old scalar exp-collect + sum.
 pub fn softmax(scores: &[f32]) -> Vec<f32> {
     if scores.is_empty() {
         return Vec::new();
     }
-    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = scores.iter().map(|&s| (s - max).exp()).collect();
-    let denom: f32 = exps.iter().sum();
-    exps.iter().map(|&e| e / denom).collect()
+    let mut exps = scores.to_vec();
+    let denom = crate::kernel::simd::softmax_exp_in_place(&mut exps);
+    if denom > 0.0 && denom.is_finite() {
+        let inv = 1.0 / denom;
+        for e in exps.iter_mut() {
+            *e *= inv;
+        }
+    }
+    exps
 }
 
 /// log(Σ exp(scores)) computed stably; the building block for perplexity.
+/// Shares the single-pass vectorized exp with the softmax kernels (the
+/// non-storing [`crate::kernel::simd::exp_sum`] twin — no allocation).
 pub fn log_sum_exp(scores: &[f32]) -> f32 {
     if scores.is_empty() {
         return f32::NEG_INFINITY;
     }
-    let max = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let max = crate::kernel::simd::max(scores);
     if !max.is_finite() {
         return max;
     }
-    let sum: f32 = scores.iter().map(|&s| (s - max).exp()).sum();
-    max + sum.ln()
+    max + crate::kernel::simd::exp_sum(scores, max).ln()
 }
 
 #[cfg(test)]

@@ -17,14 +17,19 @@
 //! freshly generated keys (the auto-regressive loop of Theorem D.2) comes
 //! from the dynamic logarithmic-method wrapper.
 
-use crate::attention::relu::relu_attention_row_scored;
-use crate::attention::softmax::softmax_attention_row_scored;
+use crate::attention::relu::relu_weights_in_place;
 use crate::attention::threshold::ThresholdParams;
 use crate::attention::topk::top_r_select_into;
 use crate::attention::AttentionKind;
 use crate::hsr::dynamic::DynamicHsr;
 use crate::hsr::{HalfSpaceReport, HsrBackend, QueryStats};
+use crate::kernel::simd;
 use crate::kernel::Scratch;
+
+/// How many value rows one union bucket packs per gather pass of the
+/// batched evaluation: small enough that the packed tile stays L1/L2
+/// resident while every row of the batch consumes it.
+const BUCKET_ROWS: usize = 256;
 
 /// The paper's Algorithm 1 over raw K/V matrices.
 pub struct GenerationDecoding {
@@ -44,10 +49,28 @@ pub struct GenerationDecoding {
     pub top_r: Option<usize>,
     /// Key std σ_k for the per-query adaptive softmax threshold.
     pub sigma_k: f64,
+    /// Worker threads for the batched query-row loop: 0 → one per
+    /// available core, 1 → serial. Output is bit-identical either way.
+    pub threads: usize,
     /// Accumulated query-work counters.
     pub stats: QueryStats,
     /// Reusable row buffers (no allocation in the decode inner loop).
     scratch: Scratch,
+    /// Extra per-worker arenas for the parallel batched path (lazily
+    /// grown, reused across calls).
+    pool: Vec<Scratch>,
+}
+
+/// Copyable per-call snapshot of the row-evaluation configuration, so
+/// worker threads never borrow the (mutably held) structure itself.
+#[derive(Clone, Copy)]
+struct RowCfg {
+    d: usize,
+    n: usize,
+    bias: f32,
+    kind: AttentionKind,
+    top_r: Option<usize>,
+    sigma_k: f64,
 }
 
 impl GenerationDecoding {
@@ -73,8 +96,10 @@ impl GenerationDecoding {
             kind,
             top_r: None,
             sigma_k: 1.0,
+            threads: 0,
             stats: QueryStats::default(),
             scratch: Scratch::new(),
+            pool: Vec::new(),
         }
     }
 
@@ -112,122 +137,301 @@ impl GenerationDecoding {
         self.values.extend_from_slice(value);
     }
 
-    /// INFERENCE for a single query row; writes the attention output into
-    /// `out` (length d) and returns the activated-set size k̃.
-    pub fn inference_row(&mut self, q: &[f32], out: &mut [f32]) -> usize {
-        assert_eq!(q.len(), self.d);
-        // HSR threshold is on the raw inner product: ⟨q,k⟩ ≥ b·√d.
-        // Softmax top-r uses a *per-query adaptive* threshold instead:
-        // <q,k> | q ~ N(0, ‖q‖²σ_k²), so aiming the expected report at 2r
-        // needs b_raw = ‖q‖σ_k√(2 ln(n/2r)) — a fixed b under-reports for
-        // small-norm queries (and triggers costly full-scan fallbacks).
-        let b_raw = match (self.kind, self.top_r) {
-            (AttentionKind::Softmax, Some(r)) => {
-                let n = self.len().max(2) as f64;
-                let target = (2 * r).max(1) as f64;
-                let t = (2.0 * (n / target).ln()).max(0.0).sqrt();
-                (crate::hsr::norm(q) as f64 * self.sigma_k * t) as f32
-            }
-            _ => self.bias * (self.d as f32).sqrt(),
-        };
-        let inv_sqrt_d = 1.0 / (self.d as f32).sqrt();
-        // Score-carrying HSR query: the report arrives with the raw inner
-        // products, so nothing below re-dots a key the traversal already
-        // evaluated. All row buffers come from the reusable scratch.
-        self.scratch.fire.clear();
-        self.scratch.scores.clear();
-        self.hsr.query_scored_into(
-            q,
-            b_raw,
-            &mut self.scratch.fire,
-            &mut self.scratch.scores,
-            &mut self.stats,
-        );
-        match self.kind {
-            AttentionKind::Relu { alpha, bias } => {
-                debug_assert!(
-                    (bias - self.bias).abs() < 1e-6,
-                    "ReLU bias must equal the HSR threshold for exactness"
-                );
-                for s in self.scratch.scores.iter_mut() {
-                    *s *= inv_sqrt_d;
-                }
-                relu_attention_row_scored(
-                    &self.scratch.fire,
-                    &mut self.scratch.scores,
-                    &self.values,
-                    self.d,
-                    alpha,
-                    self.bias,
-                    out,
-                );
-                self.scratch.fire.len()
-            }
-            AttentionKind::Softmax => {
-                // Theorem 4.2 needs R = NN(r, q, K): if the threshold
-                // under-reported (|fire| < r), fall back to the full
-                // half-space so the top-r below is exact.
-                if let Some(r) = self.top_r {
-                    if self.scratch.fire.len() < r.min(self.len()) {
-                        self.scratch.fire.clear();
-                        self.scratch.scores.clear();
-                        self.hsr.query_scored_into(
-                            q,
-                            f32::NEG_INFINITY,
-                            &mut self.scratch.fire,
-                            &mut self.scratch.scores,
-                            &mut self.stats,
-                        );
-                    }
-                }
-                match self.top_r {
-                    Some(r) if r < self.scratch.fire.len() => {
-                        top_r_select_into(
-                            &self.scratch.fire,
-                            &self.scratch.scores,
-                            r,
-                            &mut self.scratch.selected,
-                            &mut self.scratch.exps,
-                        );
-                        for s in self.scratch.exps.iter_mut() {
-                            *s *= inv_sqrt_d;
-                        }
-                        softmax_attention_row_scored(
-                            &self.scratch.selected,
-                            &mut self.scratch.exps,
-                            &self.values,
-                            self.d,
-                            out,
-                        );
-                        self.scratch.selected.len()
-                    }
-                    _ => {
-                        for s in self.scratch.scores.iter_mut() {
-                            *s *= inv_sqrt_d;
-                        }
-                        softmax_attention_row_scored(
-                            &self.scratch.fire,
-                            &mut self.scratch.scores,
-                            &self.values,
-                            self.d,
-                            out,
-                        );
-                        self.scratch.fire.len()
-                    }
-                }
-            }
+    fn row_cfg(&self) -> RowCfg {
+        RowCfg {
+            d: self.d,
+            n: self.len(),
+            bias: self.bias,
+            kind: self.kind,
+            top_r: self.top_r,
+            sigma_k: self.sigma_k,
         }
     }
 
-    /// INFERENCE over a full Q (m × d): returns the m × d output.
-    pub fn inference(&mut self, q: &[f32]) -> Vec<f32> {
-        let m = q.len() / self.d;
-        let mut out = vec![0f32; m * self.d];
-        for i in 0..m {
-            let (qs, qe) = (i * self.d, (i + 1) * self.d);
-            self.inference_row(&q[qs..qe], &mut out[qs..qe]);
+    /// INFERENCE for a single query row; writes the attention output into
+    /// `out` (length d) and returns the activated-set size k̃. This is
+    /// exactly the B = 1 case of [`GenerationDecoding::inference_batch`],
+    /// so serial and batched decode agree bit-for-bit.
+    pub fn inference_row(&mut self, q: &[f32], out: &mut [f32]) -> usize {
+        assert_eq!(q.len(), self.d);
+        assert_eq!(out.len(), self.d);
+        let cfg = self.row_cfg();
+        let mut fired = [0usize; 1];
+        run_shard(
+            &self.hsr,
+            &self.values,
+            cfg,
+            q,
+            out,
+            &mut fired,
+            &mut self.scratch,
+            &mut self.stats,
+        );
+        fired[0]
+    }
+
+    /// INFERENCE over B query rows at once (the batched decode engine).
+    /// Per row the adaptive-threshold + top-r fallback semantics match
+    /// [`GenerationDecoding::inference_row`] exactly; the value gathers
+    /// are fused — each worker unions its rows' fired indices and streams
+    /// the value matrix once per bucket instead of once per row — and the
+    /// rows are sharded across scoped worker threads (`threads` knob,
+    /// 0 = auto). Output is bit-identical to the serial row loop.
+    /// Writes the [B, d] attention output into `out` and the per-row
+    /// activated-set sizes k̃_i into `fired`.
+    pub fn inference_batch_into(&mut self, q: &[f32], out: &mut [f32], fired: &mut [usize]) {
+        assert_eq!(q.len() % self.d, 0);
+        let b = q.len() / self.d;
+        assert_eq!(out.len(), b * self.d);
+        assert_eq!(fired.len(), b);
+        if b == 0 {
+            return;
         }
+        let cfg = self.row_cfg();
+        let workers = crate::kernel::effective_threads(self.threads, b);
+        if workers <= 1 {
+            run_shard(
+                &self.hsr,
+                &self.values,
+                cfg,
+                q,
+                out,
+                fired,
+                &mut self.scratch,
+                &mut self.stats,
+            );
+            return;
+        }
+        // Shard rows contiguously; each worker owns disjoint chunks of
+        // `out`/`fired` and a private Scratch arena from the pool.
+        let rows_per = (b + workers - 1) / workers;
+        let shards = (b + rows_per - 1) / rows_per;
+        while self.pool.len() < shards {
+            self.pool.push(Scratch::new());
+        }
+        let hsr = &self.hsr;
+        let values = &self.values[..];
+        let d = self.d;
+        let pool = &mut self.pool[..shards];
+        let stats = &mut self.stats;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards);
+            for (((q_c, out_c), fired_c), scratch) in q
+                .chunks(rows_per * d)
+                .zip(out.chunks_mut(rows_per * d))
+                .zip(fired.chunks_mut(rows_per))
+                .zip(pool.iter_mut())
+            {
+                handles.push(scope.spawn(move || {
+                    let mut local = QueryStats::default();
+                    run_shard(hsr, values, cfg, q_c, out_c, fired_c, scratch, &mut local);
+                    local
+                }));
+            }
+            // Merge in shard order so the aggregate is deterministic.
+            for h in handles {
+                stats.add(&h.join().expect("decode worker panicked"));
+            }
+        });
+    }
+
+    /// INFERENCE over B query rows, allocating the [B, d] output.
+    pub fn inference_batch(&mut self, q: &[f32]) -> Vec<f32> {
+        let b = q.len() / self.d;
+        let mut out = vec![0f32; b * self.d];
+        let mut fired = vec![0usize; b];
+        self.inference_batch_into(q, &mut out, &mut fired);
         out
+    }
+
+    /// INFERENCE over a full Q (m × d): returns the m × d output.
+    /// Delegates to [`GenerationDecoding::inference_batch`] — the serial
+    /// path is just the B = 1 case of the batched one.
+    pub fn inference(&mut self, q: &[f32]) -> Vec<f32> {
+        self.inference_batch(q)
+    }
+}
+
+/// Phase A of one row: score-carrying HSR query with the per-kind
+/// threshold, the softmax top-r under-report fallback, canonical
+/// ascending-index ordering, and the in-place weight transform. Leaves
+/// the row's (index, weight) lists in `scratch.selected`/`scratch.exps`
+/// and returns (k̃, 1/normalizer) — 0.0 marking a degenerate zero row.
+fn row_phase_a(
+    hsr: &DynamicHsr,
+    cfg: RowCfg,
+    qi: &[f32],
+    scratch: &mut Scratch,
+    stats: &mut QueryStats,
+) -> (usize, f32) {
+    let inv_sqrt_d = 1.0 / (cfg.d as f32).sqrt();
+    // HSR threshold is on the raw inner product: ⟨q,k⟩ ≥ b·√d.
+    // Softmax top-r uses a *per-query adaptive* threshold instead:
+    // <q,k> | q ~ N(0, ‖q‖²σ_k²), so aiming the expected report at 2r
+    // needs b_raw = ‖q‖σ_k√(2 ln(n/2r)) — a fixed b under-reports for
+    // small-norm queries (and triggers costly full-scan fallbacks).
+    let b_raw = match (cfg.kind, cfg.top_r) {
+        (AttentionKind::Softmax, Some(r)) => {
+            let n = cfg.n.max(2) as f64;
+            let target = (2 * r).max(1) as f64;
+            let t = (2.0 * (n / target).ln()).max(0.0).sqrt();
+            (crate::hsr::norm(qi) as f64 * cfg.sigma_k * t) as f32
+        }
+        _ => cfg.bias * (cfg.d as f32).sqrt(),
+    };
+    // Score-carrying HSR query: the report arrives with the raw inner
+    // products, so nothing below re-dots a key the traversal already
+    // evaluated. All row buffers come from the reusable scratch.
+    scratch.fire.clear();
+    scratch.scores.clear();
+    hsr.query_scored_into(qi, b_raw, &mut scratch.fire, &mut scratch.scores, stats);
+    if let (AttentionKind::Softmax, Some(r)) = (cfg.kind, cfg.top_r) {
+        // Theorem 4.2 needs R = NN(r, q, K): if the threshold
+        // under-reported (|fire| < r), fall back to the full half-space
+        // so the top-r below is exact.
+        if scratch.fire.len() < r.min(cfg.n) {
+            scratch.fire.clear();
+            scratch.scores.clear();
+            hsr.query_scored_into(
+                qi,
+                f32::NEG_INFINITY,
+                &mut scratch.fire,
+                &mut scratch.scores,
+                stats,
+            );
+        }
+    }
+    // Canonicalize the report to ascending key order (selected/exps).
+    // Evaluation order is then independent of the backend's traversal
+    // order AND of how rows are grouped into batches — the property the
+    // batched-vs-serial bit-identity rests on.
+    match (cfg.kind, cfg.top_r) {
+        (AttentionKind::Softmax, Some(r)) if r < scratch.fire.len() => {
+            top_r_select_into(
+                &scratch.fire,
+                &scratch.scores,
+                r,
+                &mut scratch.selected,
+                &mut scratch.exps,
+            );
+        }
+        _ => {
+            let Scratch { fire, scores, perm, selected, exps, .. } = scratch;
+            perm.clear();
+            perm.extend(0..fire.len() as u32);
+            perm.sort_unstable_by_key(|&p| fire[p as usize]);
+            selected.clear();
+            exps.clear();
+            for &p in perm.iter() {
+                selected.push(fire[p as usize]);
+                exps.push(scores[p as usize]);
+            }
+        }
+    }
+    for s in scratch.exps.iter_mut() {
+        *s *= inv_sqrt_d;
+    }
+    let denom = match cfg.kind {
+        AttentionKind::Relu { alpha, bias } => {
+            debug_assert!(
+                (bias - cfg.bias).abs() < 1e-6,
+                "ReLU bias must equal the HSR threshold for exactness"
+            );
+            relu_weights_in_place(&mut scratch.exps, alpha, cfg.bias)
+        }
+        AttentionKind::Softmax => simd::softmax_exp_in_place(&mut scratch.exps),
+    };
+    let inv = if denom > 0.0 && denom.is_finite() { 1.0 / denom } else { 0.0 };
+    (scratch.selected.len(), inv)
+}
+
+/// One worker's shard: phase A per row into a CSR (indices ascending per
+/// row), then phase B — union the shard's fired indices and stream the
+/// value matrix once per [`BUCKET_ROWS`]-row bucket, accumulating every
+/// batch row's weighted sum out of the packed (cache-hot) bucket instead
+/// of issuing B independent scattered passes over V.
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    hsr: &DynamicHsr,
+    values: &[f32],
+    cfg: RowCfg,
+    q_shard: &[f32],
+    out_shard: &mut [f32],
+    fired_shard: &mut [usize],
+    scratch: &mut Scratch,
+    stats: &mut QueryStats,
+) {
+    let d = cfg.d;
+    let rows = fired_shard.len();
+    debug_assert_eq!(q_shard.len(), rows * d);
+    debug_assert_eq!(out_shard.len(), rows * d);
+    out_shard.fill(0.0);
+    scratch.idx.clear();
+    scratch.w.clear();
+    scratch.row_ptr.clear();
+    scratch.row_ptr.push(0);
+    scratch.inv.clear();
+    for rw in 0..rows {
+        let qi = &q_shard[rw * d..(rw + 1) * d];
+        let (k, rinv) = row_phase_a(hsr, cfg, qi, scratch, stats);
+        fired_shard[rw] = k;
+        let Scratch { idx, w, row_ptr, inv, selected, exps, .. } = &mut *scratch;
+        idx.extend_from_slice(selected);
+        w.extend_from_slice(exps);
+        row_ptr.push(idx.len());
+        inv.push(rinv);
+    }
+    // Phase B: bucketed union gather + per-row accumulation. Each row's
+    // contributions are applied in ascending key order regardless of how
+    // the union is bucketed, so the result is independent of batching.
+    let Scratch { idx, w, row_ptr, inv, union_idx, packed, cursor, .. } = &mut *scratch;
+    union_idx.clear();
+    union_idx.extend_from_slice(idx);
+    union_idx.sort_unstable();
+    union_idx.dedup();
+    cursor.clear();
+    cursor.extend_from_slice(&row_ptr[..rows]);
+    for bucket in union_idx.chunks(BUCKET_ROWS) {
+        // One gather pass per bucket: pack the bucket's value rows.
+        packed.clear();
+        for &j in bucket.iter() {
+            let j = j as usize;
+            packed.extend_from_slice(&values[j * d..(j + 1) * d]);
+        }
+        let hi = *bucket.last().expect("chunks are non-empty");
+        for rw in 0..rows {
+            let end = row_ptr[rw + 1];
+            let mut c = cursor[rw];
+            if inv[rw] == 0.0 {
+                // Degenerate normalizer: leave the zero row, but keep
+                // the cursor in step with the bucket sweep.
+                while c < end && idx[c] <= hi {
+                    c += 1;
+                }
+                cursor[rw] = c;
+                continue;
+            }
+            let orow = &mut out_shard[rw * d..(rw + 1) * d];
+            let scale = inv[rw];
+            // Both the row's indices and the bucket are ascending, so the
+            // bucket position advances monotonically: search only the
+            // remaining suffix (O(1) amortized for dense rows, log for
+            // sparse ones) instead of bisecting the whole bucket per hit.
+            let mut bp = 0usize;
+            while c < end && idx[c] <= hi {
+                let a = w[c];
+                if a != 0.0 {
+                    let pos = bp
+                        + bucket[bp..]
+                            .binary_search(&idx[c])
+                            .expect("every fired index is in the union");
+                    simd::axpy(orow, &packed[pos * d..(pos + 1) * d], a * scale);
+                    bp = pos + 1;
+                }
+                c += 1;
+            }
+            cursor[rw] = c;
+        }
     }
 }
 
@@ -322,6 +526,88 @@ mod tests {
         grown.inference_row(&q, &mut out_a);
         fresh.inference_row(&q, &mut out_b);
         assert!(linf(&out_a, &out_b) < 1e-5);
+    }
+
+    /// Batched decode must be **bit-identical** to the serial row loop:
+    /// same output floats, same fired counts, same merged work counters —
+    /// across every HSR backend, both attention kinds, with and without
+    /// top-r, and for every thread count. The serial reference is
+    /// `inference_row` (the B = 1 case of the same canonical evaluation).
+    #[test]
+    fn batched_matches_serial_bitwise() {
+        let mut rng = Rng::new(105);
+        let cases: Vec<(HsrBackend, usize)> = vec![
+            (HsrBackend::Brute, 8),
+            (HsrBackend::BallTree, 8),
+            (HsrBackend::Projected, 8),
+            (HsrBackend::Layers2d, 2),
+        ];
+        for (backend, d) in cases {
+            let inst = AttentionInstance::gaussian(&mut rng, 13, 400, d);
+            let bias = inst.params.practical_bias(inst.n) as f32;
+            type Setup = (&'static str, AttentionKind, Option<usize>, f32, f64);
+            let setups: Vec<Setup> = vec![
+                ("relu", AttentionKind::Relu { alpha: 2, bias }, None, bias, 1.0),
+                ("softmax", AttentionKind::Softmax, None, bias, 1.0),
+                ("softmax-topr", AttentionKind::Softmax, Some(24), 0.0, 1.0),
+                // σ_k ≫ 1 inflates the adaptive threshold so the report
+                // under-fills and every row takes the full-scan fallback.
+                ("softmax-topr-fallback", AttentionKind::Softmax, Some(24), 0.0, 50.0),
+            ];
+            for (name, kind, top_r, b, sigma_k) in setups {
+                let build = || {
+                    let mut gd = GenerationDecoding::init(
+                        &inst.k, &inst.v, inst.d, b, kind, backend,
+                    );
+                    gd.top_r = top_r;
+                    gd.sigma_k = sigma_k;
+                    gd
+                };
+                // Serial reference: one row at a time.
+                let mut serial = build();
+                let mut want = vec![0f32; inst.m * inst.d];
+                let mut want_fired = vec![0usize; inst.m];
+                for i in 0..inst.m {
+                    let (s, e) = (i * inst.d, (i + 1) * inst.d);
+                    want_fired[i] = serial.inference_row(&inst.q[s..e], &mut want[s..e]);
+                }
+                for threads in [1usize, 2, 3] {
+                    let mut batched = build();
+                    batched.threads = threads;
+                    let mut got = vec![0f32; inst.m * inst.d];
+                    let mut fired = vec![0usize; inst.m];
+                    batched.inference_batch_into(&inst.q, &mut got, &mut fired);
+                    assert_eq!(
+                        want, got,
+                        "{name} backend={backend:?} threads={threads}"
+                    );
+                    assert_eq!(want_fired, fired, "{name} backend={backend:?}");
+                    assert_eq!(
+                        serial.stats, batched.stats,
+                        "{name} backend={backend:?} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// `inference` is the batched path; it must agree with the serial row
+    /// loop bit-for-bit (delegation sanity).
+    #[test]
+    fn inference_delegates_to_batch() {
+        let mut rng = Rng::new(106);
+        let inst = AttentionInstance::gaussian(&mut rng, 6, 300, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let kind = AttentionKind::Relu { alpha: 1, bias };
+        let mut a = GenerationDecoding::init(&inst.k, &inst.v, inst.d, bias, kind, HsrBackend::BallTree);
+        let mut b = GenerationDecoding::init(&inst.k, &inst.v, inst.d, bias, kind, HsrBackend::BallTree);
+        let batched = a.inference(&inst.q);
+        let mut serial = vec![0f32; inst.m * inst.d];
+        for i in 0..inst.m {
+            let (s, e) = (i * inst.d, (i + 1) * inst.d);
+            b.inference_row(&inst.q[s..e], &mut serial[s..e]);
+        }
+        assert_eq!(batched, serial);
     }
 
     /// The activated-set size tracks Lemma 6.1: k̃ ≤ 2 n^{4/5}.

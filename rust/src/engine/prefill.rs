@@ -62,20 +62,6 @@ impl PromptPrefilling {
         PromptPrefilling { kind, backend, top_r: None, bias_override: None, threads: 0 }
     }
 
-    fn effective_threads(&self, m: usize) -> usize {
-        let t = if self.threads == 0 {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-        } else {
-            self.threads
-        };
-        // Tiny batches are not worth a thread spawn.
-        if m < 4 {
-            1
-        } else {
-            t.clamp(1, m)
-        }
-    }
-
     /// INFERENCE: full attention of Q, K, V (non-causal — the paper's
     /// prompt-prefilling / cross-attention setting).
     pub fn inference(
@@ -106,7 +92,7 @@ impl PromptPrefilling {
             return PrefillResult { out, fired, stats };
         }
 
-        let workers = self.effective_threads(m);
+        let workers = crate::kernel::effective_threads(self.threads, m);
         if workers <= 1 {
             let mut scratch = Scratch::new();
             for i in 0..m {

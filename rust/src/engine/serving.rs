@@ -22,7 +22,9 @@ use super::request::{
 use super::scheduler::SchedulerConfig;
 use crate::hsr::HsrBackend;
 use crate::model::kv::KvState;
-use crate::model::transformer::{sample, AttentionPolicy, StepStats, Workspace};
+use crate::model::transformer::{
+    sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
+};
 use crate::model::Model;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -45,6 +47,10 @@ pub struct EngineConfig {
     /// Base of the request-id space (routers give each worker a disjoint
     /// range so ids are globally unique).
     pub id_offset: u64,
+    /// Worker threads for the batched per-(layer, head) decode sweep:
+    /// 0 → one per available core, 1 → serial. Outputs are identical
+    /// either way (deterministic shard merge).
+    pub decode_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +63,7 @@ impl Default for EngineConfig {
             scheduler: SchedulerConfig::default(),
             seed: 0,
             id_offset: 0,
+            decode_threads: 0,
         }
     }
 }
@@ -70,6 +77,7 @@ pub struct Engine {
     running: Vec<Sequence>,
     finished: Vec<Response>,
     ws: Workspace,
+    bws: BatchWorkspace,
     rng: crate::util::rng::Rng,
     pub metrics: Metrics,
     next_id: RequestId,
@@ -78,12 +86,15 @@ pub struct Engine {
 impl Engine {
     pub fn new(model: Arc<Model>, cfg: EngineConfig) -> Engine {
         let ws = Workspace::new(&model);
+        let mut bws = BatchWorkspace::new(&model);
+        bws.threads = cfg.decode_threads;
         Engine {
             allocator: BlockAllocator::new(cfg.cache_capacity_tokens, cfg.block_tokens),
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
             ws,
+            bws,
             rng: crate::util::rng::Rng::new(cfg.seed),
             metrics: Metrics::default(),
             next_id: cfg.id_offset + 1,
@@ -140,12 +151,18 @@ impl Engine {
     /// Sequences are served strictly in priority (submission) order and a
     /// sequence may only preempt strictly-younger ones, so the oldest
     /// running sequence always makes progress — no preemption livelock.
+    ///
+    /// Prefill chunks run inline during the priority walk; decode-ready
+    /// sequences are *collected* and then decoded as **one batched model
+    /// step** — every sequence's row flows through the per-(layer, head)
+    /// attention sweep together instead of sequence-by-sequence.
     pub fn step(&mut self) -> usize {
         let t0 = Instant::now();
         self.admit();
         let mut tokens = 0usize;
         let budget = self.cfg.scheduler.step_token_budget.max(1);
         let mut stats = StepStats::default();
+        let mut decode_ids: Vec<RequestId> = Vec::new();
 
         // Serve in priority order; `running` mutates during the loop, so
         // look sequences up by id.
@@ -214,7 +231,7 @@ impl Engine {
                 seq.prefilled += chunk;
                 tokens += chunk;
             } else {
-                // --- decode one token ---
+                // --- decode-ready: defer into the batched model step ---
                 let last = *seq
                     .generated
                     .last()
@@ -224,27 +241,94 @@ impl Engine {
                     self.finish(i, if finished_by_stop { FinishReason::StopToken } else { FinishReason::Length });
                     continue; // running[i] replaced by swap_remove
                 }
-                let logits = self.model.decode_step(
-                    last,
-                    &mut seq.kv,
-                    self.cfg.policy,
-                    &mut self.ws,
-                    &mut stats,
-                );
-                let next = sample(&logits, seq.params.temperature, &mut self.rng);
-                seq.generated.push(next);
-                if seq.first_token_at.is_none() {
-                    seq.first_token_at = Some(Instant::now());
-                }
+                // Safe to defer: the walk visits oldest-first and
+                // reservations only ever preempt strictly-younger
+                // sequences, so a collected member is never evicted
+                // before the batch runs.
+                decode_ids.push(sid);
                 tokens += 1;
-                self.metrics.generated_tokens += 1;
             }
         }
+        self.decode_batch(&decode_ids, &mut stats);
         self.metrics.record_step_stats(&stats);
         if tokens > 0 {
             self.metrics.step_latency.record(t0.elapsed());
         }
         tokens
+    }
+
+    /// Decode one token for each collected sequence as a single batched
+    /// model step (the per-(layer, head) sweep runs over all their rows
+    /// at once), then sample in priority order so the RNG stream stays
+    /// deterministic.
+    fn decode_batch(&mut self, ids: &[RequestId], stats: &mut StepStats) {
+        if ids.is_empty() {
+            return;
+        }
+        // Batch members in running-vector order (for borrow splitting);
+        // each entry is (running index, id).
+        let mut members: Vec<(usize, RequestId)> = ids
+            .iter()
+            .map(|&sid| {
+                let i = self
+                    .running
+                    .iter()
+                    .position(|s| s.id == sid)
+                    .expect("batch members survive the walk");
+                (i, sid)
+            })
+            .collect();
+        members.sort_unstable();
+        let tokens: Vec<u32> = members
+            .iter()
+            .map(|&(i, _)| {
+                *self.running[i]
+                    .generated
+                    .last()
+                    .expect("prefill always seeds one generated token")
+            })
+            .collect();
+        let model = Arc::clone(&self.model);
+        let policy = self.cfg.policy;
+        let bws = &mut self.bws;
+        let mut kvs: Vec<&mut KvState> = Vec::with_capacity(members.len());
+        let mut next_member = 0usize;
+        for (i, seq) in self.running.iter_mut().enumerate() {
+            if next_member < members.len() && members[next_member].0 == i {
+                kvs.push(&mut seq.kv);
+                next_member += 1;
+            }
+        }
+        debug_assert_eq!(kvs.len(), members.len());
+        let logits = model.decode_step_batch(&tokens, &mut kvs, policy, bws, stats);
+        drop(kvs);
+        // Sample in submission-priority order (the `ids` order).
+        for &sid in ids {
+            let bpos = members
+                .iter()
+                .position(|&(_, s)| s == sid)
+                .expect("member list covers ids");
+            let i = self
+                .running
+                .iter()
+                .position(|s| s.id == sid)
+                .expect("no sequence finishes during the batch");
+            let seq = &mut self.running[i];
+            let next = sample(&logits[bpos], seq.params.temperature, &mut self.rng);
+            seq.generated.push(next);
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(Instant::now());
+            }
+            self.metrics.generated_tokens += 1;
+        }
+    }
+
+    /// True once every admitted prompt is fully prefilled and nothing is
+    /// waiting — the steady decode phase the serving bench reports
+    /// separately from time-to-first-token.
+    pub fn steady_state(&self) -> bool {
+        self.waiting.is_empty()
+            && self.running.iter().all(|s| s.prefilled >= s.prompt.len())
     }
 
     /// Drive until all submitted work completes.

@@ -24,3 +24,21 @@ pub mod scratch;
 pub mod simd;
 
 pub use scratch::Scratch;
+
+/// Shared worker-count policy for every scoped-thread fan-out in the
+/// crate (prefill rows, batched decode rows, the per-(layer, head)
+/// serving sweep): `requested` = the caller's knob (0 → one worker per
+/// available core, 1 → serial), `jobs` = parallel units on offer. Tiny
+/// grids stay serial — they are not worth a thread spawn.
+pub fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    if jobs < 4 {
+        1
+    } else {
+        t.clamp(1, jobs)
+    }
+}

@@ -22,6 +22,23 @@ pub struct Scratch {
     /// Activation buffer for the evaluated subset: scaled scores in,
     /// exp/ReLU^α weights out (transformed in place by the row kernels).
     pub exps: Vec<f32>,
+    // --- batched-decode extensions (one worker's shard of B rows) ---
+    /// Argsort permutation for canonical ascending-index row order.
+    pub perm: Vec<u32>,
+    /// CSR fired indices across the shard's rows (ascending per row).
+    pub idx: Vec<u32>,
+    /// Normalized attention weights parallel to `idx`.
+    pub w: Vec<f32>,
+    /// CSR row boundaries into `idx`/`w` (len = rows + 1).
+    pub row_ptr: Vec<usize>,
+    /// Per-row 1/normalizer (0.0 marks a degenerate all-zero row).
+    pub inv: Vec<f32>,
+    /// Sorted, deduped union of the shard's fired indices.
+    pub union_idx: Vec<u32>,
+    /// Value rows gathered for the current union bucket.
+    pub packed: Vec<f32>,
+    /// Per-row walk cursors into the CSR arrays (bucket sweep state).
+    pub cursor: Vec<usize>,
 }
 
 impl Scratch {
@@ -36,6 +53,7 @@ impl Scratch {
             scores: Vec::with_capacity(k),
             selected: Vec::with_capacity(k),
             exps: Vec::with_capacity(k),
+            ..Scratch::default()
         }
     }
 
@@ -45,6 +63,14 @@ impl Scratch {
         self.scores.clear();
         self.selected.clear();
         self.exps.clear();
+        self.perm.clear();
+        self.idx.clear();
+        self.w.clear();
+        self.row_ptr.clear();
+        self.inv.clear();
+        self.union_idx.clear();
+        self.packed.clear();
+        self.cursor.clear();
     }
 }
 

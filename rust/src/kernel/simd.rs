@@ -231,29 +231,58 @@ pub fn max_scalar(xs: &[f32]) -> f32 {
 /// score with exp(score − max) **in place** (caching the exps so the
 /// weighted-sum pass never recomputes them), and returns the sum of exps.
 /// Returns 0.0 for an empty slice.
+///
+/// On AVX2 the exp itself is vectorized: an 8-lane Cody–Waite range
+/// reduction + degree-6 polynomial (Cephes `expf` coefficients, ~2 ulp),
+/// with the exact-same-polynomial scalar tail for the remainder lanes.
+/// Inputs to the exp are max-subtracted and therefore ≤ 0, where the
+/// polynomial path and libm agree to ulp scale (asserted in tests).
 #[inline]
 pub fn softmax_exp_in_place(scores: &mut [f32]) -> f32 {
     if scores.is_empty() {
         return 0.0;
     }
     let m = max(scores);
-    exp_sub_in_place_sum(scores, m)
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::exp_sub_in_place_sum(scores, m) };
+    }
+    exp_sub_in_place_sum_scalar(scores, m)
 }
 
-/// Scalar twin of [`softmax_exp_in_place`].
+/// Scalar twin of [`softmax_exp_in_place`] (libm exp — the pre-SIMD path
+/// and the reference the vectorized polynomial is tested against).
 #[inline]
 pub fn softmax_exp_in_place_scalar(scores: &mut [f32]) -> f32 {
     if scores.is_empty() {
         return 0.0;
     }
     let m = max_scalar(scores);
-    exp_sub_in_place_sum(scores, m)
+    exp_sub_in_place_sum_scalar(scores, m)
 }
 
-/// s_i ← exp(s_i − m), returning Σ exp(s_i − m). exp itself is scalar on
-/// every path (no vector exp without libm); the win is caching.
+/// Σ exp(x_i − m) without storing the exps — the logsumexp building
+/// block (perplexity, sampling head). Vectorized like
+/// [`softmax_exp_in_place`]; `m` must be the slice max (inputs ≤ 0 after
+/// subtraction) for the polynomial-range contract to hold.
 #[inline]
-fn exp_sub_in_place_sum(scores: &mut [f32], m: f32) -> f32 {
+pub fn exp_sum(xs: &[f32], m: f32) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == AVX2 {
+        return unsafe { x86::exp_sum(xs, m) };
+    }
+    exp_sum_scalar(xs, m)
+}
+
+/// Scalar twin of [`exp_sum`].
+#[inline]
+pub fn exp_sum_scalar(xs: &[f32], m: f32) -> f32 {
+    xs.iter().map(|&x| (x - m).exp()).sum()
+}
+
+/// s_i ← exp(s_i − m), returning Σ exp(s_i − m); portable libm path.
+#[inline]
+fn exp_sub_in_place_sum_scalar(scores: &mut [f32], m: f32) -> f32 {
     let mut sum = 0.0f32;
     for s in scores.iter_mut() {
         let e = (*s - m).exp();
@@ -401,6 +430,117 @@ mod x86 {
             *out.get_unchecked_mut(j) = dot(q, &keys[j * d..(j + 1) * d]) * scale;
             j += 1;
         }
+    }
+
+    // ---- vectorized exp (Cephes expf): 8 lanes per iteration ----
+    //
+    // exp(x) = 2^k · exp(r),  k = floor(x·log2 e + ½),  r = x − k·ln 2
+    // (ln 2 split Cody–Waite style into C1 + C2 so the reduction is
+    // single-rounding under FMA), exp(r) via a degree-6 polynomial.
+    // Inputs are clamped to ±88.376; softmax feeds max-subtracted
+    // (≤ 0) values, where underflow collapses to +0 exactly like libm
+    // up to denormals (absolute error < 1e-38).
+
+    const EXP_HI: f32 = 88.376_26;
+    const EXP_LO: f32 = -88.376_26;
+    const LOG2EF: f32 = 1.442_695_04;
+    const LN2_HI: f32 = 0.693_359_375;
+    const LN2_LO: f32 = -2.121_944_4e-4;
+    const P0: f32 = 1.987_569_1e-4;
+    const P1: f32 = 1.398_199_9e-3;
+    const P2: f32 = 8.333_452e-3;
+    const P3: f32 = 4.166_579_6e-2;
+    const P4: f32 = 1.666_666_5e-1;
+    const P5: f32 = 5.000_000_1e-1;
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(EXP_HI));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(EXP_LO));
+        let fx = _mm256_floor_ps(_mm256_fmadd_ps(
+            x,
+            _mm256_set1_ps(LOG2EF),
+            _mm256_set1_ps(0.5),
+        ));
+        let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(LN2_HI), x);
+        let x = _mm256_fnmadd_ps(fx, _mm256_set1_ps(LN2_LO), x);
+        let z = _mm256_mul_ps(x, x);
+        let mut y = _mm256_set1_ps(P0);
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P1));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P2));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P3));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P4));
+        y = _mm256_fmadd_ps(y, x, _mm256_set1_ps(P5));
+        y = _mm256_fmadd_ps(y, z, x);
+        y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+        // 2^fx by exponent-field construction (fx ∈ [-127, 127] after
+        // the clamp, so the biased exponent stays in range).
+        let n = _mm256_cvttps_epi32(fx);
+        let n = _mm256_add_epi32(n, _mm256_set1_epi32(0x7f));
+        let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(n));
+        _mm256_mul_ps(y, pow2)
+    }
+
+    /// Scalar lane of the same polynomial (remainder elements), kept
+    /// bit-compatible with `exp256` via fused mul-adds.
+    #[target_feature(enable = "fma")]
+    unsafe fn exp1(x: f32) -> f32 {
+        let x = x.clamp(EXP_LO, EXP_HI);
+        let fx = x.mul_add(LOG2EF, 0.5).floor();
+        let x = (-fx).mul_add(LN2_HI, x);
+        let x = (-fx).mul_add(LN2_LO, x);
+        let z = x * x;
+        let mut y = P0;
+        y = y.mul_add(x, P1);
+        y = y.mul_add(x, P2);
+        y = y.mul_add(x, P3);
+        y = y.mul_add(x, P4);
+        y = y.mul_add(x, P5);
+        y = y.mul_add(z, x) + 1.0;
+        let n = (fx as i32 + 0x7f) << 23;
+        y * f32::from_bits(n as u32)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_sub_in_place_sum(scores: &mut [f32], m: f32) -> f32 {
+        let n = scores.len();
+        let p = scores.as_mut_ptr();
+        let vm = _mm256_set1_ps(m);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let e = exp256(_mm256_sub_ps(_mm256_loadu_ps(p.add(i)), vm));
+            _mm256_storeu_ps(p.add(i), e);
+            acc = _mm256_add_ps(acc, e);
+            i += 8;
+        }
+        let mut sum = hsum256(acc);
+        while i < n {
+            let e = exp1(*p.add(i) - m);
+            *p.add(i) = e;
+            sum += e;
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_sum(xs: &[f32], m: f32) -> f32 {
+        let n = xs.len();
+        let p = xs.as_ptr();
+        let vm = _mm256_set1_ps(m);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_add_ps(acc, exp256(_mm256_sub_ps(_mm256_loadu_ps(p.add(i)), vm)));
+            i += 8;
+        }
+        let mut sum = hsum256(acc);
+        while i < n {
+            sum += exp1(*p.add(i) - m);
+            i += 1;
+        }
+        sum
     }
 
     #[target_feature(enable = "avx2,fma")]
@@ -552,6 +692,61 @@ mod tests {
             for i in 0..len {
                 assert!((cached[i] - (scores[i] - m).exp()).abs() < 1e-6);
             }
+        }
+    }
+
+    /// Dispatched (vector-polynomial on AVX2) exp vs scalar libm exp:
+    /// agreement to ulp-scale relative tolerance on adversarial rows —
+    /// large negatives (underflow edge), all-equal rows (exp(0) must be
+    /// exactly 1), single-element rows, and every remainder-lane count.
+    #[test]
+    fn simd_exp_matches_scalar_exp_adversarial() {
+        let rel = 1e-6f32; // ~8 ulp headroom over the ~2 ulp polynomial
+        let abs = 1e-30f32; // underflow-to-denormal region
+        let rows: Vec<Vec<f32>> = vec![
+            vec![0.0],                          // single element
+            vec![-3.25],                        // single element, nonzero
+            vec![2.5; 17],                      // all-equal (exps all 1)
+            vec![-1e4, -500.0, -104.0, -87.4, -86.9, -20.0, 0.0], // deep negatives
+            (0..100).map(|i| -(i as f32) * 1.7).collect(),
+            (0..9).map(|i| (i as f32) * 0.111 - 0.5).collect(),
+        ];
+        // Every remainder count 0..7 around the 8-lane stride.
+        let mut rng = Rng::new(77);
+        let mut all = rows;
+        for len in 1usize..=40 {
+            all.push(rng.gaussian_vec_f32(len, 30.0));
+        }
+        for scores in &all {
+            let mut simd_row = scores.clone();
+            let mut scalar_row = scores.clone();
+            let denom = softmax_exp_in_place(&mut simd_row);
+            let denom_sc = softmax_exp_in_place_scalar(&mut scalar_row);
+            assert!(
+                (denom - denom_sc).abs() <= rel * denom_sc.abs() * 4.0 + abs,
+                "denom {denom} vs {denom_sc} (len {})",
+                scores.len()
+            );
+            for (i, (&a, &b)) in simd_row.iter().zip(&scalar_row).enumerate() {
+                assert!(
+                    (a - b).abs() <= rel * b.abs() + abs,
+                    "len {} elem {i}: {a} vs {b}",
+                    scores.len()
+                );
+            }
+            // All-equal / max elements must be exactly 1.
+            let m = max_scalar(scores);
+            for (i, &s) in scores.iter().enumerate() {
+                if s == m {
+                    assert_eq!(simd_row[i], 1.0, "exp(0) must be exact");
+                }
+            }
+            // exp_sum agrees with the in-place kernel's denominator and
+            // with its own scalar twin.
+            let es = exp_sum(scores, m);
+            let es_sc = exp_sum_scalar(scores, m);
+            assert!((es - es_sc).abs() <= rel * es_sc.abs() * 4.0 + abs);
+            assert!((es - denom).abs() <= rel * denom.abs() * 4.0 + abs);
         }
     }
 

@@ -155,6 +155,14 @@ impl KvState {
         &mut self.heads[layer * self.n_heads + head]
     }
 
+    /// Batch view: all of one layer's heads as a mutable slice, so the
+    /// batched decode sweep can hand disjoint `&mut HeadKv` items from
+    /// several sequences to scoped worker threads at once.
+    #[inline]
+    pub fn layer_heads_mut(&mut self, layer: usize) -> &mut [HeadKv] {
+        &mut self.heads[layer * self.n_heads..(layer + 1) * self.n_heads]
+    }
+
     /// Approximate memory footprint in bytes (keys + values only).
     pub fn bytes(&self) -> usize {
         self.heads

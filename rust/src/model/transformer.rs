@@ -70,6 +70,33 @@ pub struct StepStats {
     pub fallbacks: usize,
 }
 
+impl StepStats {
+    /// Merge another worker's counters (all sums — order-independent).
+    pub fn add(&mut self, other: &StepStats) {
+        self.hsr.add(&other.hsr);
+        self.attended += other.attended;
+        self.dense_equivalent += other.dense_equivalent;
+        self.fallbacks += other.fallbacks;
+    }
+}
+
+/// Per-thread scratch for one attention worker: the HSR report, its
+/// scores, the top-r selection, and the softmax weight buffer. One lives
+/// in every [`Workspace`]; the batched decode path owns one per shard.
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    scores: Vec<f32>,
+    cand: Vec<u32>,
+    cand_scores: Vec<f32>,
+    selected: Vec<u32>,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+}
+
 /// Reusable scratch buffers for a forward step (no allocation on the
 /// token hot path).
 pub struct Workspace {
@@ -82,10 +109,7 @@ pub struct Workspace {
     proj: Vec<f32>,
     ffn_a: Vec<f32>,
     ffn_b: Vec<f32>,
-    scores: Vec<f32>,
-    cand: Vec<u32>,
-    cand_scores: Vec<f32>,
-    selected: Vec<u32>,
+    attn: AttnScratch,
     logits: Vec<f32>,
 }
 
@@ -102,11 +126,41 @@ impl Workspace {
             proj: vec![0.0; c.d_model],
             ffn_a: vec![0.0; c.d_ffn],
             ffn_b: vec![0.0; c.d_ffn],
-            scores: Vec::new(),
-            cand: Vec::new(),
-            cand_scores: Vec::new(),
-            selected: Vec::new(),
+            attn: AttnScratch::new(),
             logits: vec![0.0; c.vocab],
+        }
+    }
+}
+
+/// Reusable state for one **batched** decode step: flat [B, d_model]
+/// activations plus per-thread [`AttnScratch`] shards for the parallel
+/// per-(layer, head) attention sweep. Buffers grow to the largest batch
+/// seen and are reused across steps (no steady-state allocation).
+pub struct BatchWorkspace {
+    /// Residual stream per sequence, [B, d_model].
+    x: Vec<f32>,
+    /// Post-RoPE queries per sequence, [B, d_model] (per layer).
+    q: Vec<f32>,
+    /// Attention outputs per sequence, [B, d_model] (per layer).
+    att: Vec<f32>,
+    /// Serial-phase temporaries (norms, K/V projections, FFN, logits).
+    tmp: Workspace,
+    /// Per-thread attention scratch shards.
+    shards: Vec<AttnScratch>,
+    /// Worker threads for the (sequence × head) attention grid:
+    /// 0 → one per available core, 1 → serial.
+    pub threads: usize,
+}
+
+impl BatchWorkspace {
+    pub fn new(model: &Model) -> BatchWorkspace {
+        BatchWorkspace {
+            x: Vec::new(),
+            q: Vec::new(),
+            att: Vec::new(),
+            tmp: Workspace::new(model),
+            shards: Vec::new(),
+            threads: 0,
         }
     }
 }
@@ -191,10 +245,7 @@ impl Model {
                     &ws.q[s..e],
                     c.d_head,
                     policy,
-                    &mut ws.scores,
-                    &mut ws.cand,
-                    &mut ws.cand_scores,
-                    &mut ws.selected,
+                    &mut ws.attn,
                     &mut ws.att[s..e],
                     stats,
                 );
@@ -218,6 +269,157 @@ impl Model {
         rms_norm(&ws.x, &self.tensor("final_norm").data, c.rms_eps, &mut ws.h);
         matvec(&ws.h, self.tensor("w_out"), &mut ws.logits);
         ws.logits.clone()
+    }
+
+    /// One autoregressive step for a **batch** of independent sequences:
+    /// appends each sequence's token to its own KV cache and returns the
+    /// per-sequence next-token logits. Equivalent to calling
+    /// [`Model::decode_step`] once per sequence — bit-identically so —
+    /// but the per-(layer, head) attention loop runs over the whole
+    /// (sequence × head) grid at once, sharded across scoped worker
+    /// threads with per-thread [`AttnScratch`] shards and deterministic
+    /// shard-order stat merging.
+    pub fn decode_step_batch(
+        &self,
+        tokens: &[u32],
+        kvs: &mut [&mut KvState],
+        policy: AttentionPolicy,
+        bws: &mut BatchWorkspace,
+        stats: &mut StepStats,
+    ) -> Vec<Vec<f32>> {
+        let c = &self.cfg;
+        let b = tokens.len();
+        assert_eq!(kvs.len(), b);
+        if b == 0 {
+            return Vec::new();
+        }
+        let positions: Vec<usize> = kvs.iter().map(|kv| kv.len()).collect();
+        bws.x.resize(b * c.d_model, 0.0);
+        bws.q.resize(b * c.d_model, 0.0);
+        bws.att.resize(b * c.d_model, 0.0);
+        let jobs = b * c.n_heads;
+        // In auto mode (threads = 0), parallelize only when the grid
+        // carries enough attention work to amortize the per-layer thread
+        // spawns; total cached tokens across the batch's heads is the
+        // per-layer cost proxy. Short contexts stay serial (outputs are
+        // bit-identical either way); an explicit thread count is honored
+        // as given so tests can pin the parallel path.
+        let grid_work: usize = positions.iter().map(|&p| (p + 1) * c.n_heads).sum();
+        let workers = if bws.threads == 0 && grid_work < 4096 {
+            1
+        } else {
+            crate::kernel::effective_threads(bws.threads, jobs)
+        };
+        while bws.shards.len() < workers {
+            bws.shards.push(AttnScratch::new());
+        }
+
+        // Embedding.
+        let emb = self.tensor("tok_emb");
+        for (s, &tok) in tokens.iter().enumerate() {
+            bws.x[s * c.d_model..(s + 1) * c.d_model]
+                .copy_from_slice(emb.row(tok as usize));
+        }
+
+        for layer in 0..c.n_layers {
+            // --- attention block: projections + RoPE + cache append ---
+            // (serial per sequence; the matvecs reuse one temp workspace)
+            for s in 0..b {
+                let xs = &bws.x[s * c.d_model..(s + 1) * c.d_model];
+                let qs = &mut bws.q[s * c.d_model..(s + 1) * c.d_model];
+                let tmp = &mut bws.tmp;
+                rms_norm(xs, &self.layer_tensor("attn_norm", layer).data, c.rms_eps, &mut tmp.h);
+                matvec(&tmp.h, self.layer_tensor("wq", layer), qs);
+                matvec(&tmp.h, self.layer_tensor("wk", layer), &mut tmp.k);
+                matvec(&tmp.h, self.layer_tensor("wv", layer), &mut tmp.v);
+                for head in 0..c.n_heads {
+                    let (hs, he) = (head * c.d_head, (head + 1) * c.d_head);
+                    apply_rope(&mut qs[hs..he], positions[s], c.rope_theta);
+                    apply_rope(&mut tmp.k[hs..he], positions[s], c.rope_theta);
+                    kvs[s]
+                        .head_mut(layer, head)
+                        .append(&tmp.k[hs..he], &tmp.v[hs..he]);
+                }
+            }
+            // --- attention sweep: the (sequence × head) grid, sharded ---
+            {
+                let mut grid: Vec<(&mut super::kv::HeadKv, &[f32], &mut [f32])> =
+                    Vec::with_capacity(jobs);
+                for ((kv, q_row), att_row) in kvs
+                    .iter_mut()
+                    .zip(bws.q.chunks(c.d_model))
+                    .zip(bws.att.chunks_mut(c.d_model))
+                {
+                    for ((hk, qh), oh) in kv
+                        .layer_heads_mut(layer)
+                        .iter_mut()
+                        .zip(q_row.chunks(c.d_head))
+                        .zip(att_row.chunks_mut(c.d_head))
+                    {
+                        grid.push((hk, qh, oh));
+                    }
+                }
+                if workers <= 1 {
+                    let scratch = &mut bws.shards[0];
+                    for (hk, qh, oh) in grid.iter_mut() {
+                        attend_head(hk, qh, c.d_head, policy, scratch, oh, stats);
+                    }
+                } else {
+                    let per = (jobs + workers - 1) / workers;
+                    let d_head = c.d_head;
+                    std::thread::scope(|scope| {
+                        let mut handles = Vec::with_capacity(workers);
+                        for (chunk, scratch) in
+                            grid.chunks_mut(per).zip(bws.shards.iter_mut())
+                        {
+                            handles.push(scope.spawn(move || {
+                                let mut local = StepStats::default();
+                                for (hk, qh, oh) in chunk.iter_mut() {
+                                    attend_head(
+                                        hk, qh, d_head, policy, scratch, oh, &mut local,
+                                    );
+                                }
+                                local
+                            }));
+                        }
+                        // Merge in shard order: deterministic aggregate.
+                        for h in handles {
+                            stats.add(&h.join().expect("attention worker panicked"));
+                        }
+                    });
+                }
+            }
+            // --- output projection + residual + MLP (serial per seq) ---
+            for s in 0..b {
+                let xs = &mut bws.x[s * c.d_model..(s + 1) * c.d_model];
+                let att_s = &bws.att[s * c.d_model..(s + 1) * c.d_model];
+                let tmp = &mut bws.tmp;
+                matvec(att_s, self.layer_tensor("wo", layer), &mut tmp.proj);
+                for (x, &p) in xs.iter_mut().zip(&tmp.proj) {
+                    *x += p;
+                }
+                rms_norm(xs, &self.layer_tensor("mlp_norm", layer).data, c.rms_eps, &mut tmp.h);
+                matvec(&tmp.h, self.layer_tensor("w1", layer), &mut tmp.ffn_a);
+                matvec(&tmp.h, self.layer_tensor("w3", layer), &mut tmp.ffn_b);
+                for (a, &bb) in tmp.ffn_a.iter_mut().zip(&tmp.ffn_b) {
+                    *a = silu(*a) * bb;
+                }
+                matvec(&tmp.ffn_a, self.layer_tensor("w2", layer), &mut tmp.proj);
+                for (x, &p) in xs.iter_mut().zip(&tmp.proj) {
+                    *x += p;
+                }
+            }
+        }
+        // Final norm + output head per sequence.
+        let mut all = Vec::with_capacity(b);
+        for s in 0..b {
+            let xs = &bws.x[s * c.d_model..(s + 1) * c.d_model];
+            let tmp = &mut bws.tmp;
+            rms_norm(xs, &self.tensor("final_norm").data, c.rms_eps, &mut tmp.h);
+            matvec(&tmp.h, self.tensor("w_out"), &mut tmp.logits);
+            all.push(tmp.logits.clone());
+        }
+        all
     }
 
     /// Prefill a prompt through the decode path (token by token) and
@@ -271,22 +473,19 @@ impl Model {
 }
 
 /// One head of cached attention under a policy. `out` has length d_head.
-/// All buffers come from the per-engine [`Workspace`]; the HSR query
-/// carries raw scores out with the report, so no inner product is ever
-/// computed twice on this path.
-#[allow(clippy::too_many_arguments)]
+/// All buffers come from the caller's [`AttnScratch`] (one per thread);
+/// the HSR query carries raw scores out with the report, so no inner
+/// product is ever computed twice on this path.
 fn attend_head(
     hk: &mut super::kv::HeadKv,
     q: &[f32],
     d_head: usize,
     policy: AttentionPolicy,
-    scores: &mut Vec<f32>,
-    cand: &mut Vec<u32>,
-    cand_scores: &mut Vec<f32>,
-    selected: &mut Vec<u32>,
+    scratch: &mut AttnScratch,
     out: &mut [f32],
     stats: &mut StepStats,
 ) {
+    let AttnScratch { scores, cand, cand_scores, selected } = scratch;
     let n = hk.len();
     let inv_sqrt_d = 1.0 / (d_head as f32).sqrt();
     stats.dense_equivalent += n;
@@ -398,6 +597,117 @@ mod tests {
         assert_eq!(RSpec::Fixed(16).r_for(1000), 16);
         assert_eq!(RSpec::paper().r_for(1024), (1024f64.powf(0.8).ceil()) as usize);
         assert_eq!(RSpec::Pow(0.8).r_for(1), 1);
+    }
+
+    /// Build a tiny random-weight model in memory so the batched-decode
+    /// parity test runs without exported artifacts.
+    fn tiny_model(rng: &mut crate::util::rng::Rng) -> Model {
+        use crate::util::tensor_io::{Tensor, TensorBundle};
+        let cfg = crate::model::ModelConfig {
+            name: "tiny-test".to_string(),
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            vocab: 17,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        };
+        let mut weights = TensorBundle::default();
+        let mat = |rng: &mut crate::util::rng::Rng, r: usize, c: usize| {
+            Tensor::new(vec![r, c], rng.gaussian_vec_f32(r * c, 0.4))
+        };
+        weights.insert("tok_emb", mat(rng, cfg.vocab, cfg.d_model));
+        weights.insert("w_out", mat(rng, cfg.d_model, cfg.vocab));
+        weights.insert(
+            "final_norm",
+            Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+        );
+        for l in 0..cfg.n_layers {
+            for name in ["wq", "wk", "wv", "wo"] {
+                weights.insert(&format!("{name}.{l}"), mat(rng, cfg.d_model, cfg.d_model));
+            }
+            weights.insert(&format!("w1.{l}"), mat(rng, cfg.d_model, cfg.d_ffn));
+            weights.insert(&format!("w3.{l}"), mat(rng, cfg.d_model, cfg.d_ffn));
+            weights.insert(&format!("w2.{l}"), mat(rng, cfg.d_ffn, cfg.d_model));
+            for name in ["attn_norm", "mlp_norm"] {
+                weights.insert(
+                    &format!("{name}.{l}"),
+                    Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+                );
+            }
+        }
+        Model { cfg, weights }
+    }
+
+    /// `decode_step_batch` must be bit-identical to per-sequence
+    /// `decode_step` — same logits and the same evolution of the per-head
+    /// calibration state — for every thread count, under both the dense
+    /// and the calibrated top-r policy.
+    #[test]
+    fn batched_decode_step_matches_serial_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(200);
+        let model = tiny_model(&mut rng);
+        let c = model.cfg.clone();
+        let steps = 12usize;
+        let b = 3usize;
+        let prompts: Vec<Vec<u32>> = (0..b)
+            .map(|_| (0..steps).map(|_| rng.below(c.vocab) as u32).collect())
+            .collect();
+        for policy in [
+            AttentionPolicy::Dense,
+            AttentionPolicy::TopR(RSpec::Fixed(3)),
+        ] {
+            // Serial reference: each sequence decoded independently.
+            let mut serial_logits: Vec<Vec<f32>> = Vec::new();
+            let mut serial_stats = StepStats::default();
+            for p in &prompts {
+                let mut kv = KvState::new(
+                    c.n_layers,
+                    c.n_heads,
+                    c.d_head,
+                    Some(crate::hsr::HsrBackend::BallTree),
+                );
+                let mut ws = Workspace::new(&model);
+                let mut last = Vec::new();
+                for &tok in p {
+                    last = model.decode_step(tok, &mut kv, policy, &mut ws, &mut serial_stats);
+                }
+                serial_logits.push(last);
+            }
+            for threads in [1usize, 2, 3] {
+                let mut kvs: Vec<KvState> = (0..b)
+                    .map(|_| {
+                        KvState::new(
+                            c.n_layers,
+                            c.n_heads,
+                            c.d_head,
+                            Some(crate::hsr::HsrBackend::BallTree),
+                        )
+                    })
+                    .collect();
+                let mut bws = BatchWorkspace::new(&model);
+                bws.threads = threads;
+                let mut batch_stats = StepStats::default();
+                let mut batch_logits: Vec<Vec<f32>> = Vec::new();
+                for t in 0..steps {
+                    let tokens: Vec<u32> = prompts.iter().map(|p| p[t]).collect();
+                    let mut refs: Vec<&mut KvState> = kvs.iter_mut().collect();
+                    batch_logits = model.decode_step_batch(
+                        &tokens,
+                        &mut refs,
+                        policy,
+                        &mut bws,
+                        &mut batch_stats,
+                    );
+                }
+                assert_eq!(serial_logits, batch_logits, "threads={threads} {policy:?}");
+                assert_eq!(serial_stats.attended, batch_stats.attended, "threads={threads}");
+                assert_eq!(serial_stats.fallbacks, batch_stats.fallbacks, "threads={threads}");
+                assert_eq!(serial_stats.hsr, batch_stats.hsr, "threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
-# Repo verification: format, build, tests, and the kernel perf smoke run.
+# Repo verification: format, build, tests, and the perf smoke runs.
 #
 # Usage: scripts/verify.sh [--no-bench]
 #
-# The bench step runs only the kernel section of benches/hsr_structures.rs
-# and emits BENCH_kernels.json at the repo root (before/after ns-per-row
-# for dot, scores_into, the softmax row, and end-to-end prefill), so the
-# perf trajectory across PRs is machine-readable.
+# Bench steps (machine-readable perf trajectory across PRs):
+#  * benches/hsr_structures.rs --kernels-only → BENCH_kernels.json
+#    (before/after ns-per-row for dot, scores_into, softmax row, prefill)
+#  * benches/decode_time.rs --batched-only    → BENCH_decode.json
+#    (ns per decoded token at batch 1/8/32, serial vs batched, per
+#    HSR backend — the continuous-batch decode engine's headline)
+#  * benches/e2e_serving.rs                   → stdout (steady-state
+#    tok/s vs ttft; self-skips when model artifacts are absent)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -24,6 +28,13 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== kernel perf smoke (BENCH_kernels.json) =="
     cargo bench --bench hsr_structures -- --kernels-only
     echo "report: $(cd .. && pwd)/BENCH_kernels.json"
+
+    echo "== batched decode smoke (BENCH_decode.json) =="
+    cargo bench --bench decode_time -- --batched-only
+    echo "report: $(cd .. && pwd)/BENCH_decode.json"
+
+    echo "== serving throughput smoke (skips without artifacts) =="
+    cargo bench --bench e2e_serving
 fi
 
 echo "verify: OK"
