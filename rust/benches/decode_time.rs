@@ -10,7 +10,8 @@ use hsr_attn::attention::softmax::softmax_attention;
 use hsr_attn::attention::AttentionKind;
 use hsr_attn::bench::{banner, black_box, Bencher};
 use hsr_attn::engine::GenerationDecoding;
-use hsr_attn::hsr::HsrBackend;
+use hsr_attn::hsr::dynamic::DynamicHsr;
+use hsr_attn::hsr::{build_hsr, gaussian_points, HalfSpaceReport, HsrBackend, QueryStats};
 use hsr_attn::util::cli::Args;
 use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
@@ -115,10 +116,159 @@ fn batched_decode_section(args: &Args, bench: &Bencher) {
     }
 }
 
+struct HsrBatchCase {
+    backend: &'static str,
+    fan_out: usize,
+    looped_ns_per_query: f64,
+    batched_ns_per_query: f64,
+    looped_work_per_query: f64,
+    batched_work_per_query: f64,
+}
+
+/// Batched vs looped multi-query HSR reporting: fan-out F queries over
+/// one structure, `query_scored_into` loop against the shared-traversal
+/// `query_many_scored_into` (identical outputs, asserted in the crate's
+/// property tests). Reports both wall-clock and the `QueryStats::work`
+/// proxy per query and emits `BENCH_hsr_batch.json` at the repo root.
+fn hsr_batch_section(args: &Args, bench: &Bencher) {
+    let d = args.usize_or("d", 8);
+    let n = args.usize_or("hsr-n", 65_536);
+    let fans = args.usize_list_or("fan-outs", &[1, 4, 16]);
+    let mut rng = Rng::new(91);
+    let points = gaussian_points(&mut rng, n, d, 1.0);
+    // Dynamic backend: mostly batch-built, tail + small buckets grown by
+    // inserts — the decode engine's steady state.
+    let grown = n - n / 16;
+    let mut dyn_hsr = DynamicHsr::from_points(HsrBackend::BallTree, &points[..grown * d], d);
+    for j in grown..n {
+        dyn_hsr.insert(&points[j * d..(j + 1) * d]);
+    }
+    let backends: Vec<(&'static str, Box<dyn HalfSpaceReport>)> = vec![
+        ("balltree", build_hsr(HsrBackend::BallTree, &points, d)),
+        ("projected", build_hsr(HsrBackend::Projected, &points, d)),
+        ("dynamic", Box::new(dyn_hsr)),
+        ("brute", build_hsr(HsrBackend::Brute, &points, d)),
+    ];
+    // Practical Lemma 6.1 threshold, raw-score units.
+    let b_raw = ((0.4 * (n as f64).ln()).sqrt() * (d as f64).sqrt()) as f32;
+    let max_fan = fans.iter().copied().max().unwrap_or(1);
+    let queries = rng.gaussian_vec_f32(max_fan * d, 1.0);
+
+    println!("\n== multi-query HSR fan-out, n = {n}, d = {d} ==");
+    println!(
+        "{:>10} {:>5} | {:>14} {:>14} {:>8} | {:>12} {:>12}",
+        "backend", "F", "looped ns/q", "batched ns/q", "speedup", "looped w/q", "batched w/q"
+    );
+    let mut cases: Vec<HsrBatchCase> = Vec::new();
+    for (name, be) in &backends {
+        for &fan in &fans {
+            let q = &queries[..fan * d];
+            let bs = vec![b_raw; fan];
+            let mut outs = vec![Vec::new(); fan];
+            let mut scores = vec![Vec::new(); fan];
+            let looped = bench.run(&format!("hsr-looped/{name}/f={fan}"), || {
+                let mut stats = QueryStats::default();
+                for i in 0..fan {
+                    outs[i].clear();
+                    scores[i].clear();
+                    be.query_scored_into(
+                        &q[i * d..(i + 1) * d],
+                        b_raw,
+                        &mut outs[i],
+                        &mut scores[i],
+                        &mut stats,
+                    );
+                }
+                black_box(stats.reported);
+            });
+            let batched = bench.run(&format!("hsr-batched/{name}/f={fan}"), || {
+                let mut stats = QueryStats::default();
+                for o in outs.iter_mut() {
+                    o.clear();
+                }
+                for s in scores.iter_mut() {
+                    s.clear();
+                }
+                be.query_many_scored_into(q, &bs, &mut outs, &mut scores, &mut stats);
+                black_box(stats.reported);
+            });
+            // Work counters, measured once per mode.
+            let mut looped_stats = QueryStats::default();
+            for i in 0..fan {
+                outs[i].clear();
+                scores[i].clear();
+                be.query_scored_into(
+                    &q[i * d..(i + 1) * d],
+                    b_raw,
+                    &mut outs[i],
+                    &mut scores[i],
+                    &mut looped_stats,
+                );
+            }
+            let mut batched_stats = QueryStats::default();
+            for o in outs.iter_mut() {
+                o.clear();
+            }
+            for s in scores.iter_mut() {
+                s.clear();
+            }
+            be.query_many_scored_into(q, &bs, &mut outs, &mut scores, &mut batched_stats);
+            let case = HsrBatchCase {
+                backend: *name,
+                fan_out: fan,
+                looped_ns_per_query: looped.median_ns / fan as f64,
+                batched_ns_per_query: batched.median_ns / fan as f64,
+                looped_work_per_query: looped_stats.work() as f64 / fan as f64,
+                batched_work_per_query: batched_stats.work() as f64 / fan as f64,
+            };
+            println!(
+                "{:>10} {:>5} | {:>14.1} {:>14.1} {:>7.2}x | {:>12.1} {:>12.1}",
+                case.backend,
+                case.fan_out,
+                case.looped_ns_per_query,
+                case.batched_ns_per_query,
+                case.looped_ns_per_query / case.batched_ns_per_query,
+                case.looped_work_per_query,
+                case.batched_work_per_query
+            );
+            cases.push(case);
+        }
+    }
+
+    let mut root = Json::obj();
+    root.set("dispatch", hsr_attn::kernel::simd::dispatch_name().into());
+    root.set("n", n.into());
+    root.set("d", d.into());
+    let items: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("backend", c.backend.into())
+                .set("fan_out", c.fan_out.into())
+                .set("looped_ns_per_query", c.looped_ns_per_query.into())
+                .set("batched_ns_per_query", c.batched_ns_per_query.into())
+                .set("speedup", (c.looped_ns_per_query / c.batched_ns_per_query).into())
+                .set("looped_work_per_query", c.looped_work_per_query.into())
+                .set("batched_work_per_query", c.batched_work_per_query.into());
+            o
+        })
+        .collect();
+    root.set("cases", Json::Arr(items));
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hsr_batch.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
     banner("decode_time", "paper Theorems 4.1/4.2 (decode O(mn^{4/5}) vs O(mn))");
     let bench = Bencher::quick();
+    if args.flag("hsr-batch-only") {
+        hsr_batch_section(&args, &bench);
+        return;
+    }
     if args.flag("batched-only") {
         batched_decode_section(&args, &bench);
         return;
@@ -239,4 +389,5 @@ fn main() {
     }
 
     batched_decode_section(&args, &bench);
+    hsr_batch_section(&args, &bench);
 }

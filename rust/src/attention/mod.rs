@@ -12,6 +12,9 @@
 //! * [`error`] — approximation-error machinery: the general bound of
 //!   Lemma G.1, the massive-activation bound of Theorem 4.3, and a
 //!   checker for the (γ, β₁, β₂) property of Definition B.3.
+//! * [`session`] / [`plan`] — the unified plan→execute session API
+//!   ([`AttentionConfig`] → [`AttentionSession`] → [`AttentionPlan`]):
+//!   the canonical entry point every engine path drives.
 //!
 //! Conventions: all matrices are row-major `f32` slices; `Q` is m×d,
 //! `K`/`V` are n×d, outputs are m×d. Scores are `<q, k>/sqrt(d)` exactly
@@ -19,10 +22,15 @@
 
 pub mod activations;
 pub mod error;
+pub mod plan;
 pub mod relu;
+pub mod session;
 pub mod softmax;
 pub mod threshold;
 pub mod topk;
+
+pub use plan::AttentionPlan;
+pub use session::{AttentionConfig, AttentionSession, ThresholdPolicy};
 
 use crate::kernel::simd;
 
@@ -36,16 +44,29 @@ pub enum AttentionKind {
     Relu { alpha: u32, bias: f32 },
 }
 
+/// The single score-buffer convention every scoring helper shares:
+/// clear-and-size the caller's reusable `Vec` to exactly `n` entries and
+/// return the writable slice. Capacity is retained across calls, so hot
+/// loops that thread one buffer through stay allocation-free — and
+/// session code never branches on buffer shape.
+pub fn sized_scores(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    buf
+}
+
 /// Compute one row of raw attention scores s_j = <q, K_j>/sqrt(d) via the
-/// blocked SIMD scoring kernel. `scores` must have length n.
-pub fn scores_into(q: &[f32], keys: &[f32], d: usize, scores: &mut [f32]) {
-    debug_assert_eq!(scores.len(), keys.len() / d);
+/// blocked SIMD scoring kernel. `scores` is caller-owned and sized here
+/// (to n = keys.len() / d) through [`sized_scores`].
+pub fn scores_into(q: &[f32], keys: &[f32], d: usize, scores: &mut Vec<f32>) {
+    let n = keys.len() / d;
     let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-    simd::scaled_dots_into(q, keys, d, inv_sqrt_d, scores);
+    simd::scaled_dots_into(q, keys, d, inv_sqrt_d, sized_scores(scores, n));
 }
 
 /// Scores for a subset of key indices: s_t = <q, K_{idx_t}>/sqrt(d)
-/// (gathered SIMD subset-dot kernel).
+/// (gathered SIMD subset-dot kernel). Same buffer convention as
+/// [`scores_into`]: caller-owned `Vec`, sized here to idx.len().
 pub fn scores_subset_into(
     q: &[f32],
     keys: &[f32],
@@ -53,7 +74,14 @@ pub fn scores_subset_into(
     idx: &[u32],
     scores: &mut Vec<f32>,
 ) {
-    simd::gathered_scaled_dots_into(q, keys, d, idx, 1.0 / (d as f32).sqrt(), scores);
+    simd::gathered_scaled_dots_into(
+        q,
+        keys,
+        d,
+        idx,
+        1.0 / (d as f32).sqrt(),
+        sized_scores(scores, idx.len()),
+    );
 }
 
 /// out += w * V_j for a single value row.
@@ -80,8 +108,9 @@ mod tests {
     fn scores_scale_by_sqrt_d() {
         let q = [2.0f32, 0.0, 0.0, 0.0];
         let keys = [3.0f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
-        let mut s = [0f32; 2];
+        let mut s = Vec::new();
         scores_into(&q, &keys, 4, &mut s);
+        assert_eq!(s.len(), 2);
         assert!((s[0] - 3.0).abs() < 1e-6); // 6 / sqrt(4)
         assert!((s[1] - 0.0).abs() < 1e-6);
     }
@@ -90,11 +119,26 @@ mod tests {
     fn subset_scores_match_dense() {
         let q = [1.0f32, -1.0];
         let keys = [1.0f32, 0.0, 0.0, 1.0, 2.0, 2.0];
-        let mut dense = [0f32; 3];
+        let mut dense = Vec::new();
         scores_into(&q, &keys, 2, &mut dense);
         let mut sub = Vec::new();
         scores_subset_into(&q, &keys, 2, &[2, 0], &mut sub);
         assert_eq!(sub, vec![dense[2], dense[0]]);
+    }
+
+    /// Both scoring helpers size the caller's buffer themselves (and a
+    /// stale longer buffer is truncated, not appended to).
+    #[test]
+    fn score_buffers_are_caller_sized() {
+        let q = [1.0f32, 0.0];
+        let keys = [1.0f32, 0.0, 0.0, 1.0];
+        let mut buf = vec![9.0f32; 17];
+        scores_into(&q, &keys, 2, &mut buf);
+        assert_eq!(buf.len(), 2);
+        let cap = buf.capacity();
+        scores_subset_into(&q, &keys, 2, &[1], &mut buf);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.capacity(), cap, "capacity must be retained");
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! [`AttentionPlan`] — the *report* half of the plan→execute contract.
+//!
+//! A plan is the materialized outcome of the HSR phase of Algorithm 1/2
+//! for a batch of query rows: per row, the fired (or top-r-selected)
+//! key indices in canonical ascending order, the activation weights the
+//! HSR-carried scores were transformed into (exp or ReLU^α — already
+//! *unnormalized*), the row's `1/normalizer`, the activated-set size
+//! k̃_i, and the accumulated [`QueryStats`]. Executing a plan (see
+//! [`crate::attention::session`]) is a pure bucketed gather over the
+//! value matrix — no inner product is ever recomputed.
+//!
+//! Plans are reusable arenas: every buffer is cleared (capacity kept) by
+//! the next `plan_into`, so steady-state planning performs no heap
+//! allocation — the same discipline as [`Scratch`], which a plan embeds.
+
+use crate::hsr::QueryStats;
+use crate::kernel::Scratch;
+
+/// The planned sparse evaluation for a batch of query rows.
+///
+/// Layout is CSR over the batch: row r's entries live at
+/// `buf.idx[buf.row_ptr[r]..buf.row_ptr[r + 1]]` (ascending key order)
+/// with parallel weights in `buf.w`; `buf.inv[r]` is the row's
+/// `1/normalizer` (0.0 marks a degenerate all-zero row).
+#[derive(Default)]
+pub struct AttentionPlan {
+    /// Working buffers: the CSR arrays plus per-row scratch. Crate-level
+    /// visibility so the session executor and the transformer's per-head
+    /// path can reuse it without re-exporting every internal vector.
+    pub(crate) buf: Scratch,
+    /// Activated entries per row — the k̃_i of Lemma 6.1.
+    pub fired: Vec<usize>,
+    /// HSR work counters accumulated while planning this batch.
+    pub stats: QueryStats,
+    /// Rows that fell back to a full half-space re-query (softmax top-r
+    /// under-report, Theorem 4.2's exactness guard).
+    pub fallbacks: usize,
+}
+
+impl AttentionPlan {
+    pub fn new() -> AttentionPlan {
+        AttentionPlan::default()
+    }
+
+    /// Number of planned query rows.
+    pub fn rows(&self) -> usize {
+        self.buf.row_ptr.len().saturating_sub(1)
+    }
+
+    /// Row r's selected key indices, ascending.
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.buf.idx[self.buf.row_ptr[r]..self.buf.row_ptr[r + 1]]
+    }
+
+    /// Row r's unnormalized activation weights, parallel to
+    /// [`AttentionPlan::row_indices`]; multiply by
+    /// [`AttentionPlan::row_inv`] for the convex-combination weights.
+    pub fn row_weights(&self, r: usize) -> &[f32] {
+        &self.buf.w[self.buf.row_ptr[r]..self.buf.row_ptr[r + 1]]
+    }
+
+    /// Row r's `1/normalizer` (0.0 for a degenerate all-zero row).
+    pub fn row_inv(&self, r: usize) -> f32 {
+        self.buf.inv[r]
+    }
+
+    /// Reset for a fresh batch, keeping every buffer's capacity.
+    pub(crate) fn reset(&mut self) {
+        self.buf.idx.clear();
+        self.buf.w.clear();
+        self.buf.row_ptr.clear();
+        self.buf.row_ptr.push(0);
+        self.buf.inv.clear();
+        self.fired.clear();
+        self.stats = QueryStats::default();
+        self.fallbacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_has_no_rows() {
+        let mut p = AttentionPlan::new();
+        assert_eq!(p.rows(), 0);
+        p.reset();
+        assert_eq!(p.rows(), 0);
+        assert_eq!(p.fired.len(), 0);
+    }
+}

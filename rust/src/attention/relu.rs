@@ -39,8 +39,6 @@ pub fn relu_attention_row(
     scores_buf: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    let n = keys.len() / d;
-    scores_buf.resize(n, 0.0);
     scores_into(q, keys, d, scores_buf);
     out.fill(0.0);
     let mut denom = 0f32;

@@ -1,0 +1,733 @@
+//! The unified sparse-attention session — one plan→execute contract for
+//! every consumer of the paper's two-phase pipeline.
+//!
+//! The paper's Algorithms 1 and 2 share a single shape: HSR reports the
+//! fired set for each query (phase A), then the attention is evaluated
+//! on exactly that set (phase B). This module makes the split explicit
+//! and *the* API:
+//!
+//! ```text
+//! AttentionConfig::new(kind, backend)     // builder: threshold, top-r,
+//!     .with_bias(b).with_threads(t)       //   adaptive policy, threads
+//!     .build(keys, d)                     // -> AttentionSession
+//! session.plan(queries)                   // -> AttentionPlan (fired sets
+//!                                         //    + carried scores + stats)
+//! session.execute(&mut plan, values, out) // bucketed value gather
+//! session.run(q, values, out, fired)      // sharded plan+execute
+//! ```
+//!
+//! `PromptPrefilling`, `GenerationDecoding`, the transformer's per-head
+//! attention and the serving engine are all thin callers of this type;
+//! their legacy constructors remain as deprecated shims for one release.
+//!
+//! **Multi-query fan-out.** Planning batches query rows into
+//! [`QUERY_BLOCK`]-row blocks and answers each block with one
+//! [`HalfSpaceReport::query_many_scored_into`] call, so tree-shaped
+//! backends prune each node once against the whole block (the ROADMAP's
+//! cross-sequence HSR amortization). Blocks are aligned to global row
+//! indices regardless of the worker count, so the shared-traversal
+//! [`QueryStats`] are deterministic across thread counts. Evaluation is
+//! canonicalized to ascending key order per row, which makes the final
+//! output independent of the backend's traversal order *and* of how
+//! rows are grouped — planning through this session is bit-identical to
+//! the pre-session decode paths for every backend and thread count.
+
+use crate::attention::plan::AttentionPlan;
+use crate::attention::relu::relu_weights_in_place;
+use crate::attention::threshold::ThresholdParams;
+use crate::attention::topk::{rth_largest, top_r_select_into};
+use crate::attention::AttentionKind;
+use crate::hsr::dynamic::DynamicHsr;
+use crate::hsr::{HalfSpaceReport, HsrBackend, QueryStats};
+use crate::kernel::simd;
+use crate::kernel::Scratch;
+
+/// Rows per shared-traversal HSR query block. Blocks are aligned to
+/// multiples of this value across the whole batch (shards round their
+/// row counts up to it), so work counters do not depend on threading.
+pub const QUERY_BLOCK: usize = 8;
+
+/// How many value rows one union bucket packs per gather pass of the
+/// execute phase: small enough that the packed tile stays L1/L2
+/// resident while every row of the batch consumes it.
+pub const BUCKET_ROWS: usize = 256;
+
+/// How the session resolves the HSR threshold b (on the scaled score).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ThresholdPolicy {
+    /// Lemma 6.1's practical threshold σ_q σ_k √(0.4 ln n), resolved
+    /// from the indexed key count when the session is built.
+    Lemma,
+    /// An explicit threshold on the scaled score ⟨q,k⟩/√d.
+    Fixed(f32),
+}
+
+/// Builder for an [`AttentionSession`]: every knob that used to be
+/// scattered across `EngineConfig`, `GenerationDecoding::init` and
+/// `PromptPrefilling::new`, in one place.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttentionConfig {
+    /// Which attention to evaluate on the reported set.
+    pub kind: AttentionKind,
+    /// Static HSR backend the session's dynamic index is built over.
+    pub backend: HsrBackend,
+    /// Softmax: restrict each report to its top-r entries (Theorem 4.2);
+    /// None → evaluate the whole reported set.
+    pub top_r: Option<usize>,
+    /// Threshold policy for the HSR half-space query.
+    pub threshold: ThresholdPolicy,
+    /// Per-query adaptive threshold for softmax top-r rows: aim the
+    /// expected report at 2r given key entry std `sigma_k` (a fixed b
+    /// under-reports for small-norm queries and triggers costly
+    /// full-scan fallbacks). None → use the fixed/Lemma bias for every
+    /// row. Ignored for ReLU and for softmax without top-r.
+    pub adaptive_sigma_k: Option<f64>,
+    /// Worker threads for `run`: 0 → one per available core, 1 → serial.
+    /// Output and stats are identical for every setting.
+    pub threads: usize,
+}
+
+impl AttentionConfig {
+    pub fn new(kind: AttentionKind, backend: HsrBackend) -> AttentionConfig {
+        AttentionConfig {
+            kind,
+            backend,
+            top_r: None,
+            threshold: ThresholdPolicy::Lemma,
+            adaptive_sigma_k: None,
+            threads: 0,
+        }
+    }
+
+    pub fn with_top_r(mut self, r: usize) -> AttentionConfig {
+        self.top_r = Some(r);
+        self
+    }
+
+    pub fn with_threshold(mut self, t: ThresholdPolicy) -> AttentionConfig {
+        self.threshold = t;
+        self
+    }
+
+    /// Shorthand for `with_threshold(ThresholdPolicy::Fixed(b))`.
+    pub fn with_bias(mut self, b: f32) -> AttentionConfig {
+        self.threshold = ThresholdPolicy::Fixed(b);
+        self
+    }
+
+    pub fn with_adaptive(mut self, sigma_k: f64) -> AttentionConfig {
+        self.adaptive_sigma_k = Some(sigma_k);
+        self
+    }
+
+    pub fn with_threads(mut self, t: usize) -> AttentionConfig {
+        self.threads = t;
+        self
+    }
+
+    /// Build a session over `n = keys.len() / d` key rows.
+    pub fn build(&self, keys: &[f32], d: usize) -> AttentionSession {
+        AttentionSession::build(*self, keys, d)
+    }
+}
+
+/// Copyable per-plan snapshot of the row-evaluation configuration, so
+/// worker threads never borrow the session itself.
+#[derive(Clone, Copy)]
+pub(crate) struct RowPolicy {
+    pub d: usize,
+    pub n: usize,
+    /// Threshold on the scaled score (also the ReLU bias).
+    pub bias: f32,
+    pub kind: AttentionKind,
+    pub top_r: Option<usize>,
+    pub adaptive_sigma_k: Option<f64>,
+}
+
+/// A built sparse-attention session: the dynamic HSR index over the keys
+/// plus the evaluation policy. `plan` answers queries (phase A),
+/// `execute` evaluates a plan against a value matrix (phase B), `run`
+/// does both with row sharding across scoped worker threads.
+pub struct AttentionSession {
+    /// Which attention to evaluate on the reported set.
+    pub kind: AttentionKind,
+    /// Softmax: keep only the top-r of each report.
+    pub top_r: Option<usize>,
+    /// Resolved threshold on the scaled score (the b of Lemma 6.1).
+    pub bias: f32,
+    /// See [`AttentionConfig::adaptive_sigma_k`].
+    pub adaptive_sigma_k: Option<f64>,
+    /// Worker threads for `run` (0 → auto, 1 → serial).
+    pub threads: usize,
+    /// Work counters accumulated by [`AttentionSession::run`] calls.
+    /// The explicit `plan`/`plan_into` flow reports its counters on the
+    /// returned [`AttentionPlan::stats`] instead (those entry points
+    /// take `&self`, so several plans can run concurrently).
+    pub stats: QueryStats,
+    /// Softmax top-r full-scan fallbacks accumulated by `run` calls;
+    /// per-plan counts live on [`AttentionPlan::fallbacks`].
+    pub fallbacks: usize,
+    index: DynamicHsr,
+    d: usize,
+    /// Per-worker plan arenas, reused across `run` calls.
+    pool: Vec<AttentionPlan>,
+}
+
+impl AttentionSession {
+    fn build(cfg: AttentionConfig, keys: &[f32], d: usize) -> AttentionSession {
+        assert!(d > 0);
+        assert_eq!(keys.len() % d, 0);
+        let n = keys.len() / d;
+        let bias = match (cfg.threshold, cfg.kind) {
+            (ThresholdPolicy::Fixed(b), _) => b,
+            // ReLU exactness requires query threshold == weight bias, so
+            // the Lemma policy resolves to the kind's own bias — the
+            // user-stated b of Definition 1.2 — rather than silently
+            // substituting the Gaussian-workload value.
+            (ThresholdPolicy::Lemma, AttentionKind::Relu { bias, .. }) => bias,
+            (ThresholdPolicy::Lemma, AttentionKind::Softmax) => {
+                ThresholdParams::standard(d, 1).practical_bias(n.max(2)) as f32
+            }
+        };
+        AttentionSession {
+            kind: cfg.kind,
+            top_r: cfg.top_r,
+            bias,
+            adaptive_sigma_k: cfg.adaptive_sigma_k,
+            threads: cfg.threads,
+            stats: QueryStats::default(),
+            fallbacks: 0,
+            index: DynamicHsr::from_points(cfg.backend, keys, d),
+            d,
+            pool: Vec::new(),
+        }
+    }
+
+    /// Number of indexed key rows.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Key dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// The session's dynamic HSR index (diagnostics / direct queries).
+    pub fn index(&self) -> &DynamicHsr {
+        &self.index
+    }
+
+    /// Append a generated token's key — Theorem D.2's auto-regressive
+    /// growth, amortized-logarithmic via the dynamic index.
+    pub fn append_key(&mut self, key: &[f32]) {
+        assert_eq!(key.len(), self.d);
+        self.index.insert(key);
+    }
+
+    fn row_policy(&self) -> RowPolicy {
+        RowPolicy {
+            d: self.d,
+            n: self.len(),
+            bias: self.bias,
+            kind: self.kind,
+            top_r: self.top_r,
+            adaptive_sigma_k: self.adaptive_sigma_k,
+        }
+    }
+
+    /// Phase A for `q.len() / d` query rows, allocating a fresh plan.
+    pub fn plan(&self, q: &[f32]) -> AttentionPlan {
+        let mut plan = AttentionPlan::new();
+        self.plan_into(q, &mut plan);
+        plan
+    }
+
+    /// Phase A into a reusable plan arena (no steady-state allocation).
+    pub fn plan_into(&self, q: &[f32], plan: &mut AttentionPlan) {
+        plan_rows(&self.index, self.row_policy(), q, plan);
+    }
+
+    /// Phase B: evaluate a plan against `values` ([n, d], row-major),
+    /// writing the [rows, d] attention output. Bucketed union gather —
+    /// the value matrix streams through the kernel layer once per
+    /// [`BUCKET_ROWS`]-sized bucket instead of once per row.
+    pub fn execute(&self, plan: &mut AttentionPlan, values: &[f32], out: &mut [f32]) {
+        assert_eq!(values.len(), self.len() * self.d);
+        assert_eq!(out.len(), plan.rows() * self.d);
+        execute_plan(plan, values, self.d, out);
+    }
+
+    /// plan + execute over B query rows, sharded across scoped worker
+    /// threads ([`AttentionSession::threads`]); writes the [B, d] output
+    /// into `out` and the per-row activated-set sizes k̃_i into `fired`.
+    /// Output, fired counts and merged stats are bit-identical for every
+    /// thread count.
+    pub fn run(&mut self, q: &[f32], values: &[f32], out: &mut [f32], fired: &mut [usize]) {
+        let d = self.d;
+        assert_eq!(q.len() % d, 0);
+        let b = q.len() / d;
+        assert_eq!(out.len(), b * d);
+        assert_eq!(fired.len(), b);
+        assert_eq!(values.len(), self.len() * d);
+        if b == 0 {
+            return;
+        }
+        let pol = self.row_policy();
+        let workers = crate::kernel::effective_threads(self.threads, b);
+        // Shard on QUERY_BLOCK boundaries: the block partition — and so
+        // the shared-traversal stats — is independent of worker count.
+        let base = (b + workers - 1) / workers;
+        let rows_per = ((base + QUERY_BLOCK - 1) / QUERY_BLOCK) * QUERY_BLOCK;
+        let shards = (b + rows_per - 1) / rows_per;
+        while self.pool.len() < shards {
+            self.pool.push(AttentionPlan::new());
+        }
+        let index = &self.index;
+        let pool = &mut self.pool[..shards];
+        if shards <= 1 {
+            let plan = &mut pool[0];
+            plan_rows(index, pol, q, plan);
+            execute_plan(plan, values, d, out);
+            fired.copy_from_slice(&plan.fired);
+        } else {
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(shards);
+                for (((q_c, out_c), fired_c), plan) in q
+                    .chunks(rows_per * d)
+                    .zip(out.chunks_mut(rows_per * d))
+                    .zip(fired.chunks_mut(rows_per))
+                    .zip(pool.iter_mut())
+                {
+                    handles.push(scope.spawn(move || {
+                        plan_rows(index, pol, q_c, plan);
+                        execute_plan(plan, values, d, out_c);
+                        fired_c.copy_from_slice(&plan.fired);
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("attention session worker panicked");
+                }
+            });
+        }
+        // Merge in shard order so the aggregate is deterministic.
+        for plan in pool.iter() {
+            self.stats.add(&plan.stats);
+            self.fallbacks += plan.fallbacks;
+        }
+    }
+}
+
+/// The per-row HSR threshold on the *raw* inner product ⟨q,k⟩.
+fn row_threshold(pol: RowPolicy, qi: &[f32]) -> f32 {
+    match (pol.kind, pol.top_r, pol.adaptive_sigma_k) {
+        // Softmax top-r with adaptive policy: ⟨q,k⟩ | q ~ N(0, ‖q‖²σ_k²),
+        // so aiming the expected report at 2r needs
+        // b_raw = ‖q‖ σ_k √(2 ln(n / 2r)).
+        (AttentionKind::Softmax, Some(r), Some(sigma_k)) => {
+            let n = pol.n.max(2) as f64;
+            let target = (2 * r).max(1) as f64;
+            let t = (2.0 * (n / target).ln()).max(0.0).sqrt();
+            (crate::hsr::norm(qi) as f64 * sigma_k * t) as f32
+        }
+        _ => pol.bias * (pol.d as f32).sqrt(),
+    }
+}
+
+/// Canonicalize an (index, score) report to ascending key order,
+/// writing into `selected` / `exps`. Evaluation order is then
+/// independent of the backend's traversal order AND of how rows are
+/// grouped into batches — the property the bit-identity rests on.
+fn canonicalize_ascending(
+    fire: &[u32],
+    scores: &[f32],
+    perm: &mut Vec<u32>,
+    selected: &mut Vec<u32>,
+    exps: &mut Vec<f32>,
+) {
+    perm.clear();
+    perm.extend(0..fire.len() as u32);
+    perm.sort_unstable_by_key(|&p| fire[p as usize]);
+    selected.clear();
+    exps.clear();
+    for &p in perm.iter() {
+        selected.push(fire[p as usize]);
+        exps.push(scores[p as usize]);
+    }
+}
+
+/// Finish one row whose block query already reported into
+/// `fire`/`scores`: softmax top-r under-report fallback, canonical
+/// ascending-index selection, and the in-place weight transform.
+/// Returns (k̃, 1/normalizer) — 0.0 marking a degenerate zero row.
+#[allow(clippy::too_many_arguments)]
+fn finish_row(
+    index: &dyn HalfSpaceReport,
+    pol: RowPolicy,
+    qi: &[f32],
+    fire: &mut Vec<u32>,
+    scores: &mut Vec<f32>,
+    selected: &mut Vec<u32>,
+    exps: &mut Vec<f32>,
+    perm: &mut Vec<u32>,
+    stats: &mut QueryStats,
+    fallbacks: &mut usize,
+) -> (usize, f32) {
+    let inv_sqrt_d = 1.0 / (pol.d as f32).sqrt();
+    if let (AttentionKind::Softmax, Some(r)) = (pol.kind, pol.top_r) {
+        // Theorem 4.2 needs R = NN(r, q, K): if the threshold
+        // under-reported (|fire| < r), fall back to the full half-space
+        // so the top-r below is exact.
+        if fire.len() < r.min(pol.n) {
+            *fallbacks += 1;
+            fire.clear();
+            scores.clear();
+            index.query_scored_into(qi, f32::NEG_INFINITY, fire, scores, stats);
+        }
+    }
+    match (pol.kind, pol.top_r) {
+        (AttentionKind::Softmax, Some(r)) if r < fire.len() => {
+            top_r_select_into(fire, scores, r, selected, exps);
+        }
+        _ => canonicalize_ascending(fire, scores, perm, selected, exps),
+    }
+    for s in exps.iter_mut() {
+        *s *= inv_sqrt_d;
+    }
+    let denom = match pol.kind {
+        // The session's resolved bias governs the ReLU weights — it is
+        // the same b the HSR query fired on, which is what makes the
+        // ReLU evaluation exact (Definition 1.2).
+        AttentionKind::Relu { alpha, bias } => {
+            debug_assert!(
+                (bias - pol.bias).abs() < 1e-6,
+                "ReLU bias must equal the session threshold for exactness"
+            );
+            relu_weights_in_place(exps, alpha, pol.bias)
+        }
+        AttentionKind::Softmax => simd::softmax_exp_in_place(exps),
+    };
+    let inv = if denom > 0.0 && denom.is_finite() { 1.0 / denom } else { 0.0 };
+    (selected.len(), inv)
+}
+
+/// Phase A over all rows of `q`: block the rows into [`QUERY_BLOCK`]s,
+/// answer each block with one shared HSR traversal, then finish each
+/// row into the plan's CSR arrays.
+pub(crate) fn plan_rows(
+    index: &dyn HalfSpaceReport,
+    pol: RowPolicy,
+    q: &[f32],
+    plan: &mut AttentionPlan,
+) {
+    let d = pol.d;
+    assert_eq!(q.len() % d, 0);
+    let rows = q.len() / d;
+    plan.reset();
+    let AttentionPlan { buf, fired, stats, fallbacks } = plan;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let bl = QUERY_BLOCK.min(rows - r0);
+        let qblock = &q[r0 * d..(r0 + bl) * d];
+        buf.bs.clear();
+        for t in 0..bl {
+            buf.bs.push(row_threshold(pol, &qblock[t * d..(t + 1) * d]));
+        }
+        while buf.many_idx.len() < bl {
+            buf.many_idx.push(Vec::new());
+            buf.many_scores.push(Vec::new());
+        }
+        for t in 0..bl {
+            buf.many_idx[t].clear();
+            buf.many_scores[t].clear();
+        }
+        index.query_many_scored_into(
+            qblock,
+            &buf.bs,
+            &mut buf.many_idx[..bl],
+            &mut buf.many_scores[..bl],
+            stats,
+        );
+        for t in 0..bl {
+            let qi = &qblock[t * d..(t + 1) * d];
+            let Scratch { many_idx, many_scores, selected, exps, perm, idx, w, row_ptr, inv, .. } =
+                buf;
+            let (k, rinv) = finish_row(
+                index,
+                pol,
+                qi,
+                &mut many_idx[t],
+                &mut many_scores[t],
+                selected,
+                exps,
+                perm,
+                stats,
+                fallbacks,
+            );
+            fired.push(k);
+            idx.extend_from_slice(selected);
+            w.extend_from_slice(exps);
+            row_ptr.push(idx.len());
+            inv.push(rinv);
+        }
+        r0 += bl;
+    }
+}
+
+/// Single calibrated softmax top-r row — the transformer's per-head
+/// policy (Theorem 4.2's "choose b such that R = NN(r, q, K)" realized
+/// by quantile recalibration). Queries with the carried-in threshold,
+/// falls back to the full half-space on a calibration miss, and returns
+/// the recalibrated threshold (aimed at ~`slack`·r candidates) for the
+/// caller to store. The planned row is ready for `execute`.
+pub(crate) fn plan_top_r_row(
+    index: &dyn HalfSpaceReport,
+    qi: &[f32],
+    r: usize,
+    calib: Option<f32>,
+    slack: f32,
+    plan: &mut AttentionPlan,
+) -> Option<f32> {
+    let d = qi.len();
+    plan.reset();
+    let AttentionPlan { buf, fired, stats, fallbacks } = plan;
+    let Scratch { fire, scores, selected, exps, perm, idx, w, row_ptr, inv, .. } = buf;
+    fire.clear();
+    scores.clear();
+    let b_raw = calib.unwrap_or(f32::NEG_INFINITY);
+    index.query_scored_into(qi, b_raw, fire, scores, stats);
+    if fire.len() < r {
+        // Calibration miss: fall back to the full half-space (b = -inf ≡
+        // brute top-r) so exactness is never compromised.
+        *fallbacks += 1;
+        fire.clear();
+        scores.clear();
+        index.query_scored_into(qi, f32::NEG_INFINITY, fire, scores, stats);
+    }
+    // Recalibrate from the raw candidate scores before they are consumed.
+    let target = ((r as f32 * slack) as usize).min(fire.len());
+    let new_calib = if target >= 1 { Some(rth_largest(scores, target)) } else { None };
+    if r < fire.len() {
+        top_r_select_into(fire, scores, r, selected, exps);
+    } else {
+        canonicalize_ascending(fire, scores, perm, selected, exps);
+    }
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for s in exps.iter_mut() {
+        *s *= inv_sqrt_d;
+    }
+    let denom = simd::softmax_exp_in_place(exps);
+    let rinv = if denom > 0.0 && denom.is_finite() { 1.0 / denom } else { 0.0 };
+    fired.push(selected.len());
+    idx.extend_from_slice(selected);
+    w.extend_from_slice(exps);
+    row_ptr.push(idx.len());
+    inv.push(rinv);
+    new_calib
+}
+
+/// Phase B: bucketed union gather. Union the plan's fired indices and
+/// stream the value matrix once per [`BUCKET_ROWS`]-row bucket,
+/// accumulating every row's weighted sum out of the packed (cache-hot)
+/// bucket instead of issuing `rows` independent scattered passes over V.
+/// Each row's contributions are applied in ascending key order
+/// regardless of bucketing, so the result is independent of batching.
+pub(crate) fn execute_plan(plan: &mut AttentionPlan, values: &[f32], d: usize, out: &mut [f32]) {
+    let rows = plan.rows();
+    debug_assert_eq!(out.len(), rows * d);
+    out.fill(0.0);
+    let Scratch { idx, w, row_ptr, inv, union_idx, packed, cursor, .. } = &mut plan.buf;
+    if rows == 1 {
+        // Single row (the per-token transformer path and B = 1 decode):
+        // the union IS the row, so skip the pack entirely and axpy
+        // straight out of `values`. Same ascending order and identical
+        // floats as the bucketed path below — bit-identical outputs.
+        if inv[0] == 0.0 {
+            return;
+        }
+        let scale = inv[0];
+        for c in row_ptr[0]..row_ptr[1] {
+            let a = w[c];
+            if a != 0.0 {
+                let j = idx[c] as usize;
+                simd::axpy(out, &values[j * d..(j + 1) * d], a * scale);
+            }
+        }
+        return;
+    }
+    union_idx.clear();
+    union_idx.extend_from_slice(idx);
+    union_idx.sort_unstable();
+    union_idx.dedup();
+    cursor.clear();
+    cursor.extend_from_slice(&row_ptr[..rows]);
+    for bucket in union_idx.chunks(BUCKET_ROWS) {
+        // One gather pass per bucket: pack the bucket's value rows.
+        packed.clear();
+        for &j in bucket.iter() {
+            let j = j as usize;
+            packed.extend_from_slice(&values[j * d..(j + 1) * d]);
+        }
+        let hi = *bucket.last().expect("chunks are non-empty");
+        for rw in 0..rows {
+            let end = row_ptr[rw + 1];
+            let mut c = cursor[rw];
+            if inv[rw] == 0.0 {
+                // Degenerate normalizer: leave the zero row, but keep
+                // the cursor in step with the bucket sweep.
+                while c < end && idx[c] <= hi {
+                    c += 1;
+                }
+                cursor[rw] = c;
+                continue;
+            }
+            let orow = &mut out[rw * d..(rw + 1) * d];
+            let scale = inv[rw];
+            // Both the row's indices and the bucket are ascending, so the
+            // bucket position advances monotonically: search only the
+            // remaining suffix (O(1) amortized for dense rows, log for
+            // sparse ones) instead of bisecting the whole bucket per hit.
+            let mut bp = 0usize;
+            while c < end && idx[c] <= hi {
+                let a = w[c];
+                if a != 0.0 {
+                    let pos = bp
+                        + bucket[bp..]
+                            .binary_search(&idx[c])
+                            .expect("every fired index is in the union");
+                    simd::axpy(orow, &packed[pos * d..(pos + 1) * d], a * scale);
+                    bp = pos + 1;
+                }
+                c += 1;
+            }
+            cursor[rw] = c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::relu::relu_attention;
+    use crate::attention::softmax::softmax_attention;
+    use crate::attention::linf;
+    use crate::util::rng::Rng;
+    use crate::workloads::gaussian::AttentionInstance;
+
+    /// The session's ReLU path is exact vs the dense evaluation (the
+    /// paper's "no error for ReLU" claim) through plan→execute.
+    #[test]
+    fn session_relu_matches_dense() {
+        let mut rng = Rng::new(301);
+        let inst = AttentionInstance::gaussian(&mut rng, 24, 400, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        for backend in [HsrBackend::Brute, HsrBackend::BallTree, HsrBackend::Projected] {
+            let mut session = AttentionConfig::new(
+                AttentionKind::Relu { alpha: 2, bias },
+                backend,
+            )
+            .with_bias(bias)
+            .build(&inst.k, inst.d);
+            let mut out = vec![0f32; inst.m * inst.d];
+            let mut fired = vec![0usize; inst.m];
+            session.run(&inst.q, &inst.v, &mut out, &mut fired);
+            let want = relu_attention(&inst.q, &inst.k, &inst.v, inst.d, 2, bias);
+            assert!(linf(&out, &want) < 1e-4, "backend={backend:?}");
+            assert!(fired.iter().sum::<usize>() > 0);
+        }
+    }
+
+    /// plan() + execute() is the same computation run() performs —
+    /// bit-identically — and both are stable across thread counts.
+    #[test]
+    fn plan_execute_equals_run_bitwise() {
+        let mut rng = Rng::new(302);
+        let inst = AttentionInstance::gaussian(&mut rng, 37, 500, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let cases = [
+            AttentionConfig::new(AttentionKind::Relu { alpha: 1, bias }, HsrBackend::BallTree)
+                .with_bias(bias),
+            AttentionConfig::new(AttentionKind::Softmax, HsrBackend::BallTree)
+                .with_bias(0.0)
+                .with_top_r(24)
+                .with_adaptive(1.0),
+            AttentionConfig::new(AttentionKind::Softmax, HsrBackend::Projected).with_bias(bias),
+        ];
+        for cfg in cases {
+            let session = cfg.build(&inst.k, inst.d);
+            let mut plan = session.plan(&inst.q);
+            let mut via_plan = vec![0f32; inst.m * inst.d];
+            session.execute(&mut plan, &inst.v, &mut via_plan);
+            for threads in [1usize, 2, 3] {
+                let mut s2 = cfg.with_threads(threads).build(&inst.k, inst.d);
+                let mut out = vec![0f32; inst.m * inst.d];
+                let mut fired = vec![0usize; inst.m];
+                s2.run(&inst.q, &inst.v, &mut out, &mut fired);
+                assert_eq!(via_plan, out, "threads={threads} cfg={cfg:?}");
+                assert_eq!(plan.fired, fired, "threads={threads}");
+                assert_eq!(plan.stats, s2.stats, "threads={threads}");
+            }
+        }
+    }
+
+    /// Appending keys (auto-regressive growth) stays consistent with a
+    /// from-scratch session, for both attention kinds — the multi-query
+    /// block path over a dynamic index with live tail and buckets.
+    #[test]
+    fn append_matches_fresh_session_both_kinds() {
+        let mut rng = Rng::new(303);
+        let d = 8;
+        let inst = AttentionInstance::gaussian(&mut rng, 9, 300, d);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let kinds = [
+            AttentionKind::Relu { alpha: 2, bias },
+            AttentionKind::Softmax,
+        ];
+        for kind in kinds {
+            let cfg = AttentionConfig::new(kind, HsrBackend::BallTree).with_bias(bias);
+            let mut grown = cfg.build(&inst.k[..150 * d], d);
+            for j in 150..300 {
+                grown.append_key(&inst.k[j * d..(j + 1) * d]);
+            }
+            let mut fresh = cfg.build(&inst.k, d);
+            let mut out_a = vec![0f32; inst.m * d];
+            let mut out_b = vec![0f32; inst.m * d];
+            let mut fired_a = vec![0usize; inst.m];
+            let mut fired_b = vec![0usize; inst.m];
+            grown.run(&inst.q, &inst.v, &mut out_a, &mut fired_a);
+            fresh.run(&inst.q, &inst.v, &mut out_b, &mut fired_b);
+            assert!(linf(&out_a, &out_b) < 1e-5, "kind={kind:?}");
+            assert_eq!(fired_a, fired_b, "kind={kind:?}");
+        }
+    }
+
+    /// The Lemma threshold policy resolves to the same bias the prefill
+    /// path historically used, and softmax over the full report matches
+    /// dense softmax when the threshold reports everything.
+    #[test]
+    fn lemma_policy_and_full_report_softmax() {
+        let mut rng = Rng::new(304);
+        let inst = AttentionInstance::gaussian(&mut rng, 8, 200, 8);
+        let session = AttentionConfig::new(AttentionKind::Softmax, HsrBackend::BallTree)
+            .with_bias(f32::NEG_INFINITY)
+            .build(&inst.k, inst.d);
+        let mut plan = session.plan(&inst.q);
+        let mut out = vec![0f32; inst.m * inst.d];
+        session.execute(&mut plan, &inst.v, &mut out);
+        let dense = softmax_attention(&inst.q, &inst.k, &inst.v, inst.d);
+        assert!(linf(&out, &dense) < 1e-4, "err={}", linf(&out, &dense));
+        // Lemma resolution sanity: positive, finite, grows with ln n.
+        let s1 = AttentionConfig::new(AttentionKind::Softmax, HsrBackend::Brute)
+            .build(&inst.k, inst.d);
+        let b1 = s1.bias;
+        assert!(b1.is_finite() && b1 > 0.0);
+        assert!(
+            (b1 as f64 - (0.4 * (inst.n as f64).ln()).sqrt()).abs() < 1e-6,
+            "lemma bias {b1}"
+        );
+    }
+}

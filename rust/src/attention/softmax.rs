@@ -20,8 +20,6 @@ pub fn softmax_attention_row(
     scores_buf: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    let n = keys.len() / d;
-    scores_buf.resize(n, 0.0);
     scores_into(q, keys, d, scores_buf);
     softmax_weighted_sum(scores_buf, None, values, d, out);
 }

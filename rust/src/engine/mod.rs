@@ -2,7 +2,8 @@
 //!
 //! * [`decode`] / [`prefill`] — the paper's Algorithm 1 and Algorithm 2 as
 //!   standalone data structures over raw Q/K/V (what the theorem-level
-//!   benches exercise).
+//!   benches exercise). Both are thin shims over the unified
+//!   [`crate::attention::AttentionSession`] plan→execute API.
 //! * [`serving`] — the continuous-batching engine integrating Algorithm 1
 //!   into real LM serving: paged KV cache ([`kv_cache`]), chunked
 //!   prefill, preemption ([`scheduler`]), per-(layer, head) dynamic HSR

@@ -13,25 +13,18 @@
 //!   return D^{-1} A V
 //! ```
 //!
-//! Engineering beyond the pseudocode (all output-preserving):
-//!
-//! * **Score-carrying queries** — `query_scored_into` reports (index,
-//!   raw-dot) pairs, so the softmax/ReLU evaluation never recomputes an
-//!   inner product the HSR traversal already paid for.
-//! * **Scratch reuse** — one [`Scratch`] arena per worker; the per-row
-//!   loop performs no heap allocation in steady state.
-//! * **Parallel rows** — the m query rows are embarrassingly parallel
-//!   over the immutable HSR structure; they are sharded across scoped
-//!   threads (`threads` knob, 0 = auto) with per-shard `QueryStats`
-//!   merged in shard order. Output is bit-identical to the serial path.
+//! Since the session API landed this type is a **thin caller** of
+//! [`AttentionSession`]: INFERENCE builds a session over the keys (the
+//! [`ThresholdPolicy::Lemma`] policy is exactly the b above) and calls
+//! [`AttentionSession::run`] — which blocks the m query rows into
+//! shared HSR traversals, shards them across scoped threads, and
+//! evaluates through the bucketed gather, bit-identically for every
+//! thread count. The struct is kept as a deprecated-style shim for one
+//! release; new code should use [`AttentionConfig`] directly.
 
-use crate::attention::relu::relu_attention_row_scored;
-use crate::attention::softmax::softmax_attention_row_scored;
-use crate::attention::threshold::ThresholdParams;
-use crate::attention::topk::top_r_select_into;
+use crate::attention::session::{AttentionConfig, AttentionSession, ThresholdPolicy};
 use crate::attention::AttentionKind;
-use crate::hsr::{build_hsr, HalfSpaceReport, HsrBackend, QueryStats};
-use crate::kernel::Scratch;
+use crate::hsr::{HsrBackend, QueryStats};
 
 /// Output of one prefill run.
 pub struct PrefillResult {
@@ -43,7 +36,7 @@ pub struct PrefillResult {
     pub stats: QueryStats,
 }
 
-/// Algorithm 2 configuration.
+/// Algorithm 2 configuration (deprecated shim over [`AttentionConfig`]).
 #[derive(Debug, Clone, Copy)]
 pub struct PromptPrefilling {
     pub kind: AttentionKind,
@@ -62,6 +55,24 @@ impl PromptPrefilling {
         PromptPrefilling { kind, backend, top_r: None, bias_override: None, threads: 0 }
     }
 
+    /// The equivalent unified config (prefill never uses the per-query
+    /// adaptive threshold: its softmax top-r path keeps the fixed bias
+    /// with the exactness fallback, as in Theorem 5.2).
+    pub fn attention_config(&self) -> AttentionConfig {
+        let mut cfg = AttentionConfig::new(self.kind, self.backend).with_threads(self.threads);
+        cfg.threshold = match self.bias_override {
+            Some(b) => ThresholdPolicy::Fixed(b),
+            None => ThresholdPolicy::Lemma,
+        };
+        cfg.top_r = self.top_r;
+        cfg
+    }
+
+    /// Build the per-call session: Part-1 HSR build over the keys.
+    pub fn session(&self, keys: &[f32], d: usize) -> AttentionSession {
+        self.attention_config().build(keys, d)
+    }
+
     /// INFERENCE: full attention of Q, K, V (non-causal — the paper's
     /// prompt-prefilling / cross-attention setting).
     pub fn inference(
@@ -76,174 +87,11 @@ impl PromptPrefilling {
         assert_eq!(q.len(), m * d);
         assert_eq!(keys.len(), n * d);
         assert_eq!(values.len(), n * d);
-        let params = ThresholdParams::standard(d, m.max(1));
-        let bias = self
-            .bias_override
-            .unwrap_or_else(|| params.practical_bias(n.max(2)) as f32);
-        // Part-1 build: O(n log n)-shaped.
-        let hsr = build_hsr(self.backend, keys, d);
-        let hsr: &dyn HalfSpaceReport = hsr.as_ref();
-        let b_raw = bias * (d as f32).sqrt();
-
+        let mut session = self.session(keys, d);
         let mut out = vec![0f32; m * d];
         let mut fired = vec![0usize; m];
-        let mut stats = QueryStats::default();
-        if m == 0 {
-            return PrefillResult { out, fired, stats };
-        }
-
-        let workers = crate::kernel::effective_threads(self.threads, m);
-        if workers <= 1 {
-            let mut scratch = Scratch::new();
-            for i in 0..m {
-                fired[i] = self.row_inference(
-                    hsr,
-                    &q[i * d..(i + 1) * d],
-                    values,
-                    n,
-                    d,
-                    bias,
-                    b_raw,
-                    &mut out[i * d..(i + 1) * d],
-                    &mut scratch,
-                    &mut stats,
-                );
-            }
-        } else {
-            // Shard rows contiguously; each worker owns disjoint chunks
-            // of `out`/`fired` and a private Scratch + QueryStats.
-            let rows_per = (m + workers - 1) / workers;
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(workers);
-                for (shard, (out_chunk, fired_chunk)) in out
-                    .chunks_mut(rows_per * d)
-                    .zip(fired.chunks_mut(rows_per))
-                    .enumerate()
-                {
-                    let row0 = shard * rows_per;
-                    handles.push(scope.spawn(move || {
-                        let mut scratch = Scratch::new();
-                        let mut local = QueryStats::default();
-                        for (t, (orow, f)) in out_chunk
-                            .chunks_mut(d)
-                            .zip(fired_chunk.iter_mut())
-                            .enumerate()
-                        {
-                            let i = row0 + t;
-                            *f = self.row_inference(
-                                hsr,
-                                &q[i * d..(i + 1) * d],
-                                values,
-                                n,
-                                d,
-                                bias,
-                                b_raw,
-                                orow,
-                                &mut scratch,
-                                &mut local,
-                            );
-                        }
-                        local
-                    }));
-                }
-                // Merge in shard order so the aggregate is deterministic.
-                for h in handles {
-                    stats.add(&h.join().expect("prefill worker panicked"));
-                }
-            });
-        }
-        PrefillResult { out, fired, stats }
-    }
-
-    /// One query row: score-carrying HSR report, then evaluate the
-    /// attention on exactly the reported (or top-r) set. Returns k̃_i.
-    #[allow(clippy::too_many_arguments)]
-    fn row_inference(
-        &self,
-        hsr: &dyn HalfSpaceReport,
-        qi: &[f32],
-        values: &[f32],
-        n: usize,
-        d: usize,
-        bias: f32,
-        b_raw: f32,
-        orow: &mut [f32],
-        scratch: &mut Scratch,
-        stats: &mut QueryStats,
-    ) -> usize {
-        let inv_sqrt_d = 1.0 / (d as f32).sqrt();
-        scratch.fire.clear();
-        scratch.scores.clear();
-        hsr.query_scored_into(qi, b_raw, &mut scratch.fire, &mut scratch.scores, stats);
-        match self.kind {
-            AttentionKind::Relu { alpha, .. } => {
-                for s in scratch.scores.iter_mut() {
-                    *s *= inv_sqrt_d;
-                }
-                relu_attention_row_scored(
-                    &scratch.fire,
-                    &mut scratch.scores,
-                    values,
-                    d,
-                    alpha,
-                    bias,
-                    orow,
-                );
-                scratch.fire.len()
-            }
-            AttentionKind::Softmax => {
-                // Under-reported threshold: fall back to the full
-                // half-space so top-r is exact (Theorem 5.2).
-                if let Some(r) = self.top_r {
-                    if scratch.fire.len() < r.min(n) {
-                        scratch.fire.clear();
-                        scratch.scores.clear();
-                        hsr.query_scored_into(
-                            qi,
-                            f32::NEG_INFINITY,
-                            &mut scratch.fire,
-                            &mut scratch.scores,
-                            stats,
-                        );
-                    }
-                }
-                match self.top_r {
-                    Some(r) if r < scratch.fire.len() => {
-                        top_r_select_into(
-                            &scratch.fire,
-                            &scratch.scores,
-                            r,
-                            &mut scratch.selected,
-                            &mut scratch.exps,
-                        );
-                        for s in scratch.exps.iter_mut() {
-                            *s *= inv_sqrt_d;
-                        }
-                        softmax_attention_row_scored(
-                            &scratch.selected,
-                            &mut scratch.exps,
-                            values,
-                            d,
-                            orow,
-                        );
-                        scratch.selected.len()
-                    }
-                    _ => {
-                        for s in scratch.scores.iter_mut() {
-                            *s *= inv_sqrt_d;
-                        }
-                        softmax_attention_row_scored(
-                            &scratch.fire,
-                            &mut scratch.scores,
-                            values,
-                            d,
-                            orow,
-                        );
-                        scratch.fire.len()
-                    }
-                }
-            }
-        }
+        session.run(q, values, &mut out, &mut fired);
+        PrefillResult { out, fired, stats: session.stats }
     }
 }
 
@@ -330,7 +178,9 @@ mod tests {
 
     /// Parallel prefill must be **bit-identical** to serial: same `out`
     /// floats, same per-row fired counts, same merged work counters —
-    /// for both attention kinds, with and without top-r.
+    /// for both attention kinds, with and without top-r. (Shards align
+    /// to the session's query blocks, so even the shared-traversal
+    /// `nodes_visited` is thread-count independent.)
     #[test]
     fn parallel_matches_serial_bitwise() {
         let mut rng = Rng::new(115);
@@ -372,11 +222,13 @@ mod tests {
         }
     }
 
-    /// The row loop reuses one Scratch per worker: the report buffer must
-    /// keep its capacity across rows (the pre-kernel code `mem::take`-d
-    /// the buffer, forcing a fresh allocation every subsequent row).
+    /// The session path reuses its plan arenas: planning the same rows
+    /// twice through one session must not lose buffer capacity (the
+    /// pre-kernel code once `mem::take`-d a buffer and re-allocated
+    /// every row; this is the session-era version of that regression
+    /// test).
     #[test]
-    fn scratch_capacity_survives_rows() {
+    fn plan_buffers_survive_reuse() {
         let mut rng = Rng::new(116);
         let inst = AttentionInstance::gaussian(&mut rng, 16, 256, 8);
         let pp = PromptPrefilling {
@@ -386,27 +238,18 @@ mod tests {
             bias_override: Some(f32::NEG_INFINITY),
             threads: 1,
         };
-        let hsr = build_hsr(pp.backend, &inst.k, inst.d);
-        let mut scratch = Scratch::new();
-        let mut stats = QueryStats::default();
-        let mut orow = vec![0f32; inst.d];
-        let b_raw = f32::NEG_INFINITY;
-        for i in 0..inst.m {
-            pp.row_inference(
-                hsr.as_ref(),
-                inst.query_row(i),
-                &inst.v,
-                inst.n,
-                inst.d,
-                0.0,
-                b_raw,
-                &mut orow,
-                &mut scratch,
-                &mut stats,
-            );
-            // Full report: the fire buffer holds all n entries and must
-            // retain that capacity for the next row.
-            assert!(scratch.fire.capacity() >= inst.n, "row {i} lost its buffer");
-        }
+        let session = pp.session(&inst.k, inst.d);
+        let mut plan = crate::attention::AttentionPlan::new();
+        session.plan_into(&inst.q, &mut plan);
+        let first: Vec<usize> = plan.fired.clone();
+        // Full report: every row fires all n entries before top-r.
+        let cap_after_first = plan.fired.capacity();
+        session.plan_into(&inst.q, &mut plan);
+        assert_eq!(plan.fired, first, "replanning must be deterministic");
+        assert_eq!(
+            plan.fired.capacity(),
+            cap_after_first,
+            "plan arenas must retain capacity across reuse"
+        );
     }
 }

@@ -20,7 +20,9 @@ use super::request::{
     FinishReason, GenerationParams, Request, RequestId, Response, Sequence,
 };
 use super::scheduler::SchedulerConfig;
+use crate::attention::session::AttentionConfig;
 use crate::hsr::HsrBackend;
+use crate::model::transformer::RSpec;
 use crate::model::kv::KvState;
 use crate::model::transformer::{
     sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
@@ -64,6 +66,29 @@ impl Default for EngineConfig {
             seed: 0,
             id_offset: 0,
             decode_threads: 0,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Build a serving config from the unified [`AttentionConfig`]. The
+    /// serving engine consumes exactly three of its knobs: `backend`
+    /// feeds the per-head dynamic indices, `threads` drives the batched
+    /// per-(layer, head) decode sweep, and `top_r` (if set) becomes a
+    /// fixed-r sparse policy — otherwise the paper's r = n^{4/5}
+    /// scaling. `kind`, `threshold` and `adaptive_sigma_k` do **not**
+    /// apply here: the transformer path is softmax-only and calibrates
+    /// its per-head thresholds at runtime from observed score quantiles
+    /// (see `model/transformer.rs`), so those fields are ignored.
+    pub fn from_attention(att: AttentionConfig) -> EngineConfig {
+        EngineConfig {
+            policy: match att.top_r {
+                Some(r) => AttentionPolicy::TopR(RSpec::Fixed(r)),
+                None => AttentionPolicy::TopR(RSpec::paper()),
+            },
+            hsr_backend: Some(att.backend),
+            decode_threads: att.threads,
+            ..EngineConfig::default()
         }
     }
 }

@@ -223,6 +223,126 @@ impl BallTreeHsr {
             stack.push(node.left);
         }
     }
+
+    /// Shared-traversal multi-query engine behind
+    /// [`HalfSpaceReport::query_many_scored_into`]: one DFS answers every
+    /// query in the block. `arena[lo..hi]` holds the query ids still
+    /// *active* at this node (neither pruned nor bulk-reported by an
+    /// ancestor); the node is visited — and counted — **once** for the
+    /// whole block, while prune / bulk / leaf-scan decisions (and their
+    /// per-point counters) stay per query, reproducing the single-query
+    /// results element-for-element. Queries that recurse are appended to
+    /// the arena tail, so the recursion allocates nothing per node.
+    ///
+    /// `scores` is optional so exact-filter callers ([`ProjectedHsr`])
+    /// can share the traversal without paying for candidate scores.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn query_many_impl(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        mut scores: Option<&mut [Vec<f32>]>,
+        stats: &mut QueryStats,
+    ) {
+        let d = self.d;
+        let q = bs.len();
+        assert_eq!(queries.len(), q * d);
+        assert_eq!(outs.len(), q);
+        if let Some(sc) = scores.as_ref() {
+            assert_eq!(sc.len(), q);
+        }
+        if self.n == 0 || q == 0 {
+            return;
+        }
+        let norms: Vec<f32> = (0..q)
+            .map(|i| super::norm(&queries[i * d..(i + 1) * d]))
+            .collect();
+        let mut arena: Vec<u32> = (0..q as u32).collect();
+        let hi = arena.len();
+        self.query_many_rec(0, queries, &norms, bs, &mut arena, 0, hi, outs, &mut scores, stats);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn query_many_rec(
+        &self,
+        id: u32,
+        queries: &[f32],
+        norms: &[f32],
+        bs: &[f32],
+        arena: &mut Vec<u32>,
+        lo: usize,
+        hi: usize,
+        outs: &mut [Vec<u32>],
+        scores: &mut Option<&mut [Vec<f32>]>,
+        stats: &mut QueryStats,
+    ) {
+        let d = self.d;
+        let node = &self.nodes[id as usize];
+        stats.nodes_visited += 1;
+        let c = self.centroid(id);
+        let (s, e) = (node.start as usize, node.end as usize);
+        let is_leaf = node.left == NONE;
+        let start = arena.len();
+        for t in lo..hi {
+            let qi = arena[t] as usize;
+            let a = &queries[qi * d..(qi + 1) * d];
+            let proj = dot(c, a);
+            let margin = node.radius * norms[qi];
+            let b = bs[qi];
+            if proj + margin < b {
+                continue; // pruned for this query only
+            }
+            if proj - margin >= b {
+                // Whole subtree satisfies this query: bulk report.
+                outs[qi].extend_from_slice(&self.order[s..e]);
+                if let Some(sc) = scores.as_mut() {
+                    let sc = &mut sc[qi];
+                    let st = sc.len();
+                    sc.resize(st + (e - s), 0.0);
+                    crate::kernel::simd::scaled_dots_into(
+                        a,
+                        &self.points[s * d..e * d],
+                        d,
+                        1.0,
+                        &mut sc[st..],
+                    );
+                }
+                stats.bulk_reported += e - s;
+                stats.reported += e - s;
+                continue;
+            }
+            if is_leaf {
+                // Leaf scan for this query: per-(query, point) counting.
+                stats.points_scanned += e - s;
+                for slot in s..e {
+                    let p = &self.points[slot * d..(slot + 1) * d];
+                    let sdot = dot(p, a);
+                    if sdot >= b {
+                        outs[qi].push(self.order[slot]);
+                        if let Some(sc) = scores.as_mut() {
+                            sc[qi].push(sdot);
+                        }
+                        stats.reported += 1;
+                    }
+                }
+            } else {
+                let keep = arena[t];
+                arena.push(keep);
+            }
+        }
+        let end = arena.len();
+        if !is_leaf && end > start {
+            self.query_many_rec(
+                node.left, queries, norms, bs, arena, start, end, outs, scores, stats,
+            );
+            arena.truncate(end);
+            self.query_many_rec(
+                node.right, queries, norms, bs, arena, start, end, outs, scores, stats,
+            );
+        }
+        arena.truncate(start);
+    }
 }
 
 impl HalfSpaceReport for BallTreeHsr {
@@ -257,6 +377,20 @@ impl HalfSpaceReport for BallTreeHsr {
         }
         let a_norm = super::norm(a);
         self.query_iter(a, a_norm, b, out, Some(scores), stats);
+    }
+
+    /// Native shared traversal: the whole query block walks the tree
+    /// once; see [`BallTreeHsr::query_many_impl`] for the counting rules.
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        assert_eq!(scores.len(), bs.len());
+        self.query_many_impl(queries, bs, outs, Some(scores), stats);
     }
 }
 

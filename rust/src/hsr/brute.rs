@@ -67,6 +67,38 @@ impl HalfSpaceReport for BruteHsr {
             }
         }
     }
+
+    /// Shared point stream: each key row is loaded once and dotted
+    /// against the whole query block (better cache behaviour at fan-out;
+    /// a scan has no nodes to amortize, so `QueryStats` totals are
+    /// identical to the per-query loop). Output order per query is the
+    /// same ascending index order as the single-query scan.
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        let d = self.d;
+        let q = bs.len();
+        assert_eq!(queries.len(), q * d);
+        assert_eq!(outs.len(), q);
+        assert_eq!(scores.len(), q);
+        stats.points_scanned += self.n * q;
+        for i in 0..self.n {
+            let p = self.point(i);
+            for qi in 0..q {
+                let s = dot(p, &queries[qi * d..(qi + 1) * d]);
+                if s >= bs[qi] {
+                    outs[qi].push(i as u32);
+                    scores[qi].push(s);
+                    stats.reported += 1;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -194,6 +194,75 @@ impl HalfSpaceReport for DynamicHsr {
             }
         }
     }
+
+    /// Native shared traversal: the decomposable query runs the whole
+    /// block against each static bucket **once** (the bucket's own
+    /// shared-traversal override does the node amortization), with the
+    /// brute tail scanned per query. Per-query output order matches
+    /// [`HalfSpaceReport::query_scored_into`]: tail first, then buckets
+    /// in slot order.
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        let d = self.d;
+        let q = bs.len();
+        assert_eq!(queries.len(), q * d);
+        assert_eq!(outs.len(), q);
+        assert_eq!(scores.len(), q);
+        // Tail: per-(query, point) brute scan, scoring the membership dot.
+        for i in 0..q {
+            let a = &queries[i * d..(i + 1) * d];
+            for (slot, &id) in self.tail_ids.iter().enumerate() {
+                stats.points_scanned += 1;
+                let p = &self.tail_points[slot * d..(slot + 1) * d];
+                let s = super::dot(p, a);
+                if s >= bs[i] {
+                    outs[i].push(id);
+                    scores[i].push(s);
+                    stats.reported += 1;
+                }
+            }
+        }
+        // Buckets: one shared block traversal each, then remap the
+        // freshly appended local ids → global ids per query. Per-query
+        // append positions live in a stack buffer so the hot path stays
+        // allocation-free; blocks wider than it fall back to per-query
+        // bucket queries (identical results and per-point counters).
+        const MAX_BLOCK: usize = 64;
+        for bucket in self.buckets.iter().flatten() {
+            if q > MAX_BLOCK {
+                for i in 0..q {
+                    let start = outs[i].len();
+                    bucket.index.query_scored_into(
+                        &queries[i * d..(i + 1) * d],
+                        bs[i],
+                        &mut outs[i],
+                        &mut scores[i],
+                        stats,
+                    );
+                    for x in &mut outs[i][start..] {
+                        *x = bucket.ids[*x as usize];
+                    }
+                }
+                continue;
+            }
+            let mut starts = [0usize; MAX_BLOCK];
+            for (s, o) in starts.iter_mut().zip(outs.iter()) {
+                *s = o.len();
+            }
+            bucket.index.query_many_scored_into(queries, bs, outs, scores, stats);
+            for (i, o) in outs.iter_mut().enumerate() {
+                for x in &mut o[starts[i]..] {
+                    *x = bucket.ids[*x as usize];
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

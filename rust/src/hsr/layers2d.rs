@@ -14,6 +14,13 @@
 //! (Chazelle's O(n log n) convex-layers construction exists; we use the
 //! simpler O(n · L) peeling, L = number of layers, which is ~n^{2/3} for
 //! Gaussian clouds — fine for the n this structure is benchmarked at.)
+//!
+//! This backend keeps the trait's default (looped) multi-query
+//! `query_many_scored_into`: each query's cost is a per-layer binary
+//! search plus its own reported arc, with no shared node work for a
+//! second query to amortize — `nodes_visited` here counts layers whose
+//! extreme vertex depends on the query direction, so a block traversal
+//! would re-do exactly the per-query work the loop does.
 
 use super::{HalfSpaceReport, QueryStats};
 

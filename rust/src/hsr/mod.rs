@@ -103,6 +103,52 @@ pub trait HalfSpaceReport: Send + Sync {
         stats: &mut QueryStats,
     );
 
+    /// Batched multi-query score-carrying report: answer `bs.len()`
+    /// half-space queries against the same structure in one call.
+    /// `queries` is row-major `[q, d]`, `bs[i]` is query i's raw-score
+    /// threshold, and `outs[i]` / `scores[i]` receive query i's report
+    /// (appended, parallel vectors, in the same order
+    /// [`HalfSpaceReport::query_scored_into`] would produce).
+    ///
+    /// # `QueryStats` counting rules under a shared traversal
+    ///
+    /// Per-point counters are **per (query, point)** exactly as in the
+    /// single-query entry point: `points_scanned`, `bulk_reported` and
+    /// `reported` accumulate once per query that scans / bulk-reports /
+    /// reports a point, so their totals always equal the totals of a
+    /// per-query loop. `nodes_visited`, by contrast, is **per structure
+    /// node the batch touches**: a tree node pruned against (or descended
+    /// for) the whole query block costs one visit regardless of fan-out.
+    /// A native shared-traversal override therefore shows strictly lower
+    /// [`QueryStats::work`] per query than the looped default whenever
+    /// fan-out > 1 and the traversal visits at least one node — this is
+    /// the cross-sequence amortization the decode engine's multi-row
+    /// plans rely on. The default implementation below is a plain loop
+    /// and keeps fully per-query counting.
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        let d = self.dim();
+        let q = bs.len();
+        assert_eq!(queries.len(), q * d);
+        assert_eq!(outs.len(), q);
+        assert_eq!(scores.len(), q);
+        for i in 0..q {
+            self.query_scored_into(
+                &queries[i * d..(i + 1) * d],
+                bs[i],
+                &mut outs[i],
+                &mut scores[i],
+                stats,
+            );
+        }
+    }
+
     /// Convenience wrapper returning a fresh, sorted index vector.
     fn query(&self, a: &[f32], b: f32) -> Vec<u32> {
         let mut out = Vec::new();
@@ -140,13 +186,23 @@ pub enum HsrBackend {
 }
 
 impl HsrBackend {
-    pub fn parse(s: &str) -> Option<HsrBackend> {
+    /// Every canonical backend name, in CLI-help order.
+    pub const NAMES: [&'static str; 4] = ["brute", "balltree", "layers2d", "projected"];
+
+    /// Parse a backend name (case-insensitive, with aliases). The error
+    /// message lists the valid names so CLI callers can surface it
+    /// verbatim (`util::cli::Args::parse_or_exit` does exactly that).
+    pub fn parse(s: &str) -> Result<HsrBackend, String> {
         match s.to_ascii_lowercase().as_str() {
-            "brute" | "naive" => Some(HsrBackend::Brute),
-            "balltree" | "ball" | "tree" => Some(HsrBackend::BallTree),
-            "layers2d" | "layers" | "convex" => Some(HsrBackend::Layers2d),
-            "projected" | "proj" | "pca" => Some(HsrBackend::Projected),
-            _ => None,
+            "brute" | "naive" => Ok(HsrBackend::Brute),
+            "balltree" | "ball" | "tree" => Ok(HsrBackend::BallTree),
+            "layers2d" | "layers" | "convex" => Ok(HsrBackend::Layers2d),
+            "projected" | "proj" | "pca" => Ok(HsrBackend::Projected),
+            other => Err(format!(
+                "unknown HSR backend '{other}'; valid backends: {} \
+                 (aliases: naive, ball, tree, layers, convex, proj, pca)",
+                HsrBackend::NAMES.join("|")
+            )),
         }
     }
 
@@ -231,13 +287,17 @@ mod tests {
 
     #[test]
     fn backend_parse() {
-        assert_eq!(HsrBackend::parse("balltree"), Some(HsrBackend::BallTree));
-        assert_eq!(HsrBackend::parse("BRUTE"), Some(HsrBackend::Brute));
-        assert_eq!(HsrBackend::parse("convex"), Some(HsrBackend::Layers2d));
-        assert_eq!(HsrBackend::parse("projected"), Some(HsrBackend::Projected));
-        assert_eq!(HsrBackend::parse("proj"), Some(HsrBackend::Projected));
-        assert_eq!(HsrBackend::parse("PCA"), Some(HsrBackend::Projected));
-        assert_eq!(HsrBackend::parse("??"), None);
+        assert_eq!(HsrBackend::parse("balltree"), Ok(HsrBackend::BallTree));
+        assert_eq!(HsrBackend::parse("BRUTE"), Ok(HsrBackend::Brute));
+        assert_eq!(HsrBackend::parse("convex"), Ok(HsrBackend::Layers2d));
+        assert_eq!(HsrBackend::parse("projected"), Ok(HsrBackend::Projected));
+        assert_eq!(HsrBackend::parse("proj"), Ok(HsrBackend::Projected));
+        assert_eq!(HsrBackend::parse("PCA"), Ok(HsrBackend::Projected));
+        let err = HsrBackend::parse("??").unwrap_err();
+        for name in HsrBackend::NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+        assert!(err.contains("??"));
     }
 
     /// Property test: every backend agrees with the reference scan on
@@ -302,6 +362,132 @@ mod tests {
                         );
                     }
                 }
+            }
+        }
+    }
+
+    /// The looped reference for the batched entry point: per-query calls
+    /// into `query_scored_into`, exactly what the default impl does.
+    fn looped_many(
+        hsr: &dyn HalfSpaceReport,
+        queries: &[f32],
+        bs: &[f32],
+    ) -> (Vec<Vec<u32>>, Vec<Vec<f32>>, QueryStats) {
+        let d = hsr.dim();
+        let q = bs.len();
+        let mut outs = vec![Vec::new(); q];
+        let mut scores = vec![Vec::new(); q];
+        let mut stats = QueryStats::default();
+        for i in 0..q {
+            hsr.query_scored_into(
+                &queries[i * d..(i + 1) * d],
+                bs[i],
+                &mut outs[i],
+                &mut scores[i],
+                &mut stats,
+            );
+        }
+        (outs, scores, stats)
+    }
+
+    /// Property test: `query_many_scored_into` is **element-identical**
+    /// (indices, order, and raw f32 scores) to the per-query loop on all
+    /// five backends — including a `DynamicHsr` grown by inserts — and
+    /// its per-point counters match while `nodes_visited` never exceeds
+    /// the looped total (the shared-traversal counting rule).
+    #[test]
+    fn query_many_matches_looped_all_backends() {
+        let mut rng = Rng::new(77);
+        for trial in 0..12 {
+            let d = [2usize, 4, 8, 16][trial % 4];
+            let n = rng.range(2, 600);
+            let points = gaussian_points(&mut rng, n, d, 1.0);
+            let mut backends: Vec<Box<dyn HalfSpaceReport>> = vec![
+                build_hsr(HsrBackend::Brute, &points, d),
+                build_hsr(HsrBackend::BallTree, &points, d),
+                build_hsr(HsrBackend::Projected, &points, d),
+            ];
+            if d == 2 {
+                backends.push(build_hsr(HsrBackend::Layers2d, &points, d));
+            }
+            // Fifth backend: the dynamic wrapper, half batch-built and
+            // half grown by inserts so tail + multiple buckets are live.
+            let split = n / 2;
+            let mut dyn_hsr = dynamic::DynamicHsr::from_points(
+                HsrBackend::BallTree,
+                &points[..split * d],
+                d,
+            );
+            for j in split..n {
+                dyn_hsr.insert(&points[j * d..(j + 1) * d]);
+            }
+            backends.push(Box::new(dyn_hsr));
+            for fan in [1usize, 3, 8, 13] {
+                let queries = rng.gaussian_vec_f32(fan * d, 1.0);
+                let bs: Vec<f32> =
+                    (0..fan).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+                for be in &backends {
+                    let (want_out, want_scores, want_stats) =
+                        looped_many(be.as_ref(), &queries, &bs);
+                    let mut outs = vec![Vec::new(); fan];
+                    let mut scores = vec![Vec::new(); fan];
+                    let mut stats = QueryStats::default();
+                    be.query_many_scored_into(
+                        &queries, &bs, &mut outs, &mut scores, &mut stats,
+                    );
+                    assert_eq!(outs, want_out, "n={n} d={d} fan={fan}");
+                    assert_eq!(scores, want_scores, "n={n} d={d} fan={fan}");
+                    assert_eq!(stats.points_scanned, want_stats.points_scanned);
+                    assert_eq!(stats.bulk_reported, want_stats.bulk_reported);
+                    assert_eq!(stats.reported, want_stats.reported);
+                    assert!(
+                        stats.nodes_visited <= want_stats.nodes_visited,
+                        "n={n} d={d} fan={fan}: {} > {}",
+                        stats.nodes_visited,
+                        want_stats.nodes_visited
+                    );
+                }
+            }
+        }
+    }
+
+    /// Acceptance: at fan-out ≥ 4 on the Lemma 6.1 Gaussian workload the
+    /// shared traversal does strictly less `work()` per query than the
+    /// looped default on every tree-shaped backend (BallTree, Projected,
+    /// Dynamic) — the cross-sequence amortization the session plans use.
+    #[test]
+    fn batched_queries_amortize_work_on_gaussian_workload() {
+        let mut rng = Rng::new(78);
+        let (n, d) = (8192usize, 8usize);
+        let points = gaussian_points(&mut rng, n, d, 1.0);
+        let grown = n - 500;
+        let mut dyn_hsr =
+            dynamic::DynamicHsr::from_points(HsrBackend::BallTree, &points[..grown * d], d);
+        for j in grown..n {
+            dyn_hsr.insert(&points[j * d..(j + 1) * d]);
+        }
+        let backends: Vec<(&str, Box<dyn HalfSpaceReport>)> = vec![
+            ("balltree", build_hsr(HsrBackend::BallTree, &points, d)),
+            ("projected", build_hsr(HsrBackend::Projected, &points, d)),
+            ("dynamic", Box::new(dyn_hsr)),
+        ];
+        // Practical Lemma 6.1 bias on the scaled score, raw-score units.
+        let b_raw = ((0.4 * (n as f64).ln()).sqrt() * (d as f64).sqrt()) as f32;
+        for fan in [4usize, 16] {
+            let queries = rng.gaussian_vec_f32(fan * d, 1.0);
+            let bs = vec![b_raw; fan];
+            for (name, be) in &backends {
+                let (_, _, looped) = looped_many(be.as_ref(), &queries, &bs);
+                let mut outs = vec![Vec::new(); fan];
+                let mut scores = vec![Vec::new(); fan];
+                let mut batched = QueryStats::default();
+                be.query_many_scored_into(&queries, &bs, &mut outs, &mut scores, &mut batched);
+                assert!(
+                    batched.work() < looped.work(),
+                    "{name} fan={fan}: batched work {} !< looped {}",
+                    batched.work(),
+                    looped.work()
+                );
             }
         }
     }

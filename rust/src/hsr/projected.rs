@@ -109,6 +109,79 @@ impl HalfSpaceReport for ProjectedHsr {
     ) {
         self.query_filtered(a, b, out, Some(scores), stats);
     }
+
+    /// Native shared traversal: all augmented queries walk the inner
+    /// ball tree once (unscored — candidate scores in the augmented
+    /// space are useless to the exact filter), then each query's
+    /// candidate set is filtered exactly, with per-(query, candidate)
+    /// counting identical to the single-query path.
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        let d = self.d;
+        let q = bs.len();
+        assert_eq!(queries.len(), q * d);
+        assert_eq!(outs.len(), q);
+        assert_eq!(scores.len(), q);
+        if self.n == 0 || q == 0 {
+            return;
+        }
+        MANY_SCRATCH.with(|cell| {
+            let (aug, candidates) = &mut *cell.borrow_mut();
+            // Augmented query block (P a_i, ‖residual_{a_i}‖), row-major.
+            let ad = self.c + 1;
+            aug.clear();
+            aug.resize(q * ad, 0.0);
+            for i in 0..q {
+                let a = &queries[i * d..(i + 1) * d];
+                let qa = &mut aug[i * ad..(i + 1) * ad];
+                for (j, p) in self.proj.chunks_exact(d).enumerate() {
+                    qa[j] = dot(p, a);
+                }
+                let head2 = dot(&qa[..self.c], &qa[..self.c]);
+                qa[self.c] = (dot(a, a) - head2).max(0.0).sqrt();
+            }
+            // Shared superset traversal; the inner tree's report counters
+            // refer to candidates, not true reports — restore them and
+            // let the exact filter below do the counting.
+            while candidates.len() < q {
+                candidates.push(Vec::new());
+            }
+            for c in candidates.iter_mut().take(q) {
+                c.clear();
+            }
+            let (reported_before, bulk_before) = (stats.reported, stats.bulk_reported);
+            self.inner.query_many_impl(aug, bs, &mut candidates[..q], None, stats);
+            stats.reported = reported_before;
+            stats.bulk_reported = bulk_before;
+            for i in 0..q {
+                let a = &queries[i * d..(i + 1) * d];
+                for &j in candidates[i].iter() {
+                    stats.points_scanned += 1;
+                    let x = &self.points[j as usize * d..(j as usize + 1) * d];
+                    let s = dot(x, a);
+                    if s >= bs[i] {
+                        outs[i].push(j);
+                        scores[i].push(s);
+                        stats.reported += 1;
+                    }
+                }
+            }
+        });
+    }
+}
+
+thread_local! {
+    /// Per-thread (augmented-query-block, per-query candidate) buffers
+    /// for the shared-traversal path — same zero-allocation discipline
+    /// as the single-query `QUERY_SCRATCH`, same reentrancy argument.
+    static MANY_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<Vec<u32>>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
 }
 
 thread_local! {

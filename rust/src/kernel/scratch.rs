@@ -39,6 +39,13 @@ pub struct Scratch {
     pub packed: Vec<f32>,
     /// Per-row walk cursors into the CSR arrays (bucket sweep state).
     pub cursor: Vec<usize>,
+    // --- multi-query (shared HSR traversal) extensions ---
+    /// Per-row raw-score thresholds for one query block.
+    pub bs: Vec<f32>,
+    /// Per-row report buffers for one query block (fired indices).
+    pub many_idx: Vec<Vec<u32>>,
+    /// Per-row carried raw scores, parallel to `many_idx`.
+    pub many_scores: Vec<Vec<f32>>,
 }
 
 impl Scratch {
@@ -71,6 +78,13 @@ impl Scratch {
         self.union_idx.clear();
         self.packed.clear();
         self.cursor.clear();
+        self.bs.clear();
+        for v in self.many_idx.iter_mut() {
+            v.clear();
+        }
+        for v in self.many_scores.iter_mut() {
+            v.clear();
+        }
     }
 }
 

@@ -162,8 +162,10 @@ pub fn scaled_dots_into_scalar(q: &[f32], keys: &[f32], d: usize, scale: f32, ou
 // gathered subset scoring
 // ---------------------------------------------------------------------------
 
-/// Gathered scoring: for each index j in `idx`, push <q, keys[j]> * scale.
-/// `out` is cleared first.
+/// Gathered scoring: out[t] = <q, keys[idx[t]]> * scale. `out` must be
+/// caller-sized to idx.len() — the attention layer's `sized_scores`
+/// helper is the canonical way to do that, so every scoring entry point
+/// shares one buffer convention.
 #[inline]
 pub fn gathered_scaled_dots_into(
     q: &[f32],
@@ -171,25 +173,24 @@ pub fn gathered_scaled_dots_into(
     d: usize,
     idx: &[u32],
     scale: f32,
-    out: &mut Vec<f32>,
+    out: &mut [f32],
 ) {
-    // Hard assert: each gathered row has length d; the AVX2 dot walks raw
-    // pointers over q as well, so q must match exactly.
+    // Hard asserts: each gathered row has length d; the AVX2 dot walks
+    // raw pointers over q as well, so q must match exactly.
     assert_eq!(q.len(), d);
+    assert_eq!(out.len(), idx.len());
     #[cfg(target_arch = "x86_64")]
     if level() == AVX2 {
-        out.clear();
-        out.reserve(idx.len());
-        for &j in idx {
+        for (o, &j) in out.iter_mut().zip(idx) {
             let j = j as usize;
-            out.push(unsafe { x86::dot(q, &keys[j * d..(j + 1) * d]) } * scale);
+            *o = unsafe { x86::dot(q, &keys[j * d..(j + 1) * d]) } * scale;
         }
         return;
     }
     gathered_scaled_dots_into_scalar(q, keys, d, idx, scale, out)
 }
 
-/// Portable gathered scoring.
+/// Portable gathered scoring (same caller-sized slice convention).
 #[inline]
 pub fn gathered_scaled_dots_into_scalar(
     q: &[f32],
@@ -197,13 +198,12 @@ pub fn gathered_scaled_dots_into_scalar(
     d: usize,
     idx: &[u32],
     scale: f32,
-    out: &mut Vec<f32>,
+    out: &mut [f32],
 ) {
-    out.clear();
-    out.reserve(idx.len());
-    for &j in idx {
+    assert_eq!(out.len(), idx.len());
+    for (o, &j) in out.iter_mut().zip(idx) {
         let j = j as usize;
-        out.push(dot_scalar(q, &keys[j * d..(j + 1) * d]) * scale);
+        *o = dot_scalar(q, &keys[j * d..(j + 1) * d]) * scale;
     }
 }
 
@@ -652,9 +652,9 @@ mod tests {
         let mut dense = vec![0f32; n];
         scaled_dots_into(&q, &keys, d, scale, &mut dense);
         let idx: Vec<u32> = (0..n as u32).step_by(3).collect();
-        let mut gathered = Vec::new();
+        let mut gathered = vec![0f32; idx.len()];
         gathered_scaled_dots_into(&q, &keys, d, &idx, scale, &mut gathered);
-        let mut gathered_sc = Vec::new();
+        let mut gathered_sc = vec![0f32; idx.len()];
         gathered_scaled_dots_into_scalar(&q, &keys, d, &idx, scale, &mut gathered_sc);
         for (t, &j) in idx.iter().enumerate() {
             assert!((gathered[t] - dense[j as usize]).abs() < 1e-5);

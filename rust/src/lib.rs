@@ -9,10 +9,14 @@
 //! Layer map (see DESIGN.md):
 //! * [`kernel`] — runtime-dispatched SIMD micro-kernels and the
 //!   per-thread scratch arena every hot path above is built on.
-//! * [`hsr`] — the HSR substrate (Algorithm 3, Corollary 3.1).
+//! * [`hsr`] — the HSR substrate (Algorithm 3, Corollary 3.1), including
+//!   the batched multi-query entry point that answers a whole query
+//!   block in one shared traversal.
 //! * [`attention`] — ReLU^α / Softmax attention math, thresholds
 //!   (Lemma 6.1), top-r selection (Definition B.2), error bounds
-//!   (Theorem 4.3).
+//!   (Theorem 4.3), and the **unified session API**
+//!   ([`attention::AttentionConfig`] → [`attention::AttentionSession`] →
+//!   plan/execute) every engine path is a thin caller of.
 //! * [`engine`] — Algorithm 1 (generation decoding) and Algorithm 2
 //!   (prompt prefilling) integrated with a paged KV cache, a
 //!   continuous-batching scheduler and a request router.
@@ -23,6 +27,13 @@
 //! * [`workloads`] — the paper's Gaussian / massive-activation workload
 //!   generators and serving traces.
 //! * [`bench`] — the micro-benchmark harness used by `cargo bench`.
+
+// Tolerate older clippy versions that do not know newer lint names, and
+// keep the crate's pervasive `(a + b - 1) / b` sharding arithmetic —
+// `div_ceil` is not available on the oldest toolchains this crate
+// supports, so the manual form is intentional.
+#![allow(unknown_lints)]
+#![allow(clippy::manual_div_ceil)]
 
 pub mod attention;
 pub mod bench;

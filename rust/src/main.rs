@@ -8,15 +8,21 @@
 //!   hsr-attn info
 
 use anyhow::{Context, Result};
+use hsr_attn::attention::{AttentionConfig, AttentionKind};
 use hsr_attn::engine::{EngineConfig, GenerationParams, Router};
 use hsr_attn::hsr::HsrBackend;
 use hsr_attn::model::tokenizer::ByteTokenizer;
-use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::transformer::AttentionPolicy;
 use hsr_attn::model::Model;
 use hsr_attn::server::Server;
 use hsr_attn::util::cli::Args;
 use std::path::PathBuf;
 use std::sync::Arc;
+
+const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
+  --backend <brute|balltree|layers2d|projected|none>   per-head HSR index\n\
+  --policy  <dense|sparse|topr=R>                      attention policy\n\
+  --decode-threads <N>                                 batched decode sweep (0 = auto)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or(
@@ -25,29 +31,43 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     ))
 }
 
-fn policy_from(args: &Args) -> AttentionPolicy {
+/// CLI → unified [`AttentionConfig`] → [`EngineConfig`]: one config
+/// source for the serving engine's sparse-attention knobs. An invalid
+/// --backend exits with `HsrBackend::parse`'s valid-name list.
+fn engine_config(args: &Args) -> EngineConfig {
+    let hsr_backend = match args.str_or("backend", "balltree") {
+        // Explicit "none"/"scan": no per-head index — brute scans inside
+        // the sparse policy (ablation mode).
+        "none" | "scan" => None,
+        _ => Some(args.parse_or_exit("backend", "balltree", USAGE, HsrBackend::parse)),
+    };
+    let mut att = AttentionConfig::new(
+        AttentionKind::Softmax,
+        hsr_backend.unwrap_or(HsrBackend::Brute),
+    )
+    .with_threads(args.usize_or("decode-threads", 0));
+    // Single parse of --policy: fixed-r goes through the unified config,
+    // dense overrides the sparse policy from_attention produces.
+    let mut dense = false;
     match args.str_or("policy", "sparse") {
-        "dense" => AttentionPolicy::Dense,
-        "sparse" => AttentionPolicy::TopR(RSpec::paper()),
+        "dense" => dense = true,
+        "sparse" => {}
         other => {
             if let Some(r) = other.strip_prefix("topr=").and_then(|s| s.parse().ok()) {
-                AttentionPolicy::TopR(RSpec::Fixed(r))
+                att = att.with_top_r(r);
             } else {
                 eprintln!("unknown --policy '{other}', using sparse");
-                AttentionPolicy::TopR(RSpec::paper())
             }
         }
     }
-}
-
-fn engine_config(args: &Args) -> EngineConfig {
-    EngineConfig {
-        policy: policy_from(args),
-        hsr_backend: HsrBackend::parse(args.str_or("backend", "balltree")),
-        cache_capacity_tokens: args.usize_or("cache-tokens", 1 << 20),
-        block_tokens: args.usize_or("block-tokens", 64),
-        ..Default::default()
+    let mut cfg = EngineConfig::from_attention(att);
+    if dense {
+        cfg.policy = AttentionPolicy::Dense;
     }
+    cfg.hsr_backend = hsr_backend;
+    cfg.cache_capacity_tokens = args.usize_or("cache-tokens", 1 << 20);
+    cfg.block_tokens = args.usize_or("block-tokens", 64);
+    cfg
 }
 
 fn load_model(args: &Args) -> Result<Arc<Model>> {
@@ -129,7 +149,7 @@ fn main() -> Result<()> {
         Some("info") | None => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
-            eprintln!("usage: hsr-attn <serve|generate|table1|info> [--flags]");
+            eprintln!("{USAGE}");
             std::process::exit(2);
         }
     }

@@ -58,27 +58,15 @@ impl HeadKv {
     }
 
     /// HSR query over the cached keys: all indices with <q, K_j> >= b_raw
-    /// (b_raw is on the *unscaled* inner product). Falls back to a brute
-    /// scan when no index is attached.
+    /// (b_raw is on the *unscaled* inner product). Deprecated-style shim
+    /// for the [`HalfSpaceReport`] impl below.
     pub fn hsr_query(&self, q: &[f32], b_raw: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
-        match &self.hsr {
-            Some(hsr) => hsr.query_into(q, b_raw, out, stats),
-            None => {
-                let n = self.len();
-                stats.points_scanned += n;
-                for j in 0..n {
-                    if crate::hsr::dot(q, self.key_row(j)) >= b_raw {
-                        out.push(j as u32);
-                        stats.reported += 1;
-                    }
-                }
-            }
-        }
+        self.query_into(q, b_raw, out, stats);
     }
 
     /// Score-carrying HSR query: like [`HeadKv::hsr_query`] but also
-    /// reports each index's raw inner product, so the attention evaluator
-    /// never recomputes dots the query already paid for.
+    /// reports each index's raw inner product. Deprecated-style shim for
+    /// the [`HalfSpaceReport`] impl below.
     pub fn hsr_query_scored(
         &self,
         q: &[f32],
@@ -87,21 +75,7 @@ impl HeadKv {
         scores: &mut Vec<f32>,
         stats: &mut QueryStats,
     ) {
-        match &self.hsr {
-            Some(hsr) => hsr.query_scored_into(q, b_raw, out, scores, stats),
-            None => {
-                let n = self.len();
-                stats.points_scanned += n;
-                for j in 0..n {
-                    let s = crate::hsr::dot(q, self.key_row(j));
-                    if s >= b_raw {
-                        out.push(j as u32);
-                        scores.push(s);
-                        stats.reported += 1;
-                    }
-                }
-            }
-        }
+        self.query_scored_into(q, b_raw, out, scores, stats);
     }
 
     #[inline]
@@ -112,6 +86,91 @@ impl HeadKv {
     #[inline]
     pub fn value_row(&self, j: usize) -> &[f32] {
         &self.values[j * self.d_head..(j + 1) * self.d_head]
+    }
+}
+
+/// A `HeadKv` *is* a half-space reporting structure over its cached
+/// keys: the attached [`DynamicHsr`] answers queries when present, and a
+/// brute scan over the contiguous key rows does otherwise (the engine's
+/// `hsr_backend: None` ablation). This is what lets the transformer's
+/// per-head attention be a thin caller of the session plan/execute
+/// machinery — the session layer only ever sees `&dyn HalfSpaceReport`.
+impl HalfSpaceReport for HeadKv {
+    fn len(&self) -> usize {
+        HeadKv::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        self.d_head
+    }
+
+    fn query_into(&self, a: &[f32], b: f32, out: &mut Vec<u32>, stats: &mut QueryStats) {
+        match &self.hsr {
+            Some(hsr) => hsr.query_into(a, b, out, stats),
+            None => {
+                let n = HeadKv::len(self);
+                stats.points_scanned += n;
+                for j in 0..n {
+                    if crate::hsr::dot(a, self.key_row(j)) >= b {
+                        out.push(j as u32);
+                        stats.reported += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn query_scored_into(
+        &self,
+        a: &[f32],
+        b: f32,
+        out: &mut Vec<u32>,
+        scores: &mut Vec<f32>,
+        stats: &mut QueryStats,
+    ) {
+        match &self.hsr {
+            Some(hsr) => hsr.query_scored_into(a, b, out, scores, stats),
+            None => {
+                let n = HeadKv::len(self);
+                stats.points_scanned += n;
+                for j in 0..n {
+                    let s = crate::hsr::dot(a, self.key_row(j));
+                    if s >= b {
+                        out.push(j as u32);
+                        scores.push(s);
+                        stats.reported += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn query_many_scored_into(
+        &self,
+        queries: &[f32],
+        bs: &[f32],
+        outs: &mut [Vec<u32>],
+        scores: &mut [Vec<f32>],
+        stats: &mut QueryStats,
+    ) {
+        match &self.hsr {
+            // Shared traversal through the dynamic index.
+            Some(hsr) => hsr.query_many_scored_into(queries, bs, outs, scores, stats),
+            None => {
+                let d = self.d_head;
+                let q = bs.len();
+                assert_eq!(queries.len(), q * d);
+                for i in 0..q {
+                    self.query_scored_into(
+                        &queries[i * d..(i + 1) * d],
+                        bs[i],
+                        &mut outs[i],
+                        &mut scores[i],
+                        stats,
+                    );
+                }
+            }
+        }
     }
 }
 

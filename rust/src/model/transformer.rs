@@ -16,8 +16,9 @@
 
 use super::kv::KvState;
 use super::Model;
-use crate::attention::softmax::{log_sum_exp, softmax_attention_row_scored};
-use crate::attention::topk::{rth_largest, top_r_select_into};
+use crate::attention::plan::AttentionPlan;
+use crate::attention::session;
+use crate::attention::softmax::log_sum_exp;
 use crate::hsr::QueryStats;
 use crate::util::tensor_io::Tensor;
 
@@ -80,25 +81,10 @@ impl StepStats {
     }
 }
 
-/// Per-thread scratch for one attention worker: the HSR report, its
-/// scores, the top-r selection, and the softmax weight buffer. One lives
-/// in every [`Workspace`]; the batched decode path owns one per shard.
-#[derive(Debug, Default)]
-pub struct AttnScratch {
-    scores: Vec<f32>,
-    cand: Vec<u32>,
-    cand_scores: Vec<f32>,
-    selected: Vec<u32>,
-}
-
-impl AttnScratch {
-    pub fn new() -> AttnScratch {
-        AttnScratch::default()
-    }
-}
-
 /// Reusable scratch buffers for a forward step (no allocation on the
-/// token hot path).
+/// token hot path). The per-head attention worker state is an
+/// [`AttentionPlan`] — the same plan arena the session API uses, so one
+/// plan per thread serves every (layer, head) it sweeps.
 pub struct Workspace {
     x: Vec<f32>,
     h: Vec<f32>,
@@ -109,7 +95,7 @@ pub struct Workspace {
     proj: Vec<f32>,
     ffn_a: Vec<f32>,
     ffn_b: Vec<f32>,
-    attn: AttnScratch,
+    attn: AttentionPlan,
     logits: Vec<f32>,
 }
 
@@ -126,14 +112,14 @@ impl Workspace {
             proj: vec![0.0; c.d_model],
             ffn_a: vec![0.0; c.d_ffn],
             ffn_b: vec![0.0; c.d_ffn],
-            attn: AttnScratch::new(),
+            attn: AttentionPlan::new(),
             logits: vec![0.0; c.vocab],
         }
     }
 }
 
 /// Reusable state for one **batched** decode step: flat [B, d_model]
-/// activations plus per-thread [`AttnScratch`] shards for the parallel
+/// activations plus per-thread [`AttentionPlan`] shards for the parallel
 /// per-(layer, head) attention sweep. Buffers grow to the largest batch
 /// seen and are reused across steps (no steady-state allocation).
 pub struct BatchWorkspace {
@@ -145,8 +131,8 @@ pub struct BatchWorkspace {
     att: Vec<f32>,
     /// Serial-phase temporaries (norms, K/V projections, FFN, logits).
     tmp: Workspace,
-    /// Per-thread attention scratch shards.
-    shards: Vec<AttnScratch>,
+    /// Per-thread attention plan shards.
+    shards: Vec<AttentionPlan>,
     /// Worker threads for the (sequence × head) attention grid:
     /// 0 → one per available core, 1 → serial.
     pub threads: usize,
@@ -277,7 +263,7 @@ impl Model {
     /// [`Model::decode_step`] once per sequence — bit-identically so —
     /// but the per-(layer, head) attention loop runs over the whole
     /// (sequence × head) grid at once, sharded across scoped worker
-    /// threads with per-thread [`AttnScratch`] shards and deterministic
+    /// threads with per-thread [`AttentionPlan`] shards and deterministic
     /// shard-order stat merging.
     pub fn decode_step_batch(
         &self,
@@ -311,7 +297,7 @@ impl Model {
             crate::kernel::effective_threads(bws.threads, jobs)
         };
         while bws.shards.len() < workers {
-            bws.shards.push(AttnScratch::new());
+            bws.shards.push(AttentionPlan::new());
         }
 
         // Embedding.
@@ -473,21 +459,24 @@ impl Model {
 }
 
 /// One head of cached attention under a policy. `out` has length d_head.
-/// All buffers come from the caller's [`AttnScratch`] (one per thread);
-/// the HSR query carries raw scores out with the report, so no inner
-/// product is ever computed twice on this path.
+/// All buffers come from the caller's [`AttentionPlan`] (one per
+/// thread). The sparse branch is a thin caller of the session layer:
+/// `session::plan_top_r_row` runs Algorithm 1's scored HSR query with
+/// the per-head calibrated threshold (full-half-space fallback on a
+/// miss, quantile recalibration for the next step), and the session's
+/// bucketed `execute_plan` evaluates the planned row — so no inner
+/// product on this path is ever computed twice, and the evaluation code
+/// is literally the one the decode/prefill engines run.
 fn attend_head(
     hk: &mut super::kv::HeadKv,
     q: &[f32],
     d_head: usize,
     policy: AttentionPolicy,
-    scratch: &mut AttnScratch,
+    plan: &mut AttentionPlan,
     out: &mut [f32],
     stats: &mut StepStats,
 ) {
-    let AttnScratch { scores, cand, cand_scores, selected } = scratch;
     let n = hk.len();
-    let inv_sqrt_d = 1.0 / (d_head as f32).sqrt();
     stats.dense_equivalent += n;
     let r = match policy {
         AttentionPolicy::Dense => n,
@@ -497,42 +486,35 @@ fn attend_head(
         // Dense (or top-r covering everything): one blocked scoring pass,
         // one fused softmax — no index set, no second dot pass.
         crate::attention::softmax::softmax_attention_row(
-            q, &hk.keys, &hk.values, d_head, scores, out,
+            q,
+            &hk.keys,
+            &hk.values,
+            d_head,
+            &mut plan.buf.scores,
+            out,
         );
         stats.attended += n;
         return;
     }
 
-    // --- Algorithm 1 inference: scored HSR query, then exact top-r. ---
-    // The HSR threshold lives on the raw inner product <q, k>.
-    let mut b_raw = hk.calib_threshold.unwrap_or(f32::NEG_INFINITY);
-    cand.clear();
-    cand_scores.clear();
-    let mut q_stats = QueryStats::default();
-    hk.hsr_query_scored(q, b_raw, cand, cand_scores, &mut q_stats);
-    if cand.len() < r {
-        // Calibration miss: fall back to the full half-space (b = -inf ≡
-        // brute top-r) and recalibrate. Exactness is never compromised.
-        stats.fallbacks += 1;
-        cand.clear();
-        cand_scores.clear();
-        hk.hsr_query_scored(q, f32::NEG_INFINITY, cand, cand_scores, &mut q_stats);
+    // --- Algorithm 1 inference: plan (scored HSR query + exact top-r +
+    // calibration) then execute (bucketed gather), via the session API.
+    // `HeadKv` is itself the `HalfSpaceReport` the planner queries.
+    let new_calib = session::plan_top_r_row(
+        &*hk,
+        q,
+        r,
+        hk.calib_threshold,
+        CALIBRATION_SLACK,
+        plan,
+    );
+    if new_calib.is_some() {
+        hk.calib_threshold = new_calib;
     }
-    stats.hsr.add(&q_stats);
-    // Recalibrate: aim the next report at ~CALIBRATION_SLACK * r.
-    let target = ((r as f32 * CALIBRATION_SLACK) as usize).min(cand.len());
-    if target >= 1 {
-        b_raw = rth_largest(cand_scores, target);
-        hk.calib_threshold = Some(b_raw);
-    }
-    // Exact top-r over the candidate superset (= true NN(r, q, K)),
-    // carrying the already-paid-for scores into the softmax.
-    top_r_select_into(cand, cand_scores, r, selected, scores);
-    for s in scores.iter_mut() {
-        *s *= inv_sqrt_d;
-    }
-    stats.attended += selected.len();
-    softmax_attention_row_scored(selected, scores, &hk.values, d_head, out);
+    stats.fallbacks += plan.fallbacks;
+    stats.hsr.add(&plan.stats);
+    stats.attended += plan.fired[0];
+    session::execute_plan(plan, &hk.values, d_head, out);
 }
 
 /// Greedy argmax sampling.

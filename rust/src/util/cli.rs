@@ -92,6 +92,38 @@ impl Args {
         }
     }
 
+    /// Run `--key` (or `default`) through a fallible parser, prefixing
+    /// any error with the flag name so it reads as CLI feedback — e.g.
+    /// `HsrBackend::parse`'s valid-name list surfaces verbatim.
+    pub fn try_parse<T>(
+        &self,
+        key: &str,
+        default: &str,
+        parse: impl FnOnce(&str) -> Result<T, String>,
+    ) -> Result<T, String> {
+        parse(self.str_or(key, default)).map_err(|e| format!("--{key}: {e}"))
+    }
+
+    /// Like [`Args::try_parse`] but terminal: on a parse error, print the
+    /// message plus the caller's usage line to stderr and exit 2 (the
+    /// same exit code the unknown-subcommand path uses).
+    pub fn parse_or_exit<T>(
+        &self,
+        key: &str,
+        default: &str,
+        usage: &str,
+        parse: impl FnOnce(&str) -> Result<T, String>,
+    ) -> T {
+        match self.try_parse(key, default, parse) {
+            Ok(v) => v,
+            Err(msg) => {
+                eprintln!("{msg}");
+                eprintln!("{usage}");
+                std::process::exit(2);
+            }
+        }
+    }
+
     /// First positional argument (typically a subcommand).
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
@@ -128,6 +160,25 @@ mod tests {
         let a = parse("x --ns 1_024,2048 --big 65_536");
         assert_eq!(a.usize_list_or("ns", &[]), vec![1024, 2048]);
         assert_eq!(a.usize_or("big", 0), 65536);
+    }
+
+    #[test]
+    fn try_parse_prefixes_flag_name() {
+        let a = parse("serve --backend balltree");
+        let ok = a.try_parse("backend", "brute", crate::hsr::HsrBackend::parse);
+        assert_eq!(ok, Ok(crate::hsr::HsrBackend::BallTree));
+        let b = parse("serve --backend nope");
+        let err = b
+            .try_parse("backend", "brute", crate::hsr::HsrBackend::parse)
+            .unwrap_err();
+        assert!(err.starts_with("--backend:"), "{err}");
+        assert!(err.contains("balltree"), "valid names must be listed: {err}");
+        // Absent flag parses the default.
+        let c = parse("serve");
+        assert_eq!(
+            c.try_parse("backend", "projected", crate::hsr::HsrBackend::parse),
+            Ok(crate::hsr::HsrBackend::Projected)
+        );
     }
 
     #[test]

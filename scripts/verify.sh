@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Repo verification: format, build, tests, and the perf smoke runs.
+# Repo verification: format, lint, build, docs, tests, and perf smokes.
 #
 # Usage: scripts/verify.sh [--no-bench]
 #
@@ -9,6 +9,9 @@
 #  * benches/decode_time.rs --batched-only    → BENCH_decode.json
 #    (ns per decoded token at batch 1/8/32, serial vs batched, per
 #    HSR backend — the continuous-batch decode engine's headline)
+#  * benches/decode_time.rs --hsr-batch-only  → BENCH_hsr_batch.json
+#    (multi-query shared-traversal HSR: per-backend ns/query and
+#    work/query, batched vs looped, fan-out 1/4/16)
 #  * benches/e2e_serving.rs                   → stdout (steady-state
 #    tok/s vs ttft; self-skips when model artifacts are absent)
 
@@ -18,8 +21,18 @@ cd "$(dirname "$0")/../rust"
 echo "== cargo fmt --check =="
 cargo fmt --check
 
+echo "== cargo clippy --release -q -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --release -q -- -D warnings
+else
+    echo "clippy not installed in this toolchain — skipping"
+fi
+
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo doc --no-deps -q =="
+cargo doc --no-deps -q
 
 echo "== cargo test -q =="
 cargo test -q
@@ -32,6 +45,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== batched decode smoke (BENCH_decode.json) =="
     cargo bench --bench decode_time -- --batched-only
     echo "report: $(cd .. && pwd)/BENCH_decode.json"
+
+    echo "== multi-query HSR smoke (BENCH_hsr_batch.json) =="
+    cargo bench --bench decode_time -- --hsr-batch-only
+    echo "report: $(cd .. && pwd)/BENCH_hsr_batch.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
