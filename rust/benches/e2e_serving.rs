@@ -1,16 +1,26 @@
-//! Bench/reproduction: **headline claim** — end-to-end serving
+//! Bench/reproduction: **headline claims** — end-to-end serving
 //! throughput/latency with HSR-sparse attention vs the dense baseline,
-//! on the trained char-LM, plus the batching-policy ablation.
+//! plus the shared-prefix KV store on a common-prompt workload
+//! (BENCH_serving.json: prefix-hit rate, prefill tokens skipped, and
+//! steady-state tok/s shared vs unshared).
 //!
-//! Run after `make artifacts`. Skips gracefully if artifacts are missing.
+//! The sparse-vs-dense section needs the trained artifacts (`make
+//! artifacts`) and skips without them; the shared-prefix section falls
+//! back to a deterministic synthetic model so the prefix-cache numbers
+//! are always reproducible.
+//!
+//! Flags: --shared-only (skip the artifact section), --model NAME,
+//! --shared-requests N, --shared-prompt N, --shared-gen N.
 
 use hsr_attn::bench::banner;
 use hsr_attn::engine::serving::{Engine, EngineConfig};
 use hsr_attn::engine::{GenerationParams, SchedulerConfig};
 use hsr_attn::hsr::HsrBackend;
+use hsr_attn::kvstore::PrefixCacheMode;
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
 use hsr_attn::model::Model;
 use hsr_attn::util::cli::Args;
+use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -31,45 +41,24 @@ struct RunResult {
     ttft_p50_ns: u64,
     attended_frac: f64,
     p50_step_ns: u64,
+    /// Shared-prefix counters (zero with the cache off).
+    prefill_tokens_skipped: u64,
+    prefill_tokens_demanded: u64,
+    prefix_hit_rate: f64,
+    grouped_decode_rows: u64,
+    segments_evicted: u64,
 }
 
-fn run(
-    model: Arc<Model>,
-    policy: AttentionPolicy,
-    backend: Option<HsrBackend>,
-    requests: usize,
-    prompt_len: usize,
-    gen: usize,
-    max_batch: usize,
-) -> RunResult {
-    let mut rng = Rng::new(11);
-    let mut eng = Engine::new(
-        model,
-        EngineConfig {
-            policy,
-            hsr_backend: backend,
-            scheduler: SchedulerConfig { max_batch, ..Default::default() },
-            ..Default::default()
-        },
-    );
-    let corpus: Vec<u32> = "the merchant carries copper coins by the river. \
-        remember: alder keeps the amber token. the alder token is amber. "
-        .bytes()
-        .cycle()
-        .take(8192)
-        .map(|b| b as u32)
-        .collect();
-    for _ in 0..requests {
-        let s = rng.below(corpus.len() - prompt_len);
+/// Drive `prompts` to completion, timing steady-state decode separately.
+fn drive(mut eng: Engine, prompts: Vec<Vec<u32>>, gen: usize) -> RunResult {
+    for p in prompts {
         eng.submit(
-            corpus[s..s + prompt_len].to_vec(),
+            p,
             GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None },
         );
     }
+    let requests = eng.metrics.requests_submitted;
     let t0 = Instant::now();
-    // Drive manually so steps that start in steady state (post-admission,
-    // all prompts prefilled) can be timed separately from prefill-heavy
-    // ones — time-to-first-token must not dilute the decode throughput.
     let mut steady_ns: u128 = 0;
     let mut steady_tok: u64 = 0;
     while eng.has_work() {
@@ -89,7 +78,7 @@ fn run(
     let wall_s = t0.elapsed().as_secs_f64();
     RunResult {
         wall_s,
-        gen_tokens: eng.metrics.generated_tokens + requests as u64, // + seeded
+        gen_tokens: eng.metrics.generated_tokens + requests, // + seeded
         steady_tok_per_s: if steady_ns > 0 {
             steady_tok as f64 / (steady_ns as f64 * 1e-9)
         } else {
@@ -98,14 +87,172 @@ fn run(
         ttft_p50_ns: eng.metrics.ttft.percentile_ns(50.0),
         attended_frac: eng.metrics.attended_fraction(),
         p50_step_ns: eng.metrics.step_latency.percentile_ns(50.0),
+        prefill_tokens_skipped: eng.metrics.prefill_tokens_skipped,
+        prefill_tokens_demanded: eng.metrics.prefill_tokens_demanded,
+        prefix_hit_rate: eng.metrics.prefix_hit_rate(),
+        grouped_decode_rows: eng.metrics.grouped_decode_rows,
+        segments_evicted: eng.metrics.prefix_segments_evicted,
+    }
+}
+
+fn corpus() -> Vec<u32> {
+    "the merchant carries copper coins by the river. \
+     remember: alder keeps the amber token. the alder token is amber. "
+        .bytes()
+        .cycle()
+        .take(8192)
+        .map(|b| b as u32)
+        .collect()
+}
+
+fn run(
+    model: Arc<Model>,
+    policy: AttentionPolicy,
+    backend: Option<HsrBackend>,
+    requests: usize,
+    prompt_len: usize,
+    gen: usize,
+    max_batch: usize,
+) -> RunResult {
+    let mut rng = Rng::new(11);
+    let eng = Engine::new(
+        model,
+        EngineConfig {
+            policy,
+            hsr_backend: backend,
+            // The sparse-vs-dense table is the PR 0-3 baseline: keep the
+            // prefix cache out of it so the numbers stay comparable
+            // (the shared_prefix_section measures the cache explicitly).
+            prefix_cache: PrefixCacheMode::Off,
+            scheduler: SchedulerConfig { max_batch, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let corpus = corpus();
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|_| {
+            let s = rng.below(corpus.len() - prompt_len);
+            corpus[s..s + prompt_len].to_vec()
+        })
+        .collect();
+    drive(eng, prompts, gen)
+}
+
+/// The shared-prompt workload: every request carries the SAME prompt
+/// (the multi-turn / common-system-prompt serving setting), run once
+/// with the prefix cache off and once on.
+fn shared_prefix_section(args: &Args) {
+    let requests = args.usize_or("shared-requests", 32);
+    let prompt_len = args.usize_or("shared-prompt", 256);
+    let gen = args.usize_or("shared-gen", 32);
+    let model_name = args.str_or("model", "small");
+    let (model, model_desc) = if artifacts_dir().join("manifest.json").exists() {
+        (
+            Arc::new(Model::load_named(&artifacts_dir(), model_name).unwrap()),
+            model_name.to_string(),
+        )
+    } else {
+        // Deterministic fallback so this section always runs.
+        (Arc::new(Model::synthetic(90, 2, 4, 8)), "synthetic-90".to_string())
+    };
+    println!(
+        "\n== shared-prefix serving: {requests} requests x (identical prompt {prompt_len} + gen {gen}), model '{model_desc}' =="
+    );
+    let corpus = corpus();
+    let prompt = corpus[..prompt_len].to_vec();
+    let policy = AttentionPolicy::TopR(RSpec::paper());
+    let backend = Some(HsrBackend::BallTree);
+    let mut results: Vec<(&str, PrefixCacheMode, RunResult)> = Vec::new();
+    for (name, mode) in [
+        ("prefix-cache off (unshared baseline)", PrefixCacheMode::Off),
+        ("prefix-cache on (radix + grouped decode)", PrefixCacheMode::default()),
+    ] {
+        let eng = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                policy,
+                hsr_backend: backend,
+                prefix_cache: mode,
+                scheduler: SchedulerConfig { max_batch: requests, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let prompts = vec![prompt.clone(); requests];
+        let r = drive(eng, prompts, gen);
+        results.push((name, mode, r));
+    }
+    println!(
+        "{:<42} {:>8} {:>13} {:>10} {:>14} {:>12}",
+        "configuration", "wall s", "steady tok/s", "ttft p50", "prefill skip", "grouped rows"
+    );
+    for (name, _, r) in &results {
+        println!(
+            "{:<42} {:>8.2} {:>13.1} {:>10} {:>13.1}% {:>12}",
+            name,
+            r.wall_s,
+            r.steady_tok_per_s,
+            hsr_attn::util::stats::fmt_ns(r.ttft_p50_ns as f64),
+            100.0 * r.prefill_tokens_skipped as f64 / r.prefill_tokens_demanded.max(1) as f64,
+            r.grouped_decode_rows,
+        );
+    }
+    let off = &results[0].2;
+    let on = &results[1].2;
+    let skip_pct =
+        100.0 * on.prefill_tokens_skipped as f64 / on.prefill_tokens_demanded.max(1) as f64;
+    let steady_speedup = if off.steady_tok_per_s > 0.0 {
+        on.steady_tok_per_s / off.steady_tok_per_s
+    } else {
+        0.0
+    };
+    println!(
+        "\nprefill tokens skipped: {:.1}%  |  steady-state speedup: {:.2}x  |  hit rate {:.0}%",
+        skip_pct,
+        steady_speedup,
+        100.0 * on.prefix_hit_rate
+    );
+
+    // Machine-readable report at the repo root.
+    let mut root = Json::obj();
+    root.set("model", model_desc.as_str().into())
+        .set("requests", requests.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen", gen.into())
+        .set("backend", "balltree".into())
+        .set("prefill_tokens_skipped_pct", skip_pct.into())
+        .set("prefix_hit_rate", on.prefix_hit_rate.into())
+        .set("steady_speedup", steady_speedup.into());
+    for (key, r) in [("unshared", off), ("shared", on)] {
+        let mut o = Json::obj();
+        o.set("wall_s", r.wall_s.into())
+            .set("gen_tokens", r.gen_tokens.into())
+            .set("steady_tok_per_s", r.steady_tok_per_s.into())
+            .set("ttft_p50_ns", r.ttft_p50_ns.into())
+            .set("p50_step_ns", r.p50_step_ns.into())
+            .set("prefill_tokens_skipped", r.prefill_tokens_skipped.into())
+            .set("prefill_tokens_demanded", r.prefill_tokens_demanded.into())
+            .set("grouped_decode_rows", r.grouped_decode_rows.into())
+            .set("segments_evicted", r.segments_evicted.into());
+        root.set(key, o);
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }
 
 fn main() {
-    banner("e2e_serving", "headline: sparse vs dense serving throughput/latency");
+    banner("e2e_serving", "headline: sparse vs dense serving + shared-prefix KV store");
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+
+    shared_prefix_section(&args);
+    if args.flag("shared-only") {
+        return;
+    }
+
     if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts`; skipping");
+        eprintln!("\nartifacts missing — run `make artifacts`; skipping sparse-vs-dense section");
         return;
     }
     let model_name = args.str_or("model", "small");
@@ -114,7 +261,7 @@ fn main() {
     let gen = args.usize_or("gen", 96);
     let model = Arc::new(Model::load_named(&artifacts_dir(), model_name).unwrap());
     println!(
-        "model '{}', {} requests x (prompt {} + gen {})\n",
+        "\nmodel '{}', {} requests x (prompt {} + gen {})\n",
         model_name, requests, prompt_len, gen
     );
 

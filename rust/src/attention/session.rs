@@ -530,6 +530,179 @@ pub(crate) fn plan_top_r_row(
     new_calib
 }
 
+/// Calibrated softmax top-r planning for a **shared-prefix group**: the
+/// decode rows of several sequences whose KV caches share a chain of
+/// immutable prefix segments (each a [`HalfSpaceReport`] with a global
+/// start offset) and differ only in their private tails.
+///
+/// Phase A runs ONE multi-query traversal per shared segment for the
+/// whole member block — the cross-sequence amortization of
+/// [`HalfSpaceReport::query_many_scored_into`] — then scans each
+/// member's private tail individually. Per member it then applies
+/// exactly the [`plan_top_r_row`] finish: full-half-space fallback when
+/// the carried threshold under-reported (`|fire| < r` — Theorem 4.2's
+/// exactness guard, so the selected set is always the true top-r and
+/// shared-vs-unshared outputs stay bit-identical), quantile
+/// recalibration aimed at `slack · r` candidates, canonical
+/// ascending-index top-r selection, and the in-place softmax transform.
+/// One CSR row per member is appended to `plan` in member order; the
+/// member queries must already be packed into `plan.buf.qblock`
+/// (`[members, d]`, row-major). `new_calibs[i]` receives member i's
+/// recalibrated threshold (None when nothing could be calibrated).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn plan_top_r_shared(
+    prefix: &[(&dyn HalfSpaceReport, usize)],
+    prefix_len: usize,
+    d: usize,
+    tails: &[&dyn HalfSpaceReport],
+    rs: &[usize],
+    calibs: &[Option<f32>],
+    slack: f32,
+    plan: &mut AttentionPlan,
+    new_calibs: &mut Vec<Option<f32>>,
+) {
+    let b = tails.len();
+    assert_eq!(rs.len(), b);
+    assert_eq!(calibs.len(), b);
+    plan.reset();
+    new_calibs.clear();
+    let AttentionPlan { buf, fired, stats, fallbacks } = plan;
+    assert_eq!(buf.qblock.len(), b * d, "qblock must hold the member queries");
+    buf.bs.clear();
+    for c in calibs {
+        buf.bs.push(c.unwrap_or(f32::NEG_INFINITY));
+    }
+    while buf.many_idx.len() < b {
+        buf.many_idx.push(Vec::new());
+        buf.many_scores.push(Vec::new());
+    }
+    for t in 0..b {
+        buf.many_idx[t].clear();
+        buf.many_scores[t].clear();
+    }
+    // Shared phase: one block traversal per chain segment, local report
+    // ids remapped to global key indices by the segment's start offset.
+    for &(part, start) in prefix {
+        buf.cursor.clear();
+        for t in 0..b {
+            buf.cursor.push(buf.many_idx[t].len());
+        }
+        part.query_many_scored_into(
+            &buf.qblock,
+            &buf.bs,
+            &mut buf.many_idx[..b],
+            &mut buf.many_scores[..b],
+            stats,
+        );
+        if start > 0 {
+            for t in 0..b {
+                let from = buf.cursor[t];
+                for x in &mut buf.many_idx[t][from..] {
+                    *x += start as u32;
+                }
+            }
+        }
+    }
+    // Private phase: each member's tail, remapped past the prefix.
+    for t in 0..b {
+        let before = buf.many_idx[t].len();
+        tails[t].query_scored_into(
+            &buf.qblock[t * d..(t + 1) * d],
+            buf.bs[t],
+            &mut buf.many_idx[t],
+            &mut buf.many_scores[t],
+            stats,
+        );
+        for x in &mut buf.many_idx[t][before..] {
+            *x += prefix_len as u32;
+        }
+    }
+    // Finish each member row exactly like `plan_top_r_row`.
+    let inv_sqrt_d = 1.0 / (d as f32).sqrt();
+    for t in 0..b {
+        let Scratch {
+            qblock, many_idx, many_scores, selected, exps, perm, idx, w, row_ptr, inv, ..
+        } = buf;
+        let fire = &mut many_idx[t];
+        let scores = &mut many_scores[t];
+        let qi = &qblock[t * d..(t + 1) * d];
+        let r = rs[t];
+        if fire.len() < r {
+            // Calibration miss: fall back to the full half-space over
+            // the whole chain + tail so top-r exactness is preserved.
+            *fallbacks += 1;
+            fire.clear();
+            scores.clear();
+            for &(part, start) in prefix {
+                let before = fire.len();
+                part.query_scored_into(qi, f32::NEG_INFINITY, fire, scores, stats);
+                if start > 0 {
+                    for x in &mut fire[before..] {
+                        *x += start as u32;
+                    }
+                }
+            }
+            let before = fire.len();
+            tails[t].query_scored_into(qi, f32::NEG_INFINITY, fire, scores, stats);
+            for x in &mut fire[before..] {
+                *x += prefix_len as u32;
+            }
+        }
+        let target = ((r as f32 * slack) as usize).min(fire.len());
+        new_calibs.push(if target >= 1 { Some(rth_largest(scores, target)) } else { None });
+        if r < fire.len() {
+            top_r_select_into(fire, scores, r, selected, exps);
+        } else {
+            canonicalize_ascending(fire, scores, perm, selected, exps);
+        }
+        for s in exps.iter_mut() {
+            *s *= inv_sqrt_d;
+        }
+        let denom = simd::softmax_exp_in_place(exps);
+        let rinv = if denom > 0.0 && denom.is_finite() { 1.0 / denom } else { 0.0 };
+        fired.push(selected.len());
+        idx.extend_from_slice(selected);
+        w.extend_from_slice(exps);
+        row_ptr.push(idx.len());
+        inv.push(rinv);
+    }
+}
+
+/// Resolver mapping a plan's global key index to its value row. This is
+/// the hook segmented KV storage (shared prefix chain + private tail)
+/// plugs into the execute phase; contiguous storage is just the
+/// identity resolver over one value matrix.
+pub(crate) trait ValueRows {
+    fn value_row(&self, j: usize) -> &[f32];
+}
+
+/// Phase B for one planned row against *resolved* value storage: the
+/// weighted axpy accumulation in ascending key order — float-for-float
+/// the single-row branch of [`execute_plan`], so shared-prefix rows are
+/// bit-identical to contiguous-storage rows.
+pub(crate) fn execute_plan_row_resolved(
+    plan: &AttentionPlan,
+    row: usize,
+    d: usize,
+    values: &dyn ValueRows,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), d);
+    out.fill(0.0);
+    let buf = &plan.buf;
+    let scale = buf.inv[row];
+    if scale == 0.0 {
+        return;
+    }
+    for c in buf.row_ptr[row]..buf.row_ptr[row + 1] {
+        let a = buf.w[c];
+        if a != 0.0 {
+            let j = buf.idx[c] as usize;
+            simd::axpy(out, values.value_row(j), a * scale);
+        }
+    }
+}
+
 /// Phase B: bucketed union gather. Union the plan's fired indices and
 /// stream the value matrix once per [`BUCKET_ROWS`]-row bucket,
 /// accumulating every row's weighted sum out of the packed (cache-hot)

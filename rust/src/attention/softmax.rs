@@ -24,6 +24,56 @@ pub fn softmax_attention_row(
     softmax_weighted_sum(scores_buf, None, values, d, out);
 }
 
+/// Dense softmax attention for a single query row over **segmented**
+/// K/V storage (a shared-prefix chain plus a private tail): `parts` are
+/// `(keys, values)` row-major `[len, d]` pairs in global key order.
+/// Scores are computed per part into one contiguous buffer (each row's
+/// dot is the same kernel call either way), then a single fused softmax
+/// and one ascending-order accumulation run over the concatenation —
+/// float-for-float the computation [`softmax_attention_row`] performs on
+/// the concatenated rows, which is what keeps shared-prefix dense decode
+/// bit-identical to unshared decode.
+pub fn softmax_attention_row_segmented(
+    q: &[f32],
+    parts: &[(&[f32], &[f32])],
+    d: usize,
+    scores_buf: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let n: usize = parts.iter().map(|(k, _)| k.len() / d).sum();
+    let buf = crate::attention::sized_scores(scores_buf, n);
+    let mut at = 0usize;
+    for (keys, _) in parts {
+        let len = keys.len() / d;
+        crate::kernel::simd::scaled_dots_into(
+            q,
+            keys,
+            d,
+            1.0 / (d as f32).sqrt(),
+            &mut buf[at..at + len],
+        );
+        at += len;
+    }
+    out.fill(0.0);
+    if buf.is_empty() {
+        return;
+    }
+    let denom = crate::kernel::simd::softmax_exp_in_place(buf);
+    if denom == 0.0 || !denom.is_finite() {
+        return;
+    }
+    let inv = 1.0 / denom;
+    let mut at = 0usize;
+    for (_, values) in parts {
+        let len = values.len() / d;
+        for t in 0..len {
+            let e = buf[at + t];
+            crate::kernel::simd::axpy(out, &values[t * d..(t + 1) * d], e * inv);
+        }
+        at += len;
+    }
+}
+
 /// Softmax attention restricted to `idx` (Definition B.2):
 /// out = Softmax(q K̂^T/√d) V̂ where K̂, V̂ are the selected rows.
 pub fn softmax_attention_row_subset(

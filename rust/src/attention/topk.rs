@@ -60,6 +60,13 @@ pub fn top_r_of_subset(candidates: &[u32], scores: &[f32], r: usize) -> Vec<u32>
 /// the scores in the HSR query, and downstream softmax consumes them
 /// directly, so nothing is re-dotted. Buffers are cleared first and only
 /// their capacity is reused across rows.
+///
+/// Exact score ties at the r-boundary break by **smaller global index**,
+/// so the selected *set* depends only on the (index, score) pairs — not
+/// on the order the HSR backend reported them in. The shared-prefix KV
+/// store relies on this: a chain-of-segments report and a single
+/// private-index report enumerate the same candidates in different
+/// orders and must still select identical rows.
 pub fn top_r_select_into(
     candidates: &[u32],
     scores: &[f32],
@@ -86,6 +93,7 @@ pub fn top_r_select_into(
         scores[b as usize]
             .partial_cmp(&scores[a as usize])
             .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| candidates[a as usize].cmp(&candidates[b as usize]))
     });
     out_idx.truncate(r);
     out_idx.sort_unstable_by_key(|&t| candidates[t as usize]);
@@ -160,6 +168,23 @@ mod tests {
         let cands = top_r_indices(&scores, 50);
         let sub_scores: Vec<f32> = cands.iter().map(|&i| scores[i as usize]).collect();
         assert_eq!(top_r_of_subset(&cands, &sub_scores, r), dense);
+    }
+
+    #[test]
+    fn select_into_breaks_ties_by_index_order_independently() {
+        // Three tied scores at the r-boundary: the kept set must be the
+        // smallest global indices, regardless of candidate order.
+        let mut idx_buf = Vec::new();
+        let mut score_buf = Vec::new();
+        let orders: [(&[u32], &[f32]); 2] = [
+            (&[10, 30, 20, 40], &[1.0, 0.5, 0.5, 0.5]),
+            (&[40, 20, 30, 10], &[0.5, 0.5, 0.5, 1.0]),
+        ];
+        for (cands, scores) in orders {
+            top_r_select_into(cands, scores, 2, &mut idx_buf, &mut score_buf);
+            assert_eq!(idx_buf, vec![10, 20], "order-dependent tie-break");
+            assert_eq!(score_buf, vec![1.0, 0.5]);
+        }
     }
 
     #[test]

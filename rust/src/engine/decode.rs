@@ -174,6 +174,35 @@ impl GenerationDecoding {
     }
 }
 
+/// Partition a decode batch into shared-prefix groups: members with an
+/// identical (non-empty) radix chain decode as one cross-sequence query
+/// block — ONE multi-query HSR traversal per chain segment per head —
+/// while members with no adopted prefix stay singleton jobs (the
+/// historical per-sequence path). Groups preserve first-occurrence
+/// order and every input index appears in exactly one group, which is
+/// what keeps the batched sweep's shard boundaries (and therefore its
+/// stats merge) deterministic.
+pub(crate) fn group_by_chain(chains: &[&[u32]]) -> Vec<Vec<usize>> {
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    // (group index, chain) for non-empty chains seen so far; linear scan
+    // is fine — batches are scheduler-bounded.
+    let mut seen: Vec<(usize, usize)> = Vec::new(); // (group, exemplar member)
+    for (i, &c) in chains.iter().enumerate() {
+        if c.is_empty() {
+            groups.push(vec![i]);
+            continue;
+        }
+        match seen.iter().find(|&&(_, m)| chains[m] == c) {
+            Some(&(g, _)) => groups[g].push(i),
+            None => {
+                seen.push((groups.len(), i));
+                groups.push(vec![i]);
+            }
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -391,5 +420,19 @@ mod tests {
             any += fired;
         }
         assert!(any > 0, "nothing fired at the practical threshold");
+    }
+
+    #[test]
+    fn group_by_chain_partitions_in_first_occurrence_order() {
+        let a: &[u32] = &[1, 2];
+        let b: &[u32] = &[1, 3];
+        let none: &[u32] = &[];
+        let groups = group_by_chain(&[a, none, b, a, none, b, a]);
+        assert_eq!(groups, vec![vec![0, 3, 6], vec![1], vec![2, 5], vec![4]]);
+        // Every index exactly once.
+        let mut all: Vec<usize> = groups.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+        assert!(group_by_chain(&[]).is_empty());
     }
 }

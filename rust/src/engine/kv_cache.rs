@@ -13,6 +13,12 @@ pub struct BlockAllocator {
     block_tokens: usize,
     free: Vec<u32>,
     total_blocks: usize,
+    /// Debug-build ledger: `allocated[b]` iff block `b` is currently
+    /// held by some owner. Catches double frees, frees of never-issued
+    /// ids, and (via [`BlockAllocator::debug_assert_all_free`]) leaks.
+    /// Absent in release builds — zero cost on the serving hot path.
+    #[cfg(debug_assertions)]
+    allocated: Vec<bool>,
 }
 
 impl BlockAllocator {
@@ -25,6 +31,8 @@ impl BlockAllocator {
             block_tokens,
             free: (0..total_blocks as u32).rev().collect(),
             total_blocks,
+            #[cfg(debug_assertions)]
+            allocated: vec![false; total_blocks],
         }
     }
 
@@ -55,7 +63,16 @@ impl BlockAllocator {
         if self.free.len() < count {
             return None;
         }
-        Some(self.free.split_off(self.free.len() - count))
+        let out = self.free.split_off(self.free.len() - count);
+        #[cfg(debug_assertions)]
+        for &b in &out {
+            debug_assert!(
+                !self.allocated[b as usize],
+                "block {b} handed out while already allocated"
+            );
+            self.allocated[b as usize] = true;
+        }
+        Some(out)
     }
 
     /// Grow a sequence's holding from `held` blocks to cover
@@ -75,9 +92,43 @@ impl BlockAllocator {
     }
 
     /// Return blocks to the pool.
+    ///
+    /// Debug builds assert each id is in range and currently allocated:
+    /// a block freed twice (or never issued) would silently get handed
+    /// to two owners on the next `alloc`, corrupting capacity
+    /// accounting — exactly the failure mode the ledger exists to catch.
     pub fn release(&mut self, blocks: &mut Vec<u32>) {
+        #[cfg(debug_assertions)]
+        for &b in blocks.iter() {
+            debug_assert!(
+                (b as usize) < self.total_blocks,
+                "released block {b} out of range (total {})",
+                self.total_blocks
+            );
+            debug_assert!(
+                self.allocated[b as usize],
+                "double free of block {b}"
+            );
+            self.allocated[b as usize] = false;
+        }
         self.free.append(blocks);
         debug_assert!(self.free.len() <= self.total_blocks);
+    }
+
+    /// Debug helper: assert every block has been returned (no leaks).
+    /// Compiles to nothing in release builds.
+    pub fn debug_assert_all_free(&self) {
+        debug_assert!(
+            self.free.len() == self.total_blocks,
+            "leaked {} of {} blocks",
+            self.total_blocks - self.free.len(),
+            self.total_blocks
+        );
+        #[cfg(debug_assertions)]
+        debug_assert!(
+            self.allocated.iter().all(|&a| !a),
+            "leaked blocks still marked allocated"
+        );
     }
 
     /// Pool utilization in [0, 1].
@@ -134,6 +185,35 @@ mod tests {
         for x in &b1 {
             assert!(!b2.contains(x), "block {x} double-allocated");
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_caught() {
+        let mut a = BlockAllocator::new(64, 16);
+        let blocks = a.alloc(2).unwrap();
+        let mut once = blocks.clone();
+        let mut twice = blocks;
+        a.release(&mut once);
+        a.release(&mut twice); // regression: used to silently corrupt the pool
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of range")]
+    fn foreign_block_release_is_caught() {
+        let mut a = BlockAllocator::new(64, 16);
+        let mut bogus = vec![99u32];
+        a.release(&mut bogus);
+    }
+
+    #[test]
+    fn leak_assertion_tracks_outstanding_blocks() {
+        let mut a = BlockAllocator::new(64, 16);
+        let mut b = a.alloc(3).unwrap();
+        a.release(&mut b);
+        a.debug_assert_all_free();
     }
 
     #[test]

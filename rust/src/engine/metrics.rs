@@ -23,6 +23,33 @@ pub struct Metrics {
     pub attended_entries: u64,
     pub dense_equivalent_entries: u64,
     pub calibration_fallbacks: u64,
+    // --- shared-prefix KV store counters ---
+    /// Radix probes that could have changed coverage: one per admission
+    /// attempt plus one per successful mid-prefill adoption. Per-chunk
+    /// re-matches that merely confirm existing coverage are not counted
+    /// (they would read as misses on a perfectly-covering cache).
+    pub prefix_lookups: u64,
+    /// Probes that adopted a non-empty chain.
+    pub prefix_hits: u64,
+    /// Prompt tokens never prefilled thanks to an adopted prefix.
+    pub prefill_tokens_skipped: u64,
+    /// Prompt tokens *demanded* of prefill: the prompt length of every
+    /// admission, including re-admissions after preemption. This is the
+    /// denominator of [`Metrics::prefix_skip_rate`] — a preempted
+    /// sequence that re-adopts its prefix adds to both sides, so the
+    /// rate stays a true fraction (`prompt_tokens` alone would let it
+    /// exceed 100%).
+    pub prefill_tokens_demanded: u64,
+    /// Prompt tokens published into the radix cache as shared segments.
+    pub prefix_tokens_inserted: u64,
+    /// Cached segments LRU-evicted under pool pressure.
+    pub prefix_segments_evicted: u64,
+    /// Adopted chains shed by a wedged sequence (last-resort recompute
+    /// so its self-referenced segments become evictable).
+    pub prefix_sheds: u64,
+    /// Decode rows answered inside a ≥ 2-member shared-prefix group
+    /// (one multi-query traversal per chain segment).
+    pub grouped_decode_rows: u64,
 }
 
 impl Metrics {
@@ -40,6 +67,31 @@ impl Metrics {
         self.attended_entries += other.attended_entries;
         self.dense_equivalent_entries += other.dense_equivalent_entries;
         self.calibration_fallbacks += other.calibration_fallbacks;
+        self.prefix_lookups += other.prefix_lookups;
+        self.prefix_hits += other.prefix_hits;
+        self.prefill_tokens_skipped += other.prefill_tokens_skipped;
+        self.prefill_tokens_demanded += other.prefill_tokens_demanded;
+        self.prefix_tokens_inserted += other.prefix_tokens_inserted;
+        self.prefix_segments_evicted += other.prefix_segments_evicted;
+        self.prefix_sheds += other.prefix_sheds;
+        self.grouped_decode_rows += other.grouped_decode_rows;
+    }
+
+    /// Fraction of demanded prefill tokens skipped via the shared-prefix
+    /// cache (the bench's "prefill tokens skipped"); always in [0, 1].
+    pub fn prefix_skip_rate(&self) -> f64 {
+        if self.prefill_tokens_demanded == 0 {
+            return 0.0;
+        }
+        self.prefill_tokens_skipped as f64 / self.prefill_tokens_demanded as f64
+    }
+
+    /// Fraction of radix lookups that adopted a cached chain.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / self.prefix_lookups as f64
     }
 
     pub fn record_step_stats(&mut self, s: &crate::model::transformer::StepStats) {
@@ -66,7 +118,9 @@ impl Metrics {
              tokens:   {} prompt / {} generated\n\
              latency:  p50 {} p90 {} p99 {} (request)  ttft p50 {}\n\
              step:     p50 {} p99 {}\n\
-             sparsity: attended {:.2}% of dense ({} fallbacks)",
+             sparsity: attended {:.2}% of dense ({} fallbacks)\n\
+             prefix:   {:.1}% prefill tokens skipped, {}/{} lookups hit, \
+             {} inserted / {} evicted, {} grouped decode rows",
             self.requests_submitted,
             self.requests_completed,
             self.requests_preempted,
@@ -80,6 +134,12 @@ impl Metrics {
             crate::util::stats::fmt_ns(self.step_latency.percentile_ns(99.0) as f64),
             100.0 * self.attended_fraction(),
             self.calibration_fallbacks,
+            100.0 * self.prefix_skip_rate(),
+            self.prefix_hits,
+            self.prefix_lookups,
+            self.prefix_tokens_inserted,
+            self.prefix_segments_evicted,
+            self.grouped_decode_rows,
         )
     }
 }
@@ -98,6 +158,26 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.requests_completed, 7);
         assert_eq!(a.generated_tokens, 10);
+    }
+
+    #[test]
+    fn prefix_rates() {
+        let mut m = Metrics::default();
+        assert_eq!(m.prefix_skip_rate(), 0.0);
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefill_tokens_demanded = 200;
+        m.prefill_tokens_skipped = 150;
+        m.prefix_lookups = 4;
+        m.prefix_hits = 3;
+        assert!((m.prefix_skip_rate() - 0.75).abs() < 1e-12);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        assert!(m.summary().contains("75.0% prefill tokens skipped"));
+        let mut other = Metrics::default();
+        other.prefix_hits = 1;
+        other.grouped_decode_rows = 7;
+        m.merge(&other);
+        assert_eq!(m.prefix_hits, 4);
+        assert_eq!(m.grouped_decode_rows, 7);
     }
 
     #[test]

@@ -95,6 +95,128 @@ impl PromptPrefilling {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serving-side chunked prefill × shared-prefix cache integration
+// ---------------------------------------------------------------------------
+//
+// The serving engine's chunked prefill (serving.rs) brackets every chunk
+// with these two hooks. Together they make a cohort of sequences sharing
+// a prompt *cooperate*: each chunk of the common prefix is computed by
+// whichever sequence gets there first and published; everyone else
+// adopts it at their next chunk boundary and leapfrogs ahead — so in
+// steady state each shared token is prefilled exactly once fleet-wide.
+
+use super::metrics::Metrics;
+use super::request::Sequence;
+use crate::kvstore::PrefixStore;
+use crate::model::kv::KvState;
+use crate::model::ModelConfig;
+
+/// Pre-chunk hook: re-match the prompt against the radix index and, if a
+/// cached chain now covers **everything this sequence has prefilled so
+/// far** and strictly more than its current chain, adopt it: drop the
+/// private tail (every dropped row is covered by the chain — identical
+/// tokens at identical positions, so nothing is lost), release its
+/// blocks, take references on the new chain, seed the fresh tail's
+/// calibration from the chain's snapshot, and jump `prefilled` forward.
+/// Returns true if an adoption happened.
+pub(crate) fn adopt_cached_prefix(
+    store: &mut PrefixStore,
+    seq: &mut Sequence,
+    metrics: &mut Metrics,
+    model_cfg: &ModelConfig,
+    hsr_backend: Option<crate::hsr::HsrBackend>,
+) -> bool {
+    if !store.enabled() || seq.prefilled >= seq.prompt.len() {
+        return false;
+    }
+    let (chain, matched) = store.lookup(&seq.prompt);
+    // Adopt only when the chain covers the whole computed tail (partial
+    // tail drops would need row splicing) and strictly extends coverage.
+    // Re-matches that merely confirm existing coverage are NOT counted
+    // as lookups — `prefix_lookups` tallies admission probes plus
+    // successful adoptions, so a perfectly-covering cache reads as a
+    // high hit rate instead of one hit drowned in per-chunk "misses".
+    if matched < seq.prefilled || matched <= seq.prefix_len || chain == seq.prefix {
+        return false;
+    }
+    metrics.prefix_lookups += 1;
+    store.radix.ref_chain(&chain);
+    store.radix.deref_chain(&seq.prefix);
+    store.pool.release(&mut seq.blocks);
+    seq.kv = KvState::new(
+        model_cfg.n_layers,
+        model_cfg.n_heads,
+        model_cfg.d_head,
+        hsr_backend,
+    );
+    metrics.prefix_hits += 1;
+    metrics.prefill_tokens_skipped += (matched - seq.prefilled) as u64;
+    seq.prefix = chain;
+    seq.prefix_len = matched;
+    seq.prefilled = matched;
+    store.seed_calib(&seq.prefix, &mut seq.kv);
+    true
+}
+
+/// Post-chunk hook: publish the freshly prefilled prompt range into the
+/// radix cache so sibling sequences (and future requests) can adopt it.
+/// Publishes `prompt[covered..upto)` where `covered` is whatever the
+/// radix already holds along this prompt and `upto` stops one short of
+/// the prompt end (the last token is always recomputed). Best-effort:
+/// skipped when the pool cannot spare the pages plus the scheduler's
+/// headroom, or when another sequence's chain diverged from ours.
+pub(crate) fn publish_prefix(
+    store: &mut PrefixStore,
+    seq: &Sequence,
+    metrics: &mut Metrics,
+    headroom_blocks: usize,
+) -> bool {
+    if !store.enabled() || seq.prompt.len() < 2 {
+        return false;
+    }
+    let upto = seq.prefilled.min(seq.prompt.len() - 1);
+    if upto <= seq.prefix_len {
+        return false; // nothing computed beyond the adopted chain
+    }
+    let (chain, covered) =
+        store.radix.match_chain(&store.pool, &seq.prompt, upto);
+    if covered >= upto {
+        return false; // already cached this far
+    }
+    // Our tail rows start at prefix_len; we can only publish ranges we
+    // actually computed, under a chain that extends our own.
+    if covered < seq.prefix_len || chain.len() < seq.prefix.len() {
+        return false;
+    }
+    if chain[..seq.prefix.len()] != seq.prefix[..] {
+        return false; // divergent sibling chain — do not cross-publish
+    }
+    // Keep the parent chain alive while eviction makes room.
+    store.radix.ref_chain(&chain);
+    let need = store.pool.blocks_for(upto - covered) + headroom_blocks;
+    if store.pool.free_blocks() < need {
+        let evicted = store.radix.evict_lru(&mut store.pool, need);
+        metrics.prefix_segments_evicted += evicted as u64;
+    }
+    let node = store.publish_segment(
+        chain.last().copied(),
+        &seq.prompt[covered..upto],
+        covered,
+        &seq.kv,
+        covered - seq.prefix_len,
+        headroom_blocks,
+    );
+    store.radix.deref_chain(&chain);
+    match node {
+        Some(_) => {
+            metrics.prefix_tokens_inserted += (upto - covered) as u64;
+            true
+        }
+        None => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -57,21 +57,43 @@ pub(crate) struct Sequence {
     pub prompt: Vec<u32>,
     pub params: GenerationParams,
     pub generated: Vec<u32>,
+    /// Private KV tail: everything past the adopted shared prefix (the
+    /// whole cache when `prefix` is empty).
     pub kv: crate::model::kv::KvState,
     pub submitted: Instant,
     pub first_token_at: Option<Instant>,
-    /// Blocks held in the cache pool.
+    /// Blocks held in the cache pool **for the private tail** — shared
+    /// prefix segments hold their own blocks, refcounted in the store.
     pub blocks: Vec<u32>,
-    /// Number of prompt tokens already prefilled (chunked prefill cursor).
+    /// Number of prompt tokens already prefilled (chunked prefill
+    /// cursor); tokens below `prefix_len` were adopted, not computed.
     pub prefilled: usize,
+    /// Generated tokens already folded back into `prompt` by a previous
+    /// preemption/shed (recompute re-feeds them); folding only the
+    /// suffix past this cursor keeps a twice-preempted sequence from
+    /// duplicating its early generations in the prompt.
+    pub folded: usize,
+    /// Adopted shared-prefix chain (radix node ids; one reference held
+    /// on each node until finish/preemption).
+    pub prefix: Vec<crate::kvstore::NodeId>,
+    /// Tokens covered by `prefix` (the tail starts at this position).
+    pub prefix_len: usize,
     /// Submission order; lower = older. Preemption only ever evicts
     /// strictly-younger sequences, which guarantees scheduler progress.
     pub priority: u64,
 }
 
 impl Sequence {
-    /// Total tokens this sequence holds in cache.
+    /// Total tokens this sequence attends over: shared prefix + tail.
+    /// (Diagnostics; block accounting uses [`Sequence::tail_tokens`].)
+    #[allow(dead_code)]
     pub fn cached_tokens(&self) -> usize {
+        self.prefix_len + self.kv.len()
+    }
+
+    /// Tokens in the private tail — what this sequence's own blocks
+    /// must cover, and what preempting it would free.
+    pub fn tail_tokens(&self) -> usize {
         self.kv.len()
     }
 

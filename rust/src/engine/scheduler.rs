@@ -22,6 +22,13 @@ pub struct SchedulerConfig {
     /// Max total tokens (prefill + decode) processed per step.
     pub step_token_budget: usize,
     pub preempt: PreemptPolicy,
+    /// Free blocks a shared-prefix publish must leave behind: admission
+    /// and decode draw from the same pool as the prefix cache, so
+    /// publishing is only allowed when it keeps at least this much
+    /// immediate headroom (it never blocks serving — a publish that
+    /// would eat the last pages is simply skipped; the prefix can be
+    /// republished by a later sequence once pressure eases).
+    pub prefix_headroom_blocks: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -31,6 +38,7 @@ impl Default for SchedulerConfig {
             prefill_chunk: 64,
             step_token_budget: 256,
             preempt: PreemptPolicy::Youngest,
+            prefix_headroom_blocks: 1,
         }
     }
 }

@@ -1,20 +1,31 @@
 //! The continuous-batching serving engine: Algorithm 1 integrated with a
-//! paged KV cache, chunked prefill, preemption and metrics — the L3
-//! system the paper's decoding/prefilling scenarios live inside.
+//! paged KV cache, chunked prefill, preemption, a shared-prefix radix
+//! cache and metrics — the L3 system the paper's decoding/prefilling
+//! scenarios live inside.
 //!
 //! One `Engine` drives one model replica single-threaded (the router in
 //! `router.rs` shards requests across engines/threads). Each `step()`:
 //!
 //! 1. **Admit** waiting requests while the batch and the block pool have
-//!    room (prompt blocks are reserved up front — no mid-prefill OOM).
+//!    room. Admission first matches the prompt against the radix prefix
+//!    cache ([`crate::kvstore`]): matched tokens are *adopted* — never
+//!    prefilled — and the sequence only reserves pool blocks for its
+//!    private tail, so N clones of a cached prompt cost O(tail) each
+//!    instead of O(prompt).
 //! 2. **Prefill** admitted sequences in chunks (budgeted per step so long
-//!    prompts cannot starve decodes — "chunked prefill").
+//!    prompts cannot starve decodes — "chunked prefill"). Every chunk is
+//!    bracketed by the adopt/publish hooks in `prefill.rs`: freshly
+//!    computed prompt ranges are published into the radix cache and
+//!    sibling sequences leapfrog onto them at their next chunk boundary,
+//!    so each shared token is prefilled exactly once fleet-wide.
 //! 3. **Decode** one token for every running sequence whose prompt is
-//!    done, via the HSR-sparse attention policy.
+//!    done, via the HSR-sparse attention policy. Sequences sharing a
+//!    prefix chain decode as ONE query block — a single multi-query HSR
+//!    traversal per chain segment per head.
 //! 4. **Preempt** (release blocks, drop KV, requeue) when the pool is
-//!    exhausted, per the configured victim policy.
+//!    exhausted, per the configured victim policy — after first
+//!    reclaiming unreferenced cached prefixes (LRU).
 
-use super::kv_cache::BlockAllocator;
 use super::metrics::Metrics;
 use super::request::{
     FinishReason, GenerationParams, Request, RequestId, Response, Sequence,
@@ -22,8 +33,9 @@ use super::request::{
 use super::scheduler::SchedulerConfig;
 use crate::attention::session::AttentionConfig;
 use crate::hsr::HsrBackend;
-use crate::model::transformer::RSpec;
+use crate::kvstore::{PrefixCacheMode, PrefixStore, SharedKvMut};
 use crate::model::kv::KvState;
+use crate::model::transformer::RSpec;
 use crate::model::transformer::{
     sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
 };
@@ -39,10 +51,19 @@ pub struct EngineConfig {
     /// HSR backend for per-head indices; None → brute scans inside the
     /// sparse policy (ablation) — ignored under `AttentionPolicy::Dense`.
     pub hsr_backend: Option<HsrBackend>,
-    /// Total KV-cache capacity in tokens (across all sequences).
+    /// Total KV-cache capacity in tokens (across all sequences *and* the
+    /// shared-prefix cache — one physical pool).
     pub cache_capacity_tokens: usize,
     /// Block granularity of the pool.
     pub block_tokens: usize,
+    /// Shared-prefix KV cache policy (`on`, `off`, or a minimum matched
+    /// token count). Adoption always selects the exact same top-r index
+    /// sets as unshared decode (set-exactness is layout-independent);
+    /// outputs are additionally bit-identical wherever the SIMD dot
+    /// reduction is layout-independent (`d_head <= 8` or the scalar
+    /// dispatch tier — see README "Prefix cache"). For larger heads the
+    /// difference is confined to last-ulp dot-reduction order.
+    pub prefix_cache: PrefixCacheMode,
     pub scheduler: SchedulerConfig,
     /// Sampling seed (deterministic engines → reproducible serving runs).
     pub seed: u64,
@@ -62,6 +83,7 @@ impl Default for EngineConfig {
             hsr_backend: Some(HsrBackend::BallTree),
             cache_capacity_tokens: 1 << 20,
             block_tokens: 64,
+            prefix_cache: PrefixCacheMode::default(),
             scheduler: SchedulerConfig::default(),
             seed: 0,
             id_offset: 0,
@@ -97,7 +119,9 @@ impl EngineConfig {
 pub struct Engine {
     pub model: Arc<Model>,
     pub cfg: EngineConfig,
-    allocator: BlockAllocator,
+    /// Shared-prefix KV store: block pool (capacity + payload owner in
+    /// one place) plus the refcounted radix prefix index.
+    store: PrefixStore,
     waiting: VecDeque<Sequence>,
     running: Vec<Sequence>,
     finished: Vec<Response>,
@@ -113,8 +137,18 @@ impl Engine {
         let ws = Workspace::new(&model);
         let mut bws = BatchWorkspace::new(&model);
         bws.threads = cfg.decode_threads;
+        // Segments only carry HSR indices a sparse policy will query.
+        let seg_backend = match cfg.policy {
+            AttentionPolicy::Dense => None,
+            AttentionPolicy::TopR(_) => cfg.hsr_backend,
+        };
         Engine {
-            allocator: BlockAllocator::new(cfg.cache_capacity_tokens, cfg.block_tokens),
+            store: PrefixStore::new(
+                cfg.cache_capacity_tokens,
+                cfg.block_tokens,
+                seg_backend,
+                cfg.prefix_cache,
+            ),
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
@@ -141,6 +175,9 @@ impl Engine {
             first_token_at: None,
             blocks: Vec::new(),
             prefilled: 0,
+            folded: 0,
+            prefix: Vec::new(),
+            prefix_len: 0,
         }
     }
 
@@ -166,6 +203,11 @@ impl Engine {
         self.running.len()
     }
 
+    /// The shared-prefix store (diagnostics / tests).
+    pub fn prefix_store(&self) -> &PrefixStore {
+        &self.store
+    }
+
     /// Drain completed responses.
     pub fn take_finished(&mut self) -> Vec<Response> {
         std::mem::take(&mut self.finished)
@@ -177,13 +219,15 @@ impl Engine {
     /// sequence may only preempt strictly-younger ones, so the oldest
     /// running sequence always makes progress — no preemption livelock.
     ///
-    /// Prefill chunks run inline during the priority walk; decode-ready
-    /// sequences are *collected* and then decoded as **one batched model
-    /// step** — every sequence's row flows through the per-(layer, head)
-    /// attention sweep together instead of sequence-by-sequence.
+    /// Prefill chunks run inline during the priority walk (bracketed by
+    /// the radix adopt/publish hooks); decode-ready sequences are
+    /// *collected* and then decoded as **one batched model step** —
+    /// every sequence's row flows through the per-(layer, head)
+    /// attention sweep together, grouped by shared prefix chain.
     pub fn step(&mut self) -> usize {
         let t0 = Instant::now();
         self.admit();
+        let model = Arc::clone(&self.model);
         let mut tokens = 0usize;
         let budget = self.cfg.scheduler.step_token_budget.max(1);
         let mut stats = StepStats::default();
@@ -201,7 +245,23 @@ impl Engine {
             let Some(i) = self.running.iter().position(|s| s.id == sid) else {
                 continue; // finished or preempted earlier in this step
             };
-            // Reserve capacity for this sequence's next chunk; preempt
+            // Adopt a longer cached prefix before sizing the reservation
+            // — adoption shrinks the tail this sequence needs blocks for
+            // (and releases the blocks its dropped tail held).
+            {
+                let seq = &mut self.running[i];
+                if seq.prefilled < seq.prompt.len() {
+                    super::prefill::adopt_cached_prefix(
+                        &mut self.store,
+                        seq,
+                        &mut self.metrics,
+                        &model.cfg,
+                        self.cfg.hsr_backend,
+                    );
+                }
+            }
+            // Reserve capacity for this sequence's next chunk (private
+            // tail only — the shared chain holds its own pages); preempt
             // younger sequences if the pool is exhausted.
             let needed_now = {
                 let seq = &self.running[i];
@@ -213,9 +273,9 @@ impl Engine {
                         .min(seq.prompt.len() - seq.prefilled)
                         .min(budget - tokens)
                         .max(1);
-                    seq.cached_tokens() + chunk
+                    seq.tail_tokens() + chunk
                 } else {
-                    seq.cached_tokens() + 1
+                    seq.tail_tokens() + 1
                 }
             };
             if !self.reserve_for(i, needed_now) {
@@ -236,25 +296,43 @@ impl Engine {
                     .min(seq.prompt.len() - seq.prefilled)
                     .min(budget - tokens)
                     .max(1);
-                for t in 0..chunk {
-                    let tok = seq.prompt[seq.prefilled + t];
-                    let logits = self.model.decode_step(
-                        tok,
-                        &mut seq.kv,
-                        self.cfg.policy,
-                        &mut self.ws,
-                        &mut stats,
-                    );
-                    // Logits of the last prompt token seed the first
-                    // generated token.
-                    if seq.prefilled + t + 1 == seq.prompt.len() {
-                        let next = sample(&logits, seq.params.temperature, &mut self.rng);
-                        seq.generated.push(next);
-                        seq.first_token_at = Some(Instant::now());
+                {
+                    // The chain cannot change inside the chunk, so the
+                    // view is built once per chunk, not per token.
+                    let mut skv = SharedKvMut {
+                        prefix: self.store.chain_view(&seq.prefix),
+                        tail: &mut seq.kv,
+                    };
+                    for t in 0..chunk {
+                        let tok = seq.prompt[seq.prefilled + t];
+                        let logits = model.decode_step_shared(
+                            tok,
+                            &mut skv,
+                            self.cfg.policy,
+                            &mut self.ws,
+                            &mut stats,
+                        );
+                        // Logits of the last prompt token seed the first
+                        // generated token.
+                        if seq.prefilled + t + 1 == seq.prompt.len() {
+                            let next =
+                                sample(&logits, seq.params.temperature, &mut self.rng);
+                            seq.generated.push(next);
+                            seq.first_token_at = Some(Instant::now());
+                        }
                     }
                 }
                 seq.prefilled += chunk;
                 tokens += chunk;
+                // Publish the freshly computed range so siblings (and
+                // future identical prompts) can adopt it.
+                let headroom = self.cfg.scheduler.prefix_headroom_blocks;
+                super::prefill::publish_prefix(
+                    &mut self.store,
+                    seq,
+                    &mut self.metrics,
+                    headroom,
+                );
             } else {
                 // --- decode-ready: defer into the batched model step ---
                 let last = *seq
@@ -283,9 +361,11 @@ impl Engine {
     }
 
     /// Decode one token for each collected sequence as a single batched
-    /// model step (the per-(layer, head) sweep runs over all their rows
-    /// at once), then sample in priority order so the RNG stream stays
-    /// deterministic.
+    /// model step, with the batch partitioned into shared-prefix groups:
+    /// members of one group (identical segment chains) flow through the
+    /// per-(layer, head) sweep as ONE query block per chain segment.
+    /// Sampling stays in priority order so the RNG stream is
+    /// deterministic regardless of grouping.
     fn decode_batch(&mut self, ids: &[RequestId], stats: &mut StepStats) {
         if ids.is_empty() {
             return;
@@ -313,20 +393,38 @@ impl Engine {
                     .expect("prefill always seeds one generated token")
             })
             .collect();
+        // Shared-prefix grouping over the batch (chains are radix node
+        // id vectors; equal chain ⇒ identical shared segments).
+        let chains: Vec<&[u32]> = members
+            .iter()
+            .map(|&(i, _)| self.running[i].prefix.as_slice())
+            .collect();
+        let groups = super::decode::group_by_chain(&chains);
+        for g in &groups {
+            if g.len() > 1 {
+                self.metrics.grouped_decode_rows += g.len() as u64;
+            }
+        }
+        drop(chains);
         let model = Arc::clone(&self.model);
         let policy = self.cfg.policy;
+        let store = &self.store;
         let bws = &mut self.bws;
-        let mut kvs: Vec<&mut KvState> = Vec::with_capacity(members.len());
+        let mut views: Vec<SharedKvMut> = Vec::with_capacity(members.len());
         let mut next_member = 0usize;
         for (i, seq) in self.running.iter_mut().enumerate() {
             if next_member < members.len() && members[next_member].0 == i {
-                kvs.push(&mut seq.kv);
+                views.push(SharedKvMut {
+                    prefix: store.chain_view(&seq.prefix),
+                    tail: &mut seq.kv,
+                });
                 next_member += 1;
             }
         }
-        debug_assert_eq!(kvs.len(), members.len());
-        let logits = model.decode_step_batch(&tokens, &mut kvs, policy, bws, stats);
-        drop(kvs);
+        debug_assert_eq!(views.len(), members.len());
+        let logits =
+            model.decode_step_batch_shared(&tokens, &mut views, &groups, policy, bws, stats);
+        drop(views);
         // Sample in submission-priority order (the `ids` order).
         for &sid in ids {
             let bpos = members
@@ -363,11 +461,33 @@ impl Engine {
             if processed > 0 {
                 continue;
             }
-            // No progress: abort whatever can provably never run.
+            // No progress anywhere. Transient contention never reaches
+            // this point (any served token counts as progress), so what
+            // follows are genuine-stall fallbacks, tried mildest-first.
+            //
+            // (0) The pool may be wedged by adopted chain segments whose
+            // only references belong to the stalled sequences themselves
+            // — self-reference makes them unevictable. Shed the oldest
+            // holder's chain (deref + targeted evict + private
+            // recompute): its pages return to the pool and the classic
+            // guarantee that the oldest sequence can claim the whole
+            // pool is restored. Repeated stalls shed the remaining
+            // holders one per iteration, so this terminates.
+            let holder = self
+                .running
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.prefix.is_empty())
+                .min_by_key(|(_, s)| s.priority)
+                .map(|(i, _)| i);
+            if let Some(idx) = holder {
+                self.shed_prefix(idx);
+                continue;
+            }
             // (a) A running sequence larger than the whole pool.
             let seq_too_big = self.running.iter().position(|s| {
-                self.allocator.blocks_for(s.prompt.len() + s.params.max_new_tokens)
-                    > self.allocator.total_blocks()
+                self.store.pool.blocks_for(s.prompt.len() + s.params.max_new_tokens)
+                    > self.store.pool.total_blocks()
             });
             if let Some(idx) = seq_too_big {
                 self.finish(idx, FinishReason::Aborted);
@@ -377,11 +497,11 @@ impl Engine {
             // never be admitted (prompt exceeds the pool).
             if self.running.is_empty() {
                 if let Some(seq) = self.waiting.front() {
-                    if self.allocator.blocks_for(seq.prompt.len() + 1)
-                        > self.allocator.total_blocks()
+                    if self.store.pool.blocks_for(seq.prompt.len() + 1)
+                        > self.store.pool.total_blocks()
                     {
                         let mut seq = self.waiting.pop_front().unwrap();
-                        self.allocator.release(&mut seq.blocks);
+                        self.store.pool.release(&mut seq.blocks);
                         self.emit_response(seq, FinishReason::Aborted);
                         continue;
                     }
@@ -391,26 +511,56 @@ impl Engine {
     }
 
     /// Admit waiting sequences while there is batch room and pool room
-    /// for their prompts.
+    /// for their prompts. Admission matches the prompt against the radix
+    /// cache first: matched tokens are adopted outright (never
+    /// prefilled) and only the unmatched remainder reserves pool blocks.
     fn admit(&mut self) {
         while self.running.len() < self.cfg.scheduler.max_batch {
-            let Some(seq) = self.waiting.front() else { break };
-            // Reserve the full prompt + one decode block up front.
-            let need = self.allocator.blocks_for(seq.prompt.len() + 1);
-            if need > self.allocator.free_blocks() {
+            let Some(front) = self.waiting.front() else { break };
+            let (chain, matched) = self.store.lookup(&front.prompt);
+            if self.store.enabled() {
+                self.metrics.prefix_lookups += 1;
+            }
+            // Reserve the unmatched prompt remainder + one decode token.
+            let need = self
+                .store
+                .pool
+                .blocks_for(front.prompt.len() - matched + 1);
+            if need > self.store.pool.free_blocks() {
+                // Keep the candidate chain alive while LRU eviction of
+                // other unreferenced prefixes makes room.
+                self.store.radix.ref_chain(&chain);
+                let evicted = self.store.make_room(need);
+                self.metrics.prefix_segments_evicted += evicted as u64;
+                self.store.radix.deref_chain(&chain);
+            }
+            if need > self.store.pool.free_blocks() {
                 break;
             }
             let mut seq = self.waiting.pop_front().unwrap();
-            let mut blocks = self.allocator.alloc(need).expect("checked free_blocks");
+            // Every admission demands a full-prompt prefill (preempted
+            // re-admissions included) — the skip-rate denominator.
+            self.metrics.prefill_tokens_demanded += seq.prompt.len() as u64;
+            if matched > 0 {
+                self.store.radix.ref_chain(&chain);
+                seq.prefix = chain;
+                seq.prefix_len = matched;
+                seq.prefilled = matched;
+                self.store.seed_calib(&seq.prefix, &mut seq.kv);
+                self.metrics.prefix_hits += 1;
+                self.metrics.prefill_tokens_skipped += matched as u64;
+            }
+            let mut blocks = self.store.pool.alloc(need).expect("checked free_blocks");
             seq.blocks.append(&mut blocks);
             self.running.push(seq);
         }
     }
 
-    /// Ensure sequence `idx` holds blocks for `needed_tokens`, preempting
-    /// strictly-younger sequences if necessary. Returns false if room
+    /// Ensure sequence `idx` holds blocks for `needed_tail_tokens` of
+    /// private tail, first LRU-evicting unreferenced cached prefixes,
+    /// then preempting strictly-younger sequences. Returns false if room
     /// could not be made. The requesting sequence is never evicted here.
-    fn reserve_for(&mut self, idx: usize, needed_tokens: usize) -> bool {
+    fn reserve_for(&mut self, idx: usize, needed_tail_tokens: usize) -> bool {
         let sid = self.running[idx].id;
         loop {
             let i = self
@@ -420,16 +570,30 @@ impl Engine {
                 .expect("requester is never preempted by reserve_for");
             let my_priority = self.running[i].priority;
             let seq = &mut self.running[i];
-            if self.allocator.ensure(&mut seq.blocks, needed_tokens) {
+            if self.store.pool.ensure(&mut seq.blocks, needed_tail_tokens) {
                 return true;
             }
-            // Evict a strictly-younger sequence, if any.
+            // Reclaim unreferenced cached prefixes before touching any
+            // live sequence.
+            let deficit = self
+                .store
+                .pool
+                .blocks_for(needed_tail_tokens)
+                .saturating_sub(seq.blocks.len());
+            let evicted = self.store.make_room(deficit);
+            if evicted > 0 {
+                self.metrics.prefix_segments_evicted += evicted as u64;
+                continue;
+            }
+            // Evict a strictly-younger sequence, if any. Victim size is
+            // its private tail — that is what preemption frees (its
+            // chain refs drop too, making those segments evictable).
             let candidates: Vec<(usize, usize, u64)> = self
                 .running
                 .iter()
                 .enumerate()
                 .filter(|&(_, s)| s.priority > my_priority)
-                .map(|(j, s)| (j, s.cached_tokens(), s.priority))
+                .map(|(j, s)| (j, s.tail_tokens(), s.priority))
                 .collect();
             match self.cfg.scheduler.pick_victim(&candidates) {
                 Some(victim) => self.preempt(victim),
@@ -438,19 +602,55 @@ impl Engine {
         }
     }
 
-    /// Preempt: release blocks, drop KV, requeue for full recompute.
+    /// Shed an adopted chain without leaving the running set: drop the
+    /// chain references, release the tail, and fold generated tokens
+    /// back into the prompt for private recompute (exactly preemption's
+    /// recompute semantics, minus the requeue — requeueing would just
+    /// re-adopt the same cached chain and stall again). Once shed, the
+    /// old chain's segments are unreferenced and this sequence's next
+    /// reservation can evict them.
+    fn shed_prefix(&mut self, idx: usize) {
+        let seq = &mut self.running[idx];
+        let chain = std::mem::take(&mut seq.prefix);
+        self.store.radix.deref_chain(&chain);
+        // Evict what we just released (leaf-first, stopping at nodes
+        // other sequences still share) so the next lookup cannot simply
+        // re-adopt the chain and wedge again.
+        let evicted = self.store.radix.evict_chain(&mut self.store.pool, &chain);
+        self.metrics.prefix_segments_evicted += evicted as u64;
+        seq.prefix_len = 0;
+        self.store.pool.release(&mut seq.blocks);
+        let c = &self.model.cfg;
+        seq.kv = KvState::new(c.n_layers, c.n_heads, c.d_head, self.cfg.hsr_backend);
+        seq.prefilled = 0;
+        let mut prompt = std::mem::take(&mut seq.prompt);
+        prompt.extend(seq.generated[seq.folded..].iter().copied());
+        seq.folded = seq.generated.len();
+        seq.prompt = prompt;
+        self.metrics.prefix_sheds += 1;
+    }
+
+    /// Preempt: release tail blocks, drop the chain references and the
+    /// private KV, requeue for full recompute. A re-admitted sequence
+    /// typically refaults straight onto its own published prefix — the
+    /// radix cache turns preemption recompute into a lookup.
     fn preempt(&mut self, idx: usize) {
         let mut seq = self.running.swap_remove(idx);
-        self.allocator.release(&mut seq.blocks);
+        self.store.pool.release(&mut seq.blocks);
+        self.store.radix.deref_chain(&seq.prefix);
+        seq.prefix.clear();
+        seq.prefix_len = 0;
         let c = &self.model.cfg;
         seq.kv = KvState::new(c.n_layers, c.n_heads, c.d_head, self.cfg.hsr_backend);
         seq.prefilled = 0;
         // Generated tokens so far are preserved: they are re-fed as part
-        // of the (extended) prompt on re-admission.
+        // of the (extended) prompt on re-admission. Only the suffix not
+        // folded by an earlier preemption/shed is appended — folding all
+        // of `generated` twice would duplicate early generations in the
+        // prompt.
         let mut prompt = std::mem::take(&mut seq.prompt);
-        prompt.extend(seq.generated.iter().copied());
-        // The last generated token must be re-generated after recompute;
-        // keep it in the prompt and let decode continue from there.
+        prompt.extend(seq.generated[seq.folded..].iter().copied());
+        seq.folded = seq.generated.len();
         seq.prompt = prompt;
         self.metrics.requests_preempted += 1;
         self.waiting.push_front(seq);
@@ -459,7 +659,10 @@ impl Engine {
     /// Finish running[idx] with the given reason.
     fn finish(&mut self, idx: usize, reason: FinishReason) {
         let mut seq = self.running.swap_remove(idx);
-        self.allocator.release(&mut seq.blocks);
+        self.store.pool.release(&mut seq.blocks);
+        self.store.radix.deref_chain(&seq.prefix);
+        seq.prefix.clear();
+        seq.prefix_len = 0;
         self.emit_response(seq, reason);
     }
 
@@ -484,6 +687,6 @@ impl Engine {
 
     /// Pool utilization (diagnostics).
     pub fn cache_utilization(&self) -> f64 {
-        self.allocator.utilization()
+        self.store.pool.utilization()
     }
 }

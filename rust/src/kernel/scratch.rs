@@ -46,6 +46,10 @@ pub struct Scratch {
     pub many_idx: Vec<Vec<u32>>,
     /// Per-row carried raw scores, parallel to `many_idx`.
     pub many_scores: Vec<Vec<f32>>,
+    /// Contiguous `[rows, d]` copy of a shared-prefix group's query rows
+    /// (the members' q vectors live in per-sequence buffers; the block
+    /// traversal wants them packed).
+    pub qblock: Vec<f32>,
 }
 
 impl Scratch {
@@ -85,6 +89,7 @@ impl Scratch {
         for v in self.many_scores.iter_mut() {
             v.clear();
         }
+        self.qblock.clear();
     }
 }
 

@@ -1,0 +1,258 @@
+//! Shared-prefix KV store: a refcounted radix prefix cache over
+//! block-paged KV segments with copy-on-write forks.
+//!
+//! The paper's HSR report-then-evaluate pipeline amortizes best when one
+//! index answers many queries ([`crate::hsr::HalfSpaceReport::query_many_scored_into`]).
+//! This subsystem makes that happen *across sequences*: serving
+//! workloads with a common system prompt share one physical KV prefix —
+//! one payload, one set of per-(layer, head) HSR indices — instead of
+//! re-prefilling and re-indexing identical tokens per sequence.
+//!
+//! * [`pool`] — [`pool::PagePool`]: owns the float payload in
+//!   block-sized pages, per-(layer, head) contiguous segment views, and
+//!   the block allocator sequences draw their private tails from. One
+//!   owner for capacity *and* payload.
+//! * [`radix`] — [`radix::RadixIndex`]: token-prefix → segment chain,
+//!   refcounts, LRU eviction under pool pressure.
+//! * [`shared`] — [`shared::SharedKvMut`]: the chain + private-tail view
+//!   the transformer's attend path consumes; ONE
+//!   [`crate::hsr::dynamic::DynamicHsr`] per shared segment serves every
+//!   sequence holding it, and decode rows of sequences sharing a chain
+//!   are answered as one multi-query traversal per segment.
+//!
+//! # Invariants (the short version — see each module's docs)
+//!
+//! 1. Segments are immutable after publish; sequence writes go to the
+//!    private tail (COW fork semantics).
+//! 2. A sequence holds one reference on every chain node it adopted;
+//!    only unreferenced leaves are LRU-evicted, so adopted chains are
+//!    never freed underneath a running sequence.
+//! 3. The chain's HSR indices are owned by the segments (i.e. by the
+//!    pool), never by sequences; the per-sequence calibration threshold
+//!    stays private tail state (segments carry an advisory snapshot).
+//!    Exactness never depends on calibration, so shared and unshared
+//!    decode select identical top-r *sets* for every head size (ties
+//!    break by global index — order-independent). Output floats are
+//!    additionally bit-identical wherever the SIMD dot reduction is
+//!    layout-independent — `d_head <= 8` or scalar dispatch, the regime
+//!    `tests/prefix_cache.rs` asserts bitwise; for larger heads any
+//!    difference is confined to last-ulp reduction order inside the
+//!    dot kernels.
+
+pub mod pool;
+pub mod radix;
+pub mod shared;
+
+pub use pool::{PagePool, Segment, SegmentId};
+pub use radix::{NodeId, RadixIndex};
+pub use shared::{PrefixView, SharedKvMut};
+
+use crate::hsr::HsrBackend;
+use crate::model::kv::KvState;
+
+/// Prefix-cache policy knob (the CLI's `--prefix-cache <on|off|tokens>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixCacheMode {
+    /// No prefix sharing: every sequence owns a private KV cache
+    /// (the pre-kvstore behavior, and the bench baseline).
+    Off,
+    /// Prefix sharing on; a cached chain is only adopted when it covers
+    /// at least this many tokens (`on` ≡ `Min(1)`).
+    Min(usize),
+}
+
+impl Default for PrefixCacheMode {
+    fn default() -> Self {
+        PrefixCacheMode::Min(1)
+    }
+}
+
+impl PrefixCacheMode {
+    /// Parse a CLI value: `on`/`off` or a minimum-token count. The error
+    /// lists the valid forms so CLI callers can surface it verbatim
+    /// (`util::cli::Args::parse_or_exit` does exactly that).
+    pub fn parse(s: &str) -> Result<PrefixCacheMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" | "true" | "yes" => Ok(PrefixCacheMode::Min(1)),
+            "off" | "false" | "no" | "none" => Ok(PrefixCacheMode::Off),
+            other => match other.replace('_', "").parse::<usize>() {
+                Ok(n) => Ok(PrefixCacheMode::Min(n.max(1))),
+                Err(_) => Err(format!(
+                    "unknown prefix-cache mode '{other}'; valid values: \
+                     on|off|<min-tokens> (e.g. --prefix-cache 64)"
+                )),
+            },
+        }
+    }
+
+    /// Minimum matched tokens required to adopt a chain; `usize::MAX`
+    /// when the cache is off (nothing ever adopts).
+    pub fn min_tokens(&self) -> usize {
+        match *self {
+            PrefixCacheMode::Off => usize::MAX,
+            PrefixCacheMode::Min(n) => n,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self, PrefixCacheMode::Off)
+    }
+}
+
+/// The engine-facing façade bundling the pool, the radix index and the
+/// policy knob. All serving-side prefix-cache operations go through
+/// this type so the pool/radix pair can never drift out of sync.
+pub struct PrefixStore {
+    pub pool: PagePool,
+    pub radix: RadixIndex,
+    pub mode: PrefixCacheMode,
+}
+
+impl PrefixStore {
+    pub fn new(
+        capacity_tokens: usize,
+        block_tokens: usize,
+        hsr_backend: Option<HsrBackend>,
+        mode: PrefixCacheMode,
+    ) -> PrefixStore {
+        PrefixStore {
+            pool: PagePool::new(capacity_tokens, block_tokens, hsr_backend),
+            radix: RadixIndex::new(),
+            mode,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.mode.enabled()
+    }
+
+    /// Longest adoptable chain for `prompt`: matching is capped at
+    /// `prompt.len() - 1` (the last prompt token is always recomputed so
+    /// its logits can seed generation) and gated on the mode's minimum.
+    /// Returns `(chain, matched_tokens)`; empty when nothing qualifies.
+    pub fn lookup(&mut self, prompt: &[u32]) -> (Vec<NodeId>, usize) {
+        if !self.enabled() || prompt.len() < 2 {
+            return (Vec::new(), 0);
+        }
+        let (chain, matched) =
+            self.radix.match_chain(&self.pool, prompt, prompt.len() - 1);
+        if matched < self.mode.min_tokens() {
+            return (Vec::new(), 0);
+        }
+        (chain, matched)
+    }
+
+    /// Borrowed chain view for the attend path. The ids must be a chain
+    /// this store handed out (and still referenced — eviction never
+    /// touches referenced nodes, so the view cannot dangle).
+    pub fn chain_view(&self, chain: &[NodeId]) -> PrefixView<'_> {
+        let mut segments = Vec::with_capacity(chain.len());
+        let mut len = 0usize;
+        for &nid in chain {
+            let seg = self.pool.segment(self.radix.segment_of(nid));
+            debug_assert_eq!(seg.start, len, "chain must be contiguous from 0");
+            segments.push((&seg.kv, seg.start));
+            len = seg.end();
+        }
+        PrefixView { segments, len }
+    }
+
+    /// Seed a freshly created tail's per-(layer, head) calibration
+    /// thresholds from the last chain segment's snapshot. Purely
+    /// advisory (exactness never depends on calibration): it just spares
+    /// the first decode steps a round of full-scan fallbacks.
+    pub fn seed_calib(&self, chain: &[NodeId], tail: &mut KvState) {
+        let Some(&last) = chain.last() else { return };
+        let seg = self.pool.segment(self.radix.segment_of(last));
+        for (dst, src) in tail.heads.iter_mut().zip(seg.kv.heads.iter()) {
+            dst.calib_threshold = src.calib_threshold;
+        }
+    }
+
+    /// Try to bring the pool to `want_free` free blocks by LRU-evicting
+    /// unreferenced cached prefixes. Returns the number evicted.
+    pub fn make_room(&mut self, want_free: usize) -> usize {
+        self.radix.evict_lru(&mut self.pool, want_free)
+    }
+
+    /// Publish `tokens[start..end)` (copied from `source` rows
+    /// `[src_offset, src_offset + end - start)`) as a new chain node
+    /// under `parent`. Best-effort and **non-evicting**: returns `None`
+    /// without side effects if the pool cannot hold the segment while
+    /// keeping `headroom_blocks` free — the caller decides whether to
+    /// [`PrefixStore::make_room`] first (and accounts the evictions),
+    /// so eviction policy and metrics live in exactly one place.
+    pub fn publish_segment(
+        &mut self,
+        parent: Option<NodeId>,
+        tokens: &[u32],
+        start: usize,
+        source: &KvState,
+        src_offset: usize,
+        headroom_blocks: usize,
+    ) -> Option<NodeId> {
+        let need = self.pool.blocks_for(tokens.len()) + headroom_blocks;
+        if self.pool.free_blocks() < need {
+            return None;
+        }
+        let seg = self.pool.create_segment(tokens, start, source, src_offset)?;
+        Some(self.radix.insert_child(parent, seg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(PrefixCacheMode::parse("on"), Ok(PrefixCacheMode::Min(1)));
+        assert_eq!(PrefixCacheMode::parse("OFF"), Ok(PrefixCacheMode::Off));
+        assert_eq!(PrefixCacheMode::parse("64"), Ok(PrefixCacheMode::Min(64)));
+        assert_eq!(PrefixCacheMode::parse("1_024"), Ok(PrefixCacheMode::Min(1024)));
+        assert_eq!(PrefixCacheMode::parse("0"), Ok(PrefixCacheMode::Min(1)));
+        let err = PrefixCacheMode::parse("maybe").unwrap_err();
+        assert!(err.contains("on|off|<min-tokens>"), "{err}");
+        assert!(err.contains("maybe"), "{err}");
+        assert!(!PrefixCacheMode::Off.enabled());
+        assert_eq!(PrefixCacheMode::Off.min_tokens(), usize::MAX);
+        assert_eq!(PrefixCacheMode::default(), PrefixCacheMode::Min(1));
+    }
+
+    #[test]
+    fn store_lookup_respects_min_tokens() {
+        use crate::hsr::HsrBackend;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        let mut kv = KvState::new(1, 1, 4, Some(HsrBackend::BallTree));
+        for _ in 0..32 {
+            let k = rng.gaussian_vec_f32(4, 1.0);
+            kv.head_mut(0, 0).append(&k.clone(), &k);
+        }
+        let prompt: Vec<u32> = (0..32).collect();
+        let mut store = PrefixStore::new(
+            1024,
+            16,
+            Some(HsrBackend::BallTree),
+            PrefixCacheMode::Min(20),
+        );
+        let node = store
+            .publish_segment(None, &prompt[..16], 0, &kv, 0, 0)
+            .expect("fits");
+        // 16 matched < 20 minimum → no adoption.
+        let (chain, matched) = store.lookup(&prompt);
+        assert!(chain.is_empty());
+        assert_eq!(matched, 0);
+        // Extend the chain past the minimum and look up again.
+        store
+            .publish_segment(Some(node), &prompt[16..24], 16, &kv, 16, 0)
+            .expect("fits");
+        let (chain, matched) = store.lookup(&prompt);
+        assert_eq!(chain.len(), 2);
+        assert_eq!(matched, 24);
+        let view = store.chain_view(&chain);
+        assert_eq!(view.len, 24);
+        assert_eq!(view.segments.len(), 2);
+        assert_eq!(view.segments[1].1, 16);
+    }
+}

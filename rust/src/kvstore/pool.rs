@@ -1,0 +1,258 @@
+//! [`PagePool`] — the single owner of shared KV payload *and* capacity.
+//!
+//! Before the shared-prefix store existed, KV capacity accounting lived
+//! in [`BlockAllocator`] while the float payload lived in each
+//! sequence's private [`KvState`] — the "capacity authority vs payload
+//! owner" split the old `kv_cache.rs` docs called out. The pool retires
+//! that split for everything shared: it embeds the block allocator (so
+//! sequence tails still allocate their pages here) and it owns every
+//! prefix [`Segment`] outright — pages and floats together.
+//!
+//! # Segment invariants
+//!
+//! * A segment is **immutable** after [`PagePool::create_segment`]: its
+//!   keys/values are frozen copies of a prefilled range, stored as one
+//!   contiguous `[len, d_head]` buffer per (layer, head) so HSR gathers
+//!   and value reads stay cache-friendly, and its per-(layer, head)
+//!   [`crate::hsr::dynamic::DynamicHsr`] is batch-built once and then
+//!   shared read-only by every sequence (and every worker thread — the
+//!   index is only ever queried through `&self`).
+//! * A segment holds `blocks_for(len)` pages from the same pool that
+//!   sequence tails draw from, so admission, preemption and prefix-cache
+//!   eviction all compete for one physical budget.
+//! * Reference counts and LRU stamps live on the radix nodes
+//!   ([`crate::kvstore::radix::RadixIndex`]), which own segment
+//!   *lifecycle*; the pool only stores and destroys payload. A segment
+//!   must be unreferenced when [`PagePool::destroy_segment`] runs —
+//!   debug-asserted by the caller.
+
+use crate::engine::kv_cache::BlockAllocator;
+use crate::hsr::HsrBackend;
+use crate::model::kv::KvState;
+
+/// Identifier of a segment slot inside a [`PagePool`].
+pub type SegmentId = u32;
+
+/// One immutable shared-prefix segment: the KV payload for token
+/// positions `[start, start + len)` of every sequence that holds it.
+pub struct Segment {
+    /// Frozen per-(layer, head) keys/values + one HSR index per head.
+    pub kv: KvState,
+    /// The token ids this segment covers (the radix edge label).
+    pub tokens: Vec<u32>,
+    /// Global position of the segment's first token within its chain.
+    pub start: usize,
+    /// Pages held from the pool's block allocator.
+    blocks: Vec<u32>,
+}
+
+impl Segment {
+    /// Tokens covered by this segment.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Global position one past the segment's last token.
+    pub fn end(&self) -> usize {
+        self.start + self.tokens.len()
+    }
+}
+
+/// Block-paged pool owning the shared KV segments and the block
+/// allocator that sizes both segments and private sequence tails.
+pub struct PagePool {
+    alloc: BlockAllocator,
+    slots: Vec<Option<Segment>>,
+    free_slots: Vec<u32>,
+    hsr_backend: Option<HsrBackend>,
+    /// Tokens currently held by live segments (diagnostics/metrics).
+    segment_tokens: usize,
+}
+
+impl PagePool {
+    pub fn new(
+        capacity_tokens: usize,
+        block_tokens: usize,
+        hsr_backend: Option<HsrBackend>,
+    ) -> PagePool {
+        PagePool {
+            alloc: BlockAllocator::new(capacity_tokens, block_tokens),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            hsr_backend,
+            segment_tokens: 0,
+        }
+    }
+
+    // --- block-allocator delegation (sequence tails allocate here) ---
+
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.alloc.blocks_for(tokens)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.alloc.free_blocks()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.alloc.total_blocks()
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.alloc.block_tokens()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.alloc.utilization()
+    }
+
+    pub fn alloc(&mut self, count: usize) -> Option<Vec<u32>> {
+        self.alloc.alloc(count)
+    }
+
+    pub fn ensure(&mut self, blocks: &mut Vec<u32>, needed_tokens: usize) -> bool {
+        self.alloc.ensure(blocks, needed_tokens)
+    }
+
+    pub fn release(&mut self, blocks: &mut Vec<u32>) {
+        self.alloc.release(blocks)
+    }
+
+    // --- segment lifecycle ---
+
+    /// Number of live segments.
+    pub fn segment_count(&self) -> usize {
+        self.slots.len() - self.free_slots.len()
+    }
+
+    /// Tokens held by live segments.
+    pub fn cached_tokens(&self) -> usize {
+        self.segment_tokens
+    }
+
+    /// Freeze rows `[src_offset, src_offset + tokens.len())` of `source`
+    /// into a new refcount-managed segment covering global positions
+    /// `[start, start + tokens.len())`. Allocates the segment's pages
+    /// from the pool; returns `None` (allocating nothing) if the pool
+    /// cannot hold it — prefix caching is strictly best-effort.
+    pub fn create_segment(
+        &mut self,
+        tokens: &[u32],
+        start: usize,
+        source: &KvState,
+        src_offset: usize,
+    ) -> Option<SegmentId> {
+        assert!(!tokens.is_empty(), "segments cover at least one token");
+        let need = self.alloc.blocks_for(tokens.len());
+        let blocks = self.alloc.alloc(need)?;
+        let kv = source.snapshot_range(src_offset, tokens.len(), self.hsr_backend);
+        let seg = Segment { kv, tokens: tokens.to_vec(), start, blocks };
+        self.segment_tokens += seg.tokens.len();
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                self.slots[slot as usize] = Some(seg);
+                slot
+            }
+            None => {
+                self.slots.push(Some(seg));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        Some(id)
+    }
+
+    /// Borrow a live segment.
+    pub fn segment(&self, id: SegmentId) -> &Segment {
+        self.slots[id as usize]
+            .as_ref()
+            .expect("segment id refers to a live segment")
+    }
+
+    /// Destroy a segment, returning its pages to the pool. The caller
+    /// (the radix index) guarantees the segment is unreferenced.
+    pub fn destroy_segment(&mut self, id: SegmentId) {
+        let mut seg = self.slots[id as usize]
+            .take()
+            .expect("destroying a live segment");
+        self.segment_tokens -= seg.tokens.len();
+        self.alloc.release(&mut seg.blocks);
+        self.free_slots.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn filled_kv(rng: &mut Rng, n: usize, d: usize) -> KvState {
+        let mut kv = KvState::new(1, 2, d, Some(HsrBackend::BallTree));
+        for _ in 0..n {
+            for h in 0..2 {
+                let k = rng.gaussian_vec_f32(d, 1.0);
+                let v = rng.gaussian_vec_f32(d, 1.0);
+                kv.head_mut(0, h).append(&k, &v);
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn segment_blocks_are_accounted_and_released() {
+        let mut rng = Rng::new(5);
+        let kv = filled_kv(&mut rng, 40, 4);
+        let mut pool = PagePool::new(256, 16, Some(HsrBackend::BallTree));
+        let free0 = pool.free_blocks();
+        let tokens: Vec<u32> = (0..40).collect();
+        let id = pool.create_segment(&tokens, 0, &kv, 0).expect("fits");
+        assert_eq!(pool.free_blocks(), free0 - pool.blocks_for(40));
+        assert_eq!(pool.segment_count(), 1);
+        assert_eq!(pool.cached_tokens(), 40);
+        assert_eq!(pool.segment(id).len(), 40);
+        assert_eq!(pool.segment(id).end(), 40);
+        pool.destroy_segment(id);
+        assert_eq!(pool.free_blocks(), free0);
+        assert_eq!(pool.segment_count(), 0);
+        assert_eq!(pool.cached_tokens(), 0);
+    }
+
+    #[test]
+    fn create_segment_is_best_effort_under_pressure() {
+        let mut rng = Rng::new(6);
+        let kv = filled_kv(&mut rng, 64, 4);
+        let mut pool = PagePool::new(32, 16, None);
+        let tokens: Vec<u32> = (0..64).collect();
+        let free0 = pool.free_blocks();
+        assert!(pool.create_segment(&tokens, 0, &kv, 0).is_none());
+        // A failed create must not leak blocks.
+        assert_eq!(pool.free_blocks(), free0);
+    }
+
+    #[test]
+    fn segment_payload_matches_source_rows() {
+        let mut rng = Rng::new(7);
+        let kv = filled_kv(&mut rng, 30, 8);
+        let mut pool = PagePool::new(1024, 16, Some(HsrBackend::BallTree));
+        let tokens: Vec<u32> = (10..30).collect();
+        let id = pool.create_segment(&tokens, 10, &kv, 10).unwrap();
+        let seg = pool.segment(id);
+        assert_eq!(seg.start, 10);
+        for h in 0..2 {
+            let src = kv.head(0, h);
+            let dst = seg.kv.head(0, h);
+            assert_eq!(dst.len(), 20);
+            for j in 0..20 {
+                assert_eq!(dst.key_row(j), src.key_row(10 + j));
+                assert_eq!(dst.value_row(j), src.value_row(10 + j));
+            }
+        }
+        // Slot reuse after destroy.
+        pool.destroy_segment(id);
+        let id2 = pool.create_segment(&tokens, 10, &kv, 10).unwrap();
+        assert_eq!(id, id2);
+    }
+}

@@ -1,0 +1,344 @@
+//! [`RadixIndex`] — token-prefix → shared segment chain, with refcounts
+//! and LRU eviction under pool pressure.
+//!
+//! Each node owns one immutable [`crate::kvstore::pool::Segment`] and is
+//! labelled by that segment's token run; a root-to-node path therefore
+//! spells a cached prompt prefix, and matching a prompt against the tree
+//! returns the longest chain of **fully matched** nodes. Node runs are
+//! arbitrary-length (whatever a publishing sequence had prefilled when
+//! it published), and there is deliberately **no node splitting**: a
+//! prompt that diverges mid-run simply stops matching at the previous
+//! node. Sharing granularity is thus the publish granularity (one
+//! prefill chunk), which captures the shared-prompt workloads this
+//! store exists for without ever having to split a segment's HSR index.
+//!
+//! # Refcount lifecycle
+//!
+//! * [`RadixIndex::ref_chain`] / [`RadixIndex::deref_chain`] — a running
+//!   sequence holds exactly one reference on **every** node of its
+//!   adopted chain, taken at adoption and dropped at finish/preemption
+//!   (or when the sequence re-adopts a longer chain).
+//! * A node with `refs > 0`, or with children, is never evicted; only
+//!   unreferenced **leaves** are LRU candidates, so a chain a sequence
+//!   decodes against can never be freed underneath it.
+//! * Eviction destroys the node's segment in the pool (pages return to
+//!   the shared budget) and unlinks the node — a later identical prompt
+//!   simply refaults: it re-prefills and republishes.
+
+use super::pool::{PagePool, SegmentId};
+
+/// Identifier of a node slot inside a [`RadixIndex`].
+pub type NodeId = u32;
+
+struct Node {
+    seg: SegmentId,
+    parent: Option<NodeId>,
+    children: Vec<NodeId>,
+    /// Sequences currently holding this node in their adopted chain.
+    refs: usize,
+    /// LRU stamp: bumped every time a match traverses the node.
+    last_use: u64,
+}
+
+/// The prefix tree over cached segments.
+#[derive(Default)]
+pub struct RadixIndex {
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<u32>,
+    roots: Vec<NodeId>,
+    clock: u64,
+}
+
+impl RadixIndex {
+    pub fn new() -> RadixIndex {
+        RadixIndex::default()
+    }
+
+    /// Number of live nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len() - self.free_slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id as usize].as_ref().expect("live radix node")
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id as usize].as_mut().expect("live radix node")
+    }
+
+    /// The segment a node owns.
+    pub fn segment_of(&self, id: NodeId) -> SegmentId {
+        self.node(id).seg
+    }
+
+    /// Current reference count of a node (tests/diagnostics).
+    pub fn refs_of(&self, id: NodeId) -> usize {
+        self.node(id).refs
+    }
+
+    /// Walk the tree matching `tokens`, returning the chain of fully
+    /// matched nodes and the total token count they cover. A node only
+    /// matches if its whole run fits inside `tokens[..limit]` — callers
+    /// pass `limit = prompt_len - 1` so the last prompt token is always
+    /// recomputed (its logits seed the first generated token). Matched
+    /// nodes get their LRU stamp bumped.
+    pub fn match_chain(
+        &mut self,
+        pool: &PagePool,
+        tokens: &[u32],
+        limit: usize,
+    ) -> (Vec<NodeId>, usize) {
+        let mut chain = Vec::new();
+        let mut pos = 0usize;
+        let mut candidates: &[NodeId] = &self.roots;
+        'walk: loop {
+            let mut next: Option<NodeId> = None;
+            for &cid in candidates {
+                let run = &pool.segment(self.node(cid).seg).tokens;
+                if pos + run.len() <= limit.min(tokens.len())
+                    && tokens[pos..pos + run.len()] == run[..]
+                {
+                    next = Some(cid);
+                    break;
+                }
+            }
+            match next {
+                Some(cid) => {
+                    pos += pool.segment(self.node(cid).seg).tokens.len();
+                    chain.push(cid);
+                    candidates = &self.node(cid).children;
+                    // Reborrow dance: bump the stamp after the borrow of
+                    // `candidates` is re-derived each iteration.
+                    if candidates.is_empty() {
+                        break 'walk;
+                    }
+                }
+                None => break 'walk,
+            }
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        for &cid in &chain {
+            // Split borrow: `chain` is local, nodes are in `self.nodes`.
+            self.nodes[cid as usize]
+                .as_mut()
+                .expect("matched node is live")
+                .last_use = stamp;
+        }
+        (chain, pos)
+    }
+
+    /// Insert a new node owning `seg` as a child of `parent` (`None` →
+    /// a new root). Returns the node id; the node starts unreferenced.
+    pub fn insert_child(&mut self, parent: Option<NodeId>, seg: SegmentId) -> NodeId {
+        self.clock += 1;
+        let node = Node {
+            seg,
+            parent,
+            children: Vec::new(),
+            refs: 0,
+            last_use: self.clock,
+        };
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = Some(node);
+                slot
+            }
+            None => {
+                self.nodes.push(Some(node));
+                (self.nodes.len() - 1) as u32
+            }
+        };
+        match parent {
+            Some(p) => self.node_mut(p).children.push(id),
+            None => self.roots.push(id),
+        }
+        id
+    }
+
+    /// Take one reference on every node of `chain`.
+    pub fn ref_chain(&mut self, chain: &[NodeId]) {
+        for &id in chain {
+            self.node_mut(id).refs += 1;
+        }
+    }
+
+    /// Drop one reference from every node of `chain`.
+    pub fn deref_chain(&mut self, chain: &[NodeId]) {
+        for &id in chain {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "deref of unreferenced radix node");
+            n.refs = n.refs.saturating_sub(1);
+        }
+    }
+
+    /// Evict unreferenced LRU leaves (destroying their segments in the
+    /// pool) until `pool.free_blocks() >= want_free` or no candidate
+    /// remains. Returns the number of nodes evicted.
+    pub fn evict_lru(&mut self, pool: &mut PagePool, want_free: usize) -> usize {
+        let mut evicted = 0usize;
+        while pool.free_blocks() < want_free {
+            let mut victim: Option<(NodeId, u64)> = None;
+            for (slot, node) in self.nodes.iter().enumerate() {
+                if let Some(n) = node {
+                    if n.refs == 0 && n.children.is_empty() {
+                        if victim.map(|(_, lu)| n.last_use < lu).unwrap_or(true) {
+                            victim = Some((slot as u32, n.last_use));
+                        }
+                    }
+                }
+            }
+            let Some((id, _)) = victim else { break };
+            self.remove_leaf(pool, id);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Targeted eviction of one chain, leaf-first: destroy each node
+    /// that is unreferenced and childless, stopping at the first node
+    /// still shared (referenced, or parent of a surviving sibling).
+    /// Used when a sequence sheds its adopted chain under pool wedge —
+    /// the freed nodes must go away *now*, or the next lookup would
+    /// just re-adopt them and wedge again. Returns the count evicted.
+    pub fn evict_chain(&mut self, pool: &mut PagePool, chain: &[NodeId]) -> usize {
+        let mut evicted = 0usize;
+        for &id in chain.iter().rev() {
+            let n = self.node(id);
+            if n.refs == 0 && n.children.is_empty() {
+                self.remove_leaf(pool, id);
+                evicted += 1;
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    /// Unlink and destroy one unreferenced leaf.
+    fn remove_leaf(&mut self, pool: &mut PagePool, id: NodeId) {
+        let node = self.nodes[id as usize]
+            .take()
+            .expect("evicting a live node");
+        debug_assert!(node.refs == 0 && node.children.is_empty());
+        match node.parent {
+            Some(p) => {
+                let siblings = &mut self.node_mut(p).children;
+                siblings.retain(|&c| c != id);
+            }
+            None => self.roots.retain(|&r| r != id),
+        }
+        pool.destroy_segment(node.seg);
+        self.free_slots.push(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::HsrBackend;
+    use crate::model::kv::KvState;
+    use crate::util::rng::Rng;
+
+    fn pool_with_source(n: usize, d: usize) -> (PagePool, KvState) {
+        let mut rng = Rng::new(11);
+        let mut kv = KvState::new(1, 1, d, Some(HsrBackend::BallTree));
+        for _ in 0..n {
+            let k = rng.gaussian_vec_f32(d, 1.0);
+            let v = rng.gaussian_vec_f32(d, 1.0);
+            kv.head_mut(0, 0).append(&k, &v);
+        }
+        (PagePool::new(1024, 16, Some(HsrBackend::BallTree)), kv)
+    }
+
+    /// Publish tokens[start..end) as a child of `parent`.
+    fn publish(
+        radix: &mut RadixIndex,
+        pool: &mut PagePool,
+        kv: &KvState,
+        tokens: &[u32],
+        start: usize,
+        end: usize,
+        parent: Option<NodeId>,
+    ) -> NodeId {
+        let seg = pool
+            .create_segment(&tokens[start..end], start, kv, start)
+            .expect("fits");
+        radix.insert_child(parent, seg)
+    }
+
+    #[test]
+    fn match_walks_full_runs_only() {
+        let (mut pool, kv) = pool_with_source(64, 4);
+        let tokens: Vec<u32> = (0..64).collect();
+        let mut radix = RadixIndex::new();
+        let a = publish(&mut radix, &mut pool, &kv, &tokens, 0, 16, None);
+        let b = publish(&mut radix, &mut pool, &kv, &tokens, 16, 40, Some(a));
+        // Full prompt: matches both nodes.
+        let (chain, matched) = radix.match_chain(&pool, &tokens, 63);
+        assert_eq!(chain, vec![a, b]);
+        assert_eq!(matched, 40);
+        // A prompt diverging inside node b stops after a.
+        let mut div = tokens.clone();
+        div[20] = 999;
+        let (chain, matched) = radix.match_chain(&pool, &div, 63);
+        assert_eq!(chain, vec![a]);
+        assert_eq!(matched, 16);
+        // The limit caps matching: a 17-token prompt cannot use node b,
+        // and a 16-token prompt cannot even fully use node a (limit 15).
+        let (chain, matched) = radix.match_chain(&pool, &tokens[..17], 16);
+        assert_eq!(chain, vec![a]);
+        assert_eq!(matched, 16);
+        let (chain, matched) = radix.match_chain(&pool, &tokens[..16], 15);
+        assert!(chain.is_empty());
+        assert_eq!(matched, 0);
+    }
+
+    #[test]
+    fn refcounts_guard_eviction() {
+        let (mut pool, kv) = pool_with_source(64, 4);
+        let tokens: Vec<u32> = (0..64).collect();
+        let mut radix = RadixIndex::new();
+        let a = publish(&mut radix, &mut pool, &kv, &tokens, 0, 16, None);
+        let b = publish(&mut radix, &mut pool, &kv, &tokens, 16, 32, Some(a));
+        radix.ref_chain(&[a, b]);
+        assert_eq!(radix.refs_of(a), 1);
+        // Nothing evictable while referenced (and `a` has a child).
+        assert_eq!(radix.evict_lru(&mut pool, usize::MAX), 0);
+        radix.deref_chain(&[a, b]);
+        // Now the leaf b goes first, then a.
+        let free0 = pool.free_blocks();
+        assert_eq!(radix.evict_lru(&mut pool, free0 + 1), 1);
+        assert_eq!(radix.len(), 1);
+        assert_eq!(radix.evict_lru(&mut pool, usize::MAX), 1);
+        assert!(radix.is_empty());
+        assert_eq!(pool.segment_count(), 0);
+    }
+
+    #[test]
+    fn lru_prefers_the_stalest_leaf() {
+        let (mut pool, kv) = pool_with_source(64, 4);
+        let tokens: Vec<u32> = (0..64).collect();
+        let other: Vec<u32> = (100..164).collect();
+        let mut kv2 = KvState::new(1, 1, 4, None);
+        let mut rng = Rng::new(12);
+        for _ in 0..64 {
+            let k = rng.gaussian_vec_f32(4, 1.0);
+            kv2.head_mut(0, 0).append(&k.clone(), &k);
+        }
+        let mut radix = RadixIndex::new();
+        let a = publish(&mut radix, &mut pool, &kv, &tokens, 0, 16, None);
+        let b = publish(&mut radix, &mut pool, &kv2, &other, 0, 16, None);
+        // Touch `a` so `b` is stalest.
+        let _ = radix.match_chain(&pool, &tokens, 63);
+        let free0 = pool.free_blocks();
+        assert_eq!(radix.evict_lru(&mut pool, free0 + 1), 1);
+        assert_eq!(radix.refs_of(a), 0); // a survives
+        assert!(radix.nodes[b as usize].is_none(), "stalest leaf evicted");
+    }
+}

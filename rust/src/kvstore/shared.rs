@@ -1,0 +1,70 @@
+//! Shared-prefix KV views — what the transformer's attend path sees.
+//!
+//! A sequence's effective KV cache is a **chain of immutable shared
+//! segments** (held in the [`crate::kvstore::pool::PagePool`], one HSR
+//! index per (layer, head) per segment, reused by every sequence holding
+//! the segment) followed by a **private copy-on-write tail** (the
+//! sequence's own [`KvState`], exactly the pre-kvstore per-sequence
+//! state). "Copy-on-write fork" here means: forking N sequences off a
+//! cached prompt copies *nothing* — each fork takes references on the
+//! chain and appends its divergent tokens to its own tail; the shared
+//! prefix is never mutated after it is published.
+//!
+//! Global key index `j` of a sequence resolves as: `j < prefix.len` →
+//! the chain segment with `start <= j < end` (row `j - start`);
+//! otherwise the private tail (row `j - prefix.len`). The attention
+//! planner queries each segment's index plus the tail and remaps local
+//! report ids by these offsets, so the reported (index, score) **set**
+//! is exactly what a single private index over the concatenated rows
+//! would report — which is what makes shared-prefix decode bit-identical
+//! to unshared decode (selection and evaluation are canonicalized to
+//! ascending global index downstream).
+
+use crate::model::kv::KvState;
+
+/// Borrowed view of a sequence's adopted segment chain.
+pub struct PrefixView<'a> {
+    /// `(segment payload, global start offset)` in chain order; starts
+    /// are strictly increasing and contiguous from 0.
+    pub segments: Vec<(&'a KvState, usize)>,
+    /// Total prefix tokens = the last segment's `end()` (0 if empty).
+    pub len: usize,
+}
+
+impl PrefixView<'_> {
+    /// A view with no shared prefix (the unshared / pre-kvstore case).
+    pub fn empty() -> PrefixView<'static> {
+        PrefixView { segments: Vec::new(), len: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty()
+    }
+}
+
+/// A sequence's full KV state for one model step: shared prefix chain
+/// (read-only) plus private tail (mutable — this step's keys/values are
+/// appended here).
+pub struct SharedKvMut<'p, 't> {
+    pub prefix: PrefixView<'p>,
+    pub tail: &'t mut KvState,
+}
+
+impl<'t> SharedKvMut<'static, 't> {
+    /// Wrap a plain per-sequence [`KvState`] with no shared prefix; the
+    /// model paths treat this exactly like the pre-kvstore layout.
+    pub fn unshared(tail: &'t mut KvState) -> SharedKvMut<'static, 't> {
+        SharedKvMut { prefix: PrefixView::empty(), tail }
+    }
+}
+
+impl SharedKvMut<'_, '_> {
+    /// Total cached tokens: shared prefix + private tail.
+    pub fn len(&self) -> usize {
+        self.prefix.len + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}

@@ -20,6 +20,10 @@
 //! * [`engine`] — Algorithm 1 (generation decoding) and Algorithm 2
 //!   (prompt prefilling) integrated with a paged KV cache, a
 //!   continuous-batching scheduler and a request router.
+//! * [`kvstore`] — the shared-prefix KV store: a refcounted radix
+//!   prefix cache over block-paged segments with copy-on-write forks,
+//!   so sequences with a common prompt share one payload and one HSR
+//!   index per (layer, head) — and decode as one query block.
 //! * [`model`] — the native transformer forward used by the serving hot
 //!   path (weights trained & exported by the Python build step).
 //! * [`runtime`] — PJRT CPU client executing the AOT-compiled HLO
@@ -40,6 +44,7 @@ pub mod bench;
 pub mod engine;
 pub mod hsr;
 pub mod kernel;
+pub mod kvstore;
 pub mod model;
 pub mod runtime;
 pub mod server;

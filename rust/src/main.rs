@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 use hsr_attn::attention::{AttentionConfig, AttentionKind};
 use hsr_attn::engine::{EngineConfig, GenerationParams, Router};
 use hsr_attn::hsr::HsrBackend;
+use hsr_attn::kvstore::PrefixCacheMode;
 use hsr_attn::model::tokenizer::ByteTokenizer;
 use hsr_attn::model::transformer::AttentionPolicy;
 use hsr_attn::model::Model;
@@ -22,7 +23,9 @@ use std::sync::Arc;
 const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
   --backend <brute|balltree|layers2d|projected|none>   per-head HSR index\n\
   --policy  <dense|sparse|topr=R>                      attention policy\n\
-  --decode-threads <N>                                 batched decode sweep (0 = auto)";
+  --decode-threads <N>                                 batched decode sweep (0 = auto)\n\
+  --prefix-cache <on|off|tokens>                       shared-prefix KV cache\n\
+                                                       (tokens = min match to adopt)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or(
@@ -67,6 +70,10 @@ fn engine_config(args: &Args) -> EngineConfig {
     cfg.hsr_backend = hsr_backend;
     cfg.cache_capacity_tokens = args.usize_or("cache-tokens", 1 << 20);
     cfg.block_tokens = args.usize_or("block-tokens", 64);
+    // Same Result-returning parse path as --backend: an invalid value
+    // exits with the valid-form list from `PrefixCacheMode::parse`.
+    cfg.prefix_cache =
+        args.parse_or_exit("prefix-cache", "on", USAGE, PrefixCacheMode::parse);
     cfg
 }
 

@@ -87,6 +87,32 @@ impl HeadKv {
     pub fn value_row(&self, j: usize) -> &[f32] {
         &self.values[j * self.d_head..(j + 1) * self.d_head]
     }
+
+    /// Frozen copy of rows `[start, start + len)`: contiguous keys/values
+    /// with a freshly batch-built (single-bucket) HSR index over exactly
+    /// those rows, carrying the current calibration threshold along as
+    /// the segment's post-prefill snapshot. This is how the shared-prefix
+    /// KV store ([`crate::kvstore`]) materializes a prefix segment out of
+    /// a sequence's private tail: the copy is immutable from then on and
+    /// its index is shared by every sequence holding the segment.
+    pub fn snapshot_range(
+        &self,
+        start: usize,
+        len: usize,
+        backend: Option<HsrBackend>,
+    ) -> HeadKv {
+        let d = self.d_head;
+        debug_assert!(start + len <= self.len());
+        let keys = self.keys[start * d..(start + len) * d].to_vec();
+        let values = self.values[start * d..(start + len) * d].to_vec();
+        HeadKv {
+            hsr: backend.map(|b| DynamicHsr::from_points(b, &keys, d)),
+            calib_threshold: self.calib_threshold,
+            keys,
+            values,
+            d_head: d,
+        }
+    }
 }
 
 /// A `HeadKv` *is* a half-space reporting structure over its cached
@@ -220,6 +246,28 @@ impl KvState {
     #[inline]
     pub fn layer_heads_mut(&mut self, layer: usize) -> &mut [HeadKv] {
         &mut self.heads[layer * self.n_heads..(layer + 1) * self.n_heads]
+    }
+
+    /// Frozen copy of token rows `[start, start + len)` across every
+    /// (layer, head) — the per-sequence side of
+    /// [`HeadKv::snapshot_range`], used by the shared-prefix KV store to
+    /// turn a prefilled tail range into an immutable, refcounted segment.
+    pub fn snapshot_range(
+        &self,
+        start: usize,
+        len: usize,
+        backend: Option<HsrBackend>,
+    ) -> KvState {
+        KvState {
+            heads: self
+                .heads
+                .iter()
+                .map(|h| h.snapshot_range(start, len, backend))
+                .collect(),
+            n_layers: self.n_layers,
+            n_heads: self.n_heads,
+            d_head: self.d_head,
+        }
     }
 
     /// Approximate memory footprint in bytes (keys + values only).

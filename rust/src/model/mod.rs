@@ -93,6 +93,58 @@ impl Model {
         Model::load(&artifacts_dir.join(format!("model_{name}")))
     }
 
+    /// Deterministic random-weight model for tests and benches that must
+    /// run without exported artifacts (same seed → identical weights).
+    /// `d_head` defaults small in callers on purpose: at `d_head <= 8`
+    /// every SIMD dot reduction in the crate is layout-independent, so
+    /// shared-prefix vs unshared decode can be asserted **bit**-equal.
+    pub fn synthetic(
+        seed: u64,
+        n_layers: usize,
+        n_heads: usize,
+        d_head: usize,
+    ) -> Model {
+        use crate::util::tensor_io::{Tensor, TensorBundle};
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let d_model = n_heads * d_head;
+        let cfg = ModelConfig {
+            name: format!("synthetic-{seed}"),
+            d_model,
+            n_layers,
+            n_heads,
+            d_head,
+            d_ffn: 4 * d_model,
+            vocab: 256, // byte-level: works with ByteTokenizer prompts
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+        };
+        let mut weights = TensorBundle::default();
+        let mat = |rng: &mut crate::util::rng::Rng, r: usize, c: usize| {
+            Tensor::new(vec![r, c], rng.gaussian_vec_f32(r * c, 0.4))
+        };
+        weights.insert("tok_emb", mat(&mut rng, cfg.vocab, cfg.d_model));
+        weights.insert("w_out", mat(&mut rng, cfg.d_model, cfg.vocab));
+        weights.insert(
+            "final_norm",
+            Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+        );
+        for l in 0..cfg.n_layers {
+            for name in ["wq", "wk", "wv", "wo"] {
+                weights.insert(&format!("{name}.{l}"), mat(&mut rng, cfg.d_model, cfg.d_model));
+            }
+            weights.insert(&format!("w1.{l}"), mat(&mut rng, cfg.d_model, cfg.d_ffn));
+            weights.insert(&format!("w3.{l}"), mat(&mut rng, cfg.d_model, cfg.d_ffn));
+            weights.insert(&format!("w2.{l}"), mat(&mut rng, cfg.d_ffn, cfg.d_model));
+            for name in ["attn_norm", "mlp_norm"] {
+                weights.insert(
+                    &format!("{name}.{l}"),
+                    Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
+                );
+            }
+        }
+        Model { cfg, weights }
+    }
+
     pub fn tensor(&self, name: &str) -> &crate::util::tensor_io::Tensor {
         self.weights.get(name).expect("validated at load")
     }

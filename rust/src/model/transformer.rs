@@ -14,12 +14,13 @@
 //!   query is exact, candidates ⊇ top-r whenever |candidates| ≥ r, so the
 //!   selected index set equals the true NN(r, q, K).
 
-use super::kv::KvState;
+use super::kv::{HeadKv, KvState};
 use super::Model;
 use crate::attention::plan::AttentionPlan;
 use crate::attention::session;
 use crate::attention::softmax::log_sum_exp;
-use crate::hsr::QueryStats;
+use crate::hsr::{HalfSpaceReport, QueryStats};
+use crate::kvstore::shared::SharedKvMut;
 use crate::util::tensor_io::Tensor;
 
 /// How many candidates (relative to r) the calibrator aims to report:
@@ -198,6 +199,8 @@ pub fn apply_rope(x: &mut [f32], pos: usize, theta: f64) {
 impl Model {
     /// One autoregressive step: appends this token's K/V to the cache and
     /// returns the next-token logits. `pos` must equal `kv.len()`.
+    /// Unshared shim over [`Model::decode_step_shared`] (an empty prefix
+    /// view follows the exact pre-kvstore code path).
     pub fn decode_step(
         &self,
         token: u32,
@@ -206,11 +209,34 @@ impl Model {
         ws: &mut Workspace,
         stats: &mut StepStats,
     ) -> Vec<f32> {
+        let mut skv = SharedKvMut::unshared(kv);
+        self.decode_step_shared(token, &mut skv, policy, ws, stats)
+    }
+
+    /// One autoregressive step over a **shared-prefix** KV view: the
+    /// current token's K/V rows are appended to the private tail (the
+    /// shared chain is immutable), attention positions run over
+    /// `prefix + tail`, and the sparse attend queries each chain
+    /// segment's shared HSR index plus the tail. With an empty prefix
+    /// this is byte-for-byte the historical `decode_step`.
+    pub fn decode_step_shared(
+        &self,
+        token: u32,
+        skv: &mut SharedKvMut<'_, '_>,
+        policy: AttentionPolicy,
+        ws: &mut Workspace,
+        stats: &mut StepStats,
+    ) -> Vec<f32> {
         let c = &self.cfg;
-        let pos = kv.len();
+        let pos = skv.len();
         // Embedding.
         let emb = self.tensor("tok_emb");
         ws.x.copy_from_slice(emb.row(token as usize));
+
+        // One reusable buffer for the per-(layer, head) chain slices —
+        // refilled per head, allocated once per token at most.
+        let mut pheads: Vec<(&HeadKv, usize)> =
+            Vec::with_capacity(skv.prefix.segments.len());
 
         for layer in 0..c.n_layers {
             // --- attention block ---
@@ -224,17 +250,34 @@ impl Model {
                 apply_rope(&mut ws.q[s..e], pos, c.rope_theta);
                 apply_rope(&mut ws.k[s..e], pos, c.rope_theta);
                 // Append current token so it participates in attention.
-                let hk = kv.head_mut(layer, head);
+                let hk = skv.tail.head_mut(layer, head);
                 hk.append(&ws.k[s..e], &ws.v[s..e]);
-                attend_head(
-                    hk,
-                    &ws.q[s..e],
-                    c.d_head,
-                    policy,
-                    &mut ws.attn,
-                    &mut ws.att[s..e],
-                    stats,
-                );
+                if skv.prefix.is_empty() {
+                    attend_head(
+                        hk,
+                        &ws.q[s..e],
+                        c.d_head,
+                        policy,
+                        &mut ws.attn,
+                        &mut ws.att[s..e],
+                        stats,
+                    );
+                } else {
+                    pheads.clear();
+                    for &(kv, start) in skv.prefix.segments.iter() {
+                        pheads.push((kv.head(layer, head), start));
+                    }
+                    let mut row = [(hk, &ws.q[s..e], &mut ws.att[s..e])];
+                    attend_group(
+                        &pheads,
+                        skv.prefix.len,
+                        &mut row,
+                        c.d_head,
+                        policy,
+                        &mut ws.attn,
+                        stats,
+                    );
+                }
             }
             matvec(&ws.att, self.layer_tensor("wo", layer), &mut ws.proj);
             for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
@@ -273,17 +316,48 @@ impl Model {
         bws: &mut BatchWorkspace,
         stats: &mut StepStats,
     ) -> Vec<Vec<f32>> {
+        let mut views: Vec<SharedKvMut> = kvs
+            .iter_mut()
+            .map(|kv| SharedKvMut::unshared(&mut **kv))
+            .collect();
+        let groups: Vec<Vec<usize>> = (0..views.len()).map(|i| vec![i]).collect();
+        self.decode_step_batch_shared(tokens, &mut views, &groups, policy, bws, stats)
+    }
+
+    /// [`Model::decode_step_batch`] over shared-prefix KV views, with the
+    /// batch partitioned into **groups**: members of one group share an
+    /// identical segment chain and their decode rows are answered as one
+    /// multi-query HSR traversal per chain segment per head (the
+    /// cross-sequence amortization of PR 3's query fan-out, now on the
+    /// serving path). Groups must partition `0..seqs.len()`; singleton
+    /// groups with empty prefixes follow the exact per-sequence code
+    /// path, so this is bit-identical to per-sequence `decode_step` for
+    /// every grouping and thread count.
+    pub fn decode_step_batch_shared(
+        &self,
+        tokens: &[u32],
+        seqs: &mut [SharedKvMut<'_, '_>],
+        groups: &[Vec<usize>],
+        policy: AttentionPolicy,
+        bws: &mut BatchWorkspace,
+        stats: &mut StepStats,
+    ) -> Vec<Vec<f32>> {
         let c = &self.cfg;
         let b = tokens.len();
-        assert_eq!(kvs.len(), b);
+        assert_eq!(seqs.len(), b);
         if b == 0 {
             return Vec::new();
         }
-        let positions: Vec<usize> = kvs.iter().map(|kv| kv.len()).collect();
+        debug_assert_eq!(
+            groups.iter().map(|g| g.len()).sum::<usize>(),
+            b,
+            "groups must partition the batch"
+        );
+        let positions: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
         bws.x.resize(b * c.d_model, 0.0);
         bws.q.resize(b * c.d_model, 0.0);
         bws.att.resize(b * c.d_model, 0.0);
-        let jobs = b * c.n_heads;
+        let jobs = groups.len() * c.n_heads;
         // In auto mode (threads = 0), parallelize only when the grid
         // carries enough attention work to amortize the per-layer thread
         // spawns; total cached tokens across the batch's heads is the
@@ -307,6 +381,14 @@ impl Model {
                 .copy_from_slice(emb.row(tok as usize));
         }
 
+        // Per-sequence chain views, copied once per step (the refs carry
+        // the pool lifetime, not the `seqs` borrow, so the per-layer
+        // sweep below can still take the tails mutably).
+        let prefix_of: Vec<(Vec<(&KvState, usize)>, usize)> = seqs
+            .iter()
+            .map(|s| (s.prefix.segments.clone(), s.prefix.len))
+            .collect();
+
         for layer in 0..c.n_layers {
             // --- attention block: projections + RoPE + cache append ---
             // (serial per sequence; the matvecs reuse one temp workspace)
@@ -322,33 +404,66 @@ impl Model {
                     let (hs, he) = (head * c.d_head, (head + 1) * c.d_head);
                     apply_rope(&mut qs[hs..he], positions[s], c.rope_theta);
                     apply_rope(&mut tmp.k[hs..he], positions[s], c.rope_theta);
-                    kvs[s]
+                    seqs[s]
+                        .tail
                         .head_mut(layer, head)
                         .append(&tmp.k[hs..he], &tmp.v[hs..he]);
                 }
             }
-            // --- attention sweep: the (sequence × head) grid, sharded ---
+            // --- attention sweep: the (group × head) grid, sharded ---
             {
-                let mut grid: Vec<(&mut super::kv::HeadKv, &[f32], &mut [f32])> =
-                    Vec::with_capacity(jobs);
-                for ((kv, q_row), att_row) in kvs
+                // Per-(sequence, head) row items, regrouped into one job
+                // per (group, head): members' rows answer through one
+                // shared traversal of each chain segment.
+                let mut row_of: Vec<Vec<Option<RowJob>>> = Vec::with_capacity(b);
+                for ((skv, q_row), att_row) in seqs
                     .iter_mut()
                     .zip(bws.q.chunks(c.d_model))
                     .zip(bws.att.chunks_mut(c.d_model))
                 {
-                    for ((hk, qh), oh) in kv
+                    let mut rows = Vec::with_capacity(c.n_heads);
+                    for ((hk, qh), oh) in skv
+                        .tail
                         .layer_heads_mut(layer)
                         .iter_mut()
                         .zip(q_row.chunks(c.d_head))
                         .zip(att_row.chunks_mut(c.d_head))
                     {
-                        grid.push((hk, qh, oh));
+                        rows.push(Some((hk, qh, oh)));
+                    }
+                    row_of.push(rows);
+                }
+                let mut grid: Vec<GroupJob> = Vec::with_capacity(jobs);
+                for members in groups {
+                    let (segs, plen) = &prefix_of[members[0]];
+                    for h in 0..c.n_heads {
+                        let mut rows = Vec::with_capacity(members.len());
+                        for &m in members {
+                            rows.push(
+                                row_of[m][h]
+                                    .take()
+                                    .expect("each (sequence, head) is in exactly one group"),
+                            );
+                        }
+                        let prefix: Vec<(&HeadKv, usize)> = segs
+                            .iter()
+                            .map(|&(kv, start)| (kv.head(layer, h), start))
+                            .collect();
+                        grid.push(GroupJob { prefix, prefix_len: *plen, rows });
                     }
                 }
                 if workers <= 1 {
                     let scratch = &mut bws.shards[0];
-                    for (hk, qh, oh) in grid.iter_mut() {
-                        attend_head(hk, qh, c.d_head, policy, scratch, oh, stats);
+                    for job in grid.iter_mut() {
+                        attend_group(
+                            &job.prefix,
+                            job.prefix_len,
+                            &mut job.rows,
+                            c.d_head,
+                            policy,
+                            scratch,
+                            stats,
+                        );
                     }
                 } else {
                     let per = (jobs + workers - 1) / workers;
@@ -360,9 +475,15 @@ impl Model {
                         {
                             handles.push(scope.spawn(move || {
                                 let mut local = StepStats::default();
-                                for (hk, qh, oh) in chunk.iter_mut() {
-                                    attend_head(
-                                        hk, qh, d_head, policy, scratch, oh, &mut local,
+                                for job in chunk.iter_mut() {
+                                    attend_group(
+                                        &job.prefix,
+                                        job.prefix_len,
+                                        &mut job.rows,
+                                        d_head,
+                                        policy,
+                                        scratch,
+                                        &mut local,
                                     );
                                 }
                                 local
@@ -517,6 +638,189 @@ fn attend_head(
     session::execute_plan(plan, &hk.values, d_head, out);
 }
 
+/// One (tail head, query row, output row) attention job row.
+type RowJob<'r> = (&'r mut HeadKv, &'r [f32], &'r mut [f32]);
+
+/// One unit of the batched attention sweep: the member rows of one
+/// shared-prefix group at one (layer, head), plus that head's chain
+/// segments. A singleton job with no prefix is exactly the historical
+/// per-(sequence, head) grid cell.
+struct GroupJob<'p, 'r> {
+    /// This head's slice of each chain segment, with global start
+    /// offsets (empty → unshared sequence).
+    prefix: Vec<(&'p HeadKv, usize)>,
+    prefix_len: usize,
+    rows: Vec<RowJob<'r>>,
+}
+
+/// Resolved value storage for one shared-prefix row: global key index
+/// `j` maps to a chain segment row (`j < prefix_len`) or a private tail
+/// row. The execute phase axpy-accumulates through this resolver in
+/// ascending key order — bit-identical to contiguous storage.
+struct SegmentedRows<'a, 'p> {
+    prefix: &'a [(&'p HeadKv, usize)],
+    prefix_len: usize,
+    tail: &'a HeadKv,
+}
+
+impl session::ValueRows for SegmentedRows<'_, '_> {
+    fn value_row(&self, j: usize) -> &[f32] {
+        if j < self.prefix_len {
+            for &(h, start) in self.prefix {
+                if j < start + h.len() {
+                    return h.value_row(j - start);
+                }
+            }
+            unreachable!("prefix key index {j} beyond the segment chain");
+        }
+        self.tail.value_row(j - self.prefix_len)
+    }
+}
+
+/// Dense softmax attention for one row over the segmented layout:
+/// chain segments in order, then the tail. With no prefix this is the
+/// contiguous [`crate::attention::softmax::softmax_attention_row`].
+fn dense_shared_row(
+    prefix: &[(&HeadKv, usize)],
+    tail: &HeadKv,
+    q: &[f32],
+    d_head: usize,
+    plan: &mut AttentionPlan,
+    out: &mut [f32],
+) {
+    if prefix.is_empty() {
+        crate::attention::softmax::softmax_attention_row(
+            q,
+            &tail.keys,
+            &tail.values,
+            d_head,
+            &mut plan.buf.scores,
+            out,
+        );
+        return;
+    }
+    let mut parts: Vec<(&[f32], &[f32])> = Vec::with_capacity(prefix.len() + 1);
+    for &(h, _) in prefix {
+        parts.push((h.keys.as_slice(), h.values.as_slice()));
+    }
+    parts.push((tail.keys.as_slice(), tail.values.as_slice()));
+    crate::attention::softmax::softmax_attention_row_segmented(
+        q,
+        &parts,
+        d_head,
+        &mut plan.buf.scores,
+        out,
+    );
+}
+
+/// Attention for one shared-prefix group at one (layer, head) — the
+/// member rows plus that head's chain segment slices (what a
+/// [`GroupJob`] carries in the batched sweep; the single-token path
+/// passes a reused buffer and a stack row instead). The
+/// singleton/no-prefix case is a straight call into [`attend_head`]
+/// (same floats, same stats — the pre-kvstore path). Otherwise: dense /
+/// covering-r rows evaluate
+/// individually over the segmented layout, and the calibrated top-r
+/// rows plan as ONE query block — a shared multi-query traversal per
+/// chain segment plus per-member tail scans
+/// ([`session::plan_top_r_shared`]) — then execute row-by-row through
+/// the segment-resolving gather. Selected sets are exact top-r
+/// regardless of calibration, so outputs are bit-identical to the
+/// per-sequence path; only the traversal work (and therefore
+/// [`QueryStats`]) shrinks with group fan-out.
+fn attend_group(
+    prefix: &[(&HeadKv, usize)],
+    prefix_len: usize,
+    rows: &mut [RowJob<'_>],
+    d_head: usize,
+    policy: AttentionPolicy,
+    plan: &mut AttentionPlan,
+    stats: &mut StepStats,
+) {
+    if prefix.is_empty() && rows.len() == 1 {
+        let (tail, q, out) = &mut rows[0];
+        attend_head(tail, q, d_head, policy, plan, out, stats);
+        return;
+    }
+    // The small Vecs below (grouped/rs/calibs + the &dyn views) are
+    // rebuilt per (layer, group, head) job: the reference vectors cannot
+    // persist in a lifetime-free Scratch, and their cost is amortized
+    // over the whole member block's traversal + gather work (a grouped
+    // job only exists when there IS a block to amortize over; the
+    // singleton/no-prefix hot path above allocates nothing).
+    let mut grouped: Vec<usize> = Vec::new();
+    for (m, row) in rows.iter_mut().enumerate() {
+        let (tail, q, out) = &mut *row;
+        let n = prefix_len + tail.len();
+        stats.dense_equivalent += n;
+        let r = match policy {
+            AttentionPolicy::Dense => n,
+            AttentionPolicy::TopR(spec) => spec.r_for(n),
+        };
+        if r >= n {
+            dense_shared_row(prefix, &**tail, q, d_head, plan, &mut **out);
+            stats.attended += n;
+        } else {
+            grouped.push(m);
+        }
+    }
+    if grouped.is_empty() {
+        return;
+    }
+    // Pack the group's query rows and collect per-member specs.
+    plan.buf.qblock.clear();
+    for &m in &grouped {
+        plan.buf.qblock.extend_from_slice(rows[m].1);
+    }
+    let rs: Vec<usize> = grouped
+        .iter()
+        .map(|&m| {
+            let n = prefix_len + rows[m].0.len();
+            match policy {
+                AttentionPolicy::Dense => n, // unreachable: dense rows covered above
+                AttentionPolicy::TopR(spec) => spec.r_for(n),
+            }
+        })
+        .collect();
+    let calibs: Vec<Option<f32>> = grouped
+        .iter()
+        .map(|&m| rows[m].0.calib_threshold)
+        .collect();
+    let mut new_calibs: Vec<Option<f32>> = Vec::with_capacity(grouped.len());
+    {
+        let prefix_dyn: Vec<(&dyn HalfSpaceReport, usize)> = prefix
+            .iter()
+            .map(|&(h, start)| (h as &dyn HalfSpaceReport, start))
+            .collect();
+        let tails: Vec<&dyn HalfSpaceReport> = grouped
+            .iter()
+            .map(|&m| &*rows[m].0 as &dyn HalfSpaceReport)
+            .collect();
+        session::plan_top_r_shared(
+            &prefix_dyn,
+            prefix_len,
+            d_head,
+            &tails,
+            &rs,
+            &calibs,
+            CALIBRATION_SLACK,
+            plan,
+            &mut new_calibs,
+        );
+    }
+    stats.hsr.add(&plan.stats);
+    stats.fallbacks += plan.fallbacks;
+    for (gi, &m) in grouped.iter().enumerate() {
+        let (tail, _q, out) = &mut rows[m];
+        if new_calibs[gi].is_some() {
+            tail.calib_threshold = new_calibs[gi];
+        }
+        stats.attended += plan.fired[gi];
+        let values = SegmentedRows { prefix, prefix_len, tail: &**tail };
+        session::execute_plan_row_resolved(plan, gi, d_head, &values, &mut **out);
+    }
+}
+
 /// Greedy argmax sampling.
 pub fn argmax(logits: &[f32]) -> u32 {
     let mut best = 0usize;
@@ -581,46 +885,10 @@ mod tests {
         assert_eq!(RSpec::Pow(0.8).r_for(1), 1);
     }
 
-    /// Build a tiny random-weight model in memory so the batched-decode
-    /// parity test runs without exported artifacts.
-    fn tiny_model(rng: &mut crate::util::rng::Rng) -> Model {
-        use crate::util::tensor_io::{Tensor, TensorBundle};
-        let cfg = crate::model::ModelConfig {
-            name: "tiny-test".to_string(),
-            d_model: 8,
-            n_layers: 2,
-            n_heads: 2,
-            d_head: 4,
-            d_ffn: 16,
-            vocab: 17,
-            rope_theta: 10000.0,
-            rms_eps: 1e-5,
-        };
-        let mut weights = TensorBundle::default();
-        let mat = |rng: &mut crate::util::rng::Rng, r: usize, c: usize| {
-            Tensor::new(vec![r, c], rng.gaussian_vec_f32(r * c, 0.4))
-        };
-        weights.insert("tok_emb", mat(rng, cfg.vocab, cfg.d_model));
-        weights.insert("w_out", mat(rng, cfg.d_model, cfg.vocab));
-        weights.insert(
-            "final_norm",
-            Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
-        );
-        for l in 0..cfg.n_layers {
-            for name in ["wq", "wk", "wv", "wo"] {
-                weights.insert(&format!("{name}.{l}"), mat(rng, cfg.d_model, cfg.d_model));
-            }
-            weights.insert(&format!("w1.{l}"), mat(rng, cfg.d_model, cfg.d_ffn));
-            weights.insert(&format!("w3.{l}"), mat(rng, cfg.d_model, cfg.d_ffn));
-            weights.insert(&format!("w2.{l}"), mat(rng, cfg.d_ffn, cfg.d_model));
-            for name in ["attn_norm", "mlp_norm"] {
-                weights.insert(
-                    &format!("{name}.{l}"),
-                    Tensor::new(vec![cfg.d_model], vec![1.0; cfg.d_model]),
-                );
-            }
-        }
-        Model { cfg, weights }
+    /// Tiny deterministic model so the batched-decode parity test runs
+    /// without exported artifacts (see [`Model::synthetic`]).
+    fn tiny_model(_rng: &mut crate::util::rng::Rng) -> Model {
+        Model::synthetic(200, 2, 2, 4)
     }
 
     /// `decode_step_batch` must be bit-identical to per-sequence

@@ -150,6 +150,7 @@ fn preemption_under_cache_pressure_still_completes() {
                 prefill_chunk: 16,
                 step_token_budget: 64,
                 preempt: PreemptPolicy::Youngest,
+                ..Default::default()
             },
             ..Default::default()
         },

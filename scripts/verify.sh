@@ -12,8 +12,10 @@
 #  * benches/decode_time.rs --hsr-batch-only  → BENCH_hsr_batch.json
 #    (multi-query shared-traversal HSR: per-backend ns/query and
 #    work/query, batched vs looped, fan-out 1/4/16)
-#  * benches/e2e_serving.rs                   → stdout (steady-state
-#    tok/s vs ttft; self-skips when model artifacts are absent)
+#  * benches/e2e_serving.rs --shared-only     → BENCH_serving.json
+#    (shared-prompt workload: prefix-hit rate, prefill tokens skipped,
+#    steady-state tok/s shared vs unshared; runs on a synthetic model
+#    when artifacts are absent, so it always reports)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -49,6 +51,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== multi-query HSR smoke (BENCH_hsr_batch.json) =="
     cargo bench --bench decode_time -- --hsr-batch-only
     echo "report: $(cd .. && pwd)/BENCH_hsr_batch.json"
+
+    echo "== shared-prefix serving smoke (BENCH_serving.json) =="
+    cargo bench --bench e2e_serving -- --shared-only
+    echo "report: $(cd .. && pwd)/BENCH_serving.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
