@@ -64,6 +64,7 @@ fn run_policy(
     );
     let t0 = Instant::now();
     let mut total_prompt = 0usize;
+    let mut rejected = 0usize;
     for req in &trace {
         // Honour arrival times (compressed 4x for demo runtime).
         let due = req.arrival_s / 4.0;
@@ -72,15 +73,22 @@ fn run_policy(
             std::thread::sleep(std::time::Duration::from_secs_f64(due - now));
         }
         let start = rng.below(corpus.len() - req.prompt_len);
-        total_prompt += req.prompt_len;
-        router.submit(
-            corpus[start..start + req.prompt_len].to_vec(),
-            GenerationParams {
-                max_new_tokens: req.max_new_tokens,
-                temperature: 0.0,
-                stop_token: None,
-            },
-        );
+        let accepted = router
+            .submit(
+                corpus[start..start + req.prompt_len].to_vec(),
+                GenerationParams {
+                    max_new_tokens: req.max_new_tokens,
+                    temperature: 0.0,
+                    stop_token: None,
+                    deadline: None,
+                },
+            )
+            .is_ok();
+        if accepted {
+            total_prompt += req.prompt_len;
+        } else {
+            rejected += 1;
+        }
     }
     router.wait_idle();
     let wall = t0.elapsed().as_secs_f64();
@@ -91,6 +99,9 @@ fn run_policy(
     let gen_total: usize = responses.iter().map(|r| r.tokens.len()).sum();
 
     println!("\n--- policy = {name} ({workers} workers, {requests} requests) ---");
+    if rejected > 0 {
+        println!("admission control shed {rejected} requests (default caps)");
+    }
     println!(
         "completed {} / {}  in {wall:.2}s   throughput: {:.1} gen tok/s ({:.1} total tok/s)",
         responses.len(),

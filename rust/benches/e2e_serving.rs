@@ -9,12 +9,14 @@
 //! back to a deterministic synthetic model so the prefix-cache numbers
 //! are always reproducible.
 //!
-//! Flags: --shared-only (skip the artifact section), --model NAME,
-//! --shared-requests N, --shared-prompt N, --shared-gen N.
+//! Flags: --shared-only (skip the artifact section), --overload-only
+//! (run just the admission-control section), --model NAME,
+//! --shared-requests N, --shared-prompt N, --shared-gen N,
+//! --overload-requests N, --overload-prompt N, --overload-gen N.
 
 use hsr_attn::bench::banner;
 use hsr_attn::engine::serving::{Engine, EngineConfig};
-use hsr_attn::engine::{GenerationParams, SchedulerConfig};
+use hsr_attn::engine::{GenerationParams, Router, RouterConfig, SchedulerConfig};
 use hsr_attn::hsr::HsrBackend;
 use hsr_attn::kvstore::PrefixCacheMode;
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
@@ -54,7 +56,7 @@ fn drive(mut eng: Engine, prompts: Vec<Vec<u32>>, gen: usize) -> RunResult {
     for p in prompts {
         eng.submit(
             p,
-            GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None },
+            GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None, deadline: None },
         );
     }
     let requests = eng.metrics.requests_submitted;
@@ -242,14 +244,110 @@ fn shared_prefix_section(args: &Args) {
     }
 }
 
+/// Overload section: calibrate the pool's sustainable completion rate
+/// closed-loop, then offer 4x that rate through a tightly-capped router
+/// and measure the shed rate plus the latency of the accepted requests
+/// (BENCH_robustness.json). Always runs on the synthetic model, so the
+/// admission-control numbers need no artifacts.
+fn overload_section(args: &Args) {
+    let requests = args.usize_or("overload-requests", 48);
+    let gen = args.usize_or("overload-gen", 16);
+    let prompt_len = args.usize_or("overload-prompt", 64);
+    let model = Arc::new(Model::synthetic(90, 2, 4, 8));
+    let corpus = corpus();
+    let mut rng = Rng::new(23);
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|_| {
+            let s = rng.below(corpus.len() - prompt_len);
+            corpus[s..s + prompt_len].to_vec()
+        })
+        .collect();
+    let params = GenerationParams {
+        max_new_tokens: gen,
+        temperature: 0.0,
+        stop_token: None,
+        deadline: None,
+    };
+    println!("\n== overload: admission control at 4x the sustainable rate (2 workers) ==");
+
+    // Calibrate closed-loop with the default (generous) caps.
+    let cal_n = requests.min(24);
+    let cal = Router::new(Arc::clone(&model), EngineConfig::default(), 2);
+    let t0 = Instant::now();
+    for p in prompts.iter().take(cal_n) {
+        cal.submit(p.clone(), params).expect("calibration submit under default caps");
+    }
+    cal.wait_idle();
+    let sustainable = cal_n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    cal.shutdown();
+
+    // Offer 4x through tight queues; count sheds, time the accepted.
+    let rcfg = RouterConfig {
+        max_queue_per_worker: 6,
+        max_in_flight: 16,
+        ..Default::default()
+    };
+    let router = Router::with_config(Arc::clone(&model), EngineConfig::default(), 2, rcfg);
+    let offered = sustainable * 4.0;
+    let gap = std::time::Duration::from_secs_f64(1.0 / offered.max(1.0));
+    let (mut accepted, mut shed) = (0usize, 0usize);
+    for p in &prompts {
+        match router.submit(p.clone(), params) {
+            Ok(_) => accepted += 1,
+            Err(_) => shed += 1,
+        }
+        std::thread::sleep(gap);
+    }
+    router.wait_idle();
+    let responses = router.take_responses();
+    let metrics = router.shutdown();
+    let latencies: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
+    let (p50, p99) = if latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            hsr_attn::util::stats::percentile(&latencies, 50.0),
+            hsr_attn::util::stats::percentile(&latencies, 99.0),
+        )
+    };
+    let shed_rate = shed as f64 / requests.max(1) as f64;
+    println!(
+        "sustainable {sustainable:.1} req/s -> offered {offered:.1} req/s: \
+         accepted {accepted} / shed {shed} ({:.0}% shed)",
+        100.0 * shed_rate
+    );
+    println!("accepted-request latency: p50 {p50:.1} ms, p99 {p99:.1} ms");
+
+    let mut root = Json::obj();
+    root.set("requests_offered", requests.into())
+        .set("sustainable_req_per_s", sustainable.into())
+        .set("offered_req_per_s", offered.into())
+        .set("accepted", accepted.into())
+        .set("shed", shed.into())
+        .set("shed_rate", shed_rate.into())
+        .set("accepted_latency_p50_ms", p50.into())
+        .set("accepted_latency_p99_ms", p99.into())
+        .set("requests_rejected_metric", metrics.requests_rejected.into());
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_robustness.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     banner("e2e_serving", "headline: sparse vs dense serving + shared-prefix KV store");
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
 
+    if args.flag("overload-only") {
+        overload_section(&args);
+        return;
+    }
     shared_prefix_section(&args);
     if args.flag("shared-only") {
         return;
     }
+    overload_section(&args);
 
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("\nartifacts missing — run `make artifacts`; skipping sparse-vs-dense section");

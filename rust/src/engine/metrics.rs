@@ -50,6 +50,26 @@ pub struct Metrics {
     /// Decode rows answered inside a ≥ 2-member shared-prefix group
     /// (one multi-query traversal per chain segment).
     pub grouped_decode_rows: u64,
+    // --- robustness counters ---
+    /// Requests shed by admission control (queue/in-flight caps).
+    pub requests_rejected: u64,
+    /// Requests answered with a terminal structured error (worker died
+    /// mid-generation, retry budget exhausted, ...).
+    pub requests_failed: u64,
+    /// Sequences aborted past their client-supplied deadline.
+    pub deadline_aborts: u64,
+    /// Sequences cancelled because the client went away.
+    pub disconnect_aborts: u64,
+    /// Worker threads that panicked (caught or detected at join).
+    pub worker_panics: u64,
+    /// Panicked workers restarted in place with a fresh engine.
+    pub worker_restarts: u64,
+    /// KV blocks still held after a full drain — 0 in a correct engine
+    /// (checked against the allocator's debug ledger at worker exit).
+    pub kv_blocks_leaked: u64,
+    /// Gauge: peak queued+running requests across the pool (merged by
+    /// max, not sum).
+    pub queue_depth_peak: u64,
 }
 
 impl Metrics {
@@ -75,6 +95,14 @@ impl Metrics {
         self.prefix_segments_evicted += other.prefix_segments_evicted;
         self.prefix_sheds += other.prefix_sheds;
         self.grouped_decode_rows += other.grouped_decode_rows;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_failed += other.requests_failed;
+        self.deadline_aborts += other.deadline_aborts;
+        self.disconnect_aborts += other.disconnect_aborts;
+        self.worker_panics += other.worker_panics;
+        self.worker_restarts += other.worker_restarts;
+        self.kv_blocks_leaked += other.kv_blocks_leaked;
+        self.queue_depth_peak = self.queue_depth_peak.max(other.queue_depth_peak);
     }
 
     /// Fraction of demanded prefill tokens skipped via the shared-prefix
@@ -120,7 +148,9 @@ impl Metrics {
              step:     p50 {} p99 {}\n\
              sparsity: attended {:.2}% of dense ({} fallbacks)\n\
              prefix:   {:.1}% prefill tokens skipped, {}/{} lookups hit, \
-             {} inserted / {} evicted, {} grouped decode rows",
+             {} inserted / {} evicted, {} grouped decode rows\n\
+             robust:   {} rejected / {} failed / {} deadline / {} disconnect; \
+             {} worker panics / {} restarts; peak queue {}; {} leaked blocks",
             self.requests_submitted,
             self.requests_completed,
             self.requests_preempted,
@@ -140,6 +170,14 @@ impl Metrics {
             self.prefix_tokens_inserted,
             self.prefix_segments_evicted,
             self.grouped_decode_rows,
+            self.requests_rejected,
+            self.requests_failed,
+            self.deadline_aborts,
+            self.disconnect_aborts,
+            self.worker_panics,
+            self.worker_restarts,
+            self.queue_depth_peak,
+            self.kv_blocks_leaked,
         )
     }
 }
@@ -178,6 +216,27 @@ mod tests {
         m.merge(&other);
         assert_eq!(m.prefix_hits, 4);
         assert_eq!(m.grouped_decode_rows, 7);
+    }
+
+    #[test]
+    fn robustness_counters_merge_and_render() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.requests_rejected = 2;
+        a.queue_depth_peak = 9;
+        b.requests_rejected = 3;
+        b.queue_depth_peak = 4;
+        b.worker_panics = 1;
+        b.worker_restarts = 1;
+        b.deadline_aborts = 5;
+        a.merge(&b);
+        assert_eq!(a.requests_rejected, 5);
+        assert_eq!(a.worker_panics, 1);
+        assert_eq!(a.deadline_aborts, 5);
+        // Gauge merges by max, not sum.
+        assert_eq!(a.queue_depth_peak, 9);
+        assert!(a.summary().contains("5 rejected"));
+        assert!(a.summary().contains("peak queue 9"));
     }
 
     #[test]

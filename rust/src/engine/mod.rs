@@ -22,6 +22,6 @@ pub mod serving;
 pub use decode::GenerationDecoding;
 pub use prefill::{PrefillResult, PromptPrefilling};
 pub use request::{FinishReason, GenerationParams, Request, RequestId, Response};
-pub use router::Router;
+pub use router::{Outcome, RequestError, Router, RouterConfig, SubmitError};
 pub use scheduler::{PreemptPolicy, SchedulerConfig};
-pub use serving::{Engine, EngineConfig};
+pub use serving::{Engine, EngineConfig, Fault, FaultKind, FaultPlan};

@@ -13,11 +13,20 @@ pub struct GenerationParams {
     pub temperature: f32,
     /// Stop at this token if produced (byte value); None → length only.
     pub stop_token: Option<u32>,
+    /// Absolute deadline. A sequence past it is aborted mid-decode
+    /// (blocks and chain refs released) with
+    /// [`FinishReason::DeadlineExceeded`]; None → no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Default for GenerationParams {
     fn default() -> Self {
-        GenerationParams { max_new_tokens: 64, temperature: 0.0, stop_token: None }
+        GenerationParams {
+            max_new_tokens: 64,
+            temperature: 0.0,
+            stop_token: None,
+            deadline: None,
+        }
     }
 }
 
@@ -27,6 +36,9 @@ pub struct Request {
     pub id: RequestId,
     pub prompt: Vec<u32>,
     pub params: GenerationParams,
+    /// Times this request has been re-dispatched after a worker failure
+    /// (bounds the supervision retry budget).
+    pub attempts: u32,
 }
 
 /// Why a sequence finished.
@@ -36,6 +48,10 @@ pub enum FinishReason {
     StopToken,
     /// Engine shut down before completion.
     Aborted,
+    /// Past its client-supplied deadline ("deadline" on the wire).
+    DeadlineExceeded,
+    /// Explicitly cancelled, e.g. the client disconnected.
+    Cancelled,
 }
 
 /// Completed request.
@@ -81,6 +97,9 @@ pub(crate) struct Sequence {
     /// Submission order; lower = older. Preemption only ever evicts
     /// strictly-younger sequences, which guarantees scheduler progress.
     pub priority: u64,
+    /// Re-dispatch count inherited from the [`Request`] (see
+    /// `Request::attempts`).
+    pub attempts: u32,
 }
 
 impl Sequence {

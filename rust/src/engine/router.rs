@@ -1,191 +1,700 @@
-//! Request router: shards requests across engine worker threads
-//! (vllm-project/router-shaped, scaled to this testbed). Each worker owns
-//! one [`Engine`] replica; the router picks the least-loaded worker,
-//! tracks in-flight counts, and merges metrics/responses.
+//! Request router: shards requests across supervised engine worker
+//! threads (vllm-project/router-shaped, scaled to this testbed). Each
+//! worker owns one [`Engine`] replica behind a `Mutex`+`Condvar` inbox;
+//! the router picks the least-loaded live worker, enforces admission
+//! control (bounded per-worker queue depth + a pool-wide in-flight cap),
+//! and merges metrics/outcomes.
+//!
+//! # Failure model
+//!
+//! * [`Router::submit`] returns `Result` — a saturated or stopping pool
+//!   sheds load with [`SubmitError`] instead of queueing unboundedly
+//!   (and never panics the accept path: no `expect` on worker state).
+//! * Each worker wraps its engine turn in `catch_unwind`. On a panic
+//!   (injected via [`FaultPlan`](super::serving::FaultPlan) or real)
+//!   the worker marks itself dead, salvages its in-flight requests,
+//!   restarts in place with a fresh engine (the fault plan cleared so a
+//!   deterministic fault fires once), re-dispatches never-decoded
+//!   requests to live workers under a bounded retry budget, and answers
+//!   the rest with a structured [`Outcome::Failed`].
+//! * Completion is event-driven: outcomes land in a Condvar-signaled
+//!   table ([`Router::wait_for_outcome`] / [`Router::wait_idle`] block
+//!   on the Condvar — no sleep-polling on the request path).
+//! * [`Router::cancel`] removes a queued request from its inbox
+//!   outright, or broadcasts to the engines so the owner aborts it
+//!   mid-decode (releasing its KV blocks and chain refs).
 
-use super::request::{GenerationParams, RequestId, Response};
-use super::serving::{Engine, EngineConfig};
+use super::metrics::Metrics;
+use super::request::{FinishReason, GenerationParams, Request, RequestId, Response};
+use super::serving::{Engine, EngineConfig, FaultPlan};
 use crate::model::Model;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Admission-control and supervision knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Per-worker bound on queued + running requests; submission skips
+    /// workers at the bound.
+    pub max_queue_per_worker: usize,
+    /// Pool-wide in-flight cap; beyond it `submit` sheds load.
+    pub max_in_flight: usize,
+    /// Re-dispatch budget for requests salvaged from a panicked worker.
+    pub max_retries: u32,
+    /// Retry hint attached to `Overloaded` rejections.
+    pub retry_after_ms: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            max_queue_per_worker: 64,
+            max_in_flight: 512,
+            max_retries: 2,
+            retry_after_ms: 50,
+        }
+    }
+}
+
+/// Why a submission was refused at the door.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control shed the request; retry after the hint.
+    Overloaded { retry_after_ms: u64 },
+    /// The router is draining; no new work is accepted.
+    ShuttingDown,
+    /// Every worker is dead (mid-restart window).
+    NoWorkers,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded (retry after {retry_after_ms} ms)")
+            }
+            SubmitError::ShuttingDown => write!(f, "shutting down"),
+            SubmitError::NoWorkers => write!(f, "no live workers"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Terminal failure of an accepted request (structured error line on
+/// the wire: `code` + `message` + optional retry hint).
+#[derive(Debug, Clone)]
+pub struct RequestError {
+    pub id: RequestId,
+    pub code: &'static str,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
+}
+
+/// Exactly-one terminal outcome per accepted request.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    Done(Response),
+    Failed(RequestError),
+}
+
+impl Outcome {
+    pub fn id(&self) -> RequestId {
+        match self {
+            Outcome::Done(r) => r.id,
+            Outcome::Failed(e) => e.id,
+        }
+    }
+}
 
 enum WorkerMsg {
-    Submit { prompt: Vec<u32>, params: GenerationParams, reply_id: Sender<RequestId> },
-    Shutdown,
+    Submit(Request),
+    Cancel(RequestId),
+    Shutdown { abort: bool },
 }
 
-struct Worker {
-    tx: Sender<WorkerMsg>,
-    handle: Option<JoinHandle<super::metrics::Metrics>>,
-    in_flight: Arc<AtomicUsize>,
+/// Per-worker mailbox + liveness, shared so a dying worker can reach
+/// survivors' inboxes when re-dispatching salvaged requests.
+struct WorkerState {
+    inbox: Mutex<VecDeque<WorkerMsg>>,
+    cv: Condvar,
+    /// Queued + running requests owned by this worker.
+    in_flight: AtomicUsize,
+    alive: AtomicBool,
 }
 
-/// Multi-worker router.
-pub struct Router {
-    workers: Vec<Worker>,
-    responses: Arc<Mutex<Vec<Response>>>,
-    completed: Arc<AtomicUsize>,
+#[derive(Default)]
+struct CompletionState {
+    ready: HashMap<RequestId, Outcome>,
+    completed: usize,
+}
+
+#[derive(Default)]
+struct Completions {
+    state: Mutex<CompletionState>,
+    cv: Condvar,
+}
+
+struct Shared {
+    model: Arc<Model>,
+    cfg: EngineConfig,
+    rcfg: RouterConfig,
+    workers: Vec<WorkerState>,
+    completions: Completions,
     submitted: AtomicUsize,
-    stopping: Arc<AtomicBool>,
+    next_id: AtomicU64,
+    stopping: AtomicBool,
+    // Router-level robustness counters, merged into Metrics at shutdown.
+    rejected: AtomicU64,
+    failed: AtomicU64,
+    cancelled_in_queue: AtomicU64,
+    worker_panics: AtomicU64,
+    worker_restarts: AtomicU64,
+    queue_depth_peak: AtomicU64,
+    /// Metrics from exited/panicked engines (each engine's counters are
+    /// merged here exactly once).
+    metrics: Mutex<Metrics>,
+}
+
+/// Mutex access that survives a poisoned lock (a panicking worker never
+/// holds these locks across engine code, but supervision should not be
+/// taken down by a poisoned mutex either way).
+fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Shared {
+    /// Least-loaded live worker; `respect_caps` also skips workers at
+    /// the queue bound.
+    fn pick_worker(&self, respect_caps: bool) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, w) in self.workers.iter().enumerate() {
+            if !w.alive.load(Ordering::Acquire) {
+                continue;
+            }
+            let load = w.in_flight.load(Ordering::Relaxed);
+            if respect_caps && load >= self.rcfg.max_queue_per_worker {
+                continue;
+            }
+            if best.map(|(_, b)| load < b).unwrap_or(true) {
+                best = Some((i, load));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn total_in_flight(&self) -> usize {
+        self.workers
+            .iter()
+            .map(|w| w.in_flight.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    fn note_queue_depth(&self) {
+        self.queue_depth_peak
+            .fetch_max(self.total_in_flight() as u64, Ordering::Relaxed);
+    }
+
+    fn enqueue(&self, widx: usize, msg: WorkerMsg) {
+        let w = &self.workers[widx];
+        lock_ok(&w.inbox).push_back(msg);
+        w.cv.notify_one();
+    }
+
+    /// Dispatch to the least-loaded live worker, ignoring queue caps
+    /// (used for salvage re-dispatch); returns the request when no
+    /// worker is live.
+    fn dispatch(&self, req: Request) -> Result<usize, Request> {
+        match self.pick_worker(false) {
+            Some(widx) => {
+                self.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
+                self.note_queue_depth();
+                self.enqueue(widx, WorkerMsg::Submit(req));
+                Ok(widx)
+            }
+            None => Err(req),
+        }
+    }
+
+    /// Record a terminal outcome and wake every waiter.
+    fn finish_outcome(&self, outcome: Outcome) {
+        {
+            let mut st = lock_ok(&self.completions.state);
+            st.ready.insert(outcome.id(), outcome);
+            st.completed += 1;
+        }
+        self.completions.cv.notify_all();
+    }
+
+    /// Outcome from worker `widx`: the request leaves its ledger.
+    fn publish(&self, widx: usize, outcome: Outcome) {
+        self.workers[widx].in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.finish_outcome(outcome);
+    }
+
+    /// Terminal structured error for a request no worker owns anymore.
+    fn fail(&self, id: RequestId, code: &'static str, message: String) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+        self.finish_outcome(Outcome::Failed(RequestError {
+            id,
+            code,
+            message,
+            retry_after_ms: None,
+        }));
+    }
+}
+
+/// Multi-worker router with supervision.
+pub struct Router {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Router {
-    /// Spawn `n_workers` engines over a shared model.
+    /// Spawn `n_workers` engines over a shared model with default
+    /// admission control.
     pub fn new(model: Arc<Model>, cfg: EngineConfig, n_workers: usize) -> Router {
+        Router::with_config(model, cfg, n_workers, RouterConfig::default())
+    }
+
+    pub fn with_config(
+        model: Arc<Model>,
+        cfg: EngineConfig,
+        n_workers: usize,
+        rcfg: RouterConfig,
+    ) -> Router {
         assert!(n_workers >= 1);
-        let responses: Arc<Mutex<Vec<Response>>> = Arc::default();
-        let completed = Arc::new(AtomicUsize::new(0));
-        let stopping = Arc::new(AtomicBool::new(false));
         let workers = (0..n_workers)
-            .map(|w| {
-                let (tx, rx) = channel::<WorkerMsg>();
-                let in_flight = Arc::new(AtomicUsize::new(0));
-                let handle = std::thread::Builder::new()
-                    .name(format!("engine-{w}"))
-                    .spawn({
-                        let model = model.clone();
-                        let mut wcfg = cfg;
-                        wcfg.seed = cfg.seed.wrapping_add(w as u64);
-                        wcfg.id_offset = (w as u64) << 40;
-                        let responses = responses.clone();
-                        let completed = completed.clone();
-                        let in_flight = in_flight.clone();
-                        let stopping = stopping.clone();
-                        move || {
-                            worker_loop(model, wcfg, rx, responses, completed, in_flight, stopping)
-                        }
-                    })
-                    .expect("spawn engine worker");
-                Worker { tx, handle: Some(handle), in_flight }
+            .map(|_| WorkerState {
+                inbox: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                in_flight: AtomicUsize::new(0),
+                alive: AtomicBool::new(true),
             })
             .collect();
-        Router {
+        let shared = Arc::new(Shared {
+            model,
+            cfg,
+            rcfg,
             workers,
-            responses,
-            completed,
+            completions: Completions::default(),
             submitted: AtomicUsize::new(0),
-            stopping,
+            next_id: AtomicU64::new(0),
+            stopping: AtomicBool::new(false),
+            rejected: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            cancelled_in_queue: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            queue_depth_peak: AtomicU64::new(0),
+            metrics: Mutex::new(Metrics::default()),
+        });
+        let handles = (0..n_workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("engine-{w}"))
+                    .spawn(move || worker_loop(w, shared))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Router { shared, handles: Mutex::new(handles) }
+    }
+
+    /// Submit to the least-loaded live worker. Sheds load (never
+    /// panics, never blocks on a worker) when the pool is saturated,
+    /// draining, or dead; ids are router-assigned and globally unique.
+    pub fn submit(
+        &self,
+        prompt: Vec<u32>,
+        params: GenerationParams,
+    ) -> Result<RequestId, SubmitError> {
+        let s = &self.shared;
+        if s.stopping.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        if s.total_in_flight() >= s.rcfg.max_in_flight {
+            s.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded { retry_after_ms: s.rcfg.retry_after_ms });
+        }
+        let Some(widx) = s.pick_worker(true) else {
+            let any_alive = s.workers.iter().any(|w| w.alive.load(Ordering::Acquire));
+            s.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(if any_alive {
+                SubmitError::Overloaded { retry_after_ms: s.rcfg.retry_after_ms }
+            } else {
+                SubmitError::NoWorkers
+            });
+        };
+        let id = s.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        s.submitted.fetch_add(1, Ordering::SeqCst);
+        s.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
+        s.note_queue_depth();
+        s.enqueue(widx, WorkerMsg::Submit(Request { id, prompt, params, attempts: 0 }));
+        Ok(id)
+    }
+
+    /// Cancel a request: if it is still queued in an inbox it is
+    /// removed there (terminal `Cancelled` outcome, true returned);
+    /// otherwise a cancel is broadcast so the owning engine aborts it
+    /// mid-decode (false — delivery is asynchronous, and a request that
+    /// already finished is a no-op).
+    pub fn cancel(&self, id: RequestId) -> bool {
+        let s = &self.shared;
+        for (widx, w) in s.workers.iter().enumerate() {
+            let removed = {
+                let mut inbox = lock_ok(&w.inbox);
+                let pos = inbox.iter().position(
+                    |m| matches!(m, WorkerMsg::Submit(r) if r.id == id),
+                );
+                pos.and_then(|p| inbox.remove(p))
+            };
+            if let Some(WorkerMsg::Submit(req)) = removed {
+                s.cancelled_in_queue.fetch_add(1, Ordering::Relaxed);
+                s.publish(
+                    widx,
+                    Outcome::Done(Response {
+                        id,
+                        tokens: Vec::new(),
+                        finish: FinishReason::Cancelled,
+                        latency_ms: 0.0,
+                        ttft_ms: 0.0,
+                        prompt_len: req.prompt.len(),
+                    }),
+                );
+                return true;
+            }
+        }
+        for (widx, w) in s.workers.iter().enumerate() {
+            if w.alive.load(Ordering::Acquire) {
+                s.enqueue(widx, WorkerMsg::Cancel(id));
+            }
+        }
+        false
+    }
+
+    /// Block (Condvar-signaled; no polling) until the request's
+    /// terminal outcome arrives or `timeout` elapses.
+    pub fn wait_for_outcome(&self, id: RequestId, timeout: Duration) -> Option<Outcome> {
+        let s = &self.shared;
+        let deadline = Instant::now() + timeout;
+        let mut st = lock_ok(&s.completions.state);
+        loop {
+            if let Some(o) = st.ready.remove(&id) {
+                return Some(o);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = s
+                .completions
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
         }
     }
 
-    /// Submit to the least-loaded worker; blocks only for id assignment.
-    pub fn submit(&self, prompt: Vec<u32>, params: GenerationParams) -> RequestId {
-        let widx = self
+    /// Completed / submitted counts (completed includes failures and
+    /// cancellations — every accepted request reaches one outcome).
+    pub fn progress(&self) -> (usize, usize) {
+        let done = lock_ok(&self.shared.completions.state).completed;
+        (done, self.shared.submitted.load(Ordering::SeqCst))
+    }
+
+    /// Queued + running requests across the pool (gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.total_in_flight()
+    }
+
+    /// Workers currently accepting work.
+    pub fn alive_workers(&self) -> usize {
+        self.shared
             .workers
             .iter()
-            .enumerate()
-            .min_by_key(|(_, w)| w.in_flight.load(Ordering::Relaxed))
-            .map(|(i, _)| i)
-            .unwrap();
-        let w = &self.workers[widx];
-        w.in_flight.fetch_add(1, Ordering::Relaxed);
-        self.submitted.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = channel();
-        w.tx
-            .send(WorkerMsg::Submit { prompt, params, reply_id: reply_tx })
-            .expect("worker alive");
-        // Ids are globally unique: each engine numbers from widx << 40.
-        reply_rx.recv().expect("worker replies")
+            .filter(|w| w.alive.load(Ordering::Acquire))
+            .count()
     }
 
-    /// Completed / submitted counts.
-    pub fn progress(&self) -> (usize, usize) {
-        (
-            self.completed.load(Ordering::Relaxed),
-            self.submitted.load(Ordering::Relaxed),
-        )
-    }
-
-    /// Drain all responses accumulated so far.
+    /// Drain all successful responses accumulated so far.
     pub fn take_responses(&self) -> Vec<Response> {
-        std::mem::take(&mut *self.responses.lock().unwrap())
+        let mut st = lock_ok(&self.shared.completions.state);
+        let ids: Vec<RequestId> = st
+            .ready
+            .iter()
+            .filter(|(_, o)| matches!(o, Outcome::Done(_)))
+            .map(|(&k, _)| k)
+            .collect();
+        ids.into_iter()
+            .filter_map(|k| match st.ready.remove(&k) {
+                Some(Outcome::Done(r)) => Some(r),
+                _ => None,
+            })
+            .collect()
     }
 
-    /// Remove and return the response with the given id, if present.
+    /// Drain all terminal failures accumulated so far.
+    pub fn take_failures(&self) -> Vec<RequestError> {
+        let mut st = lock_ok(&self.shared.completions.state);
+        let ids: Vec<RequestId> = st
+            .ready
+            .iter()
+            .filter(|(_, o)| matches!(o, Outcome::Failed(_)))
+            .map(|(&k, _)| k)
+            .collect();
+        ids.into_iter()
+            .filter_map(|k| match st.ready.remove(&k) {
+                Some(Outcome::Failed(e)) => Some(e),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Remove and return the successful response with this id, if
+    /// present.
     pub fn take_response_by_id(&self, id: RequestId) -> Option<Response> {
-        let mut guard = self.responses.lock().unwrap();
-        let pos = guard.iter().position(|r| r.id == id)?;
-        Some(guard.swap_remove(pos))
+        let mut st = lock_ok(&self.shared.completions.state);
+        match st.ready.get(&id) {
+            Some(Outcome::Done(_)) => match st.ready.remove(&id) {
+                Some(Outcome::Done(r)) => Some(r),
+                _ => None,
+            },
+            _ => None,
+        }
     }
 
-    /// Block until every submitted request completes.
+    /// Block until every accepted request has a terminal outcome
+    /// (Condvar-signaled — no sleep-polling).
     pub fn wait_idle(&self) {
-        loop {
-            let (done, sub) = self.progress();
-            if done >= sub {
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(2));
+        let s = &self.shared;
+        let mut st = lock_ok(&s.completions.state);
+        while st.completed < s.submitted.load(Ordering::SeqCst) {
+            st = s
+                .completions
+                .cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 
-    /// Stop workers and merge their metrics.
-    pub fn shutdown(mut self) -> super::metrics::Metrics {
-        self.stopping.store(true, Ordering::SeqCst);
-        for w in &self.workers {
-            let _ = w.tx.send(WorkerMsg::Shutdown);
+    /// Graceful shutdown: stop admitting, let workers drain, merge
+    /// their metrics. Blocks until all in-flight work completes.
+    pub fn shutdown(self) -> Metrics {
+        self.shutdown_inner(None)
+    }
+
+    /// Drain-then-abort shutdown: in-flight work gets `drain` to
+    /// finish, then survivors are aborted (each still gets a terminal
+    /// `Aborted` outcome).
+    pub fn shutdown_within(self, drain: Duration) -> Metrics {
+        self.shutdown_inner(Some(drain))
+    }
+
+    fn shutdown_inner(self, drain: Option<Duration>) -> Metrics {
+        let s = &self.shared;
+        s.stopping.store(true, Ordering::SeqCst);
+        for widx in 0..s.workers.len() {
+            s.enqueue(widx, WorkerMsg::Shutdown { abort: false });
         }
-        let mut merged = super::metrics::Metrics::default();
-        for w in &mut self.workers {
-            if let Some(h) = w.handle.take() {
-                if let Ok(m) = h.join() {
-                    merged.merge(&m);
+        if let Some(d) = drain {
+            let deadline = Instant::now() + d;
+            let mut st = lock_ok(&s.completions.state);
+            while st.completed < s.submitted.load(Ordering::SeqCst) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = s
+                    .completions
+                    .cv
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = guard;
+            }
+            let drained = st.completed >= s.submitted.load(Ordering::SeqCst);
+            drop(st);
+            if !drained {
+                for widx in 0..s.workers.len() {
+                    s.enqueue(widx, WorkerMsg::Shutdown { abort: true });
                 }
             }
         }
+        let handles = std::mem::take(&mut *lock_ok(&self.handles));
+        for h in handles {
+            if h.join().is_err() {
+                // A worker died outside its catch_unwind (should not
+                // happen): count it instead of silently dropping.
+                s.worker_panics.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let mut merged = Metrics::default();
+        merged.merge(&lock_ok(&s.metrics));
+        merged.requests_rejected += s.rejected.load(Ordering::Relaxed);
+        merged.requests_failed += s.failed.load(Ordering::Relaxed);
+        merged.disconnect_aborts += s.cancelled_in_queue.load(Ordering::Relaxed);
+        merged.worker_panics += s.worker_panics.load(Ordering::Relaxed);
+        merged.worker_restarts += s.worker_restarts.load(Ordering::Relaxed);
+        merged.queue_depth_peak = merged
+            .queue_depth_peak
+            .max(s.queue_depth_peak.load(Ordering::Relaxed));
         merged
     }
 }
 
-fn worker_loop(
-    model: Arc<Model>,
-    cfg: EngineConfig,
-    rx: Receiver<WorkerMsg>,
-    responses: Arc<Mutex<Vec<Response>>>,
-    completed: Arc<AtomicUsize>,
-    in_flight: Arc<AtomicUsize>,
-    stopping: Arc<AtomicBool>,
-) -> super::metrics::Metrics {
-    let mut engine = Engine::new(model, cfg);
+/// Per-worker engine: distinct seed, a disjoint id range for any
+/// engine-assigned ids, and only this worker's slice of the fault plan.
+fn worker_engine(shared: &Shared, widx: usize, faults: FaultPlan) -> Engine {
+    let mut wcfg = shared.cfg;
+    wcfg.seed = shared.cfg.seed.wrapping_add(widx as u64);
+    wcfg.id_offset = ((widx as u64) + 1) << 40;
+    // Engine-side queue bound: above the router cap (salvage re-dispatch
+    // may overshoot it) but still finite.
+    wcfg.scheduler.max_waiting = wcfg
+        .scheduler
+        .max_waiting
+        .min(shared.rcfg.max_queue_per_worker.saturating_mul(2).saturating_add(8));
+    wcfg.faults = faults;
+    Engine::new(shared.model.clone(), wcfg)
+}
+
+fn worker_loop(widx: usize, shared: Arc<Shared>) {
+    let me = &shared.workers[widx];
+    let mut engine = worker_engine(&shared, widx, shared.cfg.faults.for_worker(widx));
     let mut shutdown = false;
+    let mut abort = false;
     loop {
-        // Drain the inbox (non-blocking while busy; blocking when idle).
-        loop {
-            let msg = if engine.has_work() || shutdown {
-                match rx.try_recv() {
-                    Ok(m) => m,
-                    Err(_) => break,
-                }
-            } else {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => {
-                        shutdown = true;
-                        break;
-                    }
-                }
-            };
-            match msg {
-                WorkerMsg::Submit { prompt, params, reply_id } => {
-                    let id = engine.submit(prompt, params);
-                    let _ = reply_id.send(id);
-                }
-                WorkerMsg::Shutdown => shutdown = true,
+        // Collect inbox messages, blocking only when fully idle.
+        let mut msgs: Vec<WorkerMsg> = Vec::new();
+        {
+            let mut inbox = lock_ok(&me.inbox);
+            while inbox.is_empty() && !engine.has_work() && !shutdown {
+                inbox = me.cv.wait(inbox).unwrap_or_else(|e| e.into_inner());
+            }
+            while let Some(m) = inbox.pop_front() {
+                msgs.push(m);
             }
         }
-        if engine.has_work() {
-            engine.step();
-            let done = engine.take_finished();
-            if !done.is_empty() {
-                completed.fetch_add(done.len(), Ordering::Relaxed);
-                in_flight.fetch_sub(done.len(), Ordering::Relaxed);
-                responses.lock().unwrap().extend(done);
+        for m in &msgs {
+            if let WorkerMsg::Shutdown { abort: a } = m {
+                shutdown = true;
+                abort = abort || *a;
             }
-        } else if shutdown || stopping.load(Ordering::Relaxed) {
+        }
+        // One engine turn — message application plus a step — under
+        // catch_unwind so a panic (injected or real) stays contained.
+        let turn = catch_unwind(AssertUnwindSafe(|| {
+            let mut rejected: Vec<Request> = Vec::new();
+            for m in msgs {
+                match m {
+                    WorkerMsg::Submit(req) => {
+                        if let Err(req) = engine.submit_request(req) {
+                            rejected.push(req);
+                        }
+                    }
+                    WorkerMsg::Cancel(id) => {
+                        engine.cancel(id);
+                    }
+                    WorkerMsg::Shutdown { .. } => {}
+                }
+            }
+            if abort {
+                engine.abort_all();
+            }
+            if engine.has_work() {
+                engine.step();
+            }
+            (engine.take_finished(), rejected)
+        }));
+        match turn {
+            Ok((done, rejected)) => {
+                for resp in done {
+                    shared.publish(widx, Outcome::Done(resp));
+                }
+                for req in rejected {
+                    shared.rejected.fetch_add(1, Ordering::Relaxed);
+                    shared.failed.fetch_add(1, Ordering::Relaxed);
+                    shared.publish(
+                        widx,
+                        Outcome::Failed(RequestError {
+                            id: req.id,
+                            code: "overloaded",
+                            message: "worker queue full".to_string(),
+                            retry_after_ms: Some(shared.rcfg.retry_after_ms),
+                        }),
+                    );
+                }
+            }
+            Err(_) => {
+                engine = recover_from_panic(widx, &shared, engine);
+                continue;
+            }
+        }
+        if shutdown && !engine.has_work() {
             break;
         }
     }
-    engine.metrics.clone()
+    // Merge final metrics; count KV blocks the drained engine failed to
+    // return (0 in a correct engine — cross-checked against the
+    // allocator's debug ledger).
+    let leaked = engine.reclaim_and_count_leaks();
+    let mut m = engine.metrics.clone();
+    m.kv_blocks_leaked += leaked as u64;
+    lock_ok(&shared.metrics).merge(&m);
+    me.alive.store(false, Ordering::Release);
+}
+
+/// Supervision: contain a worker panic. Salvages the dead engine's
+/// requests, restarts the worker in place with a fresh engine (fault
+/// plan cleared so deterministic faults fire once), re-dispatches
+/// never-decoded requests within the retry budget, and fails the rest
+/// with a structured error.
+fn recover_from_panic(widx: usize, shared: &Shared, mut engine: Engine) -> Engine {
+    let me = &shared.workers[widx];
+    me.alive.store(false, Ordering::Release);
+    shared.worker_panics.fetch_add(1, Ordering::Relaxed);
+    let (retry, dead) = engine.salvage();
+    me.in_flight
+        .fetch_sub(retry.len() + dead.len(), Ordering::Relaxed);
+    let (redispatch, exhausted): (Vec<Request>, Vec<Request>) =
+        retry.into_iter().partition(|r| r.attempts < shared.rcfg.max_retries);
+    // The panicked engine's counters survive (the old shutdown bug
+    // dropped them); re-dispatched requests will be counted as
+    // submissions by their new engine, so they leave this snapshot.
+    let mut m = engine.metrics.clone();
+    m.requests_submitted = m.requests_submitted.saturating_sub(redispatch.len() as u64);
+    lock_ok(&shared.metrics).merge(&m);
+    drop(engine); // pool/radix state is untrusted — discard wholesale
+    let fresh = worker_engine(shared, widx, FaultPlan::none());
+    shared.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    me.alive.store(true, Ordering::Release);
+    for mut req in redispatch {
+        req.attempts += 1;
+        if let Err(req) = shared.dispatch(req) {
+            shared.fail(
+                req.id,
+                "worker_failed",
+                "worker panicked and no live worker could take the retry".to_string(),
+            );
+        }
+    }
+    for req in exhausted {
+        shared.fail(
+            req.id,
+            "worker_failed",
+            "worker panicked; retry budget exhausted".to_string(),
+        );
+    }
+    for req in dead {
+        shared.fail(
+            req.id,
+            "worker_failed",
+            "worker panicked mid-generation".to_string(),
+        );
+    }
+    fresh
 }

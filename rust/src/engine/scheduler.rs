@@ -29,6 +29,12 @@ pub struct SchedulerConfig {
     /// would eat the last pages is simply skipped; the prefix can be
     /// republished by a later sequence once pressure eases).
     pub prefix_headroom_blocks: usize,
+    /// Bound on the engine's private waiting queue:
+    /// `Engine::submit_request` rejects (returning the request) once
+    /// this many sequences are queued. Defense in depth behind the
+    /// router's admission control; the default is effectively unbounded
+    /// so direct `Engine::submit` users keep the old semantics.
+    pub max_waiting: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -39,6 +45,7 @@ impl Default for SchedulerConfig {
             step_token_budget: 256,
             preempt: PreemptPolicy::Youngest,
             prefix_headroom_blocks: 1,
+            max_waiting: usize::MAX,
         }
     }
 }

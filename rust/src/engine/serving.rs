@@ -44,6 +44,84 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the worker thread mid-step (exercises `catch_unwind`
+    /// supervision in the router).
+    Panic,
+    /// One-shot sleep of `ms` milliseconds at the trigger step.
+    Delay { ms: u32 },
+    /// Sleep `ms` milliseconds at the trigger step **and every step
+    /// after** — a wedged-but-alive worker.
+    Stall { ms: u32 },
+}
+
+/// One deterministic fault: fire `kind` on worker `worker` when its
+/// engine reaches step `step` (1-based; `Engine::step` counts calls).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fault {
+    pub worker: u32,
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// Max faults a plan can hold (fixed array keeps `EngineConfig: Copy`).
+pub const MAX_FAULTS: usize = 4;
+
+/// Deterministic fault-injection plan, carried in [`EngineConfig`] so
+/// supervision is testable: the router filters the plan per worker, and
+/// clears it on the replacement engine after a caught panic so each
+/// fault fires exactly once.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    entries: [Option<Fault>; MAX_FAULTS],
+}
+
+impl FaultPlan {
+    /// The empty plan (also `Default`).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Add a fault (builder style). Panics past [`MAX_FAULTS`] entries.
+    pub fn with(mut self, f: Fault) -> FaultPlan {
+        for slot in self.entries.iter_mut() {
+            if slot.is_none() {
+                *slot = Some(f);
+                return self;
+            }
+        }
+        panic!("FaultPlan holds at most {MAX_FAULTS} faults");
+    }
+
+    /// The sub-plan targeting one worker.
+    pub fn for_worker(&self, worker: usize) -> FaultPlan {
+        let mut out = FaultPlan::default();
+        for f in self.entries.into_iter().flatten() {
+            if f.worker as usize == worker {
+                out = out.with(f);
+            }
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.iter().all(|e| e.is_none())
+    }
+
+    /// The fault firing at `step`, if any (plan already filtered to this
+    /// worker). `Panic`/`Delay` fire at their exact step; `Stall` fires
+    /// at its step and every later one.
+    pub fn fire_at(&self, step: u64) -> Option<FaultKind> {
+        self.entries.into_iter().flatten().find_map(|f| match f.kind {
+            FaultKind::Panic | FaultKind::Delay { .. } if step == f.step => Some(f.kind),
+            FaultKind::Stall { .. } if step >= f.step => Some(f.kind),
+            _ => None,
+        })
+    }
+}
+
 /// Engine configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
@@ -74,6 +152,10 @@ pub struct EngineConfig {
     /// 0 → one per available core, 1 → serial. Outputs are identical
     /// either way (deterministic shard merge).
     pub decode_threads: usize,
+    /// Deterministic fault injection (empty in production). The engine
+    /// consults the plan at the top of every `step`; the router filters
+    /// it per worker.
+    pub faults: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -88,6 +170,7 @@ impl Default for EngineConfig {
             seed: 0,
             id_offset: 0,
             decode_threads: 0,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -130,6 +213,8 @@ pub struct Engine {
     rng: crate::util::rng::Rng,
     pub metrics: Metrics,
     next_id: RequestId,
+    /// `step()` calls so far (drives deterministic fault injection).
+    steps: u64,
 }
 
 impl Engine {
@@ -157,6 +242,7 @@ impl Engine {
             rng: crate::util::rng::Rng::new(cfg.seed),
             metrics: Metrics::default(),
             next_id: cfg.id_offset + 1,
+            steps: 0,
             model,
             cfg,
         }
@@ -178,19 +264,37 @@ impl Engine {
             folded: 0,
             prefix: Vec::new(),
             prefix_len: 0,
+            attempts: req.attempts,
         }
     }
 
-    /// Submit a request; returns its id.
+    /// Submit a request; returns its id. Engine-assigned ids start at
+    /// `cfg.id_offset + 1`; this path never rejects (the bounded-queue
+    /// entry point is [`Engine::submit_request`]).
     pub fn submit(&mut self, prompt: Vec<u32>, params: GenerationParams) -> RequestId {
         let id = self.next_id;
         self.next_id += 1;
-        let req = Request { id, prompt, params };
+        self.enqueue_request(Request { id, prompt, params, attempts: 0 });
+        id
+    }
+
+    /// Submit a caller-assigned request, rejecting (and returning it)
+    /// when the waiting queue is at `scheduler.max_waiting` — the
+    /// per-worker bound behind the router's admission control.
+    pub fn submit_request(&mut self, req: Request) -> Result<RequestId, Request> {
+        if self.waiting.len() >= self.cfg.scheduler.max_waiting {
+            return Err(req);
+        }
+        let id = req.id;
+        self.enqueue_request(req);
+        Ok(id)
+    }
+
+    fn enqueue_request(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
         let seq = self.new_sequence(req);
         self.waiting.push_back(seq);
-        id
     }
 
     /// Whether any work remains.
@@ -226,6 +330,19 @@ impl Engine {
     /// attention sweep together, grouped by shared prefix chain.
     pub fn step(&mut self) -> usize {
         let t0 = Instant::now();
+        self.steps += 1;
+        if let Some(kind) = self.cfg.faults.fire_at(self.steps) {
+            match kind {
+                FaultKind::Panic => panic!(
+                    "injected fault: worker panic at engine step {}",
+                    self.steps
+                ),
+                FaultKind::Delay { ms } | FaultKind::Stall { ms } => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms as u64));
+                }
+            }
+        }
+        self.abort_expired();
         self.admit();
         let model = Arc::clone(&self.model);
         let mut tokens = 0usize;
@@ -508,6 +625,116 @@ impl Engine {
                 }
             }
         }
+    }
+
+    /// Remove waiting[j], release anything it holds, and emit a terminal
+    /// response. (Waiting sequences normally hold no blocks or chain
+    /// refs; releasing is defensive.)
+    fn drop_waiting(&mut self, j: usize, reason: FinishReason) {
+        let mut seq = self.waiting.remove(j).expect("index in bounds");
+        self.store.pool.release(&mut seq.blocks);
+        self.store.radix.deref_chain(&seq.prefix);
+        seq.prefix.clear();
+        seq.prefix_len = 0;
+        self.emit_response(seq, reason);
+    }
+
+    /// Abort every sequence — running or waiting — past its deadline,
+    /// releasing its KV blocks and chain references. Runs at the top of
+    /// each step, so an expired sequence never burns another decode.
+    fn abort_expired(&mut self) {
+        let now = Instant::now();
+        let expired = |p: &GenerationParams| p.deadline.is_some_and(|d| now >= d);
+        let mut i = 0;
+        while i < self.running.len() {
+            if expired(&self.running[i].params) {
+                self.metrics.deadline_aborts += 1;
+                self.finish(i, FinishReason::DeadlineExceeded);
+                // finish() swap_removes: recheck index i.
+            } else {
+                i += 1;
+            }
+        }
+        let mut j = 0;
+        while j < self.waiting.len() {
+            if expired(&self.waiting[j].params) {
+                self.metrics.deadline_aborts += 1;
+                self.drop_waiting(j, FinishReason::DeadlineExceeded);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
+    /// Cancel a request wherever it lives (running or waiting); returns
+    /// true if found. The request still reaches exactly one terminal
+    /// outcome: a `Cancelled` response carrying whatever was generated.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(i) = self.running.iter().position(|s| s.id == id) {
+            self.metrics.disconnect_aborts += 1;
+            self.finish(i, FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(j) = self.waiting.iter().position(|s| s.id == id) {
+            self.metrics.disconnect_aborts += 1;
+            self.drop_waiting(j, FinishReason::Cancelled);
+            return true;
+        }
+        false
+    }
+
+    /// Abort everything in flight (forced shutdown after the drain
+    /// window expires). Every sequence gets an `Aborted` response.
+    pub fn abort_all(&mut self) {
+        while !self.waiting.is_empty() {
+            self.drop_waiting(0, FinishReason::Aborted);
+        }
+        while !self.running.is_empty() {
+            self.finish(0, FinishReason::Aborted);
+        }
+    }
+
+    /// Drain every in-flight request after a caught panic. Returns
+    /// `(retryable, failed)`: retryable requests never produced a
+    /// visible token (safe to re-dispatch verbatim to a survivor); the
+    /// rest had progress a replay could not reproduce and must be
+    /// answered with a structured error. Pool/radix state is *not*
+    /// released — the caller discards the whole engine.
+    pub fn salvage(&mut self) -> (Vec<Request>, Vec<Request>) {
+        let mut retry = Vec::new();
+        let mut dead = Vec::new();
+        let drained: Vec<Sequence> =
+            self.waiting.drain(..).chain(self.running.drain(..)).collect();
+        for seq in drained {
+            let fresh = seq.generated.is_empty() && seq.folded == 0;
+            let req = Request {
+                id: seq.id,
+                prompt: seq.prompt,
+                params: seq.params,
+                attempts: seq.attempts,
+            };
+            if fresh {
+                retry.push(req);
+            } else {
+                dead.push(req);
+            }
+        }
+        (retry, dead)
+    }
+
+    /// After a full drain: evict every cached prefix and report KV
+    /// blocks still held — the leak count (0 in a correct engine),
+    /// cross-checked against the allocator's debug ledger.
+    pub fn reclaim_and_count_leaks(&mut self) -> usize {
+        assert!(!self.has_work(), "leak check requires a drained engine");
+        let evicted = self.store.make_room(usize::MAX);
+        self.metrics.prefix_segments_evicted += evicted as u64;
+        let leaked =
+            self.store.pool.total_blocks() - self.store.pool.free_blocks();
+        if leaked == 0 {
+            self.store.pool.debug_assert_all_free();
+        }
+        leaked
     }
 
     /// Admit waiting sequences while there is batch room and pool room

@@ -122,6 +122,12 @@ impl PagePool {
         self.alloc.release(blocks)
     }
 
+    /// Debug-build cross-check: every block accounted free in the
+    /// allocator's ledger (no-op in release builds).
+    pub fn debug_assert_all_free(&self) {
+        self.alloc.debug_assert_all_free()
+    }
+
     // --- segment lifecycle ---
 
     /// Number of live segments.

@@ -9,13 +9,13 @@
 
 use anyhow::{Context, Result};
 use hsr_attn::attention::{AttentionConfig, AttentionKind};
-use hsr_attn::engine::{EngineConfig, GenerationParams, Router};
+use hsr_attn::engine::{EngineConfig, GenerationParams, Router, RouterConfig};
 use hsr_attn::hsr::HsrBackend;
 use hsr_attn::kvstore::PrefixCacheMode;
 use hsr_attn::model::tokenizer::ByteTokenizer;
 use hsr_attn::model::transformer::AttentionPolicy;
 use hsr_attn::model::Model;
-use hsr_attn::server::Server;
+use hsr_attn::server::{Server, ServerConfig};
 use hsr_attn::util::cli::Args;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -25,7 +25,10 @@ const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
   --policy  <dense|sparse|topr=R>                      attention policy\n\
   --decode-threads <N>                                 batched decode sweep (0 = auto)\n\
   --prefix-cache <on|off|tokens>                       shared-prefix KV cache\n\
-                                                       (tokens = min match to adopt)";
+                                                       (tokens = min match to adopt)\n\
+  --max-queue <N> --max-in-flight <N>                  admission-control caps (serve)\n\
+  --max-connections <N>                                live-connection cap (serve)\n\
+  --deadline-ms <N>                                    request deadline (generate)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or(
@@ -89,11 +92,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let workers = args.usize_or("workers", 2);
     let addr = args.str_or("addr", "127.0.0.1:7070");
-    let router = Arc::new(Router::new(model, engine_config(args), workers));
-    let server = Server::bind(router, addr)?;
+    let rcfg = RouterConfig {
+        max_queue_per_worker: args.usize_or("max-queue", 64),
+        max_in_flight: args.usize_or("max-in-flight", 512),
+        ..Default::default()
+    };
+    let scfg = ServerConfig {
+        max_connections: args.usize_or("max-connections", 64),
+        ..Default::default()
+    };
+    let router =
+        Arc::new(Router::with_config(model, engine_config(args), workers, rcfg));
+    let server = Server::bind_with(router, addr, scfg)?;
     println!("hsr-attn serving on {} ({} workers)", server.local_addr()?, workers);
     println!("protocol: one JSON object per line, e.g.");
-    println!("  {{\"prompt\":\"the merchant carries \",\"max_new_tokens\":32}}");
+    println!("  {{\"prompt\":\"the merchant carries \",\"max_new_tokens\":32,\"deadline_ms\":2000}}");
     server.serve()
 }
 
@@ -102,14 +115,21 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let prompt_text = args.str_or("prompt", "the merchant carries ");
     let tokenizer = ByteTokenizer;
     let router = Router::new(model, engine_config(args), 1);
-    router.submit(
-        tokenizer.encode(prompt_text),
-        GenerationParams {
-            max_new_tokens: args.usize_or("gen", 48),
-            temperature: args.f64_or("temperature", 0.0) as f32,
-            stop_token: None,
-        },
-    );
+    let deadline_ms = args.usize_or("deadline-ms", 0);
+    router
+        .submit(
+            tokenizer.encode(prompt_text),
+            GenerationParams {
+                max_new_tokens: args.usize_or("gen", 48),
+                temperature: args.f64_or("temperature", 0.0) as f32,
+                stop_token: None,
+                deadline: (deadline_ms > 0).then(|| {
+                    std::time::Instant::now()
+                        + std::time::Duration::from_millis(deadline_ms as u64)
+                }),
+            },
+        )
+        .map_err(|e| anyhow::anyhow!("submit rejected: {e}"))?;
     router.wait_idle();
     let resp = router.take_responses().pop().context("no response")?;
     println!("prompt: {prompt_text}");

@@ -1,38 +1,88 @@
 //! TCP JSON-lines serving front-end.
 //!
 //! Protocol (one JSON object per line):
-//!   → {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0}
+//!   → {"prompt": "...", "max_new_tokens": 32, "temperature": 0.0,
+//!      "deadline_ms": 2000}
 //!   ← {"id": 7, "text": "...", "latency_ms": 12.3, "ttft_ms": 4.5,
 //!      "finish": "length", "prompt_len": 40}
+//!   ← {"error": "server overloaded", "code": "overloaded",
+//!      "retry_after_ms": 50}
 //!
 //! Connections are handled by a thread each; generation runs on the
-//! router's engine workers (std::thread + mpsc — the vendored dependency
-//! set has no tokio; see DESIGN.md).
+//! router's supervised engine workers (std::thread — the vendored
+//! dependency set has no tokio; see DESIGN.md). The accept loop reaps
+//! finished connection threads, caps live connections (shedding the
+//! excess with an `overloaded` error line), and on stop drains
+//! connections for a bounded window before shutting their sockets.
+//! Request waits are Condvar-driven ([`Router::wait_for_outcome`]) with
+//! a periodic disconnect probe: a client that goes away mid-generation
+//! gets its request cancelled so it stops burning decode steps.
 
 pub mod protocol;
 
-use crate::engine::{GenerationParams, Response, Router};
+use crate::engine::{GenerationParams, Outcome, RequestId, Router, SubmitError};
 use crate::model::tokenizer::ByteTokenizer;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
-pub use protocol::{parse_request, render_response, WireRequest};
+pub use protocol::{
+    parse_request, render_error, render_request, render_response, WireRequest,
+};
+
+/// Connection-handling knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Live connections beyond this are shed with an `overloaded` line.
+    pub max_connections: usize,
+    /// Per-connection socket read timeout; idle connections wake at
+    /// this cadence to notice a server stop.
+    pub read_timeout: Duration,
+    /// Request lines longer than this draw a `line_too_long` error and
+    /// close the connection (bounds per-connection memory).
+    pub max_line_bytes: usize,
+    /// Graceful-stop drain: in-flight connections get this long to
+    /// finish before their sockets are shut down.
+    pub drain: Duration,
+    /// Server-side cap on one request's total wait (deadline of last
+    /// resort when the client sets none).
+    pub request_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_connections: 64,
+            read_timeout: Duration::from_millis(200),
+            max_line_bytes: 64 * 1024,
+            drain: Duration::from_secs(5),
+            request_timeout: Duration::from_secs(120),
+        }
+    }
+}
 
 /// Serving front-end over a [`Router`].
 pub struct Server {
     router: Arc<Router>,
     listener: TcpListener,
     stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
 }
 
 impl Server {
-    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port) with
+    /// default connection handling.
     pub fn bind(router: Arc<Router>, addr: &str) -> Result<Server> {
+        Server::bind_with(router, addr, ServerConfig::default())
+    }
+
+    pub fn bind_with(router: Arc<Router>, addr: &str, cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        Ok(Server { router, listener, stop: Arc::new(AtomicBool::new(false)) })
+        Ok(Server { router, listener, stop: Arc::new(AtomicBool::new(false)), cfg })
     }
 
     /// The bound address (for ephemeral ports).
@@ -45,23 +95,57 @@ impl Server {
         self.stop.clone()
     }
 
-    /// Accept loop; one thread per connection. Blocks until stopped.
+    /// Accept loop; one thread per connection, reaped each iteration.
+    /// Blocks until stopped, then drains connections for `cfg.drain`
+    /// before forcing their sockets shut.
     pub fn serve(&self) -> Result<()> {
         self.listener.set_nonblocking(true)?;
-        let mut handles = Vec::new();
+        let live = Arc::new(AtomicUsize::new(0));
+        // Socket registry for the forced phase of shutdown; each
+        // connection removes its own entry on exit.
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::default();
+        let mut next_token: u64 = 0;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         while !self.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
+                    handles.retain(|h| !h.is_finished());
+                    if live.load(Ordering::Relaxed) >= self.cfg.max_connections {
+                        shed_connection(stream);
+                        continue;
+                    }
+                    let token = next_token;
+                    next_token += 1;
+                    if let Ok(clone) = stream.try_clone() {
+                        conns.lock().unwrap_or_else(|e| e.into_inner()).insert(token, clone);
+                    }
                     let router = self.router.clone();
+                    let cfg = self.cfg;
+                    let stop = self.stop.clone();
+                    let live2 = live.clone();
+                    let conns2 = conns.clone();
+                    live.fetch_add(1, Ordering::Relaxed);
                     handles.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, router);
+                        let _ = handle_conn(stream, router, cfg, stop);
+                        conns2.lock().unwrap_or_else(|e| e.into_inner()).remove(&token);
+                        live2.fetch_sub(1, Ordering::Relaxed);
                     }));
                 }
-                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(5));
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    handles.retain(|h| !h.is_finished());
+                    std::thread::sleep(Duration::from_millis(5));
                 }
                 Err(e) => return Err(e.into()),
             }
+        }
+        // Drain-then-abort: give in-flight connections a bounded window,
+        // then shut their sockets so blocked reads/writes fail fast.
+        let deadline = Instant::now() + self.cfg.drain;
+        while live.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        for s in conns.lock().unwrap_or_else(|e| e.into_inner()).values() {
+            let _ = s.shutdown(Shutdown::Both);
         }
         for h in handles {
             let _ = h.join();
@@ -70,49 +154,190 @@ impl Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, router: Arc<Router>) -> Result<()> {
+/// Refuse a connection beyond the cap with a structured error line.
+fn shed_connection(mut stream: TcpStream) {
+    let line = render_error("overloaded", "connection limit reached", Some(100));
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+enum LineRead {
+    Line(String),
+    /// Orderly EOF or server stop.
+    Closed,
+    TooLong,
+    Err,
+}
+
+/// Read one `\n`-terminated line of at most `cap` bytes. Socket read
+/// timeouts are idle polls (checking the stop flag), not errors.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    cap: usize,
+    stop: &AtomicBool,
+) -> LineRead {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (take, saw_newline, eof) = match reader.fill_buf() {
+            Ok(chunk) if chunk.is_empty() => (0, false, true),
+            Ok(chunk) => {
+                let nl = chunk.iter().position(|&b| b == b'\n');
+                let take = nl.map(|p| p + 1).unwrap_or(chunk.len());
+                buf.extend_from_slice(&chunk[..take]);
+                (take, nl.is_some(), false)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if stop.load(Ordering::Relaxed) {
+                    return LineRead::Closed;
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return LineRead::Err,
+        };
+        reader.consume(take);
+        if eof {
+            // A partial unterminated line at EOF is dropped.
+            return LineRead::Closed;
+        }
+        if buf.len() > cap {
+            return LineRead::TooLong;
+        }
+        if saw_newline {
+            let mut s = String::from_utf8_lossy(&buf).into_owned();
+            if s.ends_with('\n') {
+                s.pop();
+            }
+            if s.ends_with('\r') {
+                s.pop();
+            }
+            return LineRead::Line(s);
+        }
+    }
+}
+
+/// Nonblocking probe for a vanished client: orderly EOF or a socket
+/// error while a request is in flight means nobody is listening.
+fn client_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+enum Wait {
+    Outcome(Outcome),
+    ClientGone,
+    TimedOut,
+}
+
+/// Condvar-signaled wait on the completion table, waking periodically
+/// only to probe for a disconnected client.
+fn await_outcome(router: &Router, stream: &TcpStream, id: RequestId, cap: Duration) -> Wait {
+    let deadline = Instant::now() + cap;
+    loop {
+        if let Some(o) = router.wait_for_outcome(id, Duration::from_millis(50)) {
+            return Wait::Outcome(o);
+        }
+        if client_gone(stream) {
+            return Wait::ClientGone;
+        }
+        if Instant::now() >= deadline {
+            return Wait::TimedOut;
+        }
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    router: Arc<Router>,
+    cfg: ServerConfig,
+    stop: Arc<AtomicBool>,
+) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(cfg.read_timeout)).ok();
     let tokenizer = ByteTokenizer;
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let line = line?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream.try_clone()?;
+    loop {
+        let line = match read_line_bounded(&mut reader, cfg.max_line_bytes, &stop) {
+            LineRead::Line(l) => l,
+            LineRead::Closed | LineRead::Err => break,
+            LineRead::TooLong => {
+                let msg = render_error(
+                    "line_too_long",
+                    &format!("request line exceeds {} bytes", cfg.max_line_bytes),
+                    None,
+                );
+                let _ = write_line(&mut writer, &msg);
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
         let resp_line = match parse_request(&line) {
             Ok(req) => {
                 let prompt = tokenizer.encode(&req.prompt);
-                let id = router.submit(
-                    prompt,
-                    GenerationParams {
-                        max_new_tokens: req.max_new_tokens,
-                        temperature: req.temperature,
-                        stop_token: req.stop_token,
+                let params = GenerationParams {
+                    max_new_tokens: req.max_new_tokens,
+                    temperature: req.temperature,
+                    stop_token: req.stop_token,
+                    deadline: req
+                        .deadline_ms
+                        .map(|ms| Instant::now() + Duration::from_millis(ms)),
+                };
+                match router.submit(prompt, params) {
+                    Ok(id) => match await_outcome(&router, &stream, id, cfg.request_timeout) {
+                        Wait::Outcome(Outcome::Done(resp)) => {
+                            render_response(&resp, &tokenizer)
+                        }
+                        Wait::Outcome(Outcome::Failed(err)) => {
+                            render_error(err.code, &err.message, err.retry_after_ms)
+                        }
+                        Wait::ClientGone => {
+                            // Read EOF / reset with a request in flight:
+                            // stop burning decode steps on it.
+                            router.cancel(id);
+                            break;
+                        }
+                        Wait::TimedOut => {
+                            router.cancel(id);
+                            render_error("timeout", "request timed out server-side", None)
+                        }
                     },
-                );
-                // Block until *this* request's response arrives.
-                let resp = wait_for(&router, id);
-                render_response(&resp, &tokenizer)
+                    Err(SubmitError::Overloaded { retry_after_ms }) => {
+                        render_error("overloaded", "server overloaded", Some(retry_after_ms))
+                    }
+                    Err(SubmitError::ShuttingDown) => {
+                        render_error("shutting_down", "server is shutting down", None)
+                    }
+                    Err(SubmitError::NoWorkers) => {
+                        render_error("unavailable", "no live workers", None)
+                    }
+                }
             }
-            Err(e) => {
-                format!("{{\"error\":{}}}", crate::util::json::Json::from(e.to_string()))
-            }
+            Err(e) => render_error("bad_request", &e.to_string(), None),
         };
-        writer.write_all(resp_line.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        write_line(&mut writer, &resp_line)?;
     }
     Ok(())
 }
 
-fn wait_for(router: &Router, id: crate::engine::RequestId) -> Response {
-    loop {
-        if let Some(r) = router.take_response_by_id(id) {
-            return r;
-        }
-        std::thread::sleep(std::time::Duration::from_millis(2));
-    }
+fn write_line(writer: &mut TcpStream, line: &str) -> Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
 }
 
 /// Minimal blocking client for tests and examples.
@@ -135,14 +360,24 @@ impl Client {
         prompt: &str,
         max_new_tokens: usize,
     ) -> Result<crate::util::json::Json> {
-        let mut req = crate::util::json::Json::obj();
-        req.set("prompt", prompt.into())
-            .set("max_new_tokens", max_new_tokens.into());
-        self.stream.write_all(req.to_string().as_bytes())?;
+        self.request(&WireRequest {
+            prompt: prompt.to_string(),
+            max_new_tokens,
+            temperature: 0.0,
+            stop_token: None,
+            deadline_ms: None,
+        })
+    }
+
+    /// Send a full request (deadline and all) and wait for the reply
+    /// line — which may be a structured error object.
+    pub fn request(&mut self, req: &WireRequest) -> Result<crate::util::json::Json> {
+        self.stream.write_all(render_request(req).as_bytes())?;
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "connection closed by server");
         crate::util::json::Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
     }
 }

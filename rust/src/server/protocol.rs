@@ -1,4 +1,9 @@
 //! Wire protocol (JSON lines) for the serving front-end.
+//!
+//! One JSON object per line, in either direction. Success lines carry
+//! `id`/`text`/`finish`/latency fields; error lines carry the schema
+//! `{"error": <message>, "code": <short-code>, "retry_after_ms": <ms>?}`
+//! (see the README "Failure model" section).
 
 use crate::engine::{FinishReason, Response};
 use crate::model::tokenizer::ByteTokenizer;
@@ -12,6 +17,9 @@ pub struct WireRequest {
     pub max_new_tokens: usize,
     pub temperature: f32,
     pub stop_token: Option<u32>,
+    /// Relative deadline in milliseconds from receipt; the engine
+    /// aborts the request past it with finish `"deadline"`.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Parse a request line.
@@ -32,7 +40,28 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         .get("stop_token")
         .and_then(|x| x.as_usize())
         .map(|t| t as u32);
-    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token })
+    let deadline_ms = v
+        .get("deadline_ms")
+        .and_then(|x| x.as_usize())
+        .map(|ms| ms as u64);
+    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token, deadline_ms })
+}
+
+/// Render a request line (the inverse of [`parse_request`] for values
+/// already inside the clamped ranges — used by clients and the
+/// round-trip property tests).
+pub fn render_request(req: &WireRequest) -> String {
+    let mut o = Json::obj();
+    o.set("prompt", req.prompt.as_str().into())
+        .set("max_new_tokens", req.max_new_tokens.into())
+        .set("temperature", (req.temperature as f64).into());
+    if let Some(t) = req.stop_token {
+        o.set("stop_token", (t as usize).into());
+    }
+    if let Some(ms) = req.deadline_ms {
+        o.set("deadline_ms", ms.into());
+    }
+    o.to_string()
 }
 
 /// Render a response line.
@@ -49,9 +78,22 @@ pub fn render_response(resp: &Response, tokenizer: &ByteTokenizer) -> String {
                 FinishReason::Length => "length",
                 FinishReason::StopToken => "stop",
                 FinishReason::Aborted => "aborted",
+                FinishReason::DeadlineExceeded => "deadline",
+                FinishReason::Cancelled => "cancelled",
             }
             .into(),
         );
+    o.to_string()
+}
+
+/// Render a structured error line: `error` (human message), `code`
+/// (stable short code), optional `retry_after_ms` backpressure hint.
+pub fn render_error(code: &str, message: &str, retry_after_ms: Option<u64>) -> String {
+    let mut o = Json::obj();
+    o.set("error", message.into()).set("code", code.into());
+    if let Some(ms) = retry_after_ms {
+        o.set("retry_after_ms", ms.into());
+    }
     o.to_string()
 }
 
@@ -62,13 +104,14 @@ mod tests {
     #[test]
     fn parse_full_request() {
         let r = parse_request(
-            r#"{"prompt":"hello","max_new_tokens":12,"temperature":0.5,"stop_token":46}"#,
+            r#"{"prompt":"hello","max_new_tokens":12,"temperature":0.5,"stop_token":46,"deadline_ms":1500}"#,
         )
         .unwrap();
         assert_eq!(r.prompt, "hello");
         assert_eq!(r.max_new_tokens, 12);
         assert!((r.temperature - 0.5).abs() < 1e-6);
         assert_eq!(r.stop_token, Some(46));
+        assert_eq!(r.deadline_ms, Some(1500));
     }
 
     #[test]
@@ -77,6 +120,7 @@ mod tests {
         assert_eq!(r.max_new_tokens, 64);
         assert_eq!(r.temperature, 0.0);
         assert_eq!(r.stop_token, None);
+        assert_eq!(r.deadline_ms, None);
         assert!(parse_request(r#"{"prompt":""}"#).is_err());
         assert!(parse_request("not json").is_err());
         // max_new_tokens clamped.
@@ -99,5 +143,46 @@ mod tests {
         assert_eq!(v.req_str("text").unwrap(), "hi");
         assert_eq!(v.req_usize("id").unwrap(), 9);
         assert_eq!(v.req_str("finish").unwrap(), "length");
+    }
+
+    #[test]
+    fn request_roundtrips_through_render() {
+        let req = WireRequest {
+            prompt: "say \"hi\"\n".to_string(),
+            max_new_tokens: 7,
+            temperature: 0.25,
+            stop_token: Some(10),
+            deadline_ms: Some(250),
+        };
+        let parsed = parse_request(&render_request(&req)).unwrap();
+        assert_eq!(parsed, req);
+    }
+
+    #[test]
+    fn new_finish_reasons_render() {
+        let mut resp = Response {
+            id: 1,
+            tokens: vec![],
+            finish: FinishReason::DeadlineExceeded,
+            latency_ms: 0.0,
+            ttft_ms: 0.0,
+            prompt_len: 1,
+        };
+        let v = Json::parse(&render_response(&resp, &ByteTokenizer)).unwrap();
+        assert_eq!(v.req_str("finish").unwrap(), "deadline");
+        resp.finish = FinishReason::Cancelled;
+        let v = Json::parse(&render_response(&resp, &ByteTokenizer)).unwrap();
+        assert_eq!(v.req_str("finish").unwrap(), "cancelled");
+    }
+
+    #[test]
+    fn error_lines_follow_schema() {
+        let line = render_error("overloaded", "server overloaded", Some(50));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.req_str("code").unwrap(), "overloaded");
+        assert_eq!(v.req_str("error").unwrap(), "server overloaded");
+        assert_eq!(v.req_usize("retry_after_ms").unwrap(), 50);
+        let v = Json::parse(&render_error("bad_request", "nope", None)).unwrap();
+        assert!(v.get("retry_after_ms").is_none());
     }
 }

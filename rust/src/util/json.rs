@@ -38,7 +38,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.ws();
         let v = p.value()?;
         p.ws();
@@ -238,9 +238,15 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Containers deeper than this parse as an error instead of risking a
+/// stack overflow (the parser is recursive-descent; untrusted wire
+/// bytes flow through it).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -394,7 +400,22 @@ impl<'a> Parser<'a> {
             .map_err(|_| self.err("bad number"))
     }
 
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.array_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn array_inner(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
         let mut v = Vec::new();
         self.ws();
@@ -418,6 +439,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
+        self.enter()?;
+        let r = self.object_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn object_inner(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
         let mut m = BTreeMap::new();
         self.ws();
@@ -506,5 +534,17 @@ mod tests {
         assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::obj());
         assert_eq!(Json::parse(" { } ").unwrap().to_string(), "{}");
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_a_stack_overflow() {
+        // Hostile wire bytes: 50k unclosed arrays must not recurse 50k
+        // frames deep.
+        assert!(Json::parse(&"[".repeat(50_000)).is_err());
+        let deep_obj = "{\"k\":".repeat(50_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 }

@@ -1,0 +1,377 @@
+//! Robustness tests for the fault-tolerant serving front-end: deadline
+//! aborts, cancellation, salvage partitioning, supervised worker
+//! restarts, and a full chaos run (injected panics + early client
+//! disconnects + overload through the TCP server).
+//!
+//! Everything here runs on the synthetic model — no artifacts needed.
+
+use hsr_attn::engine::serving::Engine;
+use hsr_attn::engine::{
+    EngineConfig, Fault, FaultKind, FaultPlan, FinishReason, GenerationParams,
+    Router, RouterConfig, SchedulerConfig,
+};
+use hsr_attn::model::Model;
+use hsr_attn::server::{Client, Server, ServerConfig, WireRequest};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn model() -> Arc<Model> {
+    Arc::new(Model::synthetic(90, 2, 4, 8))
+}
+
+fn prompt(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| b as u32).collect()
+}
+
+fn params(gen: usize) -> GenerationParams {
+    GenerationParams {
+        max_new_tokens: gen,
+        temperature: 0.0,
+        stop_token: None,
+        deadline: None,
+    }
+}
+
+/// Run `f` on a helper thread and fail loudly if it exceeds `secs` —
+/// a hang here means a lost terminal outcome, which is exactly the bug
+/// class this suite guards against.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, f: F) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => h.join().expect("test body panicked"),
+        Err(_) => panic!("watchdog: test exceeded {secs}s — probable lost outcome / deadlock"),
+    }
+}
+
+#[test]
+fn fault_plan_filters_and_fires() {
+    let plan = FaultPlan::none()
+        .with(Fault { worker: 0, step: 3, kind: FaultKind::Panic })
+        .with(Fault { worker: 1, step: 2, kind: FaultKind::Delay { ms: 1 } })
+        .with(Fault { worker: 0, step: 5, kind: FaultKind::Stall { ms: 1 } });
+    assert!(FaultPlan::none().is_empty());
+    assert!(!plan.is_empty());
+    assert!(plan.for_worker(2).is_empty());
+
+    let w0 = plan.for_worker(0);
+    // Panic fires at its exact step only.
+    assert_eq!(w0.fire_at(2), None);
+    assert_eq!(w0.fire_at(3), Some(FaultKind::Panic));
+    assert_eq!(w0.fire_at(4), None);
+    // Stall fires at its step and every later one.
+    assert_eq!(w0.fire_at(5), Some(FaultKind::Stall { ms: 1 }));
+    assert_eq!(w0.fire_at(99), Some(FaultKind::Stall { ms: 1 }));
+
+    let w1 = plan.for_worker(1);
+    assert_eq!(w1.fire_at(2), Some(FaultKind::Delay { ms: 1 }));
+    assert_eq!(w1.fire_at(3), None);
+}
+
+#[test]
+fn expired_deadline_aborts_and_releases_blocks() {
+    let mut eng = Engine::new(model(), EngineConfig::default());
+    let mut p = params(32);
+    p.deadline = Some(Instant::now()); // already expired
+    eng.submit(prompt("the merchant carries copper coins "), p);
+    eng.submit(prompt("a courier guards sealed letters "), params(4));
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 2);
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+    assert_eq!(done[1].finish, FinishReason::Length);
+    assert_eq!(eng.metrics.deadline_aborts, 1);
+    assert_eq!(eng.reclaim_and_count_leaks(), 0, "deadline abort leaked KV blocks");
+}
+
+#[test]
+fn mid_decode_deadline_aborts_a_running_sequence() {
+    let mut eng = Engine::new(model(), EngineConfig::default());
+    // A token budget no 30ms window can exhaust: the deadline must win.
+    let mut p = params(1_000_000);
+    p.deadline = Some(Instant::now() + Duration::from_millis(30));
+    eng.submit(prompt("slow request that cannot finish in time "), p);
+    // Step until the deadline sweep fires; generous cap so a genuinely
+    // hung abort fails the assert rather than looping forever.
+    let mut steps = 0;
+    while eng.has_work() && steps < 200_000 {
+        eng.step();
+        steps += 1;
+    }
+    assert!(!eng.has_work(), "deadline abort never fired");
+    let done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].finish, FinishReason::DeadlineExceeded);
+    assert!(done[0].tokens.len() < 1_000_000);
+    assert_eq!(eng.metrics.deadline_aborts, 1);
+    assert_eq!(eng.reclaim_and_count_leaks(), 0);
+}
+
+#[test]
+fn cancel_waiting_and_running_releases_blocks() {
+    let mut eng = Engine::new(model(), EngineConfig::default());
+    // Cancel while still waiting (no step yet).
+    let waiting_id = eng.submit(prompt("queued request "), params(8));
+    assert!(eng.cancel(waiting_id));
+    // Cancel mid-decode.
+    let running_id = eng.submit(prompt("running request to cancel "), params(1_000));
+    for _ in 0..5 {
+        eng.step();
+    }
+    assert!(eng.cancel(running_id));
+    assert!(!eng.cancel(running_id), "double cancel must be a no-op");
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 2);
+    done.sort_by_key(|r| r.id);
+    assert!(done.iter().all(|r| r.finish == FinishReason::Cancelled));
+    assert_eq!(eng.metrics.disconnect_aborts, 2);
+    assert_eq!(eng.reclaim_and_count_leaks(), 0, "cancel leaked KV blocks");
+}
+
+#[test]
+fn salvage_partitions_fresh_from_progressed() {
+    // Never-stepped request: safe to retry on a survivor.
+    let mut eng = Engine::new(model(), EngineConfig::default());
+    eng.submit(prompt("fresh request "), params(8));
+    let (retry, dead) = eng.salvage();
+    assert_eq!((retry.len(), dead.len()), (1, 0));
+    assert_eq!(retry[0].prompt, prompt("fresh request "));
+    assert!(!eng.has_work(), "salvage must drain the engine");
+
+    // Request with visible progress: a replay could not reproduce it.
+    let mut eng = Engine::new(model(), EngineConfig::default());
+    eng.submit(prompt("progressed "), params(64));
+    for _ in 0..20 {
+        eng.step();
+    }
+    let (retry, dead) = eng.salvage();
+    assert_eq!((retry.len(), dead.len()), (0, 1));
+}
+
+#[test]
+fn engine_rejects_above_max_waiting() {
+    let mut eng = Engine::new(
+        model(),
+        EngineConfig {
+            scheduler: SchedulerConfig { max_waiting: 2, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    use hsr_attn::engine::Request;
+    for i in 0..2 {
+        let req = Request { id: i, prompt: prompt("q "), params: params(4), attempts: 0 };
+        assert!(eng.submit_request(req).is_ok());
+    }
+    let req = Request { id: 9, prompt: prompt("q "), params: params(4), attempts: 0 };
+    let back = eng.submit_request(req).expect_err("queue is full");
+    assert_eq!(back.id, 9, "rejected request comes back intact");
+    eng.run_to_completion();
+    assert_eq!(eng.take_finished().len(), 2);
+}
+
+#[test]
+fn router_restarts_panicked_worker_and_answers_everything() {
+    with_watchdog(60, || {
+        let cfg = EngineConfig {
+            faults: FaultPlan::none()
+                .with(Fault { worker: 0, step: 3, kind: FaultKind::Panic }),
+            ..Default::default()
+        };
+        let router = Router::new(model(), cfg, 2);
+        for i in 0..8 {
+            router
+                .submit(prompt(&format!("supervised request {i} ")), params(8))
+                .expect("default caps fit 8 requests");
+        }
+        router.wait_idle();
+        let responses = router.take_responses();
+        let failures = router.take_failures();
+        assert_eq!(
+            responses.len() + failures.len(),
+            8,
+            "every accepted request needs exactly one terminal outcome"
+        );
+        for f in &failures {
+            assert_eq!(f.code, "worker_failed");
+        }
+        assert_eq!(router.alive_workers(), 2, "panicked worker must restart");
+        let m = router.shutdown();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.worker_restarts, 1);
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+/// The acceptance chaos run: 4 workers with panics injected on two of
+/// them, a burst 4x past admission capacity, ~30% of clients
+/// disconnecting without reading, and a few zero-deadline requests —
+/// every request must reach exactly one terminal outcome, the server
+/// must answer after recovery, and the block ledger must balance.
+#[test]
+fn chaos_panics_disconnects_and_overload() {
+    with_watchdog(180, || {
+        let cfg = EngineConfig {
+            cache_capacity_tokens: 1 << 14,
+            block_tokens: 16,
+            scheduler: SchedulerConfig {
+                max_batch: 4,
+                prefill_chunk: 16,
+                step_token_budget: 64,
+                ..Default::default()
+            },
+            faults: FaultPlan::none()
+                .with(Fault { worker: 1, step: 12, kind: FaultKind::Panic })
+                .with(Fault { worker: 2, step: 20, kind: FaultKind::Panic }),
+            ..Default::default()
+        };
+        let rcfg = RouterConfig {
+            max_queue_per_worker: 4,
+            max_in_flight: 12,
+            ..Default::default()
+        };
+        let router = Arc::new(Router::with_config(model(), cfg, 4, rcfg));
+
+        // Deterministic deadline abort: expired before it ever decodes.
+        let expired = {
+            let mut p = params(8);
+            p.deadline = Some(Instant::now());
+            p
+        };
+        router.submit(prompt("expired immediately "), expired).expect("empty pool accepts");
+
+        // Phase 1 — overload burst straight at the router: 48 back-to-back
+        // submissions against a 12-request in-flight cap must shed load.
+        // Requests are heavy enough (long prompt, 64 tokens) that workers
+        // cannot drain the pool within the microseconds the loop takes.
+        let (mut burst_ok, mut burst_shed) = (0usize, 0usize);
+        for i in 0..48 {
+            let p = format!("burst request number {i} with a long prompt ").repeat(4);
+            match router.submit(prompt(&p), params(64)) {
+                Ok(_) => burst_ok += 1,
+                Err(_) => burst_shed += 1,
+            }
+        }
+        assert!(burst_ok >= 1, "an unloaded pool must accept work");
+        assert!(burst_shed >= 1, "48 instant submissions vs cap 12 must shed");
+        router.wait_idle();
+
+        // Phase 2 — chaos through the TCP front-end.
+        let scfg = ServerConfig {
+            drain: Duration::from_secs(2),
+            // A lost terminal outcome surfaces as a "timeout" error line
+            // well inside the watchdog window instead of a 120s stall.
+            request_timeout: Duration::from_secs(20),
+            ..Default::default()
+        };
+        let server = Server::bind_with(router.clone(), "127.0.0.1:0", scfg).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let mut clients = Vec::new();
+        for i in 0..24usize {
+            let addr = addr.clone();
+            clients.push(std::thread::spawn(move || {
+                // (ok_replies, err_replies, io_errors, deliberate_disconnects)
+                let mut tally = (0usize, 0usize, 0usize, 0usize);
+                if i % 3 == 0 {
+                    // Disconnector: send one request, never read the reply.
+                    if let Ok(mut s) = TcpStream::connect(&addr) {
+                        let line = hsr_attn::server::render_request(&WireRequest {
+                            prompt: format!("disconnector {i} "),
+                            max_new_tokens: 64,
+                            temperature: 0.0,
+                            stop_token: None,
+                            deadline_ms: None,
+                        });
+                        let _ = s.write_all(line.as_bytes());
+                        let _ = s.write_all(b"\n");
+                        let _ = s.flush();
+                    }
+                    tally.3 = 1;
+                    return tally;
+                }
+                let Ok(mut c) = Client::connect(&addr) else {
+                    tally.2 = 2;
+                    return tally;
+                };
+                for j in 0..2usize {
+                    let req = WireRequest {
+                        prompt: format!("chaos client {i} request {j} "),
+                        max_new_tokens: 8,
+                        temperature: 0.0,
+                        stop_token: None,
+                        // A few requests expire instantly: "deadline" finish.
+                        deadline_ms: (i % 5 == 1 && j == 1).then_some(0),
+                    };
+                    match c.request(&req) {
+                        Ok(v) if v.get("finish").is_some() => tally.0 += 1,
+                        Ok(_) => tally.1 += 1, // structured error line
+                        Err(_) => tally.2 += 1,
+                    }
+                }
+                tally
+            }));
+        }
+        let mut ok = 0;
+        let mut err = 0;
+        let mut io_err = 0;
+        let mut disconnects = 0;
+        for c in clients {
+            let (o, e, x, d) = c.join().expect("client thread");
+            ok += o;
+            err += e;
+            io_err += x;
+            disconnects += d;
+        }
+        assert_eq!(disconnects, 8);
+        assert_eq!(
+            ok + err + io_err,
+            32,
+            "every sent request needs exactly one wire-level resolution"
+        );
+        assert!(ok >= 1, "some requests must actually complete");
+
+        // Phase 3 — the pool must still answer after both panics.
+        let mut recovered = false;
+        for _ in 0..100 {
+            if let Ok(mut c) = Client::connect(&addr) {
+                if let Ok(v) = c.generate("post recovery probe ", 4) {
+                    if v.get("finish").is_some() {
+                        recovered = true;
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(recovered, "server unresponsive after worker recovery");
+        assert_eq!(router.alive_workers(), 4, "both panicked workers must restart");
+
+        // Drain: every accepted request (including cancelled disconnector
+        // requests) must reach its terminal outcome.
+        router.wait_idle();
+        let (done, submitted) = router.progress();
+        assert_eq!(done, submitted, "accepted vs terminal outcomes mismatch");
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().expect("server thread").expect("serve exits cleanly");
+        let router = Arc::try_unwrap(router)
+            .ok()
+            .expect("server must have released its router handles");
+        let m = router.shutdown_within(Duration::from_secs(10));
+        assert_eq!(m.worker_panics, 2, "both injected faults fire exactly once");
+        assert_eq!(m.worker_restarts, 2);
+        assert_eq!(m.kv_blocks_leaked, 0, "chaos run leaked KV blocks");
+        assert!(m.requests_rejected >= burst_shed as u64);
+        assert!(m.deadline_aborts >= 1, "the pre-expired request must abort");
+        assert!(m.requests_completed >= ok as u64);
+    });
+}

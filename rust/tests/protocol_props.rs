@@ -1,0 +1,107 @@
+//! Protocol-hardening property tests (deterministic [`Rng`]-driven, no
+//! external property-test crate): arbitrary byte soup, truncations, and
+//! mutations of valid lines must never panic `parse_request`, and a
+//! well-formed request must survive a render → parse round trip.
+
+use hsr_attn::server::{parse_request, render_request, WireRequest};
+use hsr_attn::util::json::Json;
+use hsr_attn::util::rng::Rng;
+
+/// Characters a generated prompt draws from: ASCII, JSON-significant
+/// escapes, and multibyte UTF-8 (exercises the escaper and the
+/// char-boundary handling in the truncation test).
+const PROMPT_CHARS: &[char] = &[
+    'a', 'b', 'z', ' ', '0', '9', '"', '\\', '/', '\n', '\r', '\t', '{', '}',
+    '[', ']', ':', ',', 'é', 'π', '✓',
+];
+
+fn random_request(rng: &mut Rng) -> WireRequest {
+    let prompt: String = (0..rng.range(1, 48))
+        .map(|_| PROMPT_CHARS[rng.below(PROMPT_CHARS.len())])
+        .collect();
+    WireRequest {
+        prompt,
+        // Stay inside parse_request's clamp range so parsing is identity.
+        max_new_tokens: rng.range(1, 4097),
+        // Multiples of 0.25 survive f32 -> f64 -> decimal -> f64 -> f32
+        // exactly, keeping the round-trip equality strict.
+        temperature: rng.below(9) as f32 * 0.25,
+        stop_token: rng.bool(0.5).then(|| rng.below(256) as u32),
+        deadline_ms: rng.bool(0.5).then(|| rng.range(1, 60_000) as u64),
+    }
+}
+
+#[test]
+fn random_byte_soup_never_panics() {
+    let mut rng = Rng::new(0x50f7);
+    for _ in 0..2000 {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_request(&line); // Err is fine; a panic fails the test
+    }
+}
+
+#[test]
+fn random_json_shaped_soup_never_panics() {
+    // Soup biased toward JSON syntax characters reaches deeper into the
+    // parser than uniform bytes do.
+    let pool: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnul\\/ promptmax_new_tokens";
+    let mut rng = Rng::new(0x1234);
+    for _ in 0..2000 {
+        let len = rng.below(160);
+        let bytes: Vec<u8> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_request(&line);
+    }
+}
+
+#[test]
+fn truncations_of_valid_lines_never_panic() {
+    let mut rng = Rng::new(0x7a11);
+    for _ in 0..200 {
+        let line = render_request(&random_request(&mut rng));
+        for cut in 0..line.len() {
+            if line.is_char_boundary(cut) {
+                let _ = parse_request(&line[..cut]);
+            }
+        }
+    }
+}
+
+#[test]
+fn byte_mutations_of_valid_lines_never_panic() {
+    let mut rng = Rng::new(0xbeef);
+    for _ in 0..500 {
+        let line = render_request(&random_request(&mut rng));
+        let mut bytes = line.into_bytes();
+        for _ in 0..rng.range(1, 4) {
+            let i = rng.below(bytes.len());
+            bytes[i] = rng.below(256) as u8;
+        }
+        let mutated = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_request(&mutated);
+    }
+}
+
+#[test]
+fn oversized_nesting_is_rejected_not_overflowed() {
+    // Without a parser depth limit these would overflow the stack.
+    let deep_arrays = "[".repeat(50_000);
+    assert!(parse_request(&deep_arrays).is_err());
+    let deep_objects = "{\"p\":".repeat(50_000);
+    assert!(parse_request(&deep_objects).is_err());
+    assert!(Json::parse(&"[".repeat(50_000)).is_err());
+}
+
+#[test]
+fn request_render_parse_round_trip() {
+    let mut rng = Rng::new(0x7219);
+    for _ in 0..500 {
+        let req = random_request(&mut rng);
+        let line = render_request(&req);
+        let parsed = parse_request(&line)
+            .unwrap_or_else(|e| panic!("round trip failed for {line:?}: {e}"));
+        assert_eq!(parsed, req, "render->parse must be identity for {line:?}");
+    }
+}

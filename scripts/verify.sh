@@ -16,6 +16,9 @@
 #    (shared-prompt workload: prefix-hit rate, prefill tokens skipped,
 #    steady-state tok/s shared vs unshared; runs on a synthetic model
 #    when artifacts are absent, so it always reports)
+#  * benches/e2e_serving.rs --overload-only   → BENCH_robustness.json
+#    (admission control at 4x the sustainable rate: shed rate and the
+#    p50/p99 latency of the accepted requests; synthetic model)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -55,6 +58,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== shared-prefix serving smoke (BENCH_serving.json) =="
     cargo bench --bench e2e_serving -- --shared-only
     echo "report: $(cd .. && pwd)/BENCH_serving.json"
+
+    echo "== overload admission-control smoke (BENCH_robustness.json) =="
+    cargo bench --bench e2e_serving -- --overload-only
+    echo "report: $(cd .. && pwd)/BENCH_robustness.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
