@@ -9,15 +9,20 @@
 //! Run:  make artifacts && cargo run --release --example serve_demo
 //! Args: --model small --requests 32 --workers 2 --gen 48 --rate 8
 //!       --policy both|dense|sparse
+//!       --affinity on|off   prefix-affinity routing for the trace replay
+//!       --send-buffer N     per-stream token buffer (slow consumers shed)
+//!       --stream            append a live per-token streaming demo over TCP
 
-use hsr_attn::engine::{EngineConfig, GenerationParams, Router};
+use hsr_attn::engine::{EngineConfig, GenerationParams, Router, RouterConfig};
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
 use hsr_attn::model::Model;
+use hsr_attn::server::{Client, Server, StreamFrame, WireRequest};
 use hsr_attn::util::cli::Args;
 use hsr_attn::util::rng::Rng;
 use hsr_attn::util::stats;
 use hsr_attn::workloads::trace::{generate, TraceParams};
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -25,15 +30,23 @@ fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn run_policy(
-    name: &str,
-    model: Arc<Model>,
-    policy: AttentionPolicy,
+/// Workload shape shared by every section of the demo.
+#[derive(Clone, Copy)]
+struct DemoOpts {
     workers: usize,
     requests: usize,
     gen_tokens: usize,
     rate: f64,
+}
+
+fn run_policy(
+    name: &str,
+    model: Arc<Model>,
+    policy: AttentionPolicy,
+    rcfg: RouterConfig,
+    opts: DemoOpts,
 ) {
+    let DemoOpts { workers, requests, gen_tokens, rate } = opts;
     let mut rng = Rng::new(7);
     let trace = generate(
         &mut rng,
@@ -57,10 +70,11 @@ fn run_policy(
         text.bytes().cycle().take(8192).map(|b| b as u32).collect()
     };
 
-    let router = Router::new(
+    let router = Router::with_config(
         model,
         EngineConfig { policy, ..Default::default() },
         workers,
+        rcfg,
     );
     let t0 = Instant::now();
     let mut total_prompt = 0usize;
@@ -119,6 +133,67 @@ fn run_policy(
     println!("engine metrics:\n{}", metrics.summary());
 }
 
+/// Live per-token streaming over the real TCP wire protocol: one
+/// request with `"stream": true`, token frames printed as they arrive,
+/// and the terminal frame's accounting echoed at the end.
+fn run_streaming(model: Arc<Model>, rcfg: RouterConfig, opts: DemoOpts) {
+    println!("\n--- streaming demo (per-token frames over TCP) ---");
+    let router = Arc::new(Router::with_config(
+        model,
+        EngineConfig { policy: AttentionPolicy::TopR(RSpec::paper()), ..Default::default() },
+        opts.workers,
+        rcfg,
+    ));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let mut client = Client::connect(&addr).expect("connect");
+    let t0 = Instant::now();
+    let frames = client
+        .stream_generate(&WireRequest {
+            prompt: "the merchant carries ".to_string(),
+            max_new_tokens: opts.gen_tokens,
+            temperature: 0.0,
+            stop_token: None,
+            deadline_ms: Some(30_000),
+            stream: true,
+        })
+        .expect("stream_generate");
+    let mut first_ms = None;
+    let mut text = String::new();
+    for frame in &frames {
+        match frame {
+            StreamFrame::Token { text: piece, .. } => {
+                first_ms.get_or_insert(t0.elapsed().as_secs_f64() * 1e3);
+                text.push_str(piece);
+            }
+            StreamFrame::Done { tokens_streamed, finish, latency_ms, .. } => {
+                println!("output: {text}");
+                println!(
+                    "streamed {tokens_streamed} tokens (finish: {finish}), \
+                     wire ttft {:.1} ms, total {latency_ms:.1} ms",
+                    first_ms.unwrap_or(0.0),
+                );
+            }
+            StreamFrame::Error { code, message, tokens_streamed, .. } => {
+                println!("stream error after {tokens_streamed} tokens: {code}: {message}");
+            }
+            StreamFrame::Cancelled { reason, tokens_streamed, .. } => {
+                println!("stream cancelled after {tokens_streamed} tokens: {reason}");
+            }
+            StreamFrame::Keepalive { .. } => {}
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().expect("server thread").expect("serve");
+    let router = Arc::try_unwrap(router).ok().expect("server released router");
+    let metrics = router.shutdown();
+    println!("engine metrics:\n{}", metrics.summary());
+}
+
 fn main() {
     let args = Args::from_env();
     let dir = artifacts_dir();
@@ -127,11 +202,18 @@ fn main() {
         std::process::exit(2);
     }
     let model_name = args.str_or("model", "small");
-    let requests = args.usize_or("requests", 24);
-    let workers = args.usize_or("workers", 2);
-    let gen_tokens = args.usize_or("gen", 48);
-    let rate = args.f64_or("rate", 8.0);
+    let opts = DemoOpts {
+        workers: args.usize_or("workers", 2),
+        requests: args.usize_or("requests", 24),
+        gen_tokens: args.usize_or("gen", 48),
+        rate: args.f64_or("rate", 8.0),
+    };
     let which = args.str_or("policy", "both").to_string();
+    let rcfg = RouterConfig {
+        affinity: args.str_or("affinity", "on") != "off",
+        stream_buffer: args.usize_or("send-buffer", 256),
+        ..Default::default()
+    };
 
     let model = Arc::new(Model::load_named(&dir, model_name).expect("load model"));
     println!(
@@ -144,22 +226,21 @@ fn main() {
             "dense (naive O(n) attention)",
             model.clone(),
             AttentionPolicy::Dense,
-            workers,
-            requests,
-            gen_tokens,
-            rate,
+            rcfg,
+            opts,
         );
     }
     if which == "both" || which == "sparse" {
         run_policy(
             "hsr-sparse top-r = n^(4/5) (Algorithm 1)",
-            model,
+            model.clone(),
             AttentionPolicy::TopR(RSpec::paper()),
-            workers,
-            requests,
-            gen_tokens,
-            rate,
+            rcfg,
+            opts,
         );
+    }
+    if args.flag("stream") {
+        run_streaming(model, rcfg, opts);
     }
     println!("\n(done — see EXPERIMENTS.md §E2E for recorded numbers)");
 }

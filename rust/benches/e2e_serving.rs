@@ -5,13 +5,15 @@
 //! steady-state tok/s shared vs unshared).
 //!
 //! The sparse-vs-dense section needs the trained artifacts (`make
-//! artifacts`) and skips without them; the shared-prefix section falls
-//! back to a deterministic synthetic model so the prefix-cache numbers
-//! are always reproducible.
+//! artifacts`) and skips without them; the shared-prefix, streaming,
+//! and overload sections fall back to a deterministic synthetic model
+//! so their numbers are always reproducible.
 //!
 //! Flags: --shared-only (skip the artifact section), --overload-only
-//! (run just the admission-control section), --model NAME,
+//! (run just the admission-control section), --streaming-only (run just
+//! the streaming/affinity section), --model NAME,
 //! --shared-requests N, --shared-prompt N, --shared-gen N,
+//! --stream-requests N, --stream-prompt N, --stream-gen N,
 //! --overload-requests N, --overload-prompt N, --overload-gen N.
 
 use hsr_attn::bench::banner;
@@ -21,10 +23,12 @@ use hsr_attn::hsr::HsrBackend;
 use hsr_attn::kvstore::PrefixCacheMode;
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
 use hsr_attn::model::Model;
+use hsr_attn::server::{Client, Server, StreamFrame, WireRequest};
 use hsr_attn::util::cli::Args;
 use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
 use std::path::PathBuf;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -244,6 +248,204 @@ fn shared_prefix_section(args: &Args) {
     }
 }
 
+struct StreamRun {
+    wall_s: f64,
+    /// TTFT as the client saw it: request line flushed → first `token`
+    /// frame parsed (p50 across the cohort).
+    ttft_wire_p50_ms: f64,
+    tokens: u64,
+    /// Streams that ended in a clean `done` frame.
+    completed: usize,
+    /// Streams that ended any other way (error/cancelled/refused).
+    failed: usize,
+    prefix_hit_rate: f64,
+    prefill_skip_pct: f64,
+    affinity_hits: u64,
+    affinity_fallbacks: u64,
+    streams_severed: u64,
+}
+
+/// One streaming cohort through the TCP front-end: `requests` parallel
+/// clients all sending the same prompt with `"stream": true`, against a
+/// 4-worker router with affinity on or off.
+fn stream_cohort(
+    model: Arc<Model>,
+    affinity: bool,
+    requests: usize,
+    prompt: &str,
+    gen: usize,
+) -> StreamRun {
+    let rcfg = RouterConfig { affinity, ..Default::default() };
+    let router = Arc::new(Router::with_config(model, EngineConfig::default(), 4, rcfg));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").expect("bind ephemeral");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for _ in 0..requests {
+        let addr = addr.clone();
+        let prompt = prompt.to_string();
+        // (ttft_ms, token frames received, ended with a clean `done`)
+        clients.push(std::thread::spawn(move || -> Option<(f64, u64, bool)> {
+            let mut c = Client::connect(&addr).ok()?;
+            let sent = Instant::now();
+            c.send(&WireRequest {
+                prompt,
+                max_new_tokens: gen,
+                temperature: 0.0,
+                stop_token: None,
+                deadline_ms: None,
+                stream: true,
+            })
+            .ok()?;
+            let mut ttft_ms: Option<f64> = None;
+            let mut tokens = 0u64;
+            loop {
+                match c.read_frame().ok()? {
+                    StreamFrame::Token { .. } => {
+                        if ttft_ms.is_none() {
+                            ttft_ms = Some(sent.elapsed().as_secs_f64() * 1e3);
+                        }
+                        tokens += 1;
+                    }
+                    StreamFrame::Keepalive { .. } => {}
+                    StreamFrame::Done { .. } => {
+                        return Some((ttft_ms.unwrap_or(0.0), tokens, true));
+                    }
+                    StreamFrame::Error { .. } | StreamFrame::Cancelled { .. } => {
+                        return Some((ttft_ms.unwrap_or(0.0), tokens, false));
+                    }
+                }
+            }
+        }));
+    }
+    let mut ttfts: Vec<f64> = Vec::new();
+    let mut tokens = 0u64;
+    let (mut completed, mut failed) = (0usize, 0usize);
+    for h in clients {
+        match h.join().expect("client thread") {
+            Some((t, n, clean)) => {
+                ttfts.push(t);
+                tokens += n;
+                if clean {
+                    completed += 1;
+                } else {
+                    failed += 1;
+                }
+            }
+            None => failed += 1,
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    let _ = srv.join().expect("server thread");
+    let router = Arc::try_unwrap(router).ok().expect("server released router");
+    let m = router.shutdown();
+    StreamRun {
+        wall_s,
+        ttft_wire_p50_ms: if ttfts.is_empty() {
+            0.0
+        } else {
+            hsr_attn::util::stats::percentile(&ttfts, 50.0)
+        },
+        tokens,
+        completed,
+        failed,
+        prefix_hit_rate: m.prefix_hit_rate(),
+        prefill_skip_pct: 100.0 * m.prefix_skip_rate(),
+        affinity_hits: m.affinity_hits,
+        affinity_fallbacks: m.affinity_fallbacks,
+        streams_severed: m.streams_severed,
+    }
+}
+
+/// Streaming + affinity section: a shared-prompt cohort streams through
+/// the TCP front-end twice — prefix-affinity routing on, then off — on
+/// a 4-worker pool. Reports wire TTFT (client-measured), per-run prefix
+/// cache effectiveness, and the affinity counters; merged into
+/// BENCH_serving.json under `"streaming_affinity"`. Synthetic model, so
+/// it always runs.
+fn streaming_affinity_section(args: &Args) {
+    let requests = args.usize_or("stream-requests", 32);
+    let prompt_len = args.usize_or("stream-prompt", 256);
+    let gen = args.usize_or("stream-gen", 24);
+    let model = Arc::new(Model::synthetic(90, 2, 4, 8));
+    let corpus = corpus();
+    let prompt_text = String::from_utf8(
+        corpus[..prompt_len].iter().map(|&t| t as u8).collect(),
+    )
+    .expect("corpus is ASCII");
+    println!(
+        "\n== streaming: {requests}-way shared-prompt cohort over TCP (gen {gen}), \
+         affinity on vs off (4 workers) =="
+    );
+    let on = stream_cohort(Arc::clone(&model), true, requests, &prompt_text, gen);
+    let off = stream_cohort(Arc::clone(&model), false, requests, &prompt_text, gen);
+    println!(
+        "{:<14} {:>8} {:>14} {:>8} {:>12} {:>13} {:>10} {:>10}",
+        "routing", "wall s", "ttft p50 ms", "tokens", "prefix hit", "prefill skip", "aff hits",
+        "fallbacks"
+    );
+    for (name, r) in [("affinity on", &on), ("affinity off", &off)] {
+        println!(
+            "{:<14} {:>8.2} {:>14.2} {:>8} {:>11.0}% {:>12.1}% {:>10} {:>10}",
+            name,
+            r.wall_s,
+            r.ttft_wire_p50_ms,
+            r.tokens,
+            100.0 * r.prefix_hit_rate,
+            r.prefill_skip_pct,
+            r.affinity_hits,
+            r.affinity_fallbacks,
+        );
+    }
+    println!(
+        "\nprefix-hit rate: affinity {:.0}% vs least-loaded {:.0}%; \
+         clean streams {}+{} of {}; severed {}",
+        100.0 * on.prefix_hit_rate,
+        100.0 * off.prefix_hit_rate,
+        on.completed,
+        off.completed,
+        2 * requests,
+        on.streams_severed + off.streams_severed,
+    );
+
+    // Read-modify-write: this section shares BENCH_serving.json with the
+    // shared-prefix section, which may or may not have run this
+    // invocation.
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .unwrap_or_else(Json::obj);
+    let mut sec = Json::obj();
+    sec.set("requests", requests.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen", gen.into())
+        .set("workers", 4usize.into());
+    for (key, r) in [("affinity_on", &on), ("affinity_off", &off)] {
+        let mut o = Json::obj();
+        o.set("wall_s", r.wall_s.into())
+            .set("ttft_wire_p50_ms", r.ttft_wire_p50_ms.into())
+            .set("tokens_streamed", r.tokens.into())
+            .set("completed", r.completed.into())
+            .set("failed", r.failed.into())
+            .set("prefix_hit_rate", r.prefix_hit_rate.into())
+            .set("prefill_tokens_skipped_pct", r.prefill_skip_pct.into())
+            .set("affinity_hits", r.affinity_hits.into())
+            .set("affinity_fallbacks", r.affinity_fallbacks.into())
+            .set("streams_severed", r.streams_severed.into());
+        sec.set(key, o);
+    }
+    root.set("streaming_affinity", sec);
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 /// Overload section: calibrate the pool's sustainable completion rate
 /// closed-loop, then offer 4x that rate through a tightly-capped router
 /// and measure the shed rate plus the latency of the accepted requests
@@ -343,10 +545,15 @@ fn main() {
         overload_section(&args);
         return;
     }
+    if args.flag("streaming-only") {
+        streaming_affinity_section(&args);
+        return;
+    }
     shared_prefix_section(&args);
     if args.flag("shared-only") {
         return;
     }
+    streaming_affinity_section(&args);
     overload_section(&args);
 
     if !artifacts_dir().join("manifest.json").exists() {

@@ -70,6 +70,29 @@ pub struct Metrics {
     /// Gauge: peak queued+running requests across the pool (merged by
     /// max, not sum).
     pub queue_depth_peak: u64,
+    // --- streaming + affinity counters ---
+    /// Tokens accepted into per-request stream sinks (frames the
+    /// consumer will see; refused pushes on a severed sink don't count).
+    pub tokens_streamed: u64,
+    /// Streams whose terminal outcome was not a clean finish after at
+    /// least one token went out — the wire-visible truncations the
+    /// terminal frame makes detectable.
+    pub streams_severed: u64,
+    /// Streaming sequences shed because the consumer fell a full
+    /// send-buffer behind (sink overflow → sever → shed at next step).
+    pub slow_consumer_sheds: u64,
+    /// Router dispatches that followed the prefix-affinity sketch to a
+    /// live, unsaturated worker.
+    pub affinity_hits: u64,
+    /// Dispatches where the sketch named a worker but the degradation
+    /// ladder fell back to least-loaded (dead, saturated, or the sketch
+    /// probe was contended).
+    pub affinity_fallbacks: u64,
+    /// Time-to-first-token as deliverable on the wire: router
+    /// submission until the first token enters the stream channel
+    /// (engine-side `ttft` starts later, at sequence admission; this
+    /// includes router queueing).
+    pub ttft_wire: Histogram,
 }
 
 impl Metrics {
@@ -103,6 +126,12 @@ impl Metrics {
         self.worker_restarts += other.worker_restarts;
         self.kv_blocks_leaked += other.kv_blocks_leaked;
         self.queue_depth_peak = self.queue_depth_peak.max(other.queue_depth_peak);
+        self.tokens_streamed += other.tokens_streamed;
+        self.streams_severed += other.streams_severed;
+        self.slow_consumer_sheds += other.slow_consumer_sheds;
+        self.affinity_hits += other.affinity_hits;
+        self.affinity_fallbacks += other.affinity_fallbacks;
+        self.ttft_wire.merge(&other.ttft_wire);
     }
 
     /// Fraction of demanded prefill tokens skipped via the shared-prefix
@@ -150,7 +179,10 @@ impl Metrics {
              prefix:   {:.1}% prefill tokens skipped, {}/{} lookups hit, \
              {} inserted / {} evicted, {} grouped decode rows\n\
              robust:   {} rejected / {} failed / {} deadline / {} disconnect; \
-             {} worker panics / {} restarts; peak queue {}; {} leaked blocks",
+             {} worker panics / {} restarts; peak queue {}; {} leaked blocks\n\
+             stream:   {} tokens_streamed / {} streams_severed / \
+             {} slow_consumer_sheds; ttft_ms p50 {} (wire); \
+             affinity {} hits / {} fallbacks",
             self.requests_submitted,
             self.requests_completed,
             self.requests_preempted,
@@ -178,6 +210,12 @@ impl Metrics {
             self.worker_restarts,
             self.queue_depth_peak,
             self.kv_blocks_leaked,
+            self.tokens_streamed,
+            self.streams_severed,
+            self.slow_consumer_sheds,
+            crate::util::stats::fmt_ns(self.ttft_wire.percentile_ns(50.0) as f64),
+            self.affinity_hits,
+            self.affinity_fallbacks,
         )
     }
 }

@@ -18,6 +18,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod serving;
+pub mod stream;
 
 pub use decode::GenerationDecoding;
 pub use prefill::{PrefillResult, PromptPrefilling};
@@ -25,3 +26,4 @@ pub use request::{FinishReason, GenerationParams, Request, RequestId, Response};
 pub use router::{Outcome, RequestError, Router, RouterConfig, SubmitError};
 pub use scheduler::{PreemptPolicy, SchedulerConfig};
 pub use serving::{Engine, EngineConfig, Fault, FaultKind, FaultPlan};
+pub use stream::{StreamEvent, StreamRecv, StreamSink};

@@ -1,6 +1,9 @@
 //! Request/response types of the serving engine.
 
+use std::sync::Arc;
 use std::time::Instant;
+
+use super::stream::StreamSink;
 
 /// Unique request id.
 pub type RequestId = u64;
@@ -39,6 +42,11 @@ pub struct Request {
     /// Times this request has been re-dispatched after a worker failure
     /// (bounds the supervision retry budget).
     pub attempts: u32,
+    /// Per-token delivery channel for streaming requests; `None` for
+    /// buffered (whole-response) requests. The engine pushes every
+    /// sampled token; overruns sever the stream (slow-consumer shed)
+    /// without ever blocking decode.
+    pub stream: Option<Arc<StreamSink>>,
 }
 
 /// Why a sequence finished.
@@ -100,6 +108,11 @@ pub(crate) struct Sequence {
     /// Re-dispatch count inherited from the [`Request`] (see
     /// `Request::attempts`).
     pub attempts: u32,
+    /// Streaming channel inherited from the [`Request`]. Tokens are
+    /// pushed exactly once each at sample time; preemption re-feeds
+    /// folded tokens through prefill without re-pushing them, so the
+    /// wire sequence stays contiguous across preemptions.
+    pub stream: Option<Arc<StreamSink>>,
 }
 
 impl Sequence {

@@ -23,11 +23,28 @@
 //! * [`Router::cancel`] removes a queued request from its inbox
 //!   outright, or broadcasts to the engines so the owner aborts it
 //!   mid-decode (releasing its KV blocks and chain refs).
+//! * [`Router::submit_streaming`] hands back a bounded [`StreamSink`]
+//!   the engine pushes tokens through; the sink closes exactly when the
+//!   request's terminal outcome lands, extending the exactly-one
+//!   terminal outcome invariant to mid-stream failures (panic, deadline,
+//!   disconnect, slow consumer).
+//!
+//! # Routing policy
+//!
+//! Dispatch follows a prefix-affinity ladder (see
+//! [`Shared::route_worker`]): a router-side [`PrefixSketch`] maps
+//! recent prompt prefixes to the worker whose private radix cache
+//! holds them; prompts follow the sketch when the preferred worker is
+//! alive and under its queue bound, and degrade to least-loaded (with
+//! a deterministic lowest-index tie-break) otherwise — a cache hint
+//! never becomes an availability loss.
 
 use super::metrics::Metrics;
 use super::request::{FinishReason, GenerationParams, Request, RequestId, Response};
 use super::serving::{Engine, EngineConfig, FaultPlan};
+use super::stream::StreamSink;
 use crate::model::Model;
+use crate::util::stats::Histogram;
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -47,6 +64,17 @@ pub struct RouterConfig {
     pub max_retries: u32,
     /// Retry hint attached to `Overloaded` rejections.
     pub retry_after_ms: u64,
+    /// Prefix-affinity routing: prompts whose prefix was recently
+    /// dispatched to a worker are routed back to that worker (its
+    /// private radix cache already holds the prefix). Degrades to
+    /// least-loaded whenever the preferred worker is dead, at its queue
+    /// bound, or the sketch probe is contended — a cache hint never
+    /// becomes an availability loss.
+    pub affinity: bool,
+    /// Per-stream send-buffer capacity in tokens. A consumer that falls
+    /// this far behind severs its stream (terminal `slow_consumer`
+    /// error) instead of blocking decode or growing memory.
+    pub stream_buffer: usize,
 }
 
 impl Default for RouterConfig {
@@ -56,6 +84,8 @@ impl Default for RouterConfig {
             max_in_flight: 512,
             max_retries: 2,
             retry_after_ms: 50,
+            affinity: true,
+            stream_buffer: 256,
         }
     }
 }
@@ -139,6 +169,79 @@ struct Completions {
     cv: Condvar,
 }
 
+/// Prefix grains (token counts) the affinity sketch records, probed
+/// longest-first so the most specific recent routing wins.
+const SKETCH_GRAINS: [usize; 3] = [256, 64, 16];
+/// Sketch size bound; ~25% oldest entries are dropped on overflow.
+const SKETCH_CAP: usize = 4096;
+
+/// FNV-1a over the first `grain` prompt tokens, with the grain mixed in
+/// so different granularities occupy disjoint key spaces.
+fn prefix_hash(prompt: &[u32], grain: usize) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64
+        ^ (grain as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    for &t in &prompt[..grain] {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Router-side prefix-affinity sketch: a bounded map from prompt-prefix
+/// hashes to the worker that last received a prompt with that prefix.
+/// It is a *hint* mirroring where each worker's private `RadixIndex`
+/// likely holds cached segments — cheap to probe on the submit path
+/// (no worker lock crosses it), and safe to be stale: a wrong hint
+/// costs one cache miss, never correctness, and the degradation ladder
+/// in [`Shared::route_worker`] keeps it from costing availability.
+#[derive(Default)]
+struct PrefixSketch {
+    /// prefix hash → (worker index, last-touch stamp).
+    map: HashMap<u64, (usize, u64)>,
+    clock: u64,
+}
+
+impl PrefixSketch {
+    /// Grain clamped the same way `PrefixStore::lookup` caps matches:
+    /// at most `prompt.len() - 1` tokens (the last token is never
+    /// cached — its logits seed the first generated token).
+    fn grain_for(prompt: &[u32], grain: usize) -> usize {
+        grain.min(prompt.len().saturating_sub(1))
+    }
+
+    /// Record that `prompt` was dispatched to `widx`.
+    fn note(&mut self, prompt: &[u32], widx: usize) {
+        self.clock += 1;
+        let stamp = self.clock;
+        for grain in SKETCH_GRAINS {
+            let g = Self::grain_for(prompt, grain);
+            if g == 0 {
+                continue;
+            }
+            self.map.insert(prefix_hash(prompt, g), (widx, stamp));
+        }
+        if self.map.len() > SKETCH_CAP {
+            let cutoff = self.clock.saturating_sub(SKETCH_CAP as u64 / 4);
+            self.map.retain(|_, &mut (_, s)| s > cutoff);
+        }
+    }
+
+    /// The worker that last saw a prompt sharing a prefix with this
+    /// one, longest grain first.
+    fn candidate(&self, prompt: &[u32]) -> Option<usize> {
+        for grain in SKETCH_GRAINS {
+            let g = Self::grain_for(prompt, grain);
+            if g == 0 {
+                continue;
+            }
+            if let Some(&(w, _)) = self.map.get(&prefix_hash(prompt, g)) {
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
 struct Shared {
     model: Arc<Model>,
     cfg: EngineConfig,
@@ -155,6 +258,18 @@ struct Shared {
     worker_panics: AtomicU64,
     worker_restarts: AtomicU64,
     queue_depth_peak: AtomicU64,
+    affinity_hits: AtomicU64,
+    affinity_fallbacks: AtomicU64,
+    streams_severed: AtomicU64,
+    /// Prefix-affinity routing sketch (see [`PrefixSketch`]).
+    sketch: Mutex<PrefixSketch>,
+    /// Live stream sinks by request id; a sink leaves this registry —
+    /// and is closed — exactly when its terminal outcome is recorded,
+    /// which is what gives streaming consumers the exactly-one-terminal
+    /// frame guarantee.
+    streams: Mutex<HashMap<RequestId, Arc<StreamSink>>>,
+    /// Wire-visible TTFT (consumer-side first-token receipt).
+    ttft_wire: Mutex<Histogram>,
     /// Metrics from exited/panicked engines (each engine's counters are
     /// merged here exactly once).
     metrics: Mutex<Metrics>,
@@ -167,24 +282,67 @@ fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Least-loaded selection over `(worker index, load)` pairs with a
+/// deterministic tie-break: among equal loads the **lowest worker
+/// index** wins, so routing decisions are reproducible run-to-run (a
+/// `FaultPlan` targeting worker W hits the same requests every time).
+fn least_loaded(candidates: impl Iterator<Item = (usize, usize)>) -> Option<usize> {
+    candidates.min_by_key(|&(i, load)| (load, i)).map(|(i, _)| i)
+}
+
 impl Shared {
-    /// Least-loaded live worker; `respect_caps` also skips workers at
-    /// the queue bound.
+    /// Least-loaded live worker (deterministic lowest-index tie-break);
+    /// `respect_caps` also skips workers at the queue bound.
     fn pick_worker(&self, respect_caps: bool) -> Option<usize> {
-        let mut best: Option<(usize, usize)> = None;
-        for (i, w) in self.workers.iter().enumerate() {
+        least_loaded(self.workers.iter().enumerate().filter_map(|(i, w)| {
             if !w.alive.load(Ordering::Acquire) {
-                continue;
+                return None;
             }
             let load = w.in_flight.load(Ordering::Relaxed);
             if respect_caps && load >= self.rcfg.max_queue_per_worker {
-                continue;
+                return None;
             }
-            if best.map(|(_, b)| load < b).unwrap_or(true) {
-                best = Some((i, load));
+            Some((i, load))
+        }))
+    }
+
+    /// Pick the dispatch worker for `prompt` via the affinity ladder:
+    ///
+    /// 1. Sketch names a worker that is alive and under its queue bound
+    ///    → route there (`affinity_hits`); its radix cache likely holds
+    ///    the prefix.
+    /// 2. Sketch names a worker but it is dead or saturated → fall back
+    ///    to least-loaded (`affinity_fallbacks`); the hint must never
+    ///    cost availability.
+    /// 3. Sketch probe contended (another submitter holds it — the
+    ///    "probe timed out" rung) or no candidate → least-loaded.
+    fn route_worker(&self, prompt: &[u32]) -> Option<usize> {
+        if self.rcfg.affinity {
+            let candidate = match self.sketch.try_lock() {
+                Ok(sk) => sk.candidate(prompt),
+                Err(_) => None, // contended probe: degrade, don't wait
+            };
+            if let Some(w) = candidate {
+                let ws = &self.workers[w];
+                if ws.alive.load(Ordering::Acquire)
+                    && ws.in_flight.load(Ordering::Relaxed)
+                        < self.rcfg.max_queue_per_worker
+                {
+                    self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+                    return Some(w);
+                }
+                self.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
             }
         }
-        best.map(|(i, _)| i)
+        self.pick_worker(true)
+    }
+
+    /// Record where `prompt` landed so future prompts sharing its
+    /// prefix follow it.
+    fn note_affinity(&self, prompt: &[u32], widx: usize) {
+        if self.rcfg.affinity {
+            lock_ok(&self.sketch).note(prompt, widx);
+        }
     }
 
     fn total_in_flight(&self) -> usize {
@@ -213,6 +371,7 @@ impl Shared {
             Some(widx) => {
                 self.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
                 self.note_queue_depth();
+                self.note_affinity(&req.prompt, widx);
                 self.enqueue(widx, WorkerMsg::Submit(req));
                 Ok(widx)
             }
@@ -220,14 +379,37 @@ impl Shared {
         }
     }
 
-    /// Record a terminal outcome and wake every waiter.
+    /// Record a terminal outcome and wake every waiter. For streaming
+    /// requests this is also the single place the sink is closed: the
+    /// outcome is inserted *first*, then the sink — so a consumer that
+    /// observes `Closed` is guaranteed to find the outcome it needs to
+    /// render its one terminal frame.
     fn finish_outcome(&self, outcome: Outcome) {
+        let id = outcome.id();
+        let clean = matches!(
+            &outcome,
+            Outcome::Done(r)
+                if matches!(r.finish, FinishReason::Length | FinishReason::StopToken)
+        );
         {
             let mut st = lock_ok(&self.completions.state);
-            st.ready.insert(outcome.id(), outcome);
+            st.ready.insert(id, outcome);
             st.completed += 1;
         }
         self.completions.cv.notify_all();
+        let sink = lock_ok(&self.streams).remove(&id);
+        if let Some(sink) = sink {
+            if sink.tokens_pushed() > 0 && !clean {
+                // Tokens went out but the stream did not finish cleanly
+                // — the wire-visible truncation the terminal frame
+                // reports.
+                self.streams_severed.fetch_add(1, Ordering::Relaxed);
+            }
+            sink.close();
+            if let Some(d) = sink.wire_ttft() {
+                lock_ok(&self.ttft_wire).record(d);
+            }
+        }
     }
 
     /// Outcome from worker `widx`: the request leaves its ledger.
@@ -291,6 +473,12 @@ impl Router {
             worker_panics: AtomicU64::new(0),
             worker_restarts: AtomicU64::new(0),
             queue_depth_peak: AtomicU64::new(0),
+            affinity_hits: AtomicU64::new(0),
+            affinity_fallbacks: AtomicU64::new(0),
+            streams_severed: AtomicU64::new(0),
+            sketch: Mutex::new(PrefixSketch::default()),
+            streams: Mutex::new(HashMap::new()),
+            ttft_wire: Mutex::new(Histogram::default()),
             metrics: Mutex::new(Metrics::default()),
         });
         let handles = (0..n_workers)
@@ -305,13 +493,42 @@ impl Router {
         Router { shared, handles: Mutex::new(handles) }
     }
 
-    /// Submit to the least-loaded live worker. Sheds load (never
-    /// panics, never blocks on a worker) when the pool is saturated,
-    /// draining, or dead; ids are router-assigned and globally unique.
+    /// Submit a buffered (whole-response) request via the affinity
+    /// ladder. Sheds load (never panics, never blocks on a worker) when
+    /// the pool is saturated, draining, or dead; ids are
+    /// router-assigned and globally unique.
     pub fn submit(
         &self,
         prompt: Vec<u32>,
         params: GenerationParams,
+    ) -> Result<RequestId, SubmitError> {
+        self.submit_inner(prompt, params, None)
+    }
+
+    /// Submit a streaming request: tokens are delivered through the
+    /// returned [`StreamSink`] as they decode, and the sink closes
+    /// exactly when the request's terminal [`Outcome`] is published —
+    /// after draining the sink to `Closed`, `wait_for_outcome` is
+    /// guaranteed to find the outcome immediately. The sink buffers at
+    /// most `RouterConfig::stream_buffer` undelivered tokens; a
+    /// consumer that falls further behind severs the stream and the
+    /// engine sheds the request (terminal `slow_consumer` semantics)
+    /// rather than blocking decode.
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<u32>,
+        params: GenerationParams,
+    ) -> Result<(RequestId, Arc<StreamSink>), SubmitError> {
+        let sink = Arc::new(StreamSink::new(self.shared.rcfg.stream_buffer));
+        let id = self.submit_inner(prompt, params, Some(Arc::clone(&sink)))?;
+        Ok((id, sink))
+    }
+
+    fn submit_inner(
+        &self,
+        prompt: Vec<u32>,
+        params: GenerationParams,
+        stream: Option<Arc<StreamSink>>,
     ) -> Result<RequestId, SubmitError> {
         let s = &self.shared;
         if s.stopping.load(Ordering::SeqCst) {
@@ -321,7 +538,7 @@ impl Router {
             s.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Overloaded { retry_after_ms: s.rcfg.retry_after_ms });
         }
-        let Some(widx) = s.pick_worker(true) else {
+        let Some(widx) = s.route_worker(&prompt) else {
             let any_alive = s.workers.iter().any(|w| w.alive.load(Ordering::Acquire));
             s.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(if any_alive {
@@ -334,7 +551,11 @@ impl Router {
         s.submitted.fetch_add(1, Ordering::SeqCst);
         s.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
         s.note_queue_depth();
-        s.enqueue(widx, WorkerMsg::Submit(Request { id, prompt, params, attempts: 0 }));
+        s.note_affinity(&prompt, widx);
+        if let Some(sink) = &stream {
+            lock_ok(&s.streams).insert(id, Arc::clone(sink));
+        }
+        s.enqueue(widx, WorkerMsg::Submit(Request { id, prompt, params, attempts: 0, stream }));
         Ok(id)
     }
 
@@ -542,6 +763,10 @@ impl Router {
         merged.queue_depth_peak = merged
             .queue_depth_peak
             .max(s.queue_depth_peak.load(Ordering::Relaxed));
+        merged.affinity_hits += s.affinity_hits.load(Ordering::Relaxed);
+        merged.affinity_fallbacks += s.affinity_fallbacks.load(Ordering::Relaxed);
+        merged.streams_severed += s.streams_severed.load(Ordering::Relaxed);
+        merged.ttft_wire.merge(&lock_ok(&s.ttft_wire));
         merged
     }
 }
@@ -689,12 +914,55 @@ fn recover_from_panic(widx: usize, shared: &Shared, mut engine: Engine) -> Engin
             "worker panicked; retry budget exhausted".to_string(),
         );
     }
-    for req in dead {
+    for (req, emitted) in dead {
+        // Progress a replay could not reproduce: the terminal error
+        // carries the emitted-token count so a streaming client knows
+        // exactly where its stream was truncated.
         shared.fail(
             req.id,
             "worker_failed",
-            "worker panicked mid-generation".to_string(),
+            format!("worker panicked mid-generation ({emitted} tokens emitted)"),
         );
     }
     fresh
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn least_loaded_breaks_ties_by_lowest_index() {
+        // Equal loads → lowest worker index, regardless of iteration
+        // order, so routing replays identically under FaultPlans.
+        assert_eq!(least_loaded([(0, 3), (1, 3), (2, 3)].into_iter()), Some(0));
+        assert_eq!(least_loaded([(2, 3), (1, 3), (0, 3)].into_iter()), Some(0));
+        assert_eq!(least_loaded([(2, 1), (1, 1), (0, 4)].into_iter()), Some(1));
+        // Strictly-lower load still beats a lower index.
+        assert_eq!(least_loaded([(0, 5), (3, 2), (1, 2)].into_iter()), Some(1));
+        assert_eq!(least_loaded(std::iter::empty()), None);
+    }
+
+    #[test]
+    fn sketch_routes_shared_prefixes_and_stays_bounded() {
+        let mut sk = PrefixSketch::default();
+        let prompt: Vec<u32> = (0..100).collect();
+        assert_eq!(sk.candidate(&prompt), None);
+        sk.note(&prompt, 2);
+        // Identical prompt and a same-prefix extension both resolve.
+        assert_eq!(sk.candidate(&prompt), Some(2));
+        let mut longer = prompt.clone();
+        longer.extend([900, 901, 902]);
+        assert_eq!(sk.candidate(&longer), Some(2));
+        // A prompt diverging before every grain does not.
+        let other: Vec<u32> = (500..600).collect();
+        assert_eq!(sk.candidate(&other), None);
+        // Newest note wins, and the map stays bounded under churn.
+        sk.note(&prompt, 0);
+        assert_eq!(sk.candidate(&prompt), Some(0));
+        for i in 0..(SKETCH_CAP as u32 * 4) {
+            sk.note(&[i, i + 1, i + 2, i + 3], 1);
+        }
+        assert!(sk.map.len() <= SKETCH_CAP + SKETCH_GRAINS.len());
+    }
 }

@@ -265,6 +265,7 @@ impl Engine {
             prefix: Vec::new(),
             prefix_len: 0,
             attempts: req.attempts,
+            stream: req.stream,
         }
     }
 
@@ -274,7 +275,7 @@ impl Engine {
     pub fn submit(&mut self, prompt: Vec<u32>, params: GenerationParams) -> RequestId {
         let id = self.next_id;
         self.next_id += 1;
-        self.enqueue_request(Request { id, prompt, params, attempts: 0 });
+        self.enqueue_request(Request { id, prompt, params, attempts: 0, stream: None });
         id
     }
 
@@ -343,6 +344,7 @@ impl Engine {
             }
         }
         self.abort_expired();
+        self.abort_severed();
         self.admit();
         let model = Arc::clone(&self.model);
         let mut tokens = 0usize;
@@ -436,6 +438,15 @@ impl Engine {
                                 sample(&logits, seq.params.temperature, &mut self.rng);
                             seq.generated.push(next);
                             seq.first_token_at = Some(Instant::now());
+                            // Folded tokens re-fed after a preemption go
+                            // through prefill, not this sample — only the
+                            // genuinely new token is streamed, so the wire
+                            // sequence stays contiguous across preemptions.
+                            if let Some(sink) = &seq.stream {
+                                if sink.push_token(next) {
+                                    self.metrics.tokens_streamed += 1;
+                                }
+                            }
                         }
                     }
                 }
@@ -560,6 +571,14 @@ impl Engine {
                 seq.first_token_at = Some(Instant::now());
             }
             self.metrics.generated_tokens += 1;
+            if let Some(sink) = &seq.stream {
+                // A refused push means the consumer overran the buffer;
+                // the sink is now severed and abort_severed() sheds this
+                // sequence at the top of the next step.
+                if sink.push_token(next) {
+                    self.metrics.tokens_streamed += 1;
+                }
+            }
         }
     }
 
@@ -666,6 +685,36 @@ impl Engine {
         }
     }
 
+    /// Shed every sequence whose stream sink was severed (the consumer
+    /// fell a full send-buffer behind). Runs at the top of each step so
+    /// a severed stream stops consuming decode budget immediately; the
+    /// sequence still reaches exactly one terminal outcome (`Cancelled`
+    /// here — the router maps a severed sink to a `slow_consumer`
+    /// terminal error frame). Waiting sequences are swept too: a
+    /// preempted sequence keeps its sink and can sever while requeued.
+    fn abort_severed(&mut self) {
+        let severed =
+            |s: &Sequence| s.stream.as_ref().is_some_and(|k| k.is_severed());
+        let mut i = 0;
+        while i < self.running.len() {
+            if severed(&self.running[i]) {
+                self.metrics.slow_consumer_sheds += 1;
+                self.finish(i, FinishReason::Cancelled);
+            } else {
+                i += 1;
+            }
+        }
+        let mut j = 0;
+        while j < self.waiting.len() {
+            if severed(&self.waiting[j]) {
+                self.metrics.slow_consumer_sheds += 1;
+                self.drop_waiting(j, FinishReason::Cancelled);
+            } else {
+                j += 1;
+            }
+        }
+    }
+
     /// Cancel a request wherever it lives (running or waiting); returns
     /// true if found. The request still reaches exactly one terminal
     /// outcome: a `Cancelled` response carrying whatever was generated.
@@ -696,27 +745,37 @@ impl Engine {
 
     /// Drain every in-flight request after a caught panic. Returns
     /// `(retryable, failed)`: retryable requests never produced a
-    /// visible token (safe to re-dispatch verbatim to a survivor); the
-    /// rest had progress a replay could not reproduce and must be
-    /// answered with a structured error. Pool/radix state is *not*
-    /// released — the caller discards the whole engine.
-    pub fn salvage(&mut self) -> (Vec<Request>, Vec<Request>) {
+    /// visible token — and, since tokens are streamed at sample time,
+    /// never streamed one either — so they are safe to re-dispatch
+    /// verbatim to a survivor. The rest had progress a replay could not
+    /// reproduce and must be answered with a structured error; each
+    /// carries its emitted-token count (tokens streamed for streaming
+    /// requests, tokens generated otherwise) for that error's
+    /// truncation report. Pool/radix state is *not* released — the
+    /// caller discards the whole engine.
+    pub fn salvage(&mut self) -> (Vec<Request>, Vec<(Request, u64)>) {
         let mut retry = Vec::new();
         let mut dead = Vec::new();
         let drained: Vec<Sequence> =
             self.waiting.drain(..).chain(self.running.drain(..)).collect();
         for seq in drained {
             let fresh = seq.generated.is_empty() && seq.folded == 0;
+            let emitted = seq
+                .stream
+                .as_ref()
+                .map(|s| s.tokens_pushed())
+                .unwrap_or(seq.generated.len() as u64);
             let req = Request {
                 id: seq.id,
                 prompt: seq.prompt,
                 params: seq.params,
                 attempts: seq.attempts,
+                stream: seq.stream,
             };
             if fresh {
                 retry.push(req);
             } else {
-                dead.push(req);
+                dead.push((req, emitted));
             }
         }
         (retry, dead)

@@ -1,0 +1,224 @@
+//! Per-request streaming channel: a bounded, Condvar-signaled token
+//! queue between the engine worker that decodes a request and the
+//! server connection thread that writes its frames.
+//!
+//! # Contract
+//!
+//! * **Producer** (the engine, via [`StreamSink::push_token`]): every
+//!   sampled token is offered exactly once, in generation order; each
+//!   accepted token gets the next contiguous sequence number. A push
+//!   against a full buffer **never blocks and never drops silently** —
+//!   it marks the stream *severed* and fails, and the engine sheds the
+//!   slow consumer at its next step (the terminal frame then reports
+//!   how many tokens made it out). Decode speed is therefore never
+//!   coupled to consumer speed, and per-request memory is bounded by
+//!   the buffer capacity.
+//! * **Terminator** (the router's completion path, via
+//!   [`StreamSink::close`]): called exactly once when the request's
+//!   terminal [`Outcome`](super::Outcome) is published, after which
+//!   [`StreamSink::recv_timeout`] drains the remaining tokens and then
+//!   reports [`StreamRecv::Closed`]. Closing is what guarantees the
+//!   wire's "exactly one terminal frame per stream" invariant: the
+//!   consumer renders its terminal frame on `Closed` and the outcome
+//!   table holds exactly one outcome per accepted request.
+//! * **Consumer** (the server): [`StreamSink::recv_timeout`] blocks on
+//!   the Condvar (no polling) and drains tokens in sequence order. The
+//!   wire-visible time-to-first-token is stamped when the first token
+//!   *enters* the channel (submission → first token available to the
+//!   consumer, so it includes router queueing and prefill but is
+//!   independent of when the consumer polls).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One streamed token with its contiguous per-stream sequence number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamEvent {
+    /// 0-based, contiguous: the consumer sees `seq = 0, 1, 2, ...` with
+    /// no gaps up to the terminal frame (a full buffer severs the
+    /// stream instead of skipping tokens).
+    pub seq: u64,
+    pub token: u32,
+}
+
+/// Result of one [`StreamSink::recv_timeout`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamRecv {
+    /// The next token in sequence order.
+    Event(StreamEvent),
+    /// The stream's terminal outcome is published (queue fully
+    /// drained); no further events will ever arrive.
+    Closed,
+    /// Nothing available within the timeout; the stream is still live.
+    Empty,
+}
+
+#[derive(Debug, Default)]
+struct SinkState {
+    queue: VecDeque<StreamEvent>,
+    /// Tokens accepted so far (== the next sequence number).
+    pushed: u64,
+    severed: bool,
+    closed: bool,
+    /// Wire TTFT: set when the first token enters the channel.
+    first_token: Option<Duration>,
+}
+
+/// Bounded per-request streaming channel (see module docs).
+#[derive(Debug)]
+pub struct StreamSink {
+    state: Mutex<SinkState>,
+    cv: Condvar,
+    cap: usize,
+    born: Instant,
+}
+
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl StreamSink {
+    /// A sink buffering at most `cap` undelivered tokens (`cap` is
+    /// clamped to ≥ 1 so a stream can always make progress).
+    pub fn new(cap: usize) -> StreamSink {
+        StreamSink {
+            state: Mutex::new(SinkState::default()),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            born: Instant::now(),
+        }
+    }
+
+    /// Offer one token. Returns `false` — and permanently severs the
+    /// stream — if the consumer has fallen `cap` tokens behind (or the
+    /// stream was already severed/closed). Never blocks.
+    pub fn push_token(&self, token: u32) -> bool {
+        let mut st = lock_ok(&self.state);
+        if st.severed || st.closed {
+            return false;
+        }
+        if st.queue.len() >= self.cap {
+            st.severed = true;
+            drop(st);
+            self.cv.notify_all();
+            return false;
+        }
+        let seq = st.pushed;
+        st.pushed += 1;
+        if st.first_token.is_none() {
+            st.first_token = Some(self.born.elapsed());
+        }
+        st.queue.push_back(StreamEvent { seq, token });
+        drop(st);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Mark the terminal outcome as published. Pending tokens stay
+    /// receivable; after they drain, `recv_timeout` reports `Closed`.
+    pub fn close(&self) {
+        lock_ok(&self.state).closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Whether the producer overran the buffer (slow consumer).
+    pub fn is_severed(&self) -> bool {
+        lock_ok(&self.state).severed
+    }
+
+    /// Tokens accepted into the stream so far.
+    pub fn tokens_pushed(&self) -> u64 {
+        lock_ok(&self.state).pushed
+    }
+
+    /// Time from sink creation (submission) to the first token entering
+    /// the channel — TTFT as deliverable on the wire (includes router
+    /// queueing and prefill; the engine-side `ttft` histogram starts
+    /// later, at sequence admission). `None` until a token was pushed.
+    pub fn wire_ttft(&self) -> Option<Duration> {
+        lock_ok(&self.state).first_token
+    }
+
+    /// Receive the next event, blocking up to `timeout` (Condvar-
+    /// signaled). Tokens drain in sequence order even after `close`.
+    pub fn recv_timeout(&self, timeout: Duration) -> StreamRecv {
+        let deadline = Instant::now() + timeout;
+        let mut st = lock_ok(&self.state);
+        loop {
+            if let Some(ev) = st.queue.pop_front() {
+                return StreamRecv::Event(ev);
+            }
+            if st.closed {
+                return StreamRecv::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return StreamRecv::Empty;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            st = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_recv_in_order_then_closed() {
+        let sink = StreamSink::new(8);
+        assert!(sink.push_token(10));
+        assert!(sink.push_token(11));
+        sink.close();
+        assert_eq!(
+            sink.recv_timeout(Duration::from_millis(10)),
+            StreamRecv::Event(StreamEvent { seq: 0, token: 10 })
+        );
+        assert_eq!(
+            sink.recv_timeout(Duration::from_millis(10)),
+            StreamRecv::Event(StreamEvent { seq: 1, token: 11 })
+        );
+        assert_eq!(sink.recv_timeout(Duration::from_millis(10)), StreamRecv::Closed);
+        assert!(sink.wire_ttft().is_some());
+        // Pushes after close are refused without severing semantics
+        // mattering (the stream is already terminal).
+        assert!(!sink.push_token(99));
+        assert_eq!(sink.tokens_pushed(), 2);
+    }
+
+    #[test]
+    fn overflow_severs_and_never_drops_silently() {
+        let sink = StreamSink::new(2);
+        assert!(sink.push_token(1));
+        assert!(sink.push_token(2));
+        assert!(!sink.push_token(3), "push into a full buffer must fail");
+        assert!(sink.is_severed());
+        assert!(!sink.push_token(4), "a severed stream accepts nothing more");
+        // Delivered tokens stay contiguous: 0, 1, then nothing past the
+        // severing point until close.
+        assert_eq!(
+            sink.recv_timeout(Duration::from_millis(5)),
+            StreamRecv::Event(StreamEvent { seq: 0, token: 1 })
+        );
+        assert_eq!(
+            sink.recv_timeout(Duration::from_millis(5)),
+            StreamRecv::Event(StreamEvent { seq: 1, token: 2 })
+        );
+        assert_eq!(sink.recv_timeout(Duration::from_millis(5)), StreamRecv::Empty);
+        sink.close();
+        assert_eq!(sink.recv_timeout(Duration::from_millis(5)), StreamRecv::Closed);
+        assert_eq!(sink.tokens_pushed(), 2);
+    }
+
+    #[test]
+    fn empty_timeout_does_not_close() {
+        let sink = StreamSink::new(4);
+        assert_eq!(sink.recv_timeout(Duration::from_millis(1)), StreamRecv::Empty);
+        assert!(sink.wire_ttft().is_none());
+    }
+}

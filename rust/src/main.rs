@@ -28,6 +28,11 @@ const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
                                                        (tokens = min match to adopt)\n\
   --max-queue <N> --max-in-flight <N>                  admission-control caps (serve)\n\
   --max-connections <N>                                live-connection cap (serve)\n\
+  --affinity <on|off>                                  prefix-affinity routing (serve);\n\
+                                                       degrades to least-loaded when the\n\
+                                                       preferred worker is dead/saturated\n\
+  --send-buffer <N>                                    per-stream token buffer (serve);\n\
+                                                       a consumer this far behind is shed\n\
   --deadline-ms <N>                                    request deadline (generate)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -92,9 +97,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = load_model(args)?;
     let workers = args.usize_or("workers", 2);
     let addr = args.str_or("addr", "127.0.0.1:7070");
+    let affinity = match args.str_or("affinity", "on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("invalid --affinity '{other}' (want on|off)");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
     let rcfg = RouterConfig {
         max_queue_per_worker: args.usize_or("max-queue", 64),
         max_in_flight: args.usize_or("max-in-flight", 512),
+        affinity,
+        stream_buffer: args.usize_or("send-buffer", 256),
         ..Default::default()
     };
     let scfg = ServerConfig {
@@ -107,6 +123,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("hsr-attn serving on {} ({} workers)", server.local_addr()?, workers);
     println!("protocol: one JSON object per line, e.g.");
     println!("  {{\"prompt\":\"the merchant carries \",\"max_new_tokens\":32,\"deadline_ms\":2000}}");
+    println!("  add \"stream\":true for per-token frames (one terminal frame per stream)");
     server.serve()
 }
 

@@ -8,6 +8,14 @@
 //!   ← {"error": "server overloaded", "code": "overloaded",
 //!      "retry_after_ms": 50}
 //!
+//! With `"stream": true` the reply is a frame sequence instead
+//! (`protocol` module docs give the grammar):
+//!   ← {"id": 7, "event": "token", "seq": 0, "token": 104, "text": "h"}
+//!   ← {"id": 7, "event": "done", "tokens_streamed": 1, ...}
+//! with exactly one terminal frame (`done`/`error`/`cancelled`) per
+//! stream, contiguous `seq` numbers, and `keepalive` frames while
+//! decode is busy.
+//!
 //! Connections are handled by a thread each; generation runs on the
 //! router's supervised engine workers (std::thread — the vendored
 //! dependency set has no tokio; see DESIGN.md). The accept loop reaps
@@ -16,11 +24,18 @@
 //! connections for a bounded window before shutting their sockets.
 //! Request waits are Condvar-driven ([`Router::wait_for_outcome`]) with
 //! a periodic disconnect probe: a client that goes away mid-generation
-//! gets its request cancelled so it stops burning decode steps.
+//! gets its request cancelled so it stops burning decode steps. Slow
+//! stream consumers are bounded twice over: socket writes carry a write
+//! timeout, and the engine-side send buffer severs the stream (terminal
+//! `slow_consumer` error) if the client falls a full buffer behind —
+//! decode never blocks on a reader.
 
 pub mod protocol;
 
-use crate::engine::{GenerationParams, Outcome, RequestId, Router, SubmitError};
+use crate::engine::{
+    FinishReason, GenerationParams, Outcome, RequestId, Router, StreamRecv,
+    StreamSink, SubmitError,
+};
 use crate::model::tokenizer::ByteTokenizer;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -31,7 +46,9 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub use protocol::{
-    parse_request, render_error, render_request, render_response, WireRequest,
+    parse_frame, parse_request, render_cancelled_frame, render_done_frame,
+    render_error, render_keepalive, render_request, render_response,
+    render_stream_error, render_token_frame, StreamFrame, WireRequest,
 };
 
 /// Connection-handling knobs.
@@ -51,6 +68,14 @@ pub struct ServerConfig {
     /// Server-side cap on one request's total wait (deadline of last
     /// resort when the client sets none).
     pub request_timeout: Duration,
+    /// Idle gap on a live stream before a `keepalive` frame goes out
+    /// (lets clients distinguish "decode busy" from "server wedged").
+    pub keepalive: Duration,
+    /// Socket write timeout: a frame write blocked this long (client
+    /// stopped reading, TCP buffers full) counts the consumer as gone
+    /// and the stream's request is cancelled — connection threads never
+    /// hang on a dead reader.
+    pub write_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -61,6 +86,8 @@ impl Default for ServerConfig {
             max_line_bytes: 64 * 1024,
             drain: Duration::from_secs(5),
             request_timeout: Duration::from_secs(120),
+            keepalive: Duration::from_millis(500),
+            write_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -257,6 +284,128 @@ fn await_outcome(router: &Router, stream: &TcpStream, id: RequestId, cap: Durati
     }
 }
 
+/// Structured error line for a refused submission (shared by the
+/// buffered and streaming paths — a stream that never started is
+/// answered with a plain error line, not frames).
+fn submit_error_line(e: SubmitError) -> String {
+    match e {
+        SubmitError::Overloaded { retry_after_ms } => {
+            render_error("overloaded", "server overloaded", Some(retry_after_ms))
+        }
+        SubmitError::ShuttingDown => {
+            render_error("shutting_down", "server is shutting down", None)
+        }
+        SubmitError::NoWorkers => render_error("unavailable", "no live workers", None),
+    }
+}
+
+/// Map a terminal [`Outcome`] to the stream's single terminal frame. A
+/// severed sink takes precedence: the engine sheds a slow consumer
+/// with `Cancelled`, but on the wire that is a `slow_consumer` error.
+fn terminal_frame_for(
+    outcome: &Outcome,
+    streamed: u64,
+    severed: bool,
+    tokenizer: &ByteTokenizer,
+) -> String {
+    if severed {
+        return render_stream_error(
+            outcome.id(),
+            "slow_consumer",
+            "client fell a full send-buffer behind; stream shed",
+            streamed,
+            None,
+        );
+    }
+    match outcome {
+        Outcome::Done(resp) => match resp.finish {
+            FinishReason::Length | FinishReason::StopToken => {
+                render_done_frame(resp, streamed, tokenizer)
+            }
+            FinishReason::DeadlineExceeded => {
+                render_cancelled_frame(resp.id, "deadline", streamed)
+            }
+            FinishReason::Cancelled => render_cancelled_frame(resp.id, "cancelled", streamed),
+            FinishReason::Aborted => render_cancelled_frame(resp.id, "aborted", streamed),
+        },
+        Outcome::Failed(err) => {
+            render_stream_error(err.id, err.code, &err.message, streamed, err.retry_after_ms)
+        }
+    }
+}
+
+/// Drive one accepted streaming request to its terminal frame. Writes
+/// `token` frames as the engine pushes them, `keepalive` frames across
+/// idle gaps, and exactly one terminal frame — unless the client goes
+/// away first (write failure / disconnect probe), in which case the
+/// request is cancelled and `Err` tells the caller to drop the
+/// connection (nobody is listening for a terminal frame).
+#[allow(clippy::too_many_arguments)]
+fn stream_request(
+    writer: &mut TcpStream,
+    stream: &TcpStream,
+    router: &Router,
+    cfg: &ServerConfig,
+    stop: &AtomicBool,
+    id: RequestId,
+    sink: &StreamSink,
+    tokenizer: &ByteTokenizer,
+) -> Result<()> {
+    let deadline = Instant::now() + cfg.request_timeout;
+    let mut streamed: u64 = 0;
+    let mut last_write = Instant::now();
+    loop {
+        match sink.recv_timeout(Duration::from_millis(50)) {
+            StreamRecv::Event(ev) => {
+                let frame = render_token_frame(id, ev.seq, ev.token, tokenizer);
+                if write_line(writer, &frame).is_err() {
+                    router.cancel(id);
+                    anyhow::bail!("client write failed mid-stream");
+                }
+                streamed += 1;
+                last_write = Instant::now();
+            }
+            StreamRecv::Closed => {
+                // The router inserts the outcome before closing the
+                // sink, so it is already present; the timeout is pure
+                // defensiveness.
+                let frame = match router.wait_for_outcome(id, Duration::from_secs(1)) {
+                    Some(outcome) => {
+                        terminal_frame_for(&outcome, streamed, sink.is_severed(), tokenizer)
+                    }
+                    None => render_cancelled_frame(id, "aborted", streamed),
+                };
+                write_line(writer, &frame)?;
+                return Ok(());
+            }
+            StreamRecv::Empty => {
+                if client_gone(stream) {
+                    router.cancel(id);
+                    anyhow::bail!("client disconnected mid-stream");
+                }
+                let timed_out = Instant::now() >= deadline;
+                if timed_out || stop.load(Ordering::Relaxed) {
+                    // Server-side cut: cancel and emit the terminal
+                    // frame ourselves (the engine's own outcome stays
+                    // in the table; this frame is the stream's one
+                    // terminal).
+                    router.cancel(id);
+                    let reason = if timed_out { "timeout" } else { "aborted" };
+                    write_line(writer, &render_cancelled_frame(id, reason, streamed))?;
+                    return Ok(());
+                }
+                if last_write.elapsed() >= cfg.keepalive {
+                    if write_line(writer, &render_keepalive(id)).is_err() {
+                        router.cancel(id);
+                        anyhow::bail!("client write failed on keepalive");
+                    }
+                    last_write = Instant::now();
+                }
+            }
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     router: Arc<Router>,
@@ -265,6 +414,7 @@ fn handle_conn(
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(cfg.read_timeout)).ok();
+    stream.set_write_timeout(Some(cfg.write_timeout)).ok();
     let tokenizer = ByteTokenizer;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream.try_clone()?;
@@ -285,48 +435,62 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
-        let resp_line = match parse_request(&line) {
-            Ok(req) => {
-                let prompt = tokenizer.encode(&req.prompt);
-                let params = GenerationParams {
-                    max_new_tokens: req.max_new_tokens,
-                    temperature: req.temperature,
-                    stop_token: req.stop_token,
-                    deadline: req
-                        .deadline_ms
-                        .map(|ms| Instant::now() + Duration::from_millis(ms)),
-                };
-                match router.submit(prompt, params) {
-                    Ok(id) => match await_outcome(&router, &stream, id, cfg.request_timeout) {
-                        Wait::Outcome(Outcome::Done(resp)) => {
-                            render_response(&resp, &tokenizer)
-                        }
-                        Wait::Outcome(Outcome::Failed(err)) => {
-                            render_error(err.code, &err.message, err.retry_after_ms)
-                        }
-                        Wait::ClientGone => {
-                            // Read EOF / reset with a request in flight:
-                            // stop burning decode steps on it.
-                            router.cancel(id);
-                            break;
-                        }
-                        Wait::TimedOut => {
-                            router.cancel(id);
-                            render_error("timeout", "request timed out server-side", None)
-                        }
-                    },
-                    Err(SubmitError::Overloaded { retry_after_ms }) => {
-                        render_error("overloaded", "server overloaded", Some(retry_after_ms))
-                    }
-                    Err(SubmitError::ShuttingDown) => {
-                        render_error("shutting_down", "server is shutting down", None)
-                    }
-                    Err(SubmitError::NoWorkers) => {
-                        render_error("unavailable", "no live workers", None)
+        let req = match parse_request(&line) {
+            Ok(req) => req,
+            Err(e) => {
+                write_line(&mut writer, &render_error("bad_request", &e.to_string(), None))?;
+                continue;
+            }
+        };
+        let prompt = tokenizer.encode(&req.prompt);
+        let params = GenerationParams {
+            max_new_tokens: req.max_new_tokens,
+            temperature: req.temperature,
+            stop_token: req.stop_token,
+            deadline: req
+                .deadline_ms
+                .map(|ms| Instant::now() + Duration::from_millis(ms)),
+        };
+        if req.stream {
+            match router.submit_streaming(prompt, params) {
+                Ok((id, sink)) => {
+                    if stream_request(
+                        &mut writer,
+                        &stream,
+                        &router,
+                        &cfg,
+                        &stop,
+                        id,
+                        &sink,
+                        &tokenizer,
+                    )
+                    .is_err()
+                    {
+                        break; // client gone mid-stream
                     }
                 }
+                Err(e) => write_line(&mut writer, &submit_error_line(e))?,
             }
-            Err(e) => render_error("bad_request", &e.to_string(), None),
+            continue;
+        }
+        let resp_line = match router.submit(prompt, params) {
+            Ok(id) => match await_outcome(&router, &stream, id, cfg.request_timeout) {
+                Wait::Outcome(Outcome::Done(resp)) => render_response(&resp, &tokenizer),
+                Wait::Outcome(Outcome::Failed(err)) => {
+                    render_error(err.code, &err.message, err.retry_after_ms)
+                }
+                Wait::ClientGone => {
+                    // Read EOF / reset with a request in flight:
+                    // stop burning decode steps on it.
+                    router.cancel(id);
+                    break;
+                }
+                Wait::TimedOut => {
+                    router.cancel(id);
+                    render_error("timeout", "request timed out server-side", None)
+                }
+            },
+            Err(e) => submit_error_line(e),
         };
         write_line(&mut writer, &resp_line)?;
     }
@@ -366,18 +530,60 @@ impl Client {
             temperature: 0.0,
             stop_token: None,
             deadline_ms: None,
+            stream: false,
         })
     }
 
     /// Send a full request (deadline and all) and wait for the reply
     /// line — which may be a structured error object.
     pub fn request(&mut self, req: &WireRequest) -> Result<crate::util::json::Json> {
-        self.stream.write_all(render_request(req).as_bytes())?;
-        self.stream.write_all(b"\n")?;
-        self.stream.flush()?;
+        self.send(req)?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         anyhow::ensure!(!line.is_empty(), "connection closed by server");
         crate::util::json::Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+
+    /// Send a request line without waiting for the reply (streaming
+    /// callers read frames themselves via [`Client::read_frame`]).
+    pub fn send(&mut self, req: &WireRequest) -> Result<()> {
+        self.stream.write_all(render_request(req).as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        Ok(())
+    }
+
+    /// Read one streaming frame (blocks until a line arrives).
+    pub fn read_frame(&mut self) -> Result<StreamFrame> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "connection closed by server");
+        parse_frame(&line)
+    }
+
+    /// Send a streaming request and collect every frame through the
+    /// terminal one (inclusive). A plain error line (stream refused
+    /// before it started — overload, bad request) becomes an `Err`.
+    pub fn stream_generate(&mut self, req: &WireRequest) -> Result<Vec<StreamFrame>> {
+        self.send(req)?;
+        let mut frames = Vec::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line)?;
+            anyhow::ensure!(!line.is_empty(), "connection closed by server");
+            let Ok(frame) = parse_frame(&line) else {
+                anyhow::bail!("stream refused: {}", line.trim());
+            };
+            let terminal = matches!(
+                frame,
+                StreamFrame::Done { .. }
+                    | StreamFrame::Error { .. }
+                    | StreamFrame::Cancelled { .. }
+            );
+            frames.push(frame);
+            if terminal {
+                return Ok(frames);
+            }
+        }
     }
 }

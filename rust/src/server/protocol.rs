@@ -4,6 +4,23 @@
 //! `id`/`text`/`finish`/latency fields; error lines carry the schema
 //! `{"error": <message>, "code": <short-code>, "retry_after_ms": <ms>?}`
 //! (see the README "Failure model" section).
+//!
+//! # Streaming frames
+//!
+//! A request with `"stream": true` is answered with a sequence of
+//! frames, each a JSON line carrying `id` and `event`:
+//!
+//! * `token` — one generated token, with a 0-based `seq` number that is
+//!   **contiguous** (`0, 1, 2, ...`, no gaps, no reordering);
+//! * exactly **one terminal frame** ends every stream, always:
+//!   `done` (clean finish: `length`/`stop`), `error` (`code`,
+//!   `tokens_streamed`, optional `retry_after_ms`), or `cancelled`
+//!   (`reason`: `deadline`/`cancelled`/`aborted`/`timeout`). Terminal
+//!   frames carry `tokens_streamed` so truncation is always detectable:
+//!   a client holding k token frames knows the stream is complete iff
+//!   the terminal frame says k;
+//! * `keepalive` frames may appear between tokens while decode is busy
+//!   (prefill, queueing) and carry no data — clients skip them.
 
 use crate::engine::{FinishReason, Response};
 use crate::model::tokenizer::ByteTokenizer;
@@ -20,6 +37,9 @@ pub struct WireRequest {
     /// Relative deadline in milliseconds from receipt; the engine
     /// aborts the request past it with finish `"deadline"`.
     pub deadline_ms: Option<u64>,
+    /// Stream tokens as they decode (`token` frames + one terminal
+    /// frame) instead of one buffered response line.
+    pub stream: bool,
 }
 
 /// Parse a request line.
@@ -44,7 +64,8 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         .get("deadline_ms")
         .and_then(|x| x.as_usize())
         .map(|ms| ms as u64);
-    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token, deadline_ms })
+    let stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token, deadline_ms, stream })
 }
 
 /// Render a request line (the inverse of [`parse_request`] for values
@@ -61,7 +82,21 @@ pub fn render_request(req: &WireRequest) -> String {
     if let Some(ms) = req.deadline_ms {
         o.set("deadline_ms", ms.into());
     }
+    if req.stream {
+        o.set("stream", true.into());
+    }
     o.to_string()
+}
+
+/// Stable wire name of a finish reason.
+pub fn finish_str(finish: FinishReason) -> &'static str {
+    match finish {
+        FinishReason::Length => "length",
+        FinishReason::StopToken => "stop",
+        FinishReason::Aborted => "aborted",
+        FinishReason::DeadlineExceeded => "deadline",
+        FinishReason::Cancelled => "cancelled",
+    }
 }
 
 /// Render a response line.
@@ -72,17 +107,7 @@ pub fn render_response(resp: &Response, tokenizer: &ByteTokenizer) -> String {
         .set("latency_ms", resp.latency_ms.into())
         .set("ttft_ms", resp.ttft_ms.into())
         .set("prompt_len", resp.prompt_len.into())
-        .set(
-            "finish",
-            match resp.finish {
-                FinishReason::Length => "length",
-                FinishReason::StopToken => "stop",
-                FinishReason::Aborted => "aborted",
-                FinishReason::DeadlineExceeded => "deadline",
-                FinishReason::Cancelled => "cancelled",
-            }
-            .into(),
-        );
+        .set("finish", finish_str(resp.finish).into());
     o.to_string()
 }
 
@@ -95,6 +120,147 @@ pub fn render_error(code: &str, message: &str, retry_after_ms: Option<u64>) -> S
         o.set("retry_after_ms", ms.into());
     }
     o.to_string()
+}
+
+/// One parsed streaming frame (see the module docs for the grammar).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamFrame {
+    /// One generated token; `seq` is 0-based and contiguous.
+    Token { id: u64, seq: u64, token: u32, text: String },
+    /// Terminal: clean finish. `tokens_streamed` equals the number of
+    /// `token` frames that preceded it; `text` is the full decoded
+    /// generation (buffered-response parity).
+    Done {
+        id: u64,
+        tokens_streamed: u64,
+        finish: String,
+        text: String,
+        latency_ms: f64,
+        ttft_ms: f64,
+        prompt_len: usize,
+    },
+    /// Terminal: the request failed after `tokens_streamed` tokens went
+    /// out (truncation point). `code` is a stable short code
+    /// (`worker_failed`, `slow_consumer`, ...).
+    Error {
+        id: u64,
+        code: String,
+        message: String,
+        tokens_streamed: u64,
+        retry_after_ms: Option<u64>,
+    },
+    /// Terminal: the stream was cut short deliberately
+    /// (`reason` ∈ deadline / cancelled / aborted / timeout).
+    Cancelled { id: u64, reason: String, tokens_streamed: u64 },
+    /// Non-terminal heartbeat while decode is busy; carries no data.
+    Keepalive { id: u64 },
+}
+
+/// Render a `token` frame.
+pub fn render_token_frame(id: u64, seq: u64, token: u32, tokenizer: &ByteTokenizer) -> String {
+    let mut o = Json::obj();
+    o.set("id", id.into())
+        .set("event", "token".into())
+        .set("seq", seq.into())
+        .set("token", (token as u64).into())
+        .set("text", tokenizer.decode(&[token]).into());
+    o.to_string()
+}
+
+/// Render the terminal `done` frame for a cleanly finished stream.
+pub fn render_done_frame(
+    resp: &Response,
+    tokens_streamed: u64,
+    tokenizer: &ByteTokenizer,
+) -> String {
+    let mut o = Json::obj();
+    o.set("id", resp.id.into())
+        .set("event", "done".into())
+        .set("tokens_streamed", tokens_streamed.into())
+        .set("finish", finish_str(resp.finish).into())
+        .set("text", tokenizer.decode(&resp.tokens).into())
+        .set("latency_ms", resp.latency_ms.into())
+        .set("ttft_ms", resp.ttft_ms.into())
+        .set("prompt_len", resp.prompt_len.into());
+    o.to_string()
+}
+
+/// Render a terminal `error` frame.
+pub fn render_stream_error(
+    id: u64,
+    code: &str,
+    message: &str,
+    tokens_streamed: u64,
+    retry_after_ms: Option<u64>,
+) -> String {
+    let mut o = Json::obj();
+    o.set("id", id.into())
+        .set("event", "error".into())
+        .set("error", message.into())
+        .set("code", code.into())
+        .set("tokens_streamed", tokens_streamed.into());
+    if let Some(ms) = retry_after_ms {
+        o.set("retry_after_ms", ms.into());
+    }
+    o.to_string()
+}
+
+/// Render a terminal `cancelled` frame.
+pub fn render_cancelled_frame(id: u64, reason: &str, tokens_streamed: u64) -> String {
+    let mut o = Json::obj();
+    o.set("id", id.into())
+        .set("event", "cancelled".into())
+        .set("reason", reason.into())
+        .set("tokens_streamed", tokens_streamed.into());
+    o.to_string()
+}
+
+/// Render a `keepalive` frame.
+pub fn render_keepalive(id: u64) -> String {
+    let mut o = Json::obj();
+    o.set("id", id.into()).set("event", "keepalive".into());
+    o.to_string()
+}
+
+/// Parse any streaming frame line (the inverse of the `render_*_frame`
+/// family). Never panics on malformed input — errors instead.
+pub fn parse_frame(line: &str) -> Result<StreamFrame> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let id = v.req_usize("id")? as u64;
+    match v.req_str("event")? {
+        "token" => Ok(StreamFrame::Token {
+            id,
+            seq: v.req_usize("seq")? as u64,
+            token: v.req_usize("token")? as u32,
+            text: v.req_str("text")?.to_string(),
+        }),
+        "done" => Ok(StreamFrame::Done {
+            id,
+            tokens_streamed: v.req_usize("tokens_streamed")? as u64,
+            finish: v.req_str("finish")?.to_string(),
+            text: v.req_str("text")?.to_string(),
+            latency_ms: v.req_f64("latency_ms")?,
+            ttft_ms: v.req_f64("ttft_ms")?,
+            prompt_len: v.req_usize("prompt_len")?,
+        }),
+        "error" => Ok(StreamFrame::Error {
+            id,
+            code: v.req_str("code")?.to_string(),
+            message: v.req_str("error")?.to_string(),
+            tokens_streamed: v.req_usize("tokens_streamed")? as u64,
+            retry_after_ms: v
+                .get("retry_after_ms")
+                .and_then(|x| x.as_usize())
+                .map(|ms| ms as u64),
+        }),
+        "cancelled" => Ok(StreamFrame::Cancelled {
+            id,
+            reason: v.req_str("reason")?.to_string(),
+            tokens_streamed: v.req_usize("tokens_streamed")? as u64,
+        }),
+        "keepalive" => Ok(StreamFrame::Keepalive { id }),
+        other => anyhow::bail!("unknown stream event {other:?}"),
+    }
 }
 
 #[cfg(test)]
@@ -153,9 +319,76 @@ mod tests {
             temperature: 0.25,
             stop_token: Some(10),
             deadline_ms: Some(250),
+            stream: false,
         };
         let parsed = parse_request(&render_request(&req)).unwrap();
         assert_eq!(parsed, req);
+        let req = WireRequest { stream: true, ..req };
+        let line = render_request(&req);
+        assert!(line.contains("\"stream\":true"));
+        assert_eq!(parse_request(&line).unwrap(), req);
+    }
+
+    #[test]
+    fn stream_frames_roundtrip() {
+        let f = parse_frame(&render_token_frame(7, 3, 104, &ByteTokenizer)).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Token { id: 7, seq: 3, token: 104, text: "h".to_string() }
+        );
+        let resp = Response {
+            id: 7,
+            tokens: vec![104, 105],
+            finish: FinishReason::Length,
+            latency_ms: 1.5,
+            ttft_ms: 0.5,
+            prompt_len: 3,
+        };
+        let f = parse_frame(&render_done_frame(&resp, 2, &ByteTokenizer)).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Done {
+                id: 7,
+                tokens_streamed: 2,
+                finish: "length".to_string(),
+                text: "hi".to_string(),
+                latency_ms: 1.5,
+                ttft_ms: 0.5,
+                prompt_len: 3,
+            }
+        );
+        let f = parse_frame(&render_stream_error(7, "worker_failed", "boom", 2, Some(50)))
+            .unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Error {
+                id: 7,
+                code: "worker_failed".to_string(),
+                message: "boom".to_string(),
+                tokens_streamed: 2,
+                retry_after_ms: Some(50),
+            }
+        );
+        let f = parse_frame(&render_cancelled_frame(7, "deadline", 2)).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Cancelled {
+                id: 7,
+                reason: "deadline".to_string(),
+                tokens_streamed: 2,
+            }
+        );
+        let f = parse_frame(&render_keepalive(7)).unwrap();
+        assert_eq!(f, StreamFrame::Keepalive { id: 7 });
+    }
+
+    #[test]
+    fn parse_frame_rejects_malformed() {
+        assert!(parse_frame("not json").is_err());
+        assert!(parse_frame(r#"{"id":1}"#).is_err()); // no event
+        assert!(parse_frame(r#"{"event":"token"}"#).is_err()); // no id
+        assert!(parse_frame(r#"{"id":1,"event":"warp"}"#).is_err()); // unknown
+        assert!(parse_frame(r#"{"id":1,"event":"token","seq":0}"#).is_err());
     }
 
     #[test]

@@ -1,17 +1,19 @@
 //! Robustness tests for the fault-tolerant serving front-end: deadline
 //! aborts, cancellation, salvage partitioning, supervised worker
-//! restarts, and a full chaos run (injected panics + early client
-//! disconnects + overload through the TCP server).
+//! restarts, per-token streaming under mid-stream faults (panic, client
+//! disconnect, slow consumer), prefix-affinity routing degradation, and
+//! a full chaos run (injected panics + early client disconnects +
+//! overload through the TCP server).
 //!
 //! Everything here runs on the synthetic model — no artifacts needed.
 
 use hsr_attn::engine::serving::Engine;
 use hsr_attn::engine::{
     EngineConfig, Fault, FaultKind, FaultPlan, FinishReason, GenerationParams,
-    Router, RouterConfig, SchedulerConfig,
+    Outcome, Router, RouterConfig, SchedulerConfig, StreamRecv,
 };
 use hsr_attn::model::Model;
-use hsr_attn::server::{Client, Server, ServerConfig, WireRequest};
+use hsr_attn::server::{Client, Server, ServerConfig, StreamFrame, WireRequest};
 use std::io::Write;
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
@@ -153,6 +155,9 @@ fn salvage_partitions_fresh_from_progressed() {
     }
     let (retry, dead) = eng.salvage();
     assert_eq!((retry.len(), dead.len()), (0, 1));
+    // The dead entry carries its emitted-token count — the truncation
+    // point a streaming client is told about.
+    assert!(dead[0].1 >= 1, "progressed request must report emitted tokens");
 }
 
 #[test]
@@ -166,10 +171,11 @@ fn engine_rejects_above_max_waiting() {
     );
     use hsr_attn::engine::Request;
     for i in 0..2 {
-        let req = Request { id: i, prompt: prompt("q "), params: params(4), attempts: 0 };
+        let req =
+            Request { id: i, prompt: prompt("q "), params: params(4), attempts: 0, stream: None };
         assert!(eng.submit_request(req).is_ok());
     }
-    let req = Request { id: 9, prompt: prompt("q "), params: params(4), attempts: 0 };
+    let req = Request { id: 9, prompt: prompt("q "), params: params(4), attempts: 0, stream: None };
     let back = eng.submit_request(req).expect_err("queue is full");
     assert_eq!(back.id, 9, "rejected request comes back intact");
     eng.run_to_completion();
@@ -290,6 +296,7 @@ fn chaos_panics_disconnects_and_overload() {
                             temperature: 0.0,
                             stop_token: None,
                             deadline_ms: None,
+                            stream: false,
                         });
                         let _ = s.write_all(line.as_bytes());
                         let _ = s.write_all(b"\n");
@@ -310,6 +317,7 @@ fn chaos_panics_disconnects_and_overload() {
                         stop_token: None,
                         // A few requests expire instantly: "deadline" finish.
                         deadline_ms: (i % 5 == 1 && j == 1).then_some(0),
+                        stream: false,
                     };
                     match c.request(&req) {
                         Ok(v) if v.get("finish").is_some() => tally.0 += 1,
@@ -373,5 +381,297 @@ fn chaos_panics_disconnects_and_overload() {
         assert!(m.requests_rejected >= burst_shed as u64);
         assert!(m.deadline_aborts >= 1, "the pre-expired request must abort");
         assert!(m.requests_completed >= ok as u64);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Streaming: contiguous seq numbers, exactly one terminal frame, and
+// mid-stream fault semantics (panic, disconnect, slow consumer).
+// ---------------------------------------------------------------------
+
+#[test]
+fn streaming_over_tcp_is_contiguous_with_one_terminal_done() {
+    with_watchdog(60, || {
+        let router = Arc::new(Router::new(model(), EngineConfig::default(), 2));
+        let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let mut c = Client::connect(&addr).unwrap();
+        let frames = c
+            .stream_generate(&WireRequest {
+                prompt: "stream me a dozen tokens ".to_string(),
+                max_new_tokens: 12,
+                temperature: 0.0,
+                stop_token: None,
+                deadline_ms: None,
+                stream: true,
+            })
+            .expect("an unloaded pool must stream");
+
+        let mut next_seq = 0u64;
+        let mut terminals = 0usize;
+        for f in &frames {
+            match f {
+                StreamFrame::Token { seq, .. } => {
+                    assert_eq!(*seq, next_seq, "seq numbers must be contiguous from 0");
+                    next_seq += 1;
+                }
+                StreamFrame::Keepalive { .. } => {}
+                StreamFrame::Done { tokens_streamed, finish, .. } => {
+                    terminals += 1;
+                    assert_eq!(*tokens_streamed, next_seq, "truncation-detection count");
+                    assert_eq!(*tokens_streamed, 12);
+                    assert_eq!(finish, "length");
+                }
+                other => panic!("unexpected terminal frame {other:?}"),
+            }
+        }
+        assert_eq!(terminals, 1, "exactly one terminal frame per stream");
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().expect("server thread").expect("serve exits cleanly");
+        let router = Arc::try_unwrap(router).ok().expect("router released");
+        let m = router.shutdown();
+        assert_eq!(m.tokens_streamed, 12);
+        assert_eq!(m.streams_severed, 0);
+        assert!(m.ttft_wire.count() >= 1, "wire TTFT must be recorded");
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+#[test]
+fn mid_stream_panic_ends_with_error_carrying_truncation_point() {
+    with_watchdog(60, || {
+        // One worker, panic well past the first token: the request has
+        // streamed visible progress, so salvage must NOT retry it — the
+        // stream ends in a worker_failed error naming the emitted count.
+        let cfg = EngineConfig {
+            faults: FaultPlan::none()
+                .with(Fault { worker: 0, step: 6, kind: FaultKind::Panic }),
+            ..Default::default()
+        };
+        let router = Router::new(model(), cfg, 1);
+        let (id, sink) = router
+            .submit_streaming(prompt("stream that dies mid-flight "), params(64))
+            .unwrap();
+
+        // Drain to Closed; every token pushed before the panic is still
+        // delivered (the sink closes only after the outcome lands).
+        let mut seqs = Vec::new();
+        loop {
+            match sink.recv_timeout(Duration::from_millis(100)) {
+                StreamRecv::Event(ev) => seqs.push(ev.seq),
+                StreamRecv::Closed => break,
+                StreamRecv::Empty => {}
+            }
+        }
+        assert!(!seqs.is_empty(), "panic at step 6 must land after first tokens");
+        for (i, s) in seqs.iter().enumerate() {
+            assert_eq!(*s, i as u64, "delivered seqs stay contiguous across a panic");
+        }
+        let outcome = router
+            .wait_for_outcome(id, Duration::from_secs(10))
+            .expect("sink closes only after the outcome is recorded");
+        match outcome {
+            Outcome::Failed(e) => {
+                assert_eq!(e.code, "worker_failed");
+                let want = format!("({} tokens emitted)", seqs.len());
+                assert!(
+                    e.message.contains(&want),
+                    "error {:?} must carry the truncation point {want:?}",
+                    e.message
+                );
+            }
+            Outcome::Done(r) => panic!("expected worker_failed, got {:?}", r.finish),
+        }
+        let m = router.shutdown();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.streams_severed, 1, "a truncated stream counts as severed");
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+#[test]
+fn client_disconnect_mid_stream_cancels_without_leaks() {
+    with_watchdog(60, || {
+        // A 1ms stall every step paces decode so the disconnect
+        // deterministically lands long before the token budget.
+        let cfg = EngineConfig {
+            faults: FaultPlan::none()
+                .with(Fault { worker: 0, step: 0, kind: FaultKind::Stall { ms: 1 } }),
+            ..Default::default()
+        };
+        let router = Arc::new(Router::new(model(), cfg, 1));
+        let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let srv = std::thread::spawn(move || server.serve());
+
+        let mut c = Client::connect(&addr).unwrap();
+        c.send(&WireRequest {
+            prompt: "disconnecting mid stream ".to_string(),
+            max_new_tokens: 4096,
+            temperature: 0.0,
+            stop_token: None,
+            deadline_ms: None,
+            stream: true,
+        })
+        .unwrap();
+        // Prove the stream is live, then vanish without a goodbye.
+        let mut read = 0;
+        while read < 2 {
+            match c.read_frame().expect("live stream") {
+                StreamFrame::Token { .. } => read += 1,
+                StreamFrame::Keepalive { .. } => {}
+                other => panic!("stream ended before the disconnect: {other:?}"),
+            }
+        }
+        drop(c);
+
+        // The server notices (failed write / disconnect probe), cancels,
+        // and the request still reaches its one terminal outcome.
+        router.wait_idle();
+        let (done, submitted) = router.progress();
+        assert_eq!(done, submitted, "disconnected stream lost its outcome");
+
+        stop.store(true, Ordering::Relaxed);
+        srv.join().expect("server thread").expect("serve exits cleanly");
+        let router = Arc::try_unwrap(router).ok().expect("router released");
+        let m = router.shutdown();
+        assert_eq!(m.disconnect_aborts, 1, "disconnect must cancel the stream");
+        assert!(m.generated_tokens < 4096, "cancel must cut decode short");
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+#[test]
+fn slow_consumer_is_severed_and_shed_without_blocking_decode() {
+    with_watchdog(60, || {
+        // Deliberately slow reader at the sink level: never read at all.
+        // Decode must sever the stream at the buffer bound and shed the
+        // request — not block, not buffer 1000 tokens.
+        let rcfg = RouterConfig { stream_buffer: 4, ..Default::default() };
+        let router = Router::with_config(model(), EngineConfig::default(), 1, rcfg);
+        let (id, sink) = router
+            .submit_streaming(prompt("never read me "), params(1_000))
+            .unwrap();
+        let outcome = router
+            .wait_for_outcome(id, Duration::from_secs(30))
+            .expect("a severed stream still reaches a terminal outcome");
+        match outcome {
+            Outcome::Done(r) => assert_eq!(r.finish, FinishReason::Cancelled),
+            Outcome::Failed(e) => panic!("expected cancelled shed, got {}", e.code),
+        }
+        assert!(sink.is_severed());
+        // The tokens that fit the buffer stay deliverable, then Closed.
+        let mut got = 0u64;
+        loop {
+            match sink.recv_timeout(Duration::from_millis(100)) {
+                StreamRecv::Event(_) => got += 1,
+                StreamRecv::Closed => break,
+                StreamRecv::Empty => {}
+            }
+        }
+        assert_eq!(got, 4, "exactly the buffered tokens are delivered");
+        let m = router.shutdown();
+        assert_eq!(m.slow_consumer_sheds, 1);
+        assert_eq!(m.streams_severed, 1);
+        assert_eq!(m.tokens_streamed, 4, "refused pushes must not count");
+        assert!(m.generated_tokens < 1_000, "shed must cut decode short");
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Prefix-affinity routing: cohorts follow the sketch into one worker's
+// radix cache; degradation never turns the hint into availability loss.
+// ---------------------------------------------------------------------
+
+#[test]
+fn affinity_routes_shared_prompts_into_one_radix_cache() {
+    with_watchdog(60, || {
+        let router = Router::new(model(), EngineConfig::default(), 4);
+        let shared = "common instruction preamble shared by every client in the cohort ";
+        router.submit(prompt(shared), params(4)).unwrap();
+        router.wait_idle();
+        for _ in 0..8 {
+            router.submit(prompt(shared), params(4)).unwrap();
+            router.wait_idle();
+        }
+        let m = router.shutdown();
+        assert!(
+            m.affinity_hits >= 8,
+            "repeat prompts must follow the sketch (got {} hits)",
+            m.affinity_hits
+        );
+        // The payoff: routing them to one worker means its radix cache
+        // serves every repeat (4-way least-loaded would scatter them).
+        assert!(
+            m.prefix_hits >= 8,
+            "affinity must convert into radix-cache hits (got {})",
+            m.prefix_hits
+        );
+    });
+}
+
+#[test]
+fn affinity_degrades_to_least_loaded_when_preferred_worker_saturated() {
+    with_watchdog(60, || {
+        // Worker 0 is pinned busy (stall paces its long request) and the
+        // per-worker bound is 1: a same-prefix submission must fall back
+        // to worker 1 instead of being refused or queued behind it.
+        let cfg = EngineConfig {
+            faults: FaultPlan::none()
+                .with(Fault { worker: 0, step: 0, kind: FaultKind::Stall { ms: 2 } }),
+            ..Default::default()
+        };
+        let rcfg = RouterConfig { max_queue_per_worker: 1, ..Default::default() };
+        let router = Router::with_config(model(), cfg, 2, rcfg);
+        let p = "cohort prompt with a nice long shared prefix for the sketch ";
+        router.submit(prompt(p), params(64)).expect("first request pins worker 0");
+        router
+            .submit(prompt(p), params(4))
+            .expect("affinity must not turn saturation into a refusal");
+        router.wait_idle();
+        let m = router.shutdown();
+        assert!(m.affinity_fallbacks >= 1, "saturated preferred worker must degrade");
+        assert_eq!(m.requests_completed, 2, "both requests must finish");
+        assert_eq!(m.kv_blocks_leaked, 0);
+    });
+}
+
+#[test]
+fn killed_preferred_worker_degrades_without_dropping_requests() {
+    with_watchdog(120, || {
+        // Affinity funnels the cohort into worker 0; a panic there must
+        // cost at most structured errors — never a lost outcome.
+        let cfg = EngineConfig {
+            faults: FaultPlan::none()
+                .with(Fault { worker: 0, step: 8, kind: FaultKind::Panic }),
+            ..Default::default()
+        };
+        let router = Router::new(model(), cfg, 2);
+        let p = "the whole cohort shares this exact long prompt prefix ";
+        let mut accepted = 0usize;
+        for i in 0..12 {
+            if router.submit(prompt(&format!("{p}client {i} ")), params(16)).is_ok() {
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 1);
+        router.wait_idle();
+        let responses = router.take_responses();
+        let failures = router.take_failures();
+        assert_eq!(
+            responses.len() + failures.len(),
+            accepted,
+            "every accepted request needs exactly one terminal outcome"
+        );
+        assert_eq!(router.alive_workers(), 2, "preferred worker must restart");
+        let m = router.shutdown();
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.kv_blocks_leaked, 0);
     });
 }

@@ -16,6 +16,10 @@
 #    (shared-prompt workload: prefix-hit rate, prefill tokens skipped,
 #    steady-state tok/s shared vs unshared; runs on a synthetic model
 #    when artifacts are absent, so it always reports)
+#  * benches/e2e_serving.rs --streaming-only  → BENCH_serving.json
+#    ("streaming_affinity" key: wire TTFT p50, prefix-hit rate, and
+#    affinity hit/fallback counters for a shared-prompt streaming
+#    cohort over TCP, affinity on vs off; synthetic model)
 #  * benches/e2e_serving.rs --overload-only   → BENCH_robustness.json
 #    (admission control at 4x the sustainable rate: shed rate and the
 #    p50/p99 latency of the accepted requests; synthetic model)
@@ -57,6 +61,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
 
     echo "== shared-prefix serving smoke (BENCH_serving.json) =="
     cargo bench --bench e2e_serving -- --shared-only
+    echo "report: $(cd .. && pwd)/BENCH_serving.json"
+
+    echo "== streaming + affinity smoke (BENCH_serving.json: streaming_affinity) =="
+    cargo bench --bench e2e_serving -- --streaming-only
     echo "report: $(cd .. && pwd)/BENCH_serving.json"
 
     echo "== overload admission-control smoke (BENCH_robustness.json) =="
