@@ -12,8 +12,15 @@
 //!       --affinity on|off   prefix-affinity routing for the trace replay
 //!       --send-buffer N     per-stream token buffer (slow consumers shed)
 //!       --stream            append a live per-token streaming demo over TCP
+//!
+//! Always ends with the tiered-KV showcase: a hot cap far below the
+//! working set forces the cached prefix out, the cold tier demotes it
+//! (compressed spill) instead of destroying it, and resubmitting the
+//! prompt refaults it instead of re-prefilling.
 
+use hsr_attn::engine::serving::Engine;
 use hsr_attn::engine::{EngineConfig, GenerationParams, Router, RouterConfig};
+use hsr_attn::kvstore::{PrefixCacheMode, SpillConfig};
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
 use hsr_attn::model::Model;
 use hsr_attn::server::{Client, Server, StreamFrame, WireRequest};
@@ -194,6 +201,64 @@ fn run_streaming(model: Arc<Model>, rcfg: RouterConfig, opts: DemoOpts) {
     println!("engine metrics:\n{}", metrics.summary());
 }
 
+/// Tiered-KV showcase: prime the prefix cache, flood it past a tiny hot
+/// cap so LRU pressure demotes the primed prefix into the compressed
+/// cold tier, then resubmit the original prompt and watch it refault
+/// (prefill skipped) instead of re-prefilling.
+fn run_tiered_refault(model: Arc<Model>, opts: DemoOpts) {
+    println!("\n--- tiered KV demo (forced eviction -> spill -> refault) ---");
+    let mut eng = Engine::new(
+        model,
+        EngineConfig {
+            policy: AttentionPolicy::TopR(RSpec::paper()),
+            prefix_cache: PrefixCacheMode::default(),
+            cache_capacity_tokens: 320, // 20 blocks: ~2 cached prompts
+            block_tokens: 16,
+            spill: SpillConfig::Memory,
+            ..Default::default()
+        },
+    );
+    let corpus: Vec<u32> = "the merchant carries copper coins by the river. remember: \
+                            alder keeps the amber token. a courier guards sealed \
+                            letters near the gate. the alder token is amber. "
+        .bytes()
+        .cycle()
+        .take(512)
+        .map(|b| b as u32)
+        .collect();
+    let params = GenerationParams {
+        max_new_tokens: opts.gen_tokens.min(8),
+        temperature: 0.0,
+        stop_token: None,
+        deadline: None,
+    };
+    let hot = corpus[..96].to_vec();
+    let phases: [(&str, Vec<u32>); 5] = [
+        ("prime", hot.clone()),
+        ("flood-1", corpus[100..196].to_vec()),
+        ("flood-2", corpus[200..296].to_vec()),
+        ("flood-3", corpus[300..396].to_vec()),
+        ("return", hot),
+    ];
+    for (tag, prompt) in phases {
+        let skip0 = eng.metrics.prefill_tokens_skipped;
+        eng.submit(prompt, params);
+        eng.run_to_completion();
+        let _ = eng.take_finished();
+        let s = eng.prefix_store().pool.tier_stats();
+        println!(
+            "  {tag:<8} prefill tokens skipped {:>3} | segments spilled {} / \
+             refaulted {} | {} spill bytes",
+            eng.metrics.prefill_tokens_skipped - skip0,
+            s.segments_spilled,
+            s.segments_refaulted,
+            s.spill_bytes,
+        );
+    }
+    let leaked = eng.reclaim_and_count_leaks();
+    println!("  teardown: {leaked} kv blocks leaked across both tiers");
+}
+
 fn main() {
     let args = Args::from_env();
     let dir = artifacts_dir();
@@ -240,7 +305,8 @@ fn main() {
         );
     }
     if args.flag("stream") {
-        run_streaming(model, rcfg, opts);
+        run_streaming(model.clone(), rcfg, opts);
     }
+    run_tiered_refault(model, opts);
     println!("\n(done — see EXPERIMENTS.md §E2E for recorded numbers)");
 }

@@ -11,16 +11,23 @@
 //!
 //! Flags: --shared-only (skip the artifact section), --overload-only
 //! (run just the admission-control section), --streaming-only (run just
-//! the streaming/affinity section), --model NAME,
+//! the streaming/affinity section), --tiered-only (run just the
+//! tiered-KV cold-spill/dedup section), --model NAME,
 //! --shared-requests N, --shared-prompt N, --shared-gen N,
 //! --stream-requests N, --stream-prompt N, --stream-gen N,
-//! --overload-requests N, --overload-prompt N, --overload-gen N.
+//! --overload-requests N, --overload-prompt N, --overload-gen N,
+//! --tiered-requests N, --tiered-prompt N, --tiered-gen N,
+//! --tiered-hot-blocks N, --tiered-policy rebuild|serialize,
+//! --tiered-tenants N.
 
 use hsr_attn::bench::banner;
 use hsr_attn::engine::serving::{Engine, EngineConfig};
 use hsr_attn::engine::{GenerationParams, Router, RouterConfig, SchedulerConfig};
 use hsr_attn::hsr::HsrBackend;
-use hsr_attn::kvstore::PrefixCacheMode;
+use hsr_attn::kvstore::{
+    PrefixCacheMode, PrefixStore, SpillConfig, SpillPolicy, TierConfig,
+};
+use hsr_attn::model::kv::KvState;
 use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
 use hsr_attn::model::Model;
 use hsr_attn::server::{Client, Server, StreamFrame, WireRequest};
@@ -537,6 +544,232 @@ fn overload_section(args: &Args) {
     }
 }
 
+struct TierPhase {
+    wall_s: f64,
+    gen_tok_per_s: f64,
+    skipped: u64,
+    demanded: u64,
+}
+
+impl TierPhase {
+    fn skip_pct(&self) -> f64 {
+        100.0 * self.skipped as f64 / self.demanded.max(1) as f64
+    }
+}
+
+/// Drive one cohort through an existing engine (so segments published —
+/// or demoted — by an earlier phase are visible), deltaing the prefill
+/// counters across the phase.
+fn drive_phase(eng: &mut Engine, prompts: &[Vec<u32>], gen: usize) -> TierPhase {
+    let skip0 = eng.metrics.prefill_tokens_skipped;
+    let dem0 = eng.metrics.prefill_tokens_demanded;
+    let gen0 = eng.metrics.generated_tokens;
+    for p in prompts {
+        eng.submit(
+            p.clone(),
+            GenerationParams {
+                max_new_tokens: gen,
+                temperature: 0.0,
+                stop_token: None,
+                deadline: None,
+            },
+        );
+    }
+    let t0 = Instant::now();
+    eng.run_to_completion();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let _ = eng.take_finished();
+    TierPhase {
+        wall_s,
+        gen_tok_per_s: (eng.metrics.generated_tokens - gen0) as f64 / wall_s.max(1e-9),
+        skipped: eng.metrics.prefill_tokens_skipped - skip0,
+        demanded: eng.metrics.prefill_tokens_demanded - dem0,
+    }
+}
+
+/// Tiered-KV section (BENCH_kv_tiers.json): a working set 2-4x the hot
+/// cap is driven twice through the same engine. With spill off, phase 2
+/// re-prefills whatever LRU eviction destroyed; with the cold tier on,
+/// demoted prefixes refault and phase 2 skips their prefill. Plus a
+/// 32-tenant dedup sweep: the same document chunk under per-tenant
+/// parents collapses to one physical segment. Synthetic model, so it
+/// always runs.
+fn tiered_kv_section(args: &Args) {
+    let requests = args.usize_or("tiered-requests", 24);
+    let prompt_len = args.usize_or("tiered-prompt", 96);
+    let gen = args.usize_or("tiered-gen", 8);
+    let hot_blocks = args.usize_or("tiered-hot-blocks", 48);
+    let block_tokens = 16usize;
+    let policy = SpillPolicy::parse(args.str_or("tiered-policy", "rebuild"))
+        .unwrap_or_default();
+    let model = Arc::new(Model::synthetic(90, 2, 4, 8));
+    let corpus = corpus();
+    // Non-overlapping corpus slices: distinct prompts, so the hot tier
+    // genuinely overflows instead of deduping away.
+    let prompts: Vec<Vec<u32>> = (0..requests)
+        .map(|i| {
+            let s = (i * prompt_len) % (corpus.len() - prompt_len);
+            corpus[s..s + prompt_len].to_vec()
+        })
+        .collect();
+    let cap = hot_blocks * block_tokens;
+    let working = requests * prompt_len;
+    println!(
+        "\n== tiered KV: working set {working} tokens vs hot cap {cap} ({:.1}x), \
+         spill off vs mem ({policy:?}) ==",
+        working as f64 / cap.max(1) as f64
+    );
+
+    let run_tiered = |spill: SpillConfig| {
+        let mut eng = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                policy: AttentionPolicy::TopR(RSpec::paper()),
+                hsr_backend: Some(HsrBackend::BallTree),
+                prefix_cache: PrefixCacheMode::default(),
+                cache_capacity_tokens: cap,
+                block_tokens,
+                spill,
+                spill_policy: policy,
+                ..Default::default()
+            },
+        );
+        let p1 = drive_phase(&mut eng, &prompts, gen);
+        let p2 = drive_phase(&mut eng, &prompts, gen);
+        let stats = eng.prefix_store().pool.tier_stats();
+        let leaked = eng.reclaim_and_count_leaks();
+        (p1, p2, stats, leaked)
+    };
+    let (off1, off2, _, off_leak) = run_tiered(SpillConfig::Off);
+    let (mem1, mem2, stats, mem_leak) = run_tiered(SpillConfig::Memory);
+    println!(
+        "{:<26} {:>9} {:>12} {:>13} {:>9} {:>12} {:>13}",
+        "configuration", "p1 wall", "p1 tok/s", "p1 skip", "p2 wall", "p2 tok/s", "p2 skip"
+    );
+    for (name, p1, p2) in
+        [("spill off (re-prefill)", &off1, &off2), ("spill mem (refault)", &mem1, &mem2)]
+    {
+        println!(
+            "{:<26} {:>8.2}s {:>12.1} {:>12.1}% {:>8.2}s {:>12.1} {:>12.1}%",
+            name,
+            p1.wall_s,
+            p1.gen_tok_per_s,
+            p1.skip_pct(),
+            p2.wall_s,
+            p2.gen_tok_per_s,
+            p2.skip_pct(),
+        );
+    }
+    println!(
+        "\nphase-2 prefill skip: {:.1}% (spill mem) vs {:.1}% (spill off)  |  \
+         {} spilled / {} refaulted, {} spill bytes, {:.1} ms rebuild  |  leaks {}+{}",
+        mem2.skip_pct(),
+        off2.skip_pct(),
+        stats.segments_spilled,
+        stats.segments_refaulted,
+        stats.spill_bytes,
+        stats.refault_rebuild_ns as f64 * 1e-6,
+        off_leak,
+        mem_leak,
+    );
+
+    // Dedup sweep: `tenants` tenants each publish a unique 16-token
+    // parent and then the SAME doc-chunk segment under it; content-hash
+    // dedup collapses the chunks onto one physical payload.
+    let tenants = args.usize_or("tiered-tenants", 32);
+    let doc_len = 64usize;
+    let backend = Some(HsrBackend::BallTree);
+    let mut rng = Rng::new(31);
+    let mut src = KvState::new(2, 4, 8, backend);
+    for _ in 0..16 + doc_len {
+        for l in 0..2 {
+            for h in 0..4 {
+                let k = rng.gaussian_vec_f32(8, 1.0);
+                let v = rng.gaussian_vec_f32(8, 1.0);
+                src.head_mut(l, h).append(&k, &v);
+            }
+        }
+    }
+    let doc: Vec<u32> = (0..doc_len as u32).map(|i| (i * 5 + 2) % 256).collect();
+    let mut store = PrefixStore::with_tier(
+        1 << 14,
+        block_tokens,
+        backend,
+        PrefixCacheMode::Min(1),
+        &TierConfig { spill: SpillConfig::Memory, policy },
+    );
+    for tenant in 0..tenants as u32 {
+        let parent_toks: Vec<u32> = (0..16).map(|i| 1000 * (tenant + 1) + i).collect();
+        let parent = store
+            .publish_segment(None, &parent_toks, 0, &src, 0, 0)
+            .expect("parent fits");
+        store
+            .publish_segment(Some(parent), &doc, 16, &src, 16, 0)
+            .expect("doc fits or dedups");
+    }
+    let physical = store.pool.physical_payload_bytes();
+    let logical = store.pool.logical_payload_bytes();
+    let dstats = store.pool.tier_stats();
+    println!(
+        "\ndedup sweep: {tenants} tenants x identical {doc_len}-token doc -> \
+         {} physical segments, {} dedup hits, {} bytes saved (logical {} / physical {} = {:.2}x)",
+        store.pool.segment_count() - tenants,
+        dstats.dedup_hits,
+        dstats.dedup_bytes_saved,
+        logical,
+        physical,
+        logical as f64 / physical.max(1) as f64,
+    );
+    store.make_room(usize::MAX);
+    assert_eq!(store.pool.free_blocks(), store.pool.total_blocks(), "dedup sweep leaked");
+
+    let mut root = Json::obj();
+    root.set("requests", requests.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen", gen.into())
+        .set("hot_cap_tokens", cap.into())
+        .set("working_set_tokens", working.into())
+        .set("spill_policy", format!("{policy:?}").as_str().into());
+    for (key, p1, p2, leaked) in [
+        ("spill_off", &off1, &off2, off_leak),
+        ("spill_mem", &mem1, &mem2, mem_leak),
+    ] {
+        let mut o = Json::obj();
+        o.set("phase1_wall_s", p1.wall_s.into())
+            .set("phase1_tok_per_s", p1.gen_tok_per_s.into())
+            .set("phase1_skip_pct", p1.skip_pct().into())
+            .set("phase2_wall_s", p2.wall_s.into())
+            .set("phase2_tok_per_s", p2.gen_tok_per_s.into())
+            .set("phase2_skip_pct", p2.skip_pct().into())
+            .set("kv_blocks_leaked", leaked.into());
+        root.set(key, o);
+    }
+    let mut tier = Json::obj();
+    tier.set("segments_spilled", stats.segments_spilled.into())
+        .set("segments_refaulted", stats.segments_refaulted.into())
+        .set("spill_bytes", stats.spill_bytes.into())
+        .set("refault_rebuild_ms", (stats.refault_rebuild_ns as f64 * 1e-6).into());
+    root.set("tier", tier);
+    let mut dedup = Json::obj();
+    dedup
+        .set("tenants", tenants.into())
+        .set("doc_len", doc_len.into())
+        .set("dedup_hits", dstats.dedup_hits.into())
+        .set("dedup_bytes_saved", dstats.dedup_bytes_saved.into())
+        .set("physical_payload_bytes", physical.into())
+        .set("logical_payload_bytes", logical.into())
+        .set(
+            "sharing_ratio",
+            (logical as f64 / physical.max(1) as f64).into(),
+        );
+    root.set("dedup", dedup);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kv_tiers.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     banner("e2e_serving", "headline: sparse vs dense serving + shared-prefix KV store");
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -549,12 +782,17 @@ fn main() {
         streaming_affinity_section(&args);
         return;
     }
+    if args.flag("tiered-only") {
+        tiered_kv_section(&args);
+        return;
+    }
     shared_prefix_section(&args);
     if args.flag("shared-only") {
         return;
     }
     streaming_affinity_section(&args);
     overload_section(&args);
+    tiered_kv_section(&args);
 
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("\nartifacts missing — run `make artifacts`; skipping sparse-vs-dense section");

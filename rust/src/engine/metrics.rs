@@ -50,6 +50,23 @@ pub struct Metrics {
     /// Decode rows answered inside a ≥ 2-member shared-prefix group
     /// (one multi-query traversal per chain segment).
     pub grouped_decode_rows: u64,
+    // --- tiered KV (cold spill + content dedup) counters ---
+    /// Segments demoted into the compressed cold tier under LRU
+    /// pressure instead of being destroyed.
+    pub segments_spilled: u64,
+    /// Cold segments promoted back on a prefix match: decompressed,
+    /// blocks re-reserved, HSR indices reattached.
+    pub segments_refaulted: u64,
+    /// Cumulative compressed bytes written to the spill store.
+    pub spill_bytes: u64,
+    /// Milliseconds spent decoding spill records and rebuilding /
+    /// deserializing HSR indices during refaults.
+    pub refault_rebuild_ms: f64,
+    /// Publishes that resolved to an already-resident identical segment
+    /// (content-hash dedup) instead of allocating a fresh one.
+    pub dedup_hits: u64,
+    /// Uncompressed payload bytes those dedup hits did not duplicate.
+    pub dedup_bytes_saved: u64,
     // --- robustness counters ---
     /// Requests shed by admission control (queue/in-flight caps).
     pub requests_rejected: u64,
@@ -118,6 +135,12 @@ impl Metrics {
         self.prefix_segments_evicted += other.prefix_segments_evicted;
         self.prefix_sheds += other.prefix_sheds;
         self.grouped_decode_rows += other.grouped_decode_rows;
+        self.segments_spilled += other.segments_spilled;
+        self.segments_refaulted += other.segments_refaulted;
+        self.spill_bytes += other.spill_bytes;
+        self.refault_rebuild_ms += other.refault_rebuild_ms;
+        self.dedup_hits += other.dedup_hits;
+        self.dedup_bytes_saved += other.dedup_bytes_saved;
         self.requests_rejected += other.requests_rejected;
         self.requests_failed += other.requests_failed;
         self.deadline_aborts += other.deadline_aborts;
@@ -178,6 +201,8 @@ impl Metrics {
              sparsity: attended {:.2}% of dense ({} fallbacks)\n\
              prefix:   {:.1}% prefill tokens skipped, {}/{} lookups hit, \
              {} inserted / {} evicted, {} grouped decode rows\n\
+             tier:     {} spilled / {} refaulted, {} spill bytes, \
+             {:.1} ms rebuild; dedup {} hits / {} bytes saved\n\
              robust:   {} rejected / {} failed / {} deadline / {} disconnect; \
              {} worker panics / {} restarts; peak queue {}; {} leaked blocks\n\
              stream:   {} tokens_streamed / {} streams_severed / \
@@ -202,6 +227,12 @@ impl Metrics {
             self.prefix_tokens_inserted,
             self.prefix_segments_evicted,
             self.grouped_decode_rows,
+            self.segments_spilled,
+            self.segments_refaulted,
+            self.spill_bytes,
+            self.refault_rebuild_ms,
+            self.dedup_hits,
+            self.dedup_bytes_saved,
             self.requests_rejected,
             self.requests_failed,
             self.deadline_aborts,
@@ -275,6 +306,30 @@ mod tests {
         assert_eq!(a.queue_depth_peak, 9);
         assert!(a.summary().contains("5 rejected"));
         assert!(a.summary().contains("peak queue 9"));
+    }
+
+    #[test]
+    fn tier_counters_merge_and_render() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.segments_spilled = 3;
+        a.refault_rebuild_ms = 1.5;
+        b.segments_spilled = 4;
+        b.segments_refaulted = 2;
+        b.spill_bytes = 1024;
+        b.refault_rebuild_ms = 0.5;
+        b.dedup_hits = 7;
+        b.dedup_bytes_saved = 4096;
+        a.merge(&b);
+        assert_eq!(a.segments_spilled, 7);
+        assert_eq!(a.segments_refaulted, 2);
+        assert_eq!(a.spill_bytes, 1024);
+        assert!((a.refault_rebuild_ms - 2.0).abs() < 1e-12);
+        assert_eq!(a.dedup_hits, 7);
+        assert_eq!(a.dedup_bytes_saved, 4096);
+        let s = a.summary();
+        assert!(s.contains("7 spilled / 2 refaulted"), "{s}");
+        assert!(s.contains("dedup 7 hits / 4096 bytes saved"), "{s}");
     }
 
     #[test]

@@ -126,11 +126,16 @@ pub(crate) fn adopt_cached_prefix(
     metrics: &mut Metrics,
     model_cfg: &ModelConfig,
     hsr_backend: Option<crate::hsr::HsrBackend>,
+    refault_token_budget: usize,
 ) -> bool {
     if !store.enabled() || seq.prefilled >= seq.prompt.len() {
         return false;
     }
-    let (chain, matched) = store.lookup(&seq.prompt);
+    // The lookup transparently refaults cold (spilled) chain nodes
+    // within the budget; any evictions it performed to make room are
+    // accounted here regardless of whether the chain is adopted.
+    let (chain, matched) = store.lookup_budgeted(&seq.prompt, refault_token_budget);
+    metrics.prefix_segments_evicted += store.take_refault_evictions() as u64;
     // Adopt only when the chain covers the whole computed tail (partial
     // tail drops would need row splicing) and strictly extends coverage.
     // Re-matches that merely confirm existing coverage are NOT counted

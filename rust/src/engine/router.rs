@@ -75,6 +75,11 @@ pub struct RouterConfig {
     /// this far behind severs its stream (terminal `slow_consumer`
     /// error) instead of blocking decode or growing memory.
     pub stream_buffer: usize,
+    /// Emit one structured `reqlog` line (stderr) per terminal outcome:
+    /// id, prompt length, tokens, finish reason / error code, latency,
+    /// ttft, owning worker, affinity decision, retry count. Off by
+    /// default; the serve CLI turns it on.
+    pub request_log: bool,
 }
 
 impl Default for RouterConfig {
@@ -86,6 +91,7 @@ impl Default for RouterConfig {
             retry_after_ms: 50,
             affinity: true,
             stream_buffer: 256,
+            request_log: false,
         }
     }
 }
@@ -167,6 +173,20 @@ struct CompletionState {
 struct Completions {
     state: Mutex<CompletionState>,
     cv: Condvar,
+}
+
+/// Per-request routing facts the terminal `reqlog` line reports —
+/// recorded at dispatch (and updated on salvage re-dispatch), popped
+/// exactly once when the outcome is published. Only maintained when
+/// `RouterConfig::request_log` is on.
+struct ReqMeta {
+    prompt_len: usize,
+    /// How routing picked the worker: `hit` (affinity sketch honored),
+    /// `fallback` (sketch named a dead/saturated worker), `none` (no
+    /// sketch entry / affinity off / salvage re-dispatch).
+    affinity: &'static str,
+    worker: usize,
+    attempts: u32,
 }
 
 /// Prefix grains (token counts) the affinity sketch records, probed
@@ -263,6 +283,9 @@ struct Shared {
     streams_severed: AtomicU64,
     /// Prefix-affinity routing sketch (see [`PrefixSketch`]).
     sketch: Mutex<PrefixSketch>,
+    /// Routing facts for the per-request log (empty unless
+    /// `RouterConfig::request_log`).
+    reqlog: Mutex<HashMap<RequestId, ReqMeta>>,
     /// Live stream sinks by request id; a sink leaves this registry —
     /// and is closed — exactly when its terminal outcome is recorded,
     /// which is what gives streaming consumers the exactly-one-terminal
@@ -280,6 +303,18 @@ struct Shared {
 /// taken down by a poisoned mutex either way).
 fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wire-style tag for a finish reason (the `finish=` field of reqlog
+/// lines; matches the server's frame vocabulary).
+fn finish_tag(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::StopToken => "stop",
+        FinishReason::Aborted => "aborted",
+        FinishReason::DeadlineExceeded => "deadline",
+        FinishReason::Cancelled => "cancelled",
+    }
 }
 
 /// Least-loaded selection over `(worker index, load)` pairs with a
@@ -316,7 +351,10 @@ impl Shared {
     ///    cost availability.
     /// 3. Sketch probe contended (another submitter holds it — the
     ///    "probe timed out" rung) or no candidate → least-loaded.
-    fn route_worker(&self, prompt: &[u32]) -> Option<usize> {
+    ///
+    /// Returns the worker plus the affinity tag the per-request log
+    /// reports: `hit`, `fallback`, or `none`.
+    fn route_worker(&self, prompt: &[u32]) -> Option<(usize, &'static str)> {
         if self.rcfg.affinity {
             let candidate = match self.sketch.try_lock() {
                 Ok(sk) => sk.candidate(prompt),
@@ -329,12 +367,13 @@ impl Shared {
                         < self.rcfg.max_queue_per_worker
                 {
                     self.affinity_hits.fetch_add(1, Ordering::Relaxed);
-                    return Some(w);
+                    return Some((w, "hit"));
                 }
                 self.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
+                return self.pick_worker(true).map(|w| (w, "fallback"));
             }
         }
-        self.pick_worker(true)
+        self.pick_worker(true).map(|w| (w, "none"))
     }
 
     /// Record where `prompt` landed so future prompts sharing its
@@ -372,6 +411,19 @@ impl Shared {
                 self.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
                 self.note_queue_depth();
                 self.note_affinity(&req.prompt, widx);
+                if self.rcfg.request_log {
+                    // Re-dispatch after salvage: move the log entry to
+                    // the new owner and record the retry.
+                    let mut log = lock_ok(&self.reqlog);
+                    let meta = log.entry(req.id).or_insert(ReqMeta {
+                        prompt_len: req.prompt.len(),
+                        affinity: "none",
+                        worker: widx,
+                        attempts: req.attempts,
+                    });
+                    meta.worker = widx;
+                    meta.attempts = req.attempts;
+                }
                 self.enqueue(widx, WorkerMsg::Submit(req));
                 Ok(widx)
             }
@@ -386,6 +438,9 @@ impl Shared {
     /// render its one terminal frame.
     fn finish_outcome(&self, outcome: Outcome) {
         let id = outcome.id();
+        if self.rcfg.request_log {
+            self.log_outcome(&outcome);
+        }
         let clean = matches!(
             &outcome,
             Outcome::Done(r)
@@ -409,6 +464,41 @@ impl Shared {
             if let Some(d) = sink.wire_ttft() {
                 lock_ok(&self.ttft_wire).record(d);
             }
+        }
+    }
+
+    /// One structured log line per terminal outcome (stderr, so stdout
+    /// stays clean for bench/CLI output). The routing facts come from
+    /// the reqlog ledger, popped here — exactly once per request, since
+    /// every accepted request reaches exactly one terminal outcome.
+    fn log_outcome(&self, outcome: &Outcome) {
+        let id = outcome.id();
+        let meta = lock_ok(&self.reqlog).remove(&id);
+        let (worker, affinity, retries, meta_prompt) = match &meta {
+            Some(m) => (m.worker as i64, m.affinity, m.attempts, m.prompt_len),
+            // Cancelled-in-queue before dispatch logging, or logging
+            // toggled on a live router: report what we have.
+            None => (-1, "none", 0, 0),
+        };
+        match outcome {
+            Outcome::Done(r) => eprintln!(
+                "reqlog id={} outcome=done finish={} prompt={} tokens={} \
+                 latency_ms={:.1} ttft_ms={:.1} worker={} affinity={} retries={}",
+                id,
+                finish_tag(r.finish),
+                r.prompt_len,
+                r.tokens.len(),
+                r.latency_ms,
+                r.ttft_ms,
+                worker,
+                affinity,
+                retries,
+            ),
+            Outcome::Failed(e) => eprintln!(
+                "reqlog id={} outcome=failed code={} prompt={} tokens=0 \
+                 latency_ms=0.0 ttft_ms=0.0 worker={} affinity={} retries={}",
+                id, e.code, meta_prompt, worker, affinity, retries,
+            ),
         }
     }
 
@@ -477,6 +567,7 @@ impl Router {
             affinity_fallbacks: AtomicU64::new(0),
             streams_severed: AtomicU64::new(0),
             sketch: Mutex::new(PrefixSketch::default()),
+            reqlog: Mutex::new(HashMap::new()),
             streams: Mutex::new(HashMap::new()),
             ttft_wire: Mutex::new(Histogram::default()),
             metrics: Mutex::new(Metrics::default()),
@@ -538,7 +629,7 @@ impl Router {
             s.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(SubmitError::Overloaded { retry_after_ms: s.rcfg.retry_after_ms });
         }
-        let Some(widx) = s.route_worker(&prompt) else {
+        let Some((widx, affinity)) = s.route_worker(&prompt) else {
             let any_alive = s.workers.iter().any(|w| w.alive.load(Ordering::Acquire));
             s.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(if any_alive {
@@ -552,6 +643,12 @@ impl Router {
         s.workers[widx].in_flight.fetch_add(1, Ordering::Relaxed);
         s.note_queue_depth();
         s.note_affinity(&prompt, widx);
+        if s.rcfg.request_log {
+            lock_ok(&s.reqlog).insert(
+                id,
+                ReqMeta { prompt_len: prompt.len(), affinity, worker: widx, attempts: 0 },
+            );
+        }
         if let Some(sink) = &stream {
             lock_ok(&s.streams).insert(id, Arc::clone(sink));
         }
@@ -774,7 +871,7 @@ impl Router {
 /// Per-worker engine: distinct seed, a disjoint id range for any
 /// engine-assigned ids, and only this worker's slice of the fault plan.
 fn worker_engine(shared: &Shared, widx: usize, faults: FaultPlan) -> Engine {
-    let mut wcfg = shared.cfg;
+    let mut wcfg = shared.cfg.clone();
     wcfg.seed = shared.cfg.seed.wrapping_add(widx as u64);
     wcfg.id_offset = ((widx as u64) + 1) << 40;
     // Engine-side queue bound: above the router cap (salvage re-dispatch

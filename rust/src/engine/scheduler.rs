@@ -35,6 +35,13 @@ pub struct SchedulerConfig {
     /// router's admission control; the default is effectively unbounded
     /// so direct `Engine::submit` users keep the old semantics.
     pub max_waiting: usize,
+    /// Max tokens one admission-path prefix lookup may *refault* —
+    /// promote back from the compressed cold tier (decompress +
+    /// re-reserve blocks + reattach HSR). Bounds the latency a single
+    /// admission can spend on promotion; a matched chain is truncated
+    /// at the first cold node past the budget and the rest stays cold
+    /// for a later lookup. Effectively unbounded by default.
+    pub refault_token_budget: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -46,6 +53,7 @@ impl Default for SchedulerConfig {
             preempt: PreemptPolicy::Youngest,
             prefix_headroom_blocks: 1,
             max_waiting: usize::MAX,
+            refault_token_budget: 1 << 20,
         }
     }
 }

@@ -33,7 +33,9 @@ use super::request::{
 use super::scheduler::SchedulerConfig;
 use crate::attention::session::AttentionConfig;
 use crate::hsr::HsrBackend;
-use crate::kvstore::{PrefixCacheMode, PrefixStore, SharedKvMut};
+use crate::kvstore::{
+    PrefixCacheMode, PrefixStore, SharedKvMut, SpillConfig, SpillPolicy, TierConfig,
+};
 use crate::model::kv::KvState;
 use crate::model::transformer::RSpec;
 use crate::model::transformer::{
@@ -66,7 +68,7 @@ pub struct Fault {
     pub kind: FaultKind,
 }
 
-/// Max faults a plan can hold (fixed array keeps `EngineConfig: Copy`).
+/// Max faults a plan can hold (fixed array keeps `FaultPlan: Copy`).
 pub const MAX_FAULTS: usize = 4;
 
 /// Deterministic fault-injection plan, carried in [`EngineConfig`] so
@@ -123,7 +125,7 @@ impl FaultPlan {
 }
 
 /// Engine configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub policy: AttentionPolicy,
     /// HSR backend for per-head indices; None → brute scans inside the
@@ -142,6 +144,15 @@ pub struct EngineConfig {
     /// dispatch tier — see README "Prefix cache"). For larger heads the
     /// difference is confined to last-ulp dot-reduction order.
     pub prefix_cache: PrefixCacheMode,
+    /// Cold-tier spill store for the prefix cache: where LRU-evicted,
+    /// unreferenced segments demote to (lossless-compressed) instead of
+    /// being destroyed, to be refaulted on a later prefix match. `Off`
+    /// keeps the pre-tier destroy-on-evict behavior.
+    pub spill: SpillConfig,
+    /// What happens to a demoted segment's HSR indices: serialized into
+    /// the cold record, or rebuilt from the keys at refault (see
+    /// [`SpillPolicy`]).
+    pub spill_policy: SpillPolicy,
     pub scheduler: SchedulerConfig,
     /// Sampling seed (deterministic engines → reproducible serving runs).
     pub seed: u64,
@@ -166,6 +177,8 @@ impl Default for EngineConfig {
             cache_capacity_tokens: 1 << 20,
             block_tokens: 64,
             prefix_cache: PrefixCacheMode::default(),
+            spill: SpillConfig::Off,
+            spill_policy: SpillPolicy::default(),
             scheduler: SchedulerConfig::default(),
             seed: 0,
             id_offset: 0,
@@ -228,11 +241,12 @@ impl Engine {
             AttentionPolicy::TopR(_) => cfg.hsr_backend,
         };
         Engine {
-            store: PrefixStore::new(
+            store: PrefixStore::with_tier(
                 cfg.cache_capacity_tokens,
                 cfg.block_tokens,
                 seg_backend,
                 cfg.prefix_cache,
+                &TierConfig { spill: cfg.spill.clone(), policy: cfg.spill_policy },
             ),
             waiting: VecDeque::new(),
             running: Vec::new(),
@@ -376,6 +390,7 @@ impl Engine {
                         &mut self.metrics,
                         &model.cfg,
                         self.cfg.hsr_backend,
+                        self.cfg.scheduler.refault_token_budget,
                     );
                 }
             }
@@ -482,10 +497,25 @@ impl Engine {
         }
         self.decode_batch(&decode_ids, &mut stats);
         self.metrics.record_step_stats(&stats);
+        self.sync_tier_metrics();
         if tokens > 0 {
             self.metrics.step_latency.record(t0.elapsed());
         }
         tokens
+    }
+
+    /// Copy the pool's cumulative tier counters onto the metrics (the
+    /// events happen deep inside the pool, far from any `&mut Metrics`,
+    /// so the pool accumulates and the engine syncs once per step).
+    /// Set-style, not additive: both sides are totals for this engine.
+    fn sync_tier_metrics(&mut self) {
+        let s = self.store.pool.tier_stats();
+        self.metrics.segments_spilled = s.segments_spilled;
+        self.metrics.segments_refaulted = s.segments_refaulted;
+        self.metrics.spill_bytes = s.spill_bytes;
+        self.metrics.refault_rebuild_ms = s.refault_rebuild_ns as f64 * 1e-6;
+        self.metrics.dedup_hits = s.dedup_hits;
+        self.metrics.dedup_bytes_saved = s.dedup_bytes_saved;
     }
 
     /// Decode one token for each collected sequence as a single batched
@@ -786,8 +816,11 @@ impl Engine {
     /// cross-checked against the allocator's debug ledger.
     pub fn reclaim_and_count_leaks(&mut self) -> usize {
         assert!(!self.has_work(), "leak check requires a drained engine");
+        // Full teardown reclaims the cold tier too (spill extents are
+        // released alongside hot blocks; see `RadixIndex::evict_lru`).
         let evicted = self.store.make_room(usize::MAX);
         self.metrics.prefix_segments_evicted += evicted as u64;
+        self.sync_tier_metrics();
         let leaked =
             self.store.pool.total_blocks() - self.store.pool.free_blocks();
         if leaked == 0 {
@@ -803,7 +836,16 @@ impl Engine {
     fn admit(&mut self) {
         while self.running.len() < self.cfg.scheduler.max_batch {
             let Some(front) = self.waiting.front() else { break };
-            let (chain, matched) = self.store.lookup(&front.prompt);
+            // A matched chain may hold cold (spilled) nodes; the lookup
+            // refaults them within the scheduler's token budget before
+            // handing the chain out, LRU-evicting other unreferenced
+            // prefixes if blocks are short.
+            let (chain, matched) = self.store.lookup_budgeted(
+                &front.prompt,
+                self.cfg.scheduler.refault_token_budget,
+            );
+            self.metrics.prefix_segments_evicted +=
+                self.store.take_refault_evictions() as u64;
             if self.store.enabled() {
                 self.metrics.prefix_lookups += 1;
             }

@@ -27,6 +27,21 @@ struct Bucket {
     points: Vec<f32>,
 }
 
+/// The serializable skeleton of a [`DynamicHsr`]: the logarithmic
+/// bucket decomposition (slot position, ids, points per bucket) plus
+/// the brute tail. The static per-bucket indexes are *not* part of the
+/// structure — `build_hsr` is deterministic, so rebuilding each bucket
+/// from its own points reproduces the index exactly. This is what the
+/// tiered KV store's `SpillPolicy::SerializeHsr` writes into a cold
+/// record.
+pub struct HsrStructure {
+    /// One entry per bucket slot; `Some((ids, points))` for occupied
+    /// slots, mirroring `DynamicHsr::buckets`.
+    pub slots: Vec<Option<(Vec<u32>, Vec<f32>)>>,
+    pub tail_ids: Vec<u32>,
+    pub tail_points: Vec<f32>,
+}
+
 /// A growable half-space reporting structure.
 pub struct DynamicHsr {
     backend: HsrBackend,
@@ -130,6 +145,58 @@ impl DynamicHsr {
     /// Number of active buckets (for tests/metrics).
     pub fn bucket_count(&self) -> usize {
         self.buckets.iter().filter(|b| b.is_some()).count()
+    }
+
+    /// Snapshot the bucket decomposition (see [`HsrStructure`]).
+    pub fn structure(&self) -> HsrStructure {
+        HsrStructure {
+            slots: self
+                .buckets
+                .iter()
+                .map(|b| b.as_ref().map(|b| (b.ids.clone(), b.points.clone())))
+                .collect(),
+            tail_ids: self.tail_ids.clone(),
+            tail_points: self.tail_points.clone(),
+        }
+    }
+
+    /// Reconstruct a structure snapshotted by [`DynamicHsr::structure`]:
+    /// every bucket keeps its slot position and contents, with its
+    /// static index deterministically rebuilt from its own points.
+    /// Queries against the result are bit-identical to the original —
+    /// same buckets, same in-bucket point order, same traversals.
+    pub fn from_structure(backend: HsrBackend, d: usize, s: &HsrStructure) -> DynamicHsr {
+        assert!(d > 0);
+        let mut len = s.tail_ids.len();
+        let mut rebuilt_points = 0u64;
+        let mut rebuilds = 0u64;
+        let buckets = s
+            .slots
+            .iter()
+            .map(|slot| {
+                slot.as_ref().map(|(ids, points)| {
+                    debug_assert_eq!(points.len(), ids.len() * d);
+                    len += ids.len();
+                    rebuilt_points += ids.len() as u64;
+                    rebuilds += 1;
+                    Bucket {
+                        index: build_hsr(backend, points, d),
+                        ids: ids.clone(),
+                        points: points.clone(),
+                    }
+                })
+            })
+            .collect();
+        DynamicHsr {
+            backend,
+            d,
+            buckets,
+            tail_points: s.tail_points.clone(),
+            tail_ids: s.tail_ids.clone(),
+            len,
+            rebuilt_points,
+            rebuilds,
+        }
     }
 }
 
@@ -353,5 +420,39 @@ mod tests {
     fn empty_query() {
         let s = DynamicHsr::new(HsrBackend::BallTree, 4);
         assert!(s.query(&[1.0, 0.0, 0.0, 0.0], 0.0).is_empty());
+    }
+
+    #[test]
+    fn structure_roundtrip_is_bit_faithful() {
+        use crate::hsr::QueryStats;
+        let mut rng = Rng::new(9);
+        let d = 6;
+        // Insertion-grown: multiple buckets at specific slots plus a
+        // partial tail — the case from_points cannot reproduce.
+        let mut orig = DynamicHsr::new(HsrBackend::BallTree, d);
+        for _ in 0..(BASE * 5 + 17) {
+            let p = rng.gaussian_vec_f32(d, 1.0);
+            orig.insert(&p);
+        }
+        let rebuilt = DynamicHsr::from_structure(HsrBackend::BallTree, d, &orig.structure());
+        assert_eq!(rebuilt.len(), orig.len());
+        assert_eq!(rebuilt.bucket_count(), orig.bucket_count());
+        assert_eq!(rebuilt.tail_ids, orig.tail_ids);
+        for _ in 0..8 {
+            let a = rng.gaussian_vec_f32(d, 1.0);
+            let b = rng.normal(0.0, 1.0) as f32;
+            let (mut o1, mut s1) = (Vec::new(), Vec::new());
+            let (mut o2, mut s2) = (Vec::new(), Vec::new());
+            let mut st = QueryStats::default();
+            orig.query_scored_into(&a, b, &mut o1, &mut s1, &mut st);
+            rebuilt.query_scored_into(&a, b, &mut o2, &mut s2, &mut st);
+            // Not just the same set: the same order and the same score
+            // bit patterns, because the traversal is identical.
+            assert_eq!(o1, o2);
+            assert_eq!(
+                s1.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                s2.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+        }
     }
 }

@@ -14,6 +14,11 @@
 //!   owner for capacity *and* payload.
 //! * [`radix`] — [`radix::RadixIndex`]: token-prefix → segment chain,
 //!   refcounts, LRU eviction under pool pressure.
+//! * [`tier`] — the cold tier: a lossless-compressed spill store
+//!   segments demote into under LRU pressure (instead of being
+//!   destroyed) and refault from on the next prefix match, plus the
+//!   content-hash machinery that dedups identical publishes onto one
+//!   physical segment.
 //! * [`shared`] — [`shared::SharedKvMut`]: the chain + private-tail view
 //!   the transformer's attend path consumes; ONE
 //!   [`crate::hsr::dynamic::DynamicHsr`] per shared segment serves every
@@ -42,10 +47,12 @@
 pub mod pool;
 pub mod radix;
 pub mod shared;
+pub mod tier;
 
-pub use pool::{PagePool, Segment, SegmentId};
+pub use pool::{Demoted, PagePool, Refault, Segment, SegmentId};
 pub use radix::{NodeId, RadixIndex};
 pub use shared::{PrefixView, SharedKvMut};
+pub use tier::{SpillConfig, SpillPolicy, TierConfig, TierStats};
 
 use crate::hsr::HsrBackend;
 use crate::model::kv::KvState;
@@ -106,6 +113,10 @@ pub struct PrefixStore {
     pub pool: PagePool,
     pub radix: RadixIndex,
     pub mode: PrefixCacheMode,
+    /// Evictions (demotions/removals) performed to make room for
+    /// refaults inside [`PrefixStore::lookup_budgeted`]; the engine
+    /// drains this into its `prefix_segments_evicted` metric.
+    refault_evictions: usize,
 }
 
 impl PrefixStore {
@@ -115,10 +126,28 @@ impl PrefixStore {
         hsr_backend: Option<HsrBackend>,
         mode: PrefixCacheMode,
     ) -> PrefixStore {
+        PrefixStore::with_tier(
+            capacity_tokens,
+            block_tokens,
+            hsr_backend,
+            mode,
+            &TierConfig::default(),
+        )
+    }
+
+    /// Store with a cold spill tier per `tier` (see [`tier`]).
+    pub fn with_tier(
+        capacity_tokens: usize,
+        block_tokens: usize,
+        hsr_backend: Option<HsrBackend>,
+        mode: PrefixCacheMode,
+        tier: &TierConfig,
+    ) -> PrefixStore {
         PrefixStore {
-            pool: PagePool::new(capacity_tokens, block_tokens, hsr_backend),
+            pool: PagePool::with_tier(capacity_tokens, block_tokens, hsr_backend, tier),
             radix: RadixIndex::new(),
             mode,
+            refault_evictions: 0,
         }
     }
 
@@ -126,16 +155,78 @@ impl PrefixStore {
         self.mode.enabled()
     }
 
+    /// Evictions performed on behalf of refaults since the last drain.
+    pub fn take_refault_evictions(&mut self) -> usize {
+        std::mem::take(&mut self.refault_evictions)
+    }
+
+    /// Longest adoptable chain for `prompt` with an unbounded refault
+    /// budget — see [`PrefixStore::lookup_budgeted`].
+    pub fn lookup(&mut self, prompt: &[u32]) -> (Vec<NodeId>, usize) {
+        self.lookup_budgeted(prompt, usize::MAX)
+    }
+
     /// Longest adoptable chain for `prompt`: matching is capped at
     /// `prompt.len() - 1` (the last prompt token is always recomputed so
     /// its logits can seed generation) and gated on the mode's minimum.
-    /// Returns `(chain, matched_tokens)`; empty when nothing qualifies.
-    pub fn lookup(&mut self, prompt: &[u32]) -> (Vec<NodeId>, usize) {
+    ///
+    /// A matched chain may contain **cold** nodes (demoted under LRU
+    /// pressure). Those are transparently refaulted front-to-back here —
+    /// decompress, re-reserve blocks, reattach HSR — before the chain is
+    /// handed out, evicting other unreferenced prefixes if blocks are
+    /// short. `refault_token_budget` caps how many tokens one lookup
+    /// will promote (bounding admission-path latency); the chain is
+    /// truncated at the first node that exceeds the budget or fails to
+    /// refault. Returns `(chain, matched_tokens)` — every returned node
+    /// is hot; empty when nothing qualifies.
+    pub fn lookup_budgeted(
+        &mut self,
+        prompt: &[u32],
+        refault_token_budget: usize,
+    ) -> (Vec<NodeId>, usize) {
         if !self.enabled() || prompt.len() < 2 {
             return (Vec::new(), 0);
         }
-        let (chain, matched) =
+        let (mut chain, mut matched) =
             self.radix.match_chain(&self.pool, prompt, prompt.len() - 1);
+        if chain
+            .iter()
+            .any(|&n| self.pool.is_cold(self.radix.segment_of(n)))
+        {
+            // Protect the chain while room-making eviction runs below —
+            // referenced nodes are never victims.
+            self.radix.ref_chain(&chain);
+            let mut keep = chain.len();
+            let mut budget = refault_token_budget;
+            for (i, &nid) in chain.iter().enumerate() {
+                let seg = self.radix.segment_of(nid);
+                if !self.pool.is_cold(seg) {
+                    continue;
+                }
+                let len = self.pool.len_of(seg);
+                if len > budget {
+                    keep = i;
+                    break;
+                }
+                let need = self.pool.blocks_for(len);
+                if self.pool.free_blocks() < need {
+                    self.refault_evictions += self.radix.evict_lru(&mut self.pool, need);
+                }
+                match self.pool.refault_segment(seg) {
+                    Refault::Refaulted => budget -= len,
+                    Refault::NoRoom | Refault::Failed => {
+                        keep = i;
+                        break;
+                    }
+                }
+            }
+            self.radix.deref_chain(&chain);
+            chain.truncate(keep);
+            matched = chain
+                .iter()
+                .map(|&n| self.pool.len_of(self.radix.segment_of(n)))
+                .sum();
+        }
         if matched < self.mode.min_tokens() {
             return (Vec::new(), 0);
         }
@@ -191,11 +282,19 @@ impl PrefixStore {
         src_offset: usize,
         headroom_blocks: usize,
     ) -> Option<NodeId> {
+        // Content-dedup probe first: adopting an identical resident
+        // segment allocates zero blocks, so the headroom gate does not
+        // apply — a dedup hit can never increase pressure.
+        if let Some(seg) = self.pool.adopt_identical(tokens, start, source, src_offset) {
+            return Some(self.radix.insert_child(parent, seg));
+        }
         let need = self.pool.blocks_for(tokens.len()) + headroom_blocks;
         if self.pool.free_blocks() < need {
             return None;
         }
-        let seg = self.pool.create_segment(tokens, start, source, src_offset)?;
+        let seg = self
+            .pool
+            .create_segment_fresh(tokens, start, source, src_offset)?;
         Some(self.radix.insert_child(parent, seg))
     }
 }

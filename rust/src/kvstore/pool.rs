@@ -1,4 +1,5 @@
-//! [`PagePool`] — the single owner of shared KV payload *and* capacity.
+//! [`PagePool`] — the single owner of shared KV payload *and* capacity,
+//! now across **two tiers**.
 //!
 //! Before the shared-prefix store existed, KV capacity accounting lived
 //! in [`BlockAllocator`] while the float payload lived in each
@@ -6,7 +7,33 @@
 //! owner" split the old `kv_cache.rs` docs called out. The pool retires
 //! that split for everything shared: it embeds the block allocator (so
 //! sequence tails still allocate their pages here) and it owns every
-//! prefix [`Segment`] outright — pages and floats together.
+//! prefix segment outright — pages and floats together, hot or cold.
+//!
+//! # Tiers
+//!
+//! A segment slot is either **hot** — uncompressed payload in pool
+//! blocks plus built per-(layer, head) HSR indices, servable — or
+//! **cold** — its payload compressed into the [`SpillStore`] and its
+//! blocks returned to the shared budget, while the radix node that owns
+//! it stays in the tree so the prefix can still *match*. Transitions:
+//!
+//! * [`PagePool::release_segment`] with `spill = true` **demotes** a
+//!   sole-owner hot segment in place ([`Demoted::Spilled`]);
+//! * [`PagePool::refault_segment`] **promotes** a cold segment back —
+//!   decompress, re-reserve blocks, reattach HSR per the
+//!   [`SpillPolicy`] — before a sequence adopts the chain.
+//!
+//! # Dedup
+//!
+//! Publishes are content-addressed: [`segment_content_key`] digests the
+//! token run, chain position, shape, and every K/V bit the segment
+//! would freeze. A digest hit is confirmed by a **full bitwise payload
+//! comparison** (a collision can cost a missed share, never a wrong
+//! one), and then the existing physical segment simply gains an owner —
+//! `owners` counts radix nodes per physical segment, so identical
+//! chunks published under different radix parents share one payload
+//! and one set of HSR indices fleet-wide. Payload is destroyed (or
+//! demoted) only when the last owner lets go.
 //!
 //! # Segment invariants
 //!
@@ -16,19 +43,27 @@
 //!   and value reads stay cache-friendly, and its per-(layer, head)
 //!   [`crate::hsr::dynamic::DynamicHsr`] is batch-built once and then
 //!   shared read-only by every sequence (and every worker thread — the
-//!   index is only ever queried through `&self`).
-//! * A segment holds `blocks_for(len)` pages from the same pool that
-//!   sequence tails draw from, so admission, preemption and prefix-cache
-//!   eviction all compete for one physical budget.
+//!   index is only ever queried through `&self`). Demotion round-trips
+//!   the payload bit-exactly and the index deterministically, so
+//!   immutability spans the cold trip.
+//! * A hot segment holds `blocks_for(len)` pages from the same pool
+//!   that sequence tails draw from, so admission, preemption and
+//!   prefix-cache eviction all compete for one physical budget. A cold
+//!   segment holds **zero** pages — only a spill extent.
 //! * Reference counts and LRU stamps live on the radix nodes
 //!   ([`crate::kvstore::radix::RadixIndex`]), which own segment
-//!   *lifecycle*; the pool only stores and destroys payload. A segment
-//!   must be unreferenced when [`PagePool::destroy_segment`] runs —
+//!   *lifecycle*; the pool owns payload, tiers and the owner count. A
+//!   segment must be unreferenced when its owning node releases it —
 //!   debug-asserted by the caller.
 
+use super::tier::hash::segment_content_key;
+use super::tier::{
+    decode_segment, encode_segment, Extent, SpillPolicy, SpillStore, TierConfig, TierStats,
+};
 use crate::engine::kv_cache::BlockAllocator;
 use crate::hsr::HsrBackend;
 use crate::model::kv::KvState;
+use std::collections::HashMap;
 
 /// Identifier of a segment slot inside a [`PagePool`].
 pub type SegmentId = u32;
@@ -62,15 +97,81 @@ impl Segment {
     }
 }
 
-/// Block-paged pool owning the shared KV segments and the block
-/// allocator that sizes both segments and private sequence tails.
+/// A demoted segment: tokens stay resident (the radix edge label must
+/// remain matchable), payload lives in the spill store.
+struct ColdSegment {
+    tokens: Vec<u32>,
+    start: usize,
+    extent: Extent,
+    /// Uncompressed payload bytes (for spill-ratio diagnostics).
+    raw_bytes: usize,
+    /// Set when a refault failed to decode: the record is lost, the
+    /// node must never match again, and teardown reaps it.
+    poisoned: bool,
+}
+
+enum State {
+    Hot(Segment),
+    Cold(ColdSegment),
+}
+
+struct Entry {
+    /// Radix nodes owning this physical segment (content dedup).
+    owners: u32,
+    /// Content digest ([`segment_content_key`]) — the dedup map key.
+    content: u64,
+    state: State,
+}
+
+/// Outcome of [`PagePool::release_segment`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Demoted {
+    /// Sole owner, spill requested: payload compressed into the cold
+    /// tier, blocks freed, slot stays live (cold).
+    Spilled,
+    /// Other owners remain: this owner's claim dropped, payload stays
+    /// hot, nothing freed.
+    SharedKept,
+    /// Sole owner, no spill (or spill declined): payload destroyed,
+    /// blocks freed, slot retired.
+    Dropped,
+    /// Spill I/O failed and the caller forbade dropping: segment is
+    /// still hot and untouched (spill has been disabled pool-wide so
+    /// the caller's eviction loop cannot spin on this outcome).
+    Kept,
+}
+
+/// Outcome of [`PagePool::refault_segment`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Refault {
+    /// Segment is hot again; blocks re-reserved, HSR reattached.
+    Refaulted,
+    /// Not enough free blocks — caller should evict and retry (or give
+    /// up and re-prefill).
+    NoRoom,
+    /// The cold record failed to read or decode; the segment is now
+    /// poisoned (never matchable) and waits for teardown.
+    Failed,
+}
+
+/// Block-paged pool owning the shared KV segments (hot and cold) and
+/// the block allocator that sizes both segments and private tails.
 pub struct PagePool {
     alloc: BlockAllocator,
-    slots: Vec<Option<Segment>>,
+    slots: Vec<Option<Entry>>,
     free_slots: Vec<u32>,
     hsr_backend: Option<HsrBackend>,
-    /// Tokens currently held by live segments (diagnostics/metrics).
+    /// Tokens currently held by hot segments.
     segment_tokens: usize,
+    /// Tokens currently held by cold segments.
+    cold_tokens: usize,
+    /// The cold tier; `None` = spill off (eviction destroys).
+    spill: Option<SpillStore>,
+    policy: SpillPolicy,
+    /// content digest → hot segment id (cold segments are not dedup
+    /// targets — adopting one would force a refault mid-publish).
+    dedup: HashMap<u64, SegmentId>,
+    stats: TierStats,
 }
 
 impl PagePool {
@@ -79,12 +180,40 @@ impl PagePool {
         block_tokens: usize,
         hsr_backend: Option<HsrBackend>,
     ) -> PagePool {
+        PagePool::with_tier(capacity_tokens, block_tokens, hsr_backend, &TierConfig::default())
+    }
+
+    /// Pool with a cold tier per `tier`. If the spill backing fails to
+    /// open (e.g. unwritable directory) the pool falls back to
+    /// spill-off and keeps serving — the cold tier is an optimization,
+    /// never a correctness dependency.
+    pub fn with_tier(
+        capacity_tokens: usize,
+        block_tokens: usize,
+        hsr_backend: Option<HsrBackend>,
+        tier: &TierConfig,
+    ) -> PagePool {
+        let spill = match SpillStore::open(&tier.spill) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!(
+                    "kvstore: spill backing {:?} unavailable ({e}); spill disabled",
+                    tier.spill
+                );
+                None
+            }
+        };
         PagePool {
             alloc: BlockAllocator::new(capacity_tokens, block_tokens),
             slots: Vec::new(),
             free_slots: Vec::new(),
             hsr_backend,
             segment_tokens: 0,
+            cold_tokens: 0,
+            spill,
+            policy: tier.policy,
+            dedup: HashMap::new(),
+            stats: TierStats::default(),
         }
     }
 
@@ -128,24 +257,127 @@ impl PagePool {
         self.alloc.debug_assert_all_free()
     }
 
+    // --- tier accessors ---
+
+    /// Whether the cold tier is available.
+    pub fn spill_enabled(&self) -> bool {
+        self.spill.is_some()
+    }
+
+    /// Cumulative tier counters.
+    pub fn tier_stats(&self) -> TierStats {
+        self.stats
+    }
+
+    /// Compressed bytes currently live in the spill arena.
+    pub fn spill_live_bytes(&self) -> u64 {
+        self.spill.as_ref().map_or(0, |s| s.live_bytes())
+    }
+
     // --- segment lifecycle ---
 
-    /// Number of live segments.
+    /// Number of live segment slots (hot + cold).
     pub fn segment_count(&self) -> usize {
         self.slots.len() - self.free_slots.len()
     }
 
-    /// Tokens held by live segments.
+    /// Tokens held by hot segments.
     pub fn cached_tokens(&self) -> usize {
         self.segment_tokens
     }
 
+    /// Tokens held by cold segments.
+    pub fn cold_tokens(&self) -> usize {
+        self.cold_tokens
+    }
+
+    /// Uncompressed payload bytes of hot segments, counted once per
+    /// *physical* segment (the dedup denominator).
+    pub fn physical_payload_bytes(&self) -> usize {
+        self.live_entries()
+            .filter_map(|e| match &e.state {
+                State::Hot(seg) => Some(seg.kv.bytes()),
+                State::Cold(_) => None,
+            })
+            .sum()
+    }
+
+    /// Uncompressed payload bytes as owners see them — each physical
+    /// hot segment counted `owners` times (the dedup numerator).
+    pub fn logical_payload_bytes(&self) -> usize {
+        self.live_entries()
+            .filter_map(|e| match &e.state {
+                State::Hot(seg) => Some(seg.kv.bytes() * e.owners as usize),
+                State::Cold(_) => None,
+            })
+            .sum()
+    }
+
+    fn live_entries(&self) -> impl Iterator<Item = &Entry> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    fn entry(&self, id: SegmentId) -> &Entry {
+        self.slots[id as usize]
+            .as_ref()
+            .expect("segment id refers to a live segment")
+    }
+
+    fn entry_mut(&mut self, id: SegmentId) -> &mut Entry {
+        self.slots[id as usize]
+            .as_mut()
+            .expect("segment id refers to a live segment")
+    }
+
     /// Freeze rows `[src_offset, src_offset + tokens.len())` of `source`
-    /// into a new refcount-managed segment covering global positions
-    /// `[start, start + tokens.len())`. Allocates the segment's pages
-    /// from the pool; returns `None` (allocating nothing) if the pool
-    /// cannot hold it — prefix caching is strictly best-effort.
+    /// into a refcount-managed segment covering global positions
+    /// `[start, start + tokens.len())` — or, when an identical segment
+    /// is already resident, adopt it instead (one more owner, zero
+    /// blocks). Returns `None` (allocating nothing) if the pool cannot
+    /// hold a fresh copy — prefix caching is strictly best-effort.
     pub fn create_segment(
+        &mut self,
+        tokens: &[u32],
+        start: usize,
+        source: &KvState,
+        src_offset: usize,
+    ) -> Option<SegmentId> {
+        if let Some(id) = self.adopt_identical(tokens, start, source, src_offset) {
+            return Some(id);
+        }
+        self.create_segment_fresh(tokens, start, source, src_offset)
+    }
+
+    /// Content-dedup probe: if a *hot* segment with byte-identical
+    /// content (tokens, chain position, every K/V bit) is resident,
+    /// take one more owner claim on it and return its id. Costs one
+    /// hash pass over the candidate rows and zero allocation.
+    pub fn adopt_identical(
+        &mut self,
+        tokens: &[u32],
+        start: usize,
+        source: &KvState,
+        src_offset: usize,
+    ) -> Option<SegmentId> {
+        assert!(!tokens.is_empty(), "segments cover at least one token");
+        let key = segment_content_key(tokens, start, source, src_offset);
+        let &id = self.dedup.get(&key)?;
+        let entry = self.entry(id);
+        let State::Hot(seg) = &entry.state else {
+            return None; // dedup map only holds hot ids; stale = bug
+        };
+        if !payload_identical(seg, tokens, start, source, src_offset) {
+            return None; // 64-bit collision: missed dedup, never a wrong share
+        }
+        let saved = seg.kv.bytes() as u64;
+        self.entry_mut(id).owners += 1;
+        self.stats.dedup_hits += 1;
+        self.stats.dedup_bytes_saved += saved;
+        Some(id)
+    }
+
+    /// Unconditionally freeze a fresh physical segment (no dedup probe).
+    pub fn create_segment_fresh(
         &mut self,
         tokens: &[u32],
         start: usize,
@@ -155,44 +387,309 @@ impl PagePool {
         assert!(!tokens.is_empty(), "segments cover at least one token");
         let need = self.alloc.blocks_for(tokens.len());
         let blocks = self.alloc.alloc(need)?;
+        let key = segment_content_key(tokens, start, source, src_offset);
         let kv = source.snapshot_range(src_offset, tokens.len(), self.hsr_backend);
         let seg = Segment { kv, tokens: tokens.to_vec(), start, blocks };
         self.segment_tokens += seg.tokens.len();
+        let entry = Entry { owners: 1, content: key, state: State::Hot(seg) };
         let id = match self.free_slots.pop() {
             Some(slot) => {
-                self.slots[slot as usize] = Some(seg);
+                self.slots[slot as usize] = Some(entry);
                 slot
             }
             None => {
-                self.slots.push(Some(seg));
+                self.slots.push(Some(entry));
                 (self.slots.len() - 1) as u32
             }
         };
+        // First publisher of a content key becomes the dedup target; a
+        // key already present (hash-collision miss above) keeps its
+        // original target.
+        self.dedup.entry(key).or_insert(id);
         Some(id)
     }
 
-    /// Borrow a live segment.
+    /// Borrow a live **hot** segment. Callers reach cold segments only
+    /// through [`PagePool::refault_segment`] first; the radix layer
+    /// guarantees adopted chains are fully hot.
     pub fn segment(&self, id: SegmentId) -> &Segment {
-        self.slots[id as usize]
-            .as_ref()
-            .expect("segment id refers to a live segment")
+        match &self.entry(id).state {
+            State::Hot(seg) => seg,
+            State::Cold(_) => panic!("segment {id} is cold; refault before use"),
+        }
     }
 
-    /// Destroy a segment, returning its pages to the pool. The caller
-    /// (the radix index) guarantees the segment is unreferenced.
-    pub fn destroy_segment(&mut self, id: SegmentId) {
-        let mut seg = self.slots[id as usize]
-            .take()
-            .expect("destroying a live segment");
+    /// The token run a segment covers — hot or cold (radix matching
+    /// must see demoted edges).
+    pub fn tokens_of(&self, id: SegmentId) -> &[u32] {
+        match &self.entry(id).state {
+            State::Hot(seg) => &seg.tokens,
+            State::Cold(c) => &c.tokens,
+        }
+    }
+
+    /// Global position of the segment's first token.
+    pub fn start_of(&self, id: SegmentId) -> usize {
+        match &self.entry(id).state {
+            State::Hot(seg) => seg.start,
+            State::Cold(c) => c.start,
+        }
+    }
+
+    /// Tokens covered by the segment.
+    pub fn len_of(&self, id: SegmentId) -> usize {
+        self.tokens_of(id).len()
+    }
+
+    /// Whether the segment is in the cold tier.
+    pub fn is_cold(&self, id: SegmentId) -> bool {
+        matches!(self.entry(id).state, State::Cold(_))
+    }
+
+    /// Whether radix matching may traverse this segment: hot, or cold
+    /// with an intact record. Poisoned cold segments (lost records)
+    /// never match — the prompt re-prefills past them.
+    pub fn is_matchable(&self, id: SegmentId) -> bool {
+        match &self.entry(id).state {
+            State::Hot(_) => true,
+            State::Cold(c) => !c.poisoned,
+        }
+    }
+
+    /// Whether the segment currently holds pool blocks (i.e. is hot).
+    pub fn holds_blocks(&self, id: SegmentId) -> bool {
+        matches!(self.entry(id).state, State::Hot(_))
+    }
+
+    /// Whether [`PagePool::release_segment`] with `spill = true` would
+    /// demote this segment in place: cold tier available, segment hot,
+    /// and this caller is the sole owner (another owner still needs the
+    /// payload hot).
+    pub fn can_demote(&self, id: SegmentId) -> bool {
+        self.spill.is_some() && self.entry(id).owners == 1 && self.holds_blocks(id)
+    }
+
+    /// Radix-node owners of this physical segment.
+    pub fn owners_of(&self, id: SegmentId) -> u32 {
+        self.entry(id).owners
+    }
+
+    /// Release one owner claim on a hot segment. With other owners
+    /// remaining this just drops the claim ([`Demoted::SharedKept`]).
+    /// As the sole owner: `spill = true` demotes the payload into the
+    /// cold tier in place ([`Demoted::Spilled`]) — the slot stays live
+    /// and matchable; `spill = false` destroys it ([`Demoted::Dropped`]).
+    /// If the spill write fails, spill is disabled pool-wide and the
+    /// segment is dropped when `may_drop` (caller is unlinking the
+    /// node) or kept hot otherwise ([`Demoted::Kept`], caller keeps the
+    /// node).
+    pub fn release_segment(&mut self, id: SegmentId, spill: bool, may_drop: bool) -> Demoted {
+        let entry = self.entry_mut(id);
+        if entry.owners > 1 {
+            entry.owners -= 1;
+            return Demoted::SharedKept;
+        }
+        if spill && self.spill.is_some() {
+            match self.demote(id) {
+                Ok(()) => return Demoted::Spilled,
+                Err(e) => {
+                    // One failed write means the backing is gone (disk
+                    // full, arena unwritable) — stop spilling so the
+                    // eviction loop cannot spin retrying this segment.
+                    eprintln!("kvstore: spill write failed ({e}); spill disabled");
+                    self.spill = None;
+                    if !may_drop {
+                        return Demoted::Kept;
+                    }
+                }
+            }
+        }
+        self.drop_hot(id);
+        Demoted::Dropped
+    }
+
+    /// Compress a sole-owner hot segment into the spill store and swap
+    /// its slot to cold. Blocks return to the shared budget.
+    fn demote(&mut self, id: SegmentId) -> std::io::Result<()> {
+        let (record, raw_bytes) = {
+            let entry = self.entry(id);
+            debug_assert_eq!(entry.owners, 1, "demoting a shared segment");
+            let State::Hot(seg) = &entry.state else {
+                panic!("demoting a cold segment")
+            };
+            let mut rec = Vec::new();
+            encode_segment(&seg.kv, self.policy, &mut rec);
+            (rec, seg.kv.bytes())
+        };
+        let store = self.spill.as_mut().expect("demote requires a spill store");
+        let extent = store.write(&record)?;
+        // Write landed: commit the state swap.
+        let entry = self.entry_mut(id);
+        let key = entry.content;
+        let State::Hot(seg) = std::mem::replace(
+            &mut entry.state,
+            State::Cold(ColdSegment {
+                tokens: Vec::new(),
+                start: 0,
+                extent,
+                raw_bytes,
+                poisoned: false,
+            }),
+        ) else {
+            unreachable!()
+        };
+        let Segment { tokens, start, mut blocks, .. } = seg;
+        let n = tokens.len();
+        let State::Cold(cold) = &mut entry.state else { unreachable!() };
+        cold.tokens = tokens;
+        cold.start = start;
+        self.segment_tokens -= n;
+        self.cold_tokens += n;
+        self.alloc.release(&mut blocks);
+        // Cold segments are not dedup targets.
+        if self.dedup.get(&key) == Some(&id) {
+            self.dedup.remove(&key);
+        }
+        self.stats.segments_spilled += 1;
+        self.stats.spill_bytes += extent.len;
+        Ok(())
+    }
+
+    /// Destroy a sole-owner hot segment outright.
+    fn drop_hot(&mut self, id: SegmentId) {
+        let entry = self.slots[id as usize].take().expect("dropping a live segment");
+        debug_assert_eq!(entry.owners, 1);
+        let State::Hot(mut seg) = entry.state else {
+            panic!("drop_hot on a cold segment")
+        };
         self.segment_tokens -= seg.tokens.len();
         self.alloc.release(&mut seg.blocks);
+        if self.dedup.get(&entry.content) == Some(&id) {
+            self.dedup.remove(&entry.content);
+        }
         self.free_slots.push(id);
     }
+
+    /// Destroy a cold segment (teardown, or reaping a poisoned record),
+    /// returning its extent to the spill arena.
+    pub fn release_cold(&mut self, id: SegmentId) {
+        let entry = self.slots[id as usize].take().expect("releasing a live segment");
+        debug_assert_eq!(entry.owners, 1, "cold segments have exactly one owner");
+        let State::Cold(cold) = entry.state else {
+            panic!("release_cold on a hot segment")
+        };
+        self.cold_tokens -= cold.tokens.len();
+        if let Some(store) = &mut self.spill {
+            store.release(cold.extent);
+        }
+        self.free_slots.push(id);
+    }
+
+    /// Promote a cold segment back to hot: re-reserve its blocks, read
+    /// and decode the record, reattach HSR indices per the policy. On
+    /// decode failure the segment is poisoned (record lost; the node
+    /// stops matching and teardown reaps it) — callers fall back to
+    /// re-prefill, never crash.
+    pub fn refault_segment(&mut self, id: SegmentId) -> Refault {
+        let (extent, len) = {
+            let entry = self.entry(id);
+            let State::Cold(cold) = &entry.state else {
+                panic!("refaulting a hot segment")
+            };
+            if cold.poisoned {
+                return Refault::Failed;
+            }
+            (cold.extent, cold.tokens.len())
+        };
+        let need = self.alloc.blocks_for(len);
+        let Some(blocks) = self.alloc.alloc(need) else {
+            return Refault::NoRoom;
+        };
+        let record = match self.spill.as_ref().expect("cold segment implies a store").read(extent)
+        {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("kvstore: spill read failed ({e}); segment {id} lost");
+                return self.poison(id, blocks);
+            }
+        };
+        let t0 = std::time::Instant::now();
+        let decoded = decode_segment(&record, self.hsr_backend);
+        let rebuild_ns = t0.elapsed().as_nanos() as u64;
+        // A record that fails to decode — or decodes to a different
+        // length than the tokens it must back — is lost.
+        let Some(kv) = decoded.filter(|kv| kv.len() == len) else {
+            return self.poison(id, blocks);
+        };
+        let entry = self.entry_mut(id);
+        let key = entry.content;
+        let State::Cold(cold) = std::mem::replace(
+            &mut entry.state,
+            State::Hot(Segment { kv, tokens: Vec::new(), start: 0, blocks }),
+        ) else {
+            unreachable!()
+        };
+        let State::Hot(seg) = &mut entry.state else { unreachable!() };
+        seg.tokens = cold.tokens;
+        seg.start = cold.start;
+        self.segment_tokens += len;
+        self.cold_tokens -= len;
+        if let Some(store) = &mut self.spill {
+            store.release(cold.extent);
+        }
+        // Hot again: eligible as a dedup target (unless the key was
+        // re-published while this segment was cold).
+        self.dedup.entry(key).or_insert(id);
+        self.stats.segments_refaulted += 1;
+        self.stats.refault_rebuild_ns += rebuild_ns;
+        Refault::Refaulted
+    }
+
+    fn poison(&mut self, id: SegmentId, mut blocks: Vec<u32>) -> Refault {
+        self.alloc.release(&mut blocks);
+        let entry = self.entry_mut(id);
+        let State::Cold(cold) = &mut entry.state else { unreachable!() };
+        cold.poisoned = true;
+        Refault::Failed
+    }
+}
+
+/// Full bitwise comparison between a resident segment and the rows a
+/// publish would freeze — the collision-proof step behind every dedup
+/// hit. Calibration snapshots must match too (they ride the segment).
+fn payload_identical(
+    seg: &Segment,
+    tokens: &[u32],
+    start: usize,
+    source: &KvState,
+    src_offset: usize,
+) -> bool {
+    if seg.start != start
+        || seg.tokens != tokens
+        || seg.kv.n_layers != source.n_layers
+        || seg.kv.n_heads != source.n_heads
+        || seg.kv.d_head != source.d_head
+    {
+        return false;
+    }
+    let d = source.d_head;
+    let len = tokens.len();
+    let (lo, hi) = (src_offset * d, (src_offset + len) * d);
+    seg.kv.heads.iter().zip(source.heads.iter()).all(|(sh, src)| {
+        sh.calib_threshold.map(f32::to_bits) == src.calib_threshold.map(f32::to_bits)
+            && bits_eq(&sh.keys, &src.keys[lo..hi])
+            && bits_eq(&sh.values, &src.values[lo..hi])
+    })
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvstore::tier::SpillConfig;
     use crate::util::rng::Rng;
 
     fn filled_kv(rng: &mut Rng, n: usize, d: usize) -> KvState {
@@ -205,6 +702,15 @@ mod tests {
             }
         }
         kv
+    }
+
+    fn tiered_pool(capacity: usize, policy: SpillPolicy) -> PagePool {
+        PagePool::with_tier(
+            capacity,
+            16,
+            Some(HsrBackend::BallTree),
+            &TierConfig { spill: SpillConfig::Memory, policy },
+        )
     }
 
     #[test]
@@ -220,7 +726,7 @@ mod tests {
         assert_eq!(pool.cached_tokens(), 40);
         assert_eq!(pool.segment(id).len(), 40);
         assert_eq!(pool.segment(id).end(), 40);
-        pool.destroy_segment(id);
+        assert_eq!(pool.release_segment(id, false, true), Demoted::Dropped);
         assert_eq!(pool.free_blocks(), free0);
         assert_eq!(pool.segment_count(), 0);
         assert_eq!(pool.cached_tokens(), 0);
@@ -256,9 +762,134 @@ mod tests {
                 assert_eq!(dst.value_row(j), src.value_row(10 + j));
             }
         }
-        // Slot reuse after destroy.
-        pool.destroy_segment(id);
+        // Slot reuse after drop.
+        assert_eq!(pool.release_segment(id, false, true), Demoted::Dropped);
         let id2 = pool.create_segment(&tokens, 10, &kv, 10).unwrap();
         assert_eq!(id, id2);
+    }
+
+    #[test]
+    fn demote_then_refault_restores_payload_and_blocks() {
+        let mut rng = Rng::new(8);
+        let kv = filled_kv(&mut rng, 48, 8);
+        for policy in [SpillPolicy::RebuildOnRefault, SpillPolicy::SerializeHsr] {
+            let mut pool = tiered_pool(1024, policy);
+            let free0 = pool.free_blocks();
+            let tokens: Vec<u32> = (0..48).collect();
+            let id = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+            let blocks_used = free0 - pool.free_blocks();
+            assert_eq!(pool.release_segment(id, true, true), Demoted::Spilled);
+            // Demoted: blocks free, tokens still readable, payload cold.
+            assert_eq!(pool.free_blocks(), free0);
+            assert!(pool.is_cold(id));
+            assert!(pool.is_matchable(id));
+            assert_eq!(pool.tokens_of(id), &tokens[..]);
+            assert_eq!(pool.start_of(id), 0);
+            assert_eq!(pool.cached_tokens(), 0);
+            assert_eq!(pool.cold_tokens(), 48);
+            assert!(pool.spill_live_bytes() > 0);
+            assert_eq!(pool.refault_segment(id), Refault::Refaulted);
+            assert_eq!(pool.free_blocks(), free0 - blocks_used);
+            assert!(!pool.is_cold(id));
+            assert_eq!(pool.cold_tokens(), 0);
+            assert_eq!(pool.spill_live_bytes(), 0, "refault frees the extent");
+            // Bitwise-identical payload after the round trip.
+            let seg = pool.segment(id);
+            for h in 0..2 {
+                let src = kv.head(0, h);
+                let dst = seg.kv.head(0, h);
+                for j in 0..48 {
+                    assert!(bits_eq(dst.key_row(j), src.key_row(j)));
+                    assert!(bits_eq(dst.value_row(j), src.value_row(j)));
+                }
+            }
+            let stats = pool.tier_stats();
+            assert_eq!(stats.segments_spilled, 1);
+            assert_eq!(stats.segments_refaulted, 1);
+            assert!(stats.spill_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn refault_reports_no_room_and_retries() {
+        let mut rng = Rng::new(9);
+        let kv = filled_kv(&mut rng, 32, 4);
+        // Pool fits exactly one 32-token segment (2 blocks).
+        let mut pool = tiered_pool(32, SpillPolicy::RebuildOnRefault);
+        let tokens: Vec<u32> = (0..32).collect();
+        let id = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        assert_eq!(pool.release_segment(id, true, true), Demoted::Spilled);
+        // Occupy the blocks with a tail allocation.
+        let mut tail = pool.alloc(2).unwrap();
+        assert_eq!(pool.refault_segment(id), Refault::NoRoom);
+        assert!(pool.is_cold(id), "NoRoom leaves the segment cold and intact");
+        pool.release(&mut tail);
+        assert_eq!(pool.refault_segment(id), Refault::Refaulted);
+    }
+
+    #[test]
+    fn dedup_shares_one_physical_segment() {
+        let mut rng = Rng::new(10);
+        let kv = filled_kv(&mut rng, 24, 4);
+        let mut pool = tiered_pool(1024, SpillPolicy::RebuildOnRefault);
+        let tokens: Vec<u32> = (0..24).collect();
+        let free0 = pool.free_blocks();
+        let a = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        let after_one = pool.free_blocks();
+        let b = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        assert_eq!(a, b, "identical publish adopts the same physical segment");
+        assert_eq!(pool.free_blocks(), after_one, "dedup hit allocates nothing");
+        assert_eq!(pool.owners_of(a), 2);
+        assert_eq!(pool.segment_count(), 1);
+        assert_eq!(pool.logical_payload_bytes(), 2 * pool.physical_payload_bytes());
+        let stats = pool.tier_stats();
+        assert_eq!(stats.dedup_hits, 1);
+        assert!(stats.dedup_bytes_saved > 0);
+        // Different start position → different content → fresh segment.
+        let c = pool.create_segment(&tokens, 24, &kv, 0).unwrap();
+        assert_ne!(a, c);
+        // Shared segment cannot demote; releases peel owners one at a
+        // time and only the last one frees.
+        assert!(!pool.can_demote(a));
+        let before = pool.free_blocks();
+        assert_eq!(pool.release_segment(a, true, true), Demoted::SharedKept);
+        assert_eq!(pool.free_blocks(), before, "SharedKept frees nothing");
+        assert_eq!(pool.owners_of(a), 1);
+        assert!(pool.can_demote(a));
+        assert_eq!(pool.release_segment(a, false, true), Demoted::Dropped);
+        assert_eq!(pool.release_segment(c, false, true), Demoted::Dropped);
+        assert_eq!(pool.free_blocks(), free0);
+        pool.debug_assert_all_free();
+    }
+
+    #[test]
+    fn cold_segment_is_not_a_dedup_target() {
+        let mut rng = Rng::new(11);
+        let kv = filled_kv(&mut rng, 16, 4);
+        let mut pool = tiered_pool(1024, SpillPolicy::RebuildOnRefault);
+        let tokens: Vec<u32> = (0..16).collect();
+        let a = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        assert_eq!(pool.release_segment(a, true, true), Demoted::Spilled);
+        // Same content published again while `a` is cold: fresh segment.
+        let b = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(pool.owners_of(a), 1);
+        // Refaulting `a` must not steal the dedup slot back.
+        assert_eq!(pool.refault_segment(a), Refault::Refaulted);
+        let c = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        assert_eq!(c, b, "key republished while cold keeps its target");
+    }
+
+    #[test]
+    fn spill_off_release_drops() {
+        let mut rng = Rng::new(12);
+        let kv = filled_kv(&mut rng, 16, 4);
+        let mut pool = PagePool::new(1024, 16, None);
+        assert!(!pool.spill_enabled());
+        let tokens: Vec<u32> = (0..16).collect();
+        let id = pool.create_segment(&tokens, 0, &kv, 0).unwrap();
+        // spill requested but no store → plain drop.
+        assert_eq!(pool.release_segment(id, true, true), Demoted::Dropped);
+        assert_eq!(pool.segment_count(), 0);
     }
 }

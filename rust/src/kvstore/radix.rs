@@ -1,10 +1,10 @@
 //! [`RadixIndex`] — token-prefix → shared segment chain, with refcounts
 //! and LRU eviction under pool pressure.
 //!
-//! Each node owns one immutable [`crate::kvstore::pool::Segment`] and is
-//! labelled by that segment's token run; a root-to-node path therefore
-//! spells a cached prompt prefix, and matching a prompt against the tree
-//! returns the longest chain of **fully matched** nodes. Node runs are
+//! Each node owns one immutable shared-prefix segment and is labelled by
+//! that segment's token run; a root-to-node path therefore spells a
+//! cached prompt prefix, and matching a prompt against the tree returns
+//! the longest chain of **fully matched** nodes. Node runs are
 //! arbitrary-length (whatever a publishing sequence had prefilled when
 //! it published), and there is deliberately **no node splitting**: a
 //! prompt that diverges mid-run simply stops matching at the previous
@@ -18,14 +18,27 @@
 //!   sequence holds exactly one reference on **every** node of its
 //!   adopted chain, taken at adoption and dropped at finish/preemption
 //!   (or when the sequence re-adopts a longer chain).
-//! * A node with `refs > 0`, or with children, is never evicted; only
-//!   unreferenced **leaves** are LRU candidates, so a chain a sequence
-//!   decodes against can never be freed underneath it.
-//! * Eviction destroys the node's segment in the pool (pages return to
-//!   the shared budget) and unlinks the node — a later identical prompt
-//!   simply refaults: it re-prefills and republishes.
+//! * A node with `refs > 0` is never touched by eviction, so a chain a
+//!   sequence decodes against can never be freed underneath it.
+//!
+//! # Eviction across tiers
+//!
+//! With the cold tier off, eviction is the classic shape: only
+//! unreferenced **leaves** are LRU candidates, and evicting one destroys
+//! its segment (pages return to the shared budget) and unlinks the node
+//! — a later identical prompt re-prefills and republishes.
+//!
+//! With the cold tier on, eviction prefers **demotion in place**: the
+//! victim's payload is compressed into the spill store, its pages are
+//! freed, and the node *stays in the tree* — its token run remains
+//! matchable, so a later prompt refaults the payload instead of
+//! re-prefilling it. Because demotion preserves topology, interior
+//! nodes are candidates too (sole-owner ones; a segment another radix
+//! node still owns must stay hot for that owner). Teardown
+//! (`want_free == usize::MAX`) bypasses demotion entirely and also
+//! reaps cold leaves, so a full reclaim leaves nothing behind.
 
-use super::pool::{PagePool, SegmentId};
+use super::pool::{Demoted, PagePool, SegmentId};
 
 /// Identifier of a node slot inside a [`RadixIndex`].
 pub type NodeId = u32;
@@ -81,12 +94,20 @@ impl RadixIndex {
         self.node(id).refs
     }
 
+    /// Whether a node slot still holds a live node (tests/diagnostics).
+    pub fn is_live(&self, id: NodeId) -> bool {
+        matches!(self.nodes.get(id as usize), Some(Some(_)))
+    }
+
     /// Walk the tree matching `tokens`, returning the chain of fully
     /// matched nodes and the total token count they cover. A node only
     /// matches if its whole run fits inside `tokens[..limit]` — callers
     /// pass `limit = prompt_len - 1` so the last prompt token is always
-    /// recomputed (its logits seed the first generated token). Matched
-    /// nodes get their LRU stamp bumped.
+    /// recomputed (its logits seed the first generated token). Cold
+    /// nodes match like hot ones (their runs stay resident; adoption
+    /// refaults the payload afterwards), except poisoned ones — a lost
+    /// spill record ends the match there. Matched nodes get their LRU
+    /// stamp bumped.
     pub fn match_chain(
         &mut self,
         pool: &PagePool,
@@ -99,7 +120,11 @@ impl RadixIndex {
         'walk: loop {
             let mut next: Option<NodeId> = None;
             for &cid in candidates {
-                let run = &pool.segment(self.node(cid).seg).tokens;
+                let seg = self.node(cid).seg;
+                if !pool.is_matchable(seg) {
+                    continue;
+                }
+                let run = pool.tokens_of(seg);
                 if pos + run.len() <= limit.min(tokens.len())
                     && tokens[pos..pos + run.len()] == run[..]
                 {
@@ -109,7 +134,7 @@ impl RadixIndex {
             }
             match next {
                 Some(cid) => {
-                    pos += pool.segment(self.node(cid).seg).tokens.len();
+                    pos += pool.len_of(self.node(cid).seg);
                     chain.push(cid);
                     candidates = &self.node(cid).children;
                     // Reborrow dance: bump the stamp after the borrow of
@@ -177,54 +202,127 @@ impl RadixIndex {
         }
     }
 
-    /// Evict unreferenced LRU leaves (destroying their segments in the
-    /// pool) until `pool.free_blocks() >= want_free` or no candidate
-    /// remains. Returns the number of nodes evicted.
+    /// Free pool blocks by LRU-evicting unreferenced cached prefixes
+    /// until `pool.free_blocks() >= want_free` or no candidate remains.
+    /// With the cold tier on, sole-owner victims are **demoted in
+    /// place** (payload spilled, node kept matchable); otherwise
+    /// victims are destroyed and unlinked. `want_free == usize::MAX`
+    /// means teardown: demotion is bypassed and cold leaves are reaped
+    /// too, cascading leaf-first until only referenced chains remain.
+    /// Returns the number of victims processed (demoted or removed).
     pub fn evict_lru(&mut self, pool: &mut PagePool, want_free: usize) -> usize {
+        let teardown = want_free == usize::MAX;
         let mut evicted = 0usize;
         while pool.free_blocks() < want_free {
             let mut victim: Option<(NodeId, u64)> = None;
             for (slot, node) in self.nodes.iter().enumerate() {
-                if let Some(n) = node {
-                    if n.refs == 0 && n.children.is_empty() {
-                        if victim.map(|(_, lu)| n.last_use < lu).unwrap_or(true) {
-                            victim = Some((slot as u32, n.last_use));
-                        }
-                    }
+                let Some(n) = node else { continue };
+                if n.refs != 0 {
+                    continue;
+                }
+                let childless = n.children.is_empty();
+                let eligible = if teardown {
+                    childless
+                } else {
+                    pool.holds_blocks(n.seg) && (childless || pool.can_demote(n.seg))
+                };
+                if eligible && victim.map(|(_, lu)| n.last_use < lu).unwrap_or(true) {
+                    victim = Some((slot as u32, n.last_use));
                 }
             }
             let Some((id, _)) = victim else { break };
-            self.remove_leaf(pool, id);
+            self.evict_node(pool, id, teardown);
             evicted += 1;
         }
         evicted
     }
 
-    /// Targeted eviction of one chain, leaf-first: destroy each node
-    /// that is unreferenced and childless, stopping at the first node
-    /// still shared (referenced, or parent of a surviving sibling).
-    /// Used when a sequence sheds its adopted chain under pool wedge —
-    /// the freed nodes must go away *now*, or the next lookup would
-    /// just re-adopt them and wedge again. Returns the count evicted.
+    /// Process one eviction victim (unreferenced; childless unless a
+    /// demotable interior).
+    fn evict_node(&mut self, pool: &mut PagePool, id: NodeId, teardown: bool) {
+        let seg = self.node(id).seg;
+        let childless = self.node(id).children.is_empty();
+        if teardown {
+            debug_assert!(childless);
+            if pool.holds_blocks(seg) {
+                pool.release_segment(seg, false, true);
+            } else {
+                pool.release_cold(seg);
+            }
+            self.unlink_leaf(id);
+            return;
+        }
+        if pool.can_demote(seg) {
+            match pool.release_segment(seg, true, childless) {
+                // Demoted in place: the node survives, now cold.
+                Demoted::Spilled => {}
+                // Spill write failed on a childless victim: dropped.
+                Demoted::Dropped => self.unlink_leaf(id),
+                // Spill write failed on an interior victim: kept hot.
+                // The pool has disabled spill, so this node stops being
+                // a candidate and the eviction loop cannot spin on it.
+                Demoted::Kept => {}
+                Demoted::SharedKept => unreachable!("can_demote implies sole owner"),
+            }
+        } else {
+            // Childless (candidate rule) — drop this owner's claim and
+            // unlink; the payload survives iff another owner holds it.
+            debug_assert!(childless);
+            pool.release_segment(seg, false, true);
+            self.unlink_leaf(id);
+        }
+    }
+
+    /// Targeted eviction of one chain, leaf-first: walk from the leaf
+    /// toward the root, demoting or destroying each unreferenced node,
+    /// skipping over already-cold ones (they hold no blocks), and
+    /// stopping at the first node still shared. Used when a sequence
+    /// sheds its adopted chain under pool wedge — the freed blocks must
+    /// materialize *now*, or the next lookup would just re-adopt the
+    /// chain and wedge again. Returns the count of nodes demoted or
+    /// removed.
     pub fn evict_chain(&mut self, pool: &mut PagePool, chain: &[NodeId]) -> usize {
         let mut evicted = 0usize;
         for &id in chain.iter().rev() {
             let n = self.node(id);
-            if n.refs == 0 && n.children.is_empty() {
-                self.remove_leaf(pool, id);
+            if n.refs != 0 {
+                break;
+            }
+            let seg = n.seg;
+            let childless = n.children.is_empty();
+            if pool.can_demote(seg) {
+                match pool.release_segment(seg, true, childless) {
+                    Demoted::Spilled => evicted += 1,
+                    Demoted::Dropped => {
+                        self.unlink_leaf(id);
+                        evicted += 1;
+                    }
+                    Demoted::Kept => break,
+                    Demoted::SharedKept => unreachable!("can_demote implies sole owner"),
+                }
+            } else if childless && pool.holds_blocks(seg) {
+                pool.release_segment(seg, false, true);
+                self.unlink_leaf(id);
                 evicted += 1;
+            } else if !pool.holds_blocks(seg) {
+                // Already cold: nothing to free here; keep walking up so
+                // hot ancestors still demote.
+                continue;
             } else {
+                // Hot interior that cannot demote (spill off, or shared
+                // owner): everything above it is held too. Stop.
                 break;
             }
         }
         evicted
     }
 
-    /// Unlink and destroy one unreferenced leaf.
-    fn remove_leaf(&mut self, pool: &mut PagePool, id: NodeId) {
+    /// Unlink one childless node from the tree (its segment claim must
+    /// already be released).
+    fn unlink_leaf(&mut self, id: NodeId) {
         let node = self.nodes[id as usize]
             .take()
-            .expect("evicting a live node");
+            .expect("unlinking a live node");
         debug_assert!(node.refs == 0 && node.children.is_empty());
         match node.parent {
             Some(p) => {
@@ -233,7 +331,6 @@ impl RadixIndex {
             }
             None => self.roots.retain(|&r| r != id),
         }
-        pool.destroy_segment(node.seg);
         self.free_slots.push(id);
     }
 }
@@ -242,6 +339,7 @@ impl RadixIndex {
 mod tests {
     use super::*;
     use crate::hsr::HsrBackend;
+    use crate::kvstore::tier::{SpillConfig, SpillPolicy, TierConfig};
     use crate::model::kv::KvState;
     use crate::util::rng::Rng;
 
@@ -254,6 +352,17 @@ mod tests {
             kv.head_mut(0, 0).append(&k, &v);
         }
         (PagePool::new(1024, 16, Some(HsrBackend::BallTree)), kv)
+    }
+
+    fn tiered_pool_with_source(n: usize, d: usize) -> (PagePool, KvState) {
+        let (_, kv) = pool_with_source(n, d);
+        let pool = PagePool::with_tier(
+            1024,
+            16,
+            Some(HsrBackend::BallTree),
+            &TierConfig { spill: SpillConfig::Memory, policy: SpillPolicy::RebuildOnRefault },
+        );
+        (pool, kv)
     }
 
     /// Publish tokens[start..end) as a child of `parent`.
@@ -339,6 +448,51 @@ mod tests {
         let free0 = pool.free_blocks();
         assert_eq!(radix.evict_lru(&mut pool, free0 + 1), 1);
         assert_eq!(radix.refs_of(a), 0); // a survives
-        assert!(radix.nodes[b as usize].is_none(), "stalest leaf evicted");
+        assert!(!radix.is_live(b), "stalest leaf evicted");
+    }
+
+    #[test]
+    fn eviction_demotes_in_place_and_teardown_reaps() {
+        let (mut pool, kv) = tiered_pool_with_source(64, 4);
+        let tokens: Vec<u32> = (0..64).collect();
+        let mut radix = RadixIndex::new();
+        let a = publish(&mut radix, &mut pool, &kv, &tokens, 0, 16, None);
+        let b = publish(&mut radix, &mut pool, &kv, &tokens, 16, 32, Some(a));
+        let free0 = pool.free_blocks();
+        // Spill on: eviction demotes (both nodes — interiors included),
+        // freeing all blocks while keeping the tree matchable.
+        assert_eq!(radix.evict_lru(&mut pool, free0 + 2), 2);
+        assert_eq!(radix.len(), 2, "nodes survive demotion");
+        assert!(pool.is_cold(radix.segment_of(a)));
+        assert!(pool.is_cold(radix.segment_of(b)));
+        let (chain, matched) = radix.match_chain(&pool, &tokens, 63);
+        assert_eq!(chain, vec![a, b]);
+        assert_eq!(matched, 32);
+        // Teardown reaps the cold leaves too.
+        assert_eq!(radix.evict_lru(&mut pool, usize::MAX), 2);
+        assert!(radix.is_empty());
+        assert_eq!(pool.segment_count(), 0);
+        assert_eq!(pool.spill_live_bytes(), 0);
+        pool.debug_assert_all_free();
+    }
+
+    #[test]
+    fn evict_chain_demotes_past_cold_nodes() {
+        let (mut pool, kv) = tiered_pool_with_source(64, 4);
+        let tokens: Vec<u32> = (0..64).collect();
+        let mut radix = RadixIndex::new();
+        let a = publish(&mut radix, &mut pool, &kv, &tokens, 0, 16, None);
+        let b = publish(&mut radix, &mut pool, &kv, &tokens, 16, 32, Some(a));
+        let c = publish(&mut radix, &mut pool, &kv, &tokens, 32, 48, Some(b));
+        // Demote just the middle node (simulate earlier LRU pressure):
+        // release b directly via the pool, keeping the node.
+        assert_eq!(pool.release_segment(radix.segment_of(b), true, false), Demoted::Spilled);
+        // Shedding the chain must demote c AND walk past cold b to a.
+        assert_eq!(radix.evict_chain(&mut pool, &[a, b, c]), 2);
+        assert_eq!(radix.len(), 3);
+        for id in [a, b, c] {
+            assert!(pool.is_cold(radix.segment_of(id)));
+        }
+        pool.debug_assert_all_free();
     }
 }

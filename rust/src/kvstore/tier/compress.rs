@@ -1,0 +1,278 @@
+//! Lossless f32 codec for cold KV payloads: XOR-delta over the raw bit
+//! patterns, split into four byte planes, each plane zero-run-length
+//! coded. Pure Rust, no dependencies, and **bit-exact**: every f32 —
+//! NaN payloads, infinities, signed zeros, subnormals — round-trips to
+//! the identical bit pattern, which is what lets a refaulted segment's
+//! attention output be asserted bit-identical to the never-evicted one.
+//!
+//! Why this shape: consecutive K/V rows have correlated magnitudes, so
+//! XOR-ing each word with its predecessor concentrates zeros in the
+//! sign/exponent plane while mantissa planes stay near-incompressible.
+//! On smooth payloads the ratio is large; on rough (gaussian-like)
+//! payloads it degrades gracefully toward 1.0 instead of expanding —
+//! the zero-run coder never emits more than `1 + varint` bytes of
+//! overhead per literal run. Aggressive *lossy* cold-tier compression
+//! (quantized spill) is a recorded follow-up, not this codec's job.
+
+/// Append `v` as a LEB128 varint.
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint at `*pos`, advancing it. `None` on truncation
+/// or overlong (> 10 byte) encodings.
+pub fn get_uvarint(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let &b = bytes.get(*pos)?;
+        *pos += 1;
+        if shift >= 64 {
+            return None;
+        }
+        v |= u64::from(b & 0x7f) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zero-run-length code one byte plane: `0x00 <len>` for a zero run,
+/// `0x01 <len> <bytes>` for a literal run. Literal runs swallow short
+/// (< 4) zero gaps so the op stream never fragments into per-byte ops.
+fn rle_encode(plane: &[u8], out: &mut Vec<u8>) {
+    let n = plane.len();
+    let mut i = 0usize;
+    while i < n {
+        if plane[i] == 0 {
+            let mut j = i;
+            while j < n && plane[j] == 0 {
+                j += 1;
+            }
+            out.push(0);
+            put_uvarint(out, (j - i) as u64);
+            i = j;
+        } else {
+            // Extend the literal until a zero run of >= 4 begins (or end).
+            let mut j = i;
+            let mut zeros = 0usize;
+            let mut end = n;
+            while j < n {
+                if plane[j] == 0 {
+                    zeros += 1;
+                    if zeros == 4 {
+                        end = j + 1 - 4;
+                        break;
+                    }
+                } else {
+                    zeros = 0;
+                }
+                j += 1;
+            }
+            out.push(1);
+            put_uvarint(out, (end - i) as u64);
+            out.extend_from_slice(&plane[i..end]);
+            i = end;
+        }
+    }
+}
+
+/// Sanity cap on the decoded element count: a corrupt length header must
+/// not allocate unbounded memory. 2^28 f32s = 1 GiB, far above any
+/// segment payload.
+const MAX_ELEMS: u64 = 1 << 28;
+
+/// Compress `data` (bit-exact) onto `out`. Self-delimiting: the matching
+/// [`decompress_f32s`] call consumes exactly the bytes written here.
+pub fn compress_f32s(data: &[f32], out: &mut Vec<u8>) {
+    put_uvarint(out, data.len() as u64);
+    if data.is_empty() {
+        return;
+    }
+    let mut prev = 0u32;
+    let deltas: Vec<u32> = data
+        .iter()
+        .map(|&f| {
+            let bits = f.to_bits();
+            let d = bits ^ prev;
+            prev = bits;
+            d
+        })
+        .collect();
+    let mut plane_bytes = vec![0u8; data.len()];
+    for plane in 0..4 {
+        for (b, &d) in plane_bytes.iter_mut().zip(deltas.iter()) {
+            *b = (d >> (8 * plane)) as u8;
+        }
+        rle_encode(&plane_bytes, out);
+    }
+}
+
+/// Decompress one [`compress_f32s`] block at `*pos`, advancing it past
+/// the block. `None` on any corruption (truncation, bad op tags, run
+/// overflow) — callers treat that as a lost cold record, never a panic.
+pub fn decompress_f32s(bytes: &[u8], pos: &mut usize) -> Option<Vec<f32>> {
+    let n64 = get_uvarint(bytes, pos)?;
+    if n64 > MAX_ELEMS {
+        return None;
+    }
+    let n = n64 as usize;
+    if n == 0 {
+        return Some(Vec::new());
+    }
+    let mut deltas = vec![0u32; n];
+    for plane in 0..4 {
+        let mut produced = 0usize;
+        while produced < n {
+            let &tag = bytes.get(*pos)?;
+            *pos += 1;
+            let len = get_uvarint(bytes, pos)? as usize;
+            if len == 0 || len > n - produced {
+                return None;
+            }
+            match tag {
+                0 => {}
+                1 => {
+                    let lit = bytes.get(*pos..*pos + len)?;
+                    *pos += len;
+                    for (slot, &b) in deltas[produced..produced + len].iter_mut().zip(lit) {
+                        *slot |= u32::from(b) << (8 * plane);
+                    }
+                }
+                _ => return None,
+            }
+            produced += len;
+        }
+    }
+    let mut prev = 0u32;
+    Some(
+        deltas
+            .iter()
+            .map(|&d| {
+                prev ^= d;
+                f32::from_bits(prev)
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(data: &[f32]) -> Vec<u8> {
+        let mut buf = Vec::new();
+        compress_f32s(data, &mut buf);
+        let mut pos = 0usize;
+        let back = decompress_f32s(&buf, &mut pos).expect("decodes");
+        assert_eq!(pos, buf.len(), "block must be self-delimiting");
+        assert_eq!(back.len(), data.len());
+        for (a, b) in data.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit-exact roundtrip");
+        }
+        buf
+    }
+
+    #[test]
+    fn roundtrip_gaussian_is_bit_exact() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 7, 64, 1000] {
+            let data = rng.gaussian_vec_f32(n, 1.0);
+            roundtrip(&data);
+        }
+    }
+
+    #[test]
+    fn roundtrip_special_values() {
+        let data = vec![
+            0.0f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN with payload
+            f32::MIN_POSITIVE / 2.0,     // subnormal
+            f32::MAX,
+            f32::MIN,
+            1.0,
+            -1.0,
+        ];
+        roundtrip(&data);
+        roundtrip(&[]);
+    }
+
+    #[test]
+    fn smooth_data_compresses_hard() {
+        // A constant run XOR-deltas to all-zero after the first word.
+        let data = vec![3.25f32; 4096];
+        let buf = roundtrip(&data);
+        assert!(
+            buf.len() < data.len(), // << 4 bytes/elem
+            "constant payload must collapse ({} bytes for {} f32s)",
+            buf.len(),
+            data.len()
+        );
+    }
+
+    #[test]
+    fn rough_data_never_blows_up() {
+        let mut rng = Rng::new(42);
+        // Worst case: independent gaussians, random signs.
+        let data = rng.gaussian_vec_f32(8192, 1.0);
+        let buf = roundtrip(&data);
+        // Overhead bound: 4 planes of (op tags + varints) stays well
+        // under 10% above the raw 4 bytes/elem.
+        assert!(buf.len() < data.len() * 4 + data.len() / 2);
+    }
+
+    #[test]
+    fn corrupt_blocks_decode_to_none_not_panic() {
+        let mut rng = Rng::new(43);
+        let data = rng.gaussian_vec_f32(256, 1.0);
+        let mut buf = Vec::new();
+        compress_f32s(&data, &mut buf);
+        // Truncations.
+        for cut in [0usize, 1, buf.len() / 2, buf.len() - 1] {
+            let mut pos = 0;
+            let _ = decompress_f32s(&buf[..cut], &mut pos);
+        }
+        // Single-byte mutations: must decode to None or to *some* vec,
+        // never panic.
+        for i in 0..buf.len().min(200) {
+            let mut mutated = buf.clone();
+            mutated[i] ^= 0x55;
+            let mut pos = 0;
+            let _ = decompress_f32s(&mutated, &mut pos);
+        }
+        // A length header claiming 2^40 elements must be rejected.
+        let mut bomb = Vec::new();
+        put_uvarint(&mut bomb, 1 << 40);
+        let mut pos = 0;
+        assert!(decompress_f32s(&bomb, &mut pos).is_none());
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            put_uvarint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_uvarint(&buf, &mut pos), Some(v));
+        }
+        assert_eq!(pos, buf.len());
+        assert_eq!(get_uvarint(&buf, &mut pos), None, "exhausted");
+    }
+}

@@ -1,0 +1,150 @@
+//! Content hashing for segment payload dedup.
+//!
+//! A published segment is identified by the FNV-1a 64 digest of its
+//! token run, its chain-global start position, its (layers, heads,
+//! d_head) shape, and the raw **bit patterns** of every K/V row it
+//! would freeze. Two publishes with equal digests are only merged
+//! after a full bitwise payload comparison ([`super::super::pool`]),
+//! so a 64-bit collision can cost a missed dedup, never a wrong share.
+//!
+//! Hashing bit patterns (not float values) keeps the key aligned with
+//! the store's bit-identity contract: `-0.0` and `0.0` are different
+//! payloads, equal NaN payloads are the same payload.
+
+use crate::model::kv::KvState;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64.
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64(FNV_OFFSET)
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    #[inline]
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Digest of the segment a `create_segment(tokens, start, source,
+/// src_offset)` call would freeze: rows `[src_offset, src_offset+len)`
+/// of every (layer, head) in `source`, plus the token run, start and
+/// shape. Computed *before* snapshotting so a dedup hit costs one hash
+/// pass and zero allocation.
+pub fn segment_content_key(
+    tokens: &[u32],
+    start: usize,
+    source: &KvState,
+    src_offset: usize,
+) -> u64 {
+    let len = tokens.len();
+    let d = source.d_head;
+    let mut h = Fnv64::new();
+    h.write_u64(start as u64);
+    h.write_u64(len as u64);
+    h.write_u64(source.n_layers as u64);
+    h.write_u64(source.n_heads as u64);
+    h.write_u64(d as u64);
+    for &t in tokens {
+        h.write_u32(t);
+    }
+    for head in &source.heads {
+        for f in &head.keys[src_offset * d..(src_offset + len) * d] {
+            h.write_u32(f.to_bits());
+        }
+        for f in &head.values[src_offset * d..(src_offset + len) * d] {
+            h.write_u32(f.to_bits());
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::HsrBackend;
+    use crate::util::rng::Rng;
+
+    fn filled(seed: u64, n: usize, d: usize) -> KvState {
+        let mut rng = Rng::new(seed);
+        let mut kv = KvState::new(1, 2, d, Some(HsrBackend::Brute));
+        for _ in 0..n {
+            for h in 0..2 {
+                let k = rng.gaussian_vec_f32(d, 1.0);
+                let v = rng.gaussian_vec_f32(d, 1.0);
+                kv.head_mut(0, h).append(&k, &v);
+            }
+        }
+        kv
+    }
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        let mut h = Fnv64::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h2 = Fnv64::new();
+        h2.write(b"foobar");
+        assert_eq!(h2.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn key_is_deterministic_and_separates_inputs() {
+        let kv = filled(7, 32, 4);
+        let kv_same = filled(7, 32, 4);
+        let kv_diff = filled(8, 32, 4);
+        let tokens: Vec<u32> = (0..16).collect();
+        let k0 = segment_content_key(&tokens, 0, &kv, 0);
+        assert_eq!(k0, segment_content_key(&tokens, 0, &kv_same, 0));
+        // Different rows, offset, start, or tokens all change the key.
+        assert_ne!(k0, segment_content_key(&tokens, 0, &kv_diff, 0));
+        assert_ne!(k0, segment_content_key(&tokens, 0, &kv, 8));
+        assert_ne!(k0, segment_content_key(&tokens, 16, &kv, 0));
+        let mut other = tokens.clone();
+        other[3] = 999;
+        assert_ne!(k0, segment_content_key(&other, 0, &kv, 0));
+    }
+
+    #[test]
+    fn key_sees_bit_patterns_not_float_equality() {
+        let mut a = KvState::new(1, 1, 1, None);
+        let mut b = KvState::new(1, 1, 1, None);
+        a.head_mut(0, 0).append(&[0.0], &[1.0]);
+        b.head_mut(0, 0).append(&[-0.0], &[1.0]);
+        let t = [5u32];
+        assert_ne!(
+            segment_content_key(&t, 0, &a, 0),
+            segment_content_key(&t, 0, &b, 0),
+            "-0.0 and 0.0 are different payloads"
+        );
+    }
+}

@@ -1,0 +1,455 @@
+//! Tiered KV: the cold tier behind [`super::PagePool`].
+//!
+//! Hot segments live in pool blocks as uncompressed f32 payload plus a
+//! built per-(segment, head) [`DynamicHsr`]. When LRU pressure demotes
+//! an unreferenced segment, its payload is compressed ([`compress`])
+//! into a spill arena ([`spill`]) instead of being destroyed; the radix
+//! node survives, so a later prompt match *refaults* the segment —
+//! decompress, re-reserve blocks, reattach the HSR index — instead of
+//! re-prefilling tokens the fleet already paid to compute.
+//!
+//! [`SpillPolicy`] decides what happens to the per-head index across
+//! the cold trip:
+//!
+//! * [`SpillPolicy::RebuildOnRefault`] — spill the payload only and
+//!   rebuild each index from the decompressed keys with
+//!   [`DynamicHsr::from_points`]. Smallest cold records. Exact for
+//!   segment indices because segments are frozen at publish via
+//!   `from_points` (single batch-built bucket, deterministic slot) —
+//!   the rebuild reproduces the dropped index bit-for-bit.
+//! * [`SpillPolicy::SerializeHsr`] — serialize the index's logarithmic
+//!   *structure* (bucket decomposition, insertion ids, brute tail)
+//!   alongside the payload and reconstruct it bucket-by-bucket on
+//!   refault. Larger cold records, but faithful to insertion-grown
+//!   structures too (a future mutable-segment tier), not just
+//!   batch-built ones.
+//!
+//! Both policies produce bit-identical query behavior for today's
+//! frozen segments — asserted across four backends in
+//! `tests/kv_tiers.rs`; the trade they expose is spill-record size
+//! versus structural generality.
+
+pub mod compress;
+pub mod hash;
+pub mod spill;
+
+pub use spill::{Extent, SpillStore};
+
+use crate::hsr::dynamic::{DynamicHsr, HsrStructure};
+use crate::hsr::HsrBackend;
+use crate::model::kv::{HeadKv, KvState};
+use compress::{compress_f32s, decompress_f32s, get_uvarint, put_uvarint};
+use std::path::PathBuf;
+
+/// Where the cold tier lives (the CLI's `--spill <dir|mem|off>`).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub enum SpillConfig {
+    /// No cold tier: LRU eviction destroys segments (pre-tier behavior).
+    #[default]
+    Off,
+    /// In-memory arena — hermetic tests/benches, or "compressed RAM
+    /// tier" deployments.
+    Memory,
+    /// File-backed arena in this directory (one uniquely-named file per
+    /// pool; unlinked on drop).
+    Dir(PathBuf),
+}
+
+impl SpillConfig {
+    /// Parse a CLI value. The error lists the valid forms so
+    /// `util::cli::Args::parse_or_exit` can surface it verbatim.
+    pub fn parse(s: &str) -> Result<SpillConfig, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" | "no" | "false" => Ok(SpillConfig::Off),
+            "mem" | "memory" => Ok(SpillConfig::Memory),
+            other if !other.is_empty() && !other.starts_with('-') => {
+                Ok(SpillConfig::Dir(PathBuf::from(s)))
+            }
+            other => Err(format!(
+                "invalid spill target '{other}'; valid values: off|mem|<directory>"
+            )),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !matches!(self, SpillConfig::Off)
+    }
+}
+
+/// What to do with the per-(segment, head) HSR index when a segment
+/// goes cold. See the module docs for the trade-off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpillPolicy {
+    /// Payload-only cold records; rebuild indices from decompressed
+    /// keys at refault.
+    #[default]
+    RebuildOnRefault,
+    /// Serialize the index structure alongside the payload; reconstruct
+    /// it bucket-by-bucket at refault.
+    SerializeHsr,
+}
+
+impl SpillPolicy {
+    pub fn parse(s: &str) -> Result<SpillPolicy, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "rebuild" | "rebuild-on-refault" => Ok(SpillPolicy::RebuildOnRefault),
+            "serialize" | "serialize-hsr" => Ok(SpillPolicy::SerializeHsr),
+            other => Err(format!(
+                "invalid spill policy '{other}'; valid values: rebuild|serialize"
+            )),
+        }
+    }
+}
+
+/// Cold-tier configuration handed to [`super::PagePool::with_tier`].
+#[derive(Debug, Clone, Default)]
+pub struct TierConfig {
+    pub spill: SpillConfig,
+    pub policy: SpillPolicy,
+}
+
+/// Cumulative tier counters, accumulated inside the pool (where the
+/// events happen, far from any `&mut Metrics`) and synced onto the
+/// engine's metrics once per step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierStats {
+    /// Segments demoted hot → cold.
+    pub segments_spilled: u64,
+    /// Segments refaulted cold → hot.
+    pub segments_refaulted: u64,
+    /// Cumulative compressed bytes written to the spill arena.
+    pub spill_bytes: u64,
+    /// Nanoseconds spent decoding payloads + reattaching HSR indices
+    /// during refaults (reported as `refault_rebuild_ms`).
+    pub refault_rebuild_ns: u64,
+    /// Publishes that resolved to an existing physical segment.
+    pub dedup_hits: u64,
+    /// Uncompressed payload bytes those hits did not duplicate.
+    pub dedup_bytes_saved: u64,
+}
+
+// --- cold-record codec -------------------------------------------------
+//
+// record := 'K' version=1 flags
+//           uv(n_layers) uv(n_heads) uv(d_head) uv(rows)
+//           per head: calib{0|1 [f32bits]} keys_block values_block
+//           if flags&HAS_HSR: per head: {0|1 hsr_structure}
+// hsr_structure := uv(n_slots)
+//                  per slot: {0|1 uv(count) ids... points_block}
+//                  uv(tail_count) tail_ids... tail_points_block
+
+const RECORD_MAGIC: u8 = b'K';
+const RECORD_VERSION: u8 = 1;
+const FLAG_HAS_HSR: u8 = 1;
+
+/// Serialize a frozen segment's [`KvState`] into a cold record.
+pub(crate) fn encode_segment(kv: &KvState, policy: SpillPolicy, out: &mut Vec<u8>) {
+    let serialize_hsr =
+        policy == SpillPolicy::SerializeHsr && kv.heads.iter().any(|h| h.hsr.is_some());
+    out.push(RECORD_MAGIC);
+    out.push(RECORD_VERSION);
+    out.push(if serialize_hsr { FLAG_HAS_HSR } else { 0 });
+    put_uvarint(out, kv.n_layers as u64);
+    put_uvarint(out, kv.n_heads as u64);
+    put_uvarint(out, kv.d_head as u64);
+    put_uvarint(out, kv.len() as u64);
+    for head in &kv.heads {
+        match head.calib_threshold {
+            Some(c) => {
+                out.push(1);
+                out.extend_from_slice(&c.to_bits().to_le_bytes());
+            }
+            None => out.push(0),
+        }
+        compress_f32s(&head.keys, out);
+        compress_f32s(&head.values, out);
+    }
+    if serialize_hsr {
+        for head in &kv.heads {
+            match &head.hsr {
+                Some(hsr) => {
+                    out.push(1);
+                    encode_hsr_structure(&hsr.structure(), out);
+                }
+                None => out.push(0),
+            }
+        }
+    }
+}
+
+fn encode_hsr_structure(s: &HsrStructure, out: &mut Vec<u8>) {
+    put_uvarint(out, s.slots.len() as u64);
+    for slot in &s.slots {
+        match slot {
+            Some((ids, points)) => {
+                out.push(1);
+                put_uvarint(out, ids.len() as u64);
+                for &id in ids {
+                    put_uvarint(out, u64::from(id));
+                }
+                compress_f32s(points, out);
+            }
+            None => out.push(0),
+        }
+    }
+    put_uvarint(out, s.tail_ids.len() as u64);
+    for &id in &s.tail_ids {
+        put_uvarint(out, u64::from(id));
+    }
+    compress_f32s(&s.tail_points, out);
+}
+
+fn get_u8(bytes: &[u8], pos: &mut usize) -> Option<u8> {
+    let &b = bytes.get(*pos)?;
+    *pos += 1;
+    Some(b)
+}
+
+/// Sanity cap on decoded counts (heads, ids, slots); a corrupt record
+/// must not allocate unbounded memory.
+const MAX_COUNT: u64 = 1 << 24;
+
+/// Decode a cold record back into a frozen [`KvState`]. `backend` is
+/// the pool's HSR backend: indices are rebuilt from keys when the
+/// record is payload-only, reconstructed from the serialized structure
+/// otherwise. `None` on any corruption — the caller treats the record
+/// as lost and falls back to re-prefill.
+pub(crate) fn decode_segment(bytes: &[u8], backend: Option<HsrBackend>) -> Option<KvState> {
+    let mut pos = 0usize;
+    if get_u8(bytes, &mut pos)? != RECORD_MAGIC || get_u8(bytes, &mut pos)? != RECORD_VERSION {
+        return None;
+    }
+    let flags = get_u8(bytes, &mut pos)?;
+    let n_layers = get_uvarint(bytes, &mut pos)?;
+    let n_heads = get_uvarint(bytes, &mut pos)?;
+    let d_head = get_uvarint(bytes, &mut pos)?;
+    let rows = get_uvarint(bytes, &mut pos)?;
+    if n_layers == 0
+        || n_heads == 0
+        || d_head == 0
+        || n_layers * n_heads > MAX_COUNT
+        || rows > MAX_COUNT
+    {
+        return None;
+    }
+    let (n_layers, n_heads, d) = (n_layers as usize, n_heads as usize, d_head as usize);
+    let rows = rows as usize;
+    let total_heads = n_layers * n_heads;
+    let mut parts: Vec<(Vec<f32>, Vec<f32>, Option<f32>)> = Vec::with_capacity(total_heads);
+    for _ in 0..total_heads {
+        let calib = match get_u8(bytes, &mut pos)? {
+            0 => None,
+            1 => {
+                let raw = bytes.get(pos..pos + 4)?;
+                pos += 4;
+                Some(f32::from_bits(u32::from_le_bytes(raw.try_into().ok()?)))
+            }
+            _ => return None,
+        };
+        let keys = decompress_f32s(bytes, &mut pos)?;
+        let values = decompress_f32s(bytes, &mut pos)?;
+        if keys.len() != rows * d || values.len() != rows * d {
+            return None;
+        }
+        parts.push((keys, values, calib));
+    }
+    let mut structures: Vec<Option<HsrStructure>> = Vec::new();
+    if flags & FLAG_HAS_HSR != 0 {
+        for _ in 0..total_heads {
+            structures.push(match get_u8(bytes, &mut pos)? {
+                0 => None,
+                1 => Some(decode_hsr_structure(bytes, &mut pos, rows, d)?),
+                _ => return None,
+            });
+        }
+    }
+    let mut heads = Vec::with_capacity(total_heads);
+    for (i, (keys, values, calib)) in parts.into_iter().enumerate() {
+        let hsr = match structures.get(i).and_then(|s| s.as_ref()) {
+            Some(s) => {
+                let b = backend?; // structure recorded but pool has no backend: corrupt
+                Some(DynamicHsr::from_structure(b, d, s))
+            }
+            None if flags & FLAG_HAS_HSR != 0 => None,
+            None => backend.map(|b| DynamicHsr::from_points(b, &keys, d)),
+        };
+        heads.push(HeadKv::from_frozen_parts(keys, values, hsr, calib, d));
+    }
+    Some(KvState { heads, n_layers, n_heads, d_head: d })
+}
+
+fn decode_hsr_structure(
+    bytes: &[u8],
+    pos: &mut usize,
+    rows: usize,
+    d: usize,
+) -> Option<HsrStructure> {
+    let n_slots = get_uvarint(bytes, pos)?;
+    if n_slots > 64 {
+        return None;
+    }
+    let mut slots = Vec::with_capacity(n_slots as usize);
+    let mut total = 0usize;
+    for _ in 0..n_slots {
+        match get_u8(bytes, pos)? {
+            0 => slots.push(None),
+            1 => {
+                let count = get_uvarint(bytes, pos)?;
+                if count > MAX_COUNT {
+                    return None;
+                }
+                let mut ids = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    ids.push(u32::try_from(get_uvarint(bytes, pos)?).ok()?);
+                }
+                let points = decompress_f32s(bytes, pos)?;
+                if points.len() != ids.len() * d {
+                    return None;
+                }
+                total += ids.len();
+                slots.push(Some((ids, points)));
+            }
+            _ => return None,
+        }
+    }
+    let tail_count = get_uvarint(bytes, pos)?;
+    if tail_count > MAX_COUNT {
+        return None;
+    }
+    let mut tail_ids = Vec::with_capacity(tail_count as usize);
+    for _ in 0..tail_count {
+        tail_ids.push(u32::try_from(get_uvarint(bytes, pos)?).ok()?);
+    }
+    let tail_points = decompress_f32s(bytes, pos)?;
+    if tail_points.len() != tail_ids.len() * d {
+        return None;
+    }
+    total += tail_ids.len();
+    // Every stored row must be indexed exactly once.
+    if total != rows {
+        return None;
+    }
+    Some(HsrStructure { slots, tail_ids, tail_points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hsr::{HalfSpaceReport, QueryStats};
+    use crate::util::rng::Rng;
+
+    fn frozen_kv(seed: u64, rows: usize, d: usize, backend: Option<HsrBackend>) -> KvState {
+        let mut rng = Rng::new(seed);
+        let mut src = KvState::new(2, 2, d, backend);
+        for _ in 0..rows {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let k = rng.gaussian_vec_f32(d, 1.0);
+                    let v = rng.gaussian_vec_f32(d, 1.0);
+                    src.head_mut(l, h).append(&k, &v);
+                }
+            }
+        }
+        src.head_mut(1, 0).calib_threshold = Some(0.42);
+        // Frozen exactly the way PagePool freezes segments.
+        src.snapshot_range(0, rows, backend)
+    }
+
+    fn assert_bit_identical(a: &KvState, b: &KvState, d: usize, seed: u64) {
+        assert_eq!(a.heads.len(), b.heads.len());
+        let mut rng = Rng::new(seed);
+        for (ha, hb) in a.heads.iter().zip(b.heads.iter()) {
+            assert_eq!(ha.calib_threshold.map(f32::to_bits), hb.calib_threshold.map(f32::to_bits));
+            assert_eq!(
+                ha.keys.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                hb.keys.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                ha.values.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                hb.values.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(ha.hsr.is_some(), hb.hsr.is_some());
+            for _ in 0..4 {
+                let q = rng.gaussian_vec_f32(d, 1.0);
+                let thr = rng.normal(0.0, 1.0) as f32;
+                let (mut oa, mut sa) = (Vec::new(), Vec::new());
+                let (mut ob, mut sb) = (Vec::new(), Vec::new());
+                let mut st = QueryStats::default();
+                ha.query_scored_into(&q, thr, &mut oa, &mut sa, &mut st);
+                hb.query_scored_into(&q, thr, &mut ob, &mut sb, &mut st);
+                assert_eq!(oa, ob, "fired sets must match in order");
+                assert_eq!(
+                    sa.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+                    sb.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_both_policies_all_backends() {
+        for backend in [
+            Some(HsrBackend::BallTree),
+            Some(HsrBackend::Projected),
+            Some(HsrBackend::Brute),
+            None,
+        ] {
+            for policy in [SpillPolicy::RebuildOnRefault, SpillPolicy::SerializeHsr] {
+                let kv = frozen_kv(50, 33, 8, backend);
+                let mut rec = Vec::new();
+                encode_segment(&kv, policy, &mut rec);
+                let back = decode_segment(&rec, backend)
+                    .unwrap_or_else(|| panic!("decodes ({backend:?}, {policy:?})"));
+                assert_bit_identical(&kv, &back, 8, 99);
+            }
+        }
+    }
+
+    #[test]
+    fn serialize_policy_records_are_larger_payload_identical() {
+        let kv = frozen_kv(51, 40, 8, Some(HsrBackend::BallTree));
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        encode_segment(&kv, SpillPolicy::RebuildOnRefault, &mut a);
+        encode_segment(&kv, SpillPolicy::SerializeHsr, &mut b);
+        assert!(b.len() > a.len(), "structure bytes cost record size");
+    }
+
+    #[test]
+    fn corrupt_records_decode_to_none() {
+        let kv = frozen_kv(52, 20, 4, Some(HsrBackend::Brute));
+        let mut rec = Vec::new();
+        encode_segment(&kv, SpillPolicy::SerializeHsr, &mut rec);
+        assert!(decode_segment(&[], Some(HsrBackend::Brute)).is_none());
+        for cut in [1usize, 3, rec.len() / 2, rec.len() - 1] {
+            assert!(decode_segment(&rec[..cut], Some(HsrBackend::Brute)).is_none());
+        }
+        let mut bad_magic = rec.clone();
+        bad_magic[0] = b'X';
+        assert!(decode_segment(&bad_magic, Some(HsrBackend::Brute)).is_none());
+        // Structure recorded but no backend available → corrupt, not panic.
+        assert!(decode_segment(&rec, None).is_none());
+    }
+
+    #[test]
+    fn spill_config_parse() {
+        assert_eq!(SpillConfig::parse("off"), Ok(SpillConfig::Off));
+        assert_eq!(SpillConfig::parse("MEM"), Ok(SpillConfig::Memory));
+        assert_eq!(
+            SpillConfig::parse("/tmp/spill"),
+            Ok(SpillConfig::Dir(PathBuf::from("/tmp/spill")))
+        );
+        let err = SpillConfig::parse("").unwrap_err();
+        assert!(err.contains("off|mem|<directory>"), "{err}");
+        assert!(SpillConfig::parse("--oops").is_err());
+        assert!(!SpillConfig::Off.enabled());
+        assert!(SpillConfig::Memory.enabled());
+    }
+
+    #[test]
+    fn spill_policy_parse() {
+        assert_eq!(SpillPolicy::parse("rebuild"), Ok(SpillPolicy::RebuildOnRefault));
+        assert_eq!(SpillPolicy::parse("serialize"), Ok(SpillPolicy::SerializeHsr));
+        let err = SpillPolicy::parse("zip").unwrap_err();
+        assert!(err.contains("rebuild|serialize"), "{err}");
+    }
+}

@@ -1,0 +1,278 @@
+//! [`SpillStore`] — the cold tier's backing store: an extent-allocated
+//! byte arena that is either in-memory (hermetic tests, benches) or a
+//! file (positioned reads/writes via `FileExt`, the no-new-deps stand-in
+//! for an mmap; the kernel's page cache gives the same warm-read
+//! behavior).
+//!
+//! Records are opaque byte blobs. The store hands out [`Extent`]s from a
+//! first-fit free list with neighbor coalescing, so a refault→re-spill
+//! churn cycle reuses space instead of growing the arena forever. One
+//! store per [`super::super::PagePool`]; spill files are uniquely named
+//! per (process, store) and unlinked on drop, so multi-worker engines
+//! can all point `--spill` at the same directory.
+
+use super::SpillConfig;
+use std::fs::{File, OpenOptions};
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A byte range inside the spill arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    pub offset: u64,
+    pub len: u64,
+}
+
+enum Backing {
+    Memory(Vec<u8>),
+    File { file: File, path: PathBuf },
+}
+
+/// Extent-allocated spill arena.
+pub struct SpillStore {
+    backing: Backing,
+    /// High-water mark: fresh extents bump this when the free list
+    /// has no fit.
+    end: u64,
+    /// Free extents, sorted by offset, adjacent ranges coalesced.
+    free: Vec<Extent>,
+    live_bytes: u64,
+    /// Cumulative bytes ever written (the `spill_bytes` counter feed).
+    written_bytes: u64,
+}
+
+/// Per-process store counter, so several pools spilling into one
+/// directory never collide on a file name.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl SpillStore {
+    /// Open the backing named by `cfg`; `Ok(None)` when spill is off.
+    pub fn open(cfg: &SpillConfig) -> io::Result<Option<SpillStore>> {
+        let backing = match cfg {
+            SpillConfig::Off => return Ok(None),
+            SpillConfig::Memory => Backing::Memory(Vec::new()),
+            SpillConfig::Dir(dir) => {
+                std::fs::create_dir_all(dir)?;
+                let path = dir.join(format!(
+                    "kv-spill-{}-{}.bin",
+                    std::process::id(),
+                    STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+                ));
+                let file = OpenOptions::new()
+                    .read(true)
+                    .write(true)
+                    .create_new(true)
+                    .open(&path)?;
+                Backing::File { file, path }
+            }
+        };
+        Ok(Some(SpillStore {
+            backing,
+            end: 0,
+            free: Vec::new(),
+            live_bytes: 0,
+            written_bytes: 0,
+        }))
+    }
+
+    /// Carve an extent for `len` bytes: first-fit from the free list
+    /// (splitting any remainder back), else bump the high-water mark.
+    fn carve(&mut self, len: u64) -> Extent {
+        for i in 0..self.free.len() {
+            if self.free[i].len >= len {
+                let ext = Extent { offset: self.free[i].offset, len };
+                if self.free[i].len == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i].offset += len;
+                    self.free[i].len -= len;
+                }
+                return ext;
+            }
+        }
+        let ext = Extent { offset: self.end, len };
+        self.end += len;
+        ext
+    }
+
+    /// Write `data` into a fresh extent.
+    pub fn write(&mut self, data: &[u8]) -> io::Result<Extent> {
+        let ext = self.carve(data.len() as u64);
+        let res = match &mut self.backing {
+            Backing::Memory(buf) => {
+                let need = (ext.offset + ext.len) as usize;
+                if buf.len() < need {
+                    buf.resize(need, 0);
+                }
+                buf[ext.offset as usize..need].copy_from_slice(data);
+                Ok(())
+            }
+            Backing::File { file, .. } => file.write_all_at(data, ext.offset),
+        };
+        match res {
+            Ok(()) => {
+                self.live_bytes += ext.len;
+                self.written_bytes += ext.len;
+                Ok(ext)
+            }
+            Err(e) => {
+                // A failed write must not leak its extent.
+                self.release_extent(ext, false);
+                Err(e)
+            }
+        }
+    }
+
+    /// Read an extent back.
+    pub fn read(&self, ext: Extent) -> io::Result<Vec<u8>> {
+        let mut out = vec![0u8; ext.len as usize];
+        match &self.backing {
+            Backing::Memory(buf) => {
+                let lo = ext.offset as usize;
+                let hi = lo + ext.len as usize;
+                let src = buf.get(lo..hi).ok_or_else(|| {
+                    io::Error::new(io::ErrorKind::UnexpectedEof, "extent out of arena")
+                })?;
+                out.copy_from_slice(src);
+            }
+            Backing::File { file, .. } => file.read_exact_at(&mut out, ext.offset)?,
+        }
+        Ok(out)
+    }
+
+    /// Return an extent to the free list (coalescing neighbors).
+    pub fn release(&mut self, ext: Extent) {
+        self.release_extent(ext, true);
+    }
+
+    fn release_extent(&mut self, ext: Extent, was_live: bool) {
+        if ext.len == 0 {
+            return;
+        }
+        if was_live {
+            self.live_bytes -= ext.len;
+        }
+        let pos = self
+            .free
+            .partition_point(|e| e.offset < ext.offset);
+        self.free.insert(pos, ext);
+        // Coalesce with the next extent, then the previous one.
+        if pos + 1 < self.free.len()
+            && self.free[pos].offset + self.free[pos].len == self.free[pos + 1].offset
+        {
+            self.free[pos].len += self.free[pos + 1].len;
+            self.free.remove(pos + 1);
+        }
+        if pos > 0
+            && self.free[pos - 1].offset + self.free[pos - 1].len == self.free[pos].offset
+        {
+            self.free[pos - 1].len += self.free[pos].len;
+            self.free.remove(pos);
+        }
+    }
+
+    /// Bytes currently held by live extents.
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes
+    }
+
+    /// Cumulative bytes ever written.
+    pub fn written_bytes(&self) -> u64 {
+        self.written_bytes
+    }
+
+    /// Arena high-water mark (file size / memory footprint upper bound).
+    pub fn arena_bytes(&self) -> u64 {
+        self.end
+    }
+}
+
+impl Drop for SpillStore {
+    fn drop(&mut self) {
+        if let Backing::File { path, .. } = &self.backing {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unique_tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "hsr-attn-spill-{tag}-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn exercise(store: &mut SpillStore) {
+        let a = store.write(&[1u8; 100]).unwrap();
+        let b = store.write(&[2u8; 50]).unwrap();
+        let c = store.write(&[3u8; 10]).unwrap();
+        assert_eq!(store.live_bytes(), 160);
+        assert_eq!(store.read(b).unwrap(), vec![2u8; 50]);
+        // Free the middle extent; a smaller write must reuse it.
+        store.release(b);
+        assert_eq!(store.live_bytes(), 110);
+        let d = store.write(&[4u8; 40]).unwrap();
+        assert_eq!(d.offset, a.len, "first-fit reuses the freed hole");
+        assert_eq!(store.read(a).unwrap(), vec![1u8; 100]);
+        assert_eq!(store.read(c).unwrap(), vec![3u8; 10]);
+        assert_eq!(store.read(d).unwrap(), vec![4u8; 40]);
+        // Release everything: free list coalesces back to one extent
+        // and the next write lands at offset 0.
+        store.release(a);
+        store.release(c);
+        store.release(d);
+        assert_eq!(store.live_bytes(), 0);
+        assert_eq!(store.free.len(), 1);
+        let e = store.write(&[5u8; 8]).unwrap();
+        assert_eq!(e.offset, 0);
+        assert_eq!(store.read(e).unwrap(), vec![5u8; 8]);
+    }
+
+    #[test]
+    fn memory_backing_extent_reuse_and_coalescing() {
+        let mut store = SpillStore::open(&SpillConfig::Memory).unwrap().unwrap();
+        exercise(&mut store);
+        assert!(store.written_bytes() >= 208);
+    }
+
+    #[test]
+    fn dir_backing_roundtrip_and_cleanup() {
+        let dir = unique_tmp_dir("dir");
+        let mut store = SpillStore::open(&SpillConfig::Dir(dir.clone())).unwrap().unwrap();
+        let spill_file = match &store.backing {
+            Backing::File { path, .. } => path.clone(),
+            _ => unreachable!(),
+        };
+        assert!(spill_file.exists());
+        exercise(&mut store);
+        drop(store);
+        assert!(!spill_file.exists(), "spill file unlinked on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn off_config_opens_nothing() {
+        assert!(SpillStore::open(&SpillConfig::Off).unwrap().is_none());
+    }
+
+    #[test]
+    fn two_stores_in_one_dir_do_not_collide() {
+        let dir = unique_tmp_dir("multi");
+        let mut s1 = SpillStore::open(&SpillConfig::Dir(dir.clone())).unwrap().unwrap();
+        let mut s2 = SpillStore::open(&SpillConfig::Dir(dir.clone())).unwrap().unwrap();
+        let e1 = s1.write(b"worker-one").unwrap();
+        let e2 = s2.write(b"worker-two").unwrap();
+        assert_eq!(s1.read(e1).unwrap(), b"worker-one");
+        assert_eq!(s2.read(e2).unwrap(), b"worker-two");
+        drop(s1);
+        drop(s2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

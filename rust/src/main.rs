@@ -11,7 +11,7 @@ use anyhow::{Context, Result};
 use hsr_attn::attention::{AttentionConfig, AttentionKind};
 use hsr_attn::engine::{EngineConfig, GenerationParams, Router, RouterConfig};
 use hsr_attn::hsr::HsrBackend;
-use hsr_attn::kvstore::PrefixCacheMode;
+use hsr_attn::kvstore::{PrefixCacheMode, SpillConfig, SpillPolicy};
 use hsr_attn::model::tokenizer::ByteTokenizer;
 use hsr_attn::model::transformer::AttentionPolicy;
 use hsr_attn::model::Model;
@@ -26,6 +26,14 @@ const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
   --decode-threads <N>                                 batched decode sweep (0 = auto)\n\
   --prefix-cache <on|off|tokens>                       shared-prefix KV cache\n\
                                                        (tokens = min match to adopt)\n\
+  --spill <off|mem|directory>                          cold tier for evicted prefix\n\
+                                                       segments (compressed spill store)\n\
+  --spill-policy <rebuild|serialize>                   cold-segment HSR handling:\n\
+                                                       rebuild at refault, or serialize\n\
+  --hot-blocks <N>                                     hot-tier cap in blocks\n\
+                                                       (0 = use --cache-tokens)\n\
+  --request-log <on|off>                               one reqlog line per terminal\n\
+                                                       outcome (serve; default on)\n\
   --max-queue <N> --max-in-flight <N>                  admission-control caps (serve)\n\
   --max-connections <N>                                live-connection cap (serve)\n\
   --affinity <on|off>                                  prefix-affinity routing (serve);\n\
@@ -82,6 +90,15 @@ fn engine_config(args: &Args) -> EngineConfig {
     // exits with the valid-form list from `PrefixCacheMode::parse`.
     cfg.prefix_cache =
         args.parse_or_exit("prefix-cache", "on", USAGE, PrefixCacheMode::parse);
+    cfg.spill = args.parse_or_exit("spill", "off", USAGE, SpillConfig::parse);
+    cfg.spill_policy =
+        args.parse_or_exit("spill-policy", "rebuild", USAGE, SpillPolicy::parse);
+    // --hot-blocks caps the *hot* tier in block units (the natural unit
+    // once a cold tier exists); 0 keeps the --cache-tokens sizing.
+    let hot_blocks = args.usize_or("hot-blocks", 0);
+    if hot_blocks > 0 {
+        cfg.cache_capacity_tokens = hot_blocks * cfg.block_tokens;
+    }
     cfg
 }
 
@@ -106,11 +123,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             std::process::exit(2);
         }
     };
+    let request_log = match args.str_or("request-log", "on") {
+        "on" => true,
+        "off" => false,
+        other => {
+            eprintln!("invalid --request-log '{other}' (want on|off)");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
     let rcfg = RouterConfig {
         max_queue_per_worker: args.usize_or("max-queue", 64),
         max_in_flight: args.usize_or("max-in-flight", 512),
         affinity,
         stream_buffer: args.usize_or("send-buffer", 256),
+        request_log,
         ..Default::default()
     };
     let scfg = ServerConfig {

@@ -88,6 +88,23 @@ impl HeadKv {
         &self.values[j * self.d_head..(j + 1) * self.d_head]
     }
 
+    /// Reassemble a frozen head from parts decoded out of a cold-tier
+    /// record ([`crate::kvstore::tier`]): the segment's exact key/value
+    /// bit patterns plus an HSR index rebuilt or deserialized per the
+    /// spill policy. Counterpart of [`HeadKv::snapshot_range`] for the
+    /// refault path.
+    pub(crate) fn from_frozen_parts(
+        keys: Vec<f32>,
+        values: Vec<f32>,
+        hsr: Option<DynamicHsr>,
+        calib_threshold: Option<f32>,
+        d_head: usize,
+    ) -> HeadKv {
+        debug_assert_eq!(keys.len() % d_head, 0);
+        debug_assert_eq!(values.len(), keys.len());
+        HeadKv { keys, values, hsr, calib_threshold, d_head }
+    }
+
     /// Frozen copy of rows `[start, start + len)`: contiguous keys/values
     /// with a freshly batch-built (single-bucket) HSR index over exactly
     /// those rows, carrying the current calibration threshold along as

@@ -1,0 +1,423 @@
+//! Tiered KV store property tests: cold-segment spill + content dedup.
+//!
+//! The acceptance bar for the tier subsystem: a segment that is demoted
+//! to the compressed cold tier and refaulted back must be
+//! **bit-identical** to one that was never evicted — payload floats,
+//! calibration snapshot, and HSR query answers alike — across every
+//! backend and both `SpillPolicy` variants. Dedup must keep the block
+//! ledger exact under arbitrary publish/evict/refault interleavings:
+//! no double-free, no leaked block, no leaked spill extent. Like
+//! `tests/prefix_cache.rs`, everything runs at `d_head <= 8` where
+//! float equality is exact.
+
+use hsr_attn::engine::serving::{Engine, EngineConfig};
+use hsr_attn::engine::{GenerationParams, SchedulerConfig};
+use hsr_attn::hsr::{HsrBackend, QueryStats};
+use hsr_attn::kvstore::{
+    Demoted, PagePool, PrefixCacheMode, PrefixStore, Refault, SpillConfig, SpillPolicy,
+    TierConfig,
+};
+use hsr_attn::model::kv::KvState;
+use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::Model;
+use hsr_attn::util::rng::Rng;
+use std::sync::Arc;
+
+fn tier_mem(policy: SpillPolicy) -> TierConfig {
+    TierConfig { spill: SpillConfig::Memory, policy }
+}
+
+/// Deterministic KV source: `rows` gaussian key/value rows per head.
+fn filled_kv(
+    seed: u64,
+    rows: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    backend: Option<HsrBackend>,
+) -> KvState {
+    let mut rng = Rng::new(seed);
+    let mut kv = KvState::new(n_layers, n_heads, d_head, backend);
+    for _ in 0..rows {
+        for l in 0..n_layers {
+            for h in 0..n_heads {
+                let k = rng.gaussian_vec_f32(d_head, 1.0);
+                let v = rng.gaussian_vec_f32(d_head, 1.0);
+                kv.head_mut(l, h).append(&k, &v);
+            }
+        }
+    }
+    kv
+}
+
+fn prompt_bytes(seed: u32, len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| (i * 11 + seed * 37 + 3) % 256).collect()
+}
+
+/// Every key/value bit and the calibration snapshot must match.
+fn assert_kv_bits_equal(a: &KvState, b: &KvState, ctx: &str) {
+    assert_eq!(a.heads.len(), b.heads.len(), "{ctx}: head count");
+    for (i, (ha, hb)) in a.heads.iter().zip(b.heads.iter()).enumerate() {
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&ha.keys), bits(&hb.keys), "{ctx}: head {i} keys");
+        assert_eq!(bits(&ha.values), bits(&hb.values), "{ctx}: head {i} values");
+        assert_eq!(
+            ha.calib_threshold.map(f32::to_bits),
+            hb.calib_threshold.map(f32::to_bits),
+            "{ctx}: head {i} calib"
+        );
+    }
+}
+
+/// HSR answers (fired index sets AND raw scores) must match bitwise —
+/// this is what proves a rebuilt/deserialized index is equivalent, not
+/// just the payload bytes.
+fn assert_queries_equal(a: &KvState, b: &KvState, seed: u64, ctx: &str) {
+    let mut rng = Rng::new(seed);
+    for q_iter in 0..8 {
+        let q = rng.gaussian_vec_f32(a.d_head, 1.0);
+        let b_raw = rng.uniform(-2.0, 2.0) as f32;
+        for (i, (ha, hb)) in a.heads.iter().zip(b.heads.iter()).enumerate() {
+            let (mut oa, mut sa) = (Vec::new(), Vec::new());
+            let (mut ob, mut sb) = (Vec::new(), Vec::new());
+            let mut st = QueryStats::default();
+            ha.hsr_query_scored(&q, b_raw, &mut oa, &mut sa, &mut st);
+            hb.hsr_query_scored(&q, b_raw, &mut ob, &mut sb, &mut st);
+            assert_eq!(oa, ob, "{ctx}: head {i} query {q_iter} fired set");
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&sa), bits(&sb), "{ctx}: head {i} query {q_iter} scores");
+        }
+    }
+}
+
+/// Spill → refault round-trip is bit-identical to never-evicted, for
+/// every HSR backend (incl. the no-index ablation) under both spill
+/// policies. `Layers2d` is 2-D-only and thus out of this matrix.
+#[test]
+fn spill_refault_bit_identity_all_backends_and_policies() {
+    let backends = [
+        Some(HsrBackend::BallTree),
+        Some(HsrBackend::Projected),
+        Some(HsrBackend::Brute),
+        None,
+    ];
+    let tokens: Vec<u32> = (0..48).map(|i| (i * 7 + 1) % 256).collect();
+    for backend in backends {
+        for policy in [SpillPolicy::RebuildOnRefault, SpillPolicy::SerializeHsr] {
+            let ctx = format!("backend={backend:?} policy={policy:?}");
+            let src = filled_kv(7, 48, 2, 2, 8, backend);
+            let mut never = PagePool::new(1 << 12, 16, backend);
+            let id_n = never.create_segment(&tokens, 0, &src, 0).expect("fits");
+            let mut tiered = PagePool::with_tier(1 << 12, 16, backend, &tier_mem(policy));
+            assert!(tiered.spill_enabled());
+            let id_t = tiered.create_segment(&tokens, 0, &src, 0).expect("fits");
+            let free_before = tiered.free_blocks();
+            assert!(tiered.can_demote(id_t), "{ctx}");
+            assert_eq!(tiered.release_segment(id_t, true, false), Demoted::Spilled, "{ctx}");
+            assert!(tiered.is_cold(id_t), "{ctx}");
+            assert!(tiered.is_matchable(id_t), "{ctx}: cold segments stay matchable");
+            assert!(!tiered.holds_blocks(id_t), "{ctx}: demotion frees blocks");
+            assert_eq!(tiered.cold_tokens(), 48, "{ctx}");
+            assert_eq!(tiered.cached_tokens(), 0, "{ctx}");
+            assert!(tiered.spill_live_bytes() > 0, "{ctx}");
+            assert_eq!(tiered.refault_segment(id_t), Refault::Refaulted, "{ctx}");
+            assert!(!tiered.is_cold(id_t), "{ctx}");
+            assert_eq!(tiered.free_blocks(), free_before, "{ctx}: refault re-reserves");
+            assert_eq!(tiered.spill_live_bytes(), 0, "{ctx}: refault frees the extent");
+            assert_eq!(tiered.tokens_of(id_t), &tokens[..], "{ctx}");
+            assert_kv_bits_equal(&never.segment(id_n).kv, &tiered.segment(id_t).kv, &ctx);
+            assert_queries_equal(&never.segment(id_n).kv, &tiered.segment(id_t).kv, 99, &ctx);
+            let s = tiered.tier_stats();
+            assert_eq!(s.segments_spilled, 1, "{ctx}");
+            assert_eq!(s.segments_refaulted, 1, "{ctx}");
+            assert!(s.spill_bytes > 0, "{ctx}");
+        }
+    }
+}
+
+/// A directory-backed spill store round-trips bit-identically and
+/// unlinks its backing file when the pool drops.
+#[test]
+fn dir_backed_spill_roundtrip_and_cleanup() {
+    let dir = std::env::temp_dir().join(format!("kv-tier-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let backend = Some(HsrBackend::Brute);
+    let src = filled_kv(13, 32, 1, 2, 8, backend);
+    let tokens: Vec<u32> = (0..32).collect();
+    {
+        let tier = TierConfig {
+            spill: SpillConfig::Dir(dir.clone()),
+            policy: SpillPolicy::SerializeHsr,
+        };
+        let mut pool = PagePool::with_tier(1 << 10, 16, backend, &tier);
+        assert!(pool.spill_enabled(), "dir backing must open");
+        let mut never = PagePool::new(1 << 10, 16, backend);
+        let id_n = never.create_segment(&tokens, 0, &src, 0).expect("fits");
+        let id = pool.create_segment(&tokens, 0, &src, 0).expect("fits");
+        assert_eq!(pool.release_segment(id, true, false), Demoted::Spilled);
+        assert!(
+            std::fs::read_dir(&dir).expect("readable").next().is_some(),
+            "spill file must exist while the pool lives"
+        );
+        assert_eq!(pool.refault_segment(id), Refault::Refaulted);
+        assert_kv_bits_equal(&never.segment(id_n).kv, &pool.segment(id).kv, "dir backing");
+        assert_queries_equal(&never.segment(id_n).kv, &pool.segment(id).kv, 42, "dir backing");
+    }
+    assert!(
+        std::fs::read_dir(&dir).expect("readable").next().is_none(),
+        "dropping the pool must unlink its spill file"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// 32 tenants publish the same 64-token document chunk under 32
+/// distinct radix parents: one physical segment, 31 dedup hits, and the
+/// logical/physical byte gap equals exactly the bytes dedup saved.
+/// Teardown unwinds all 32 owner claims without leaking a block.
+#[test]
+fn dedup_shares_one_physical_segment_across_tenants() {
+    let backend = Some(HsrBackend::BallTree);
+    let src = filled_kv(23, 80, 2, 2, 8, backend);
+    let shared: Vec<u32> = (0..64).map(|i| (i * 5 + 2) % 256).collect();
+    let mut store = PrefixStore::with_tier(
+        1 << 12,
+        16,
+        backend,
+        PrefixCacheMode::Min(1),
+        &tier_mem(SpillPolicy::RebuildOnRefault),
+    );
+    let mut child_seg = None;
+    for tenant in 0..32u32 {
+        let parent_toks: Vec<u32> = (0..16).map(|i| 1000 * (tenant + 1) + i).collect();
+        let parent = store
+            .publish_segment(None, &parent_toks, 0, &src, 0, 0)
+            .expect("parent fits");
+        let child = store
+            .publish_segment(Some(parent), &shared, 16, &src, 16, 0)
+            .expect("child fits or dedups");
+        let seg = store.radix.segment_of(child);
+        match child_seg {
+            None => child_seg = Some(seg),
+            Some(first) => assert_eq!(seg, first, "tenant {tenant} must share the segment"),
+        }
+    }
+    let seg = child_seg.unwrap();
+    assert_eq!(store.pool.owners_of(seg), 32);
+    // 32 unique parents + 1 shared child.
+    assert_eq!(store.pool.segment_count(), 33);
+    let stats = store.pool.tier_stats();
+    assert_eq!(stats.dedup_hits, 31);
+    let physical = store.pool.physical_payload_bytes();
+    let logical = store.pool.logical_payload_bytes();
+    assert!(physical < logical);
+    assert_eq!((logical - physical) as u64, stats.dedup_bytes_saved);
+    // Teardown: every owner claim unwinds, nothing leaks anywhere.
+    store.make_room(usize::MAX);
+    assert_eq!(store.pool.segment_count(), 0);
+    assert_eq!(store.pool.free_blocks(), store.pool.total_blocks());
+    assert_eq!(store.pool.spill_live_bytes(), 0);
+    store.pool.debug_assert_all_free();
+}
+
+/// `lookup_budgeted` refaults front-to-back within the token budget and
+/// truncates the chain at the first node it cannot afford.
+#[test]
+fn lookup_budget_truncates_refaults() {
+    let backend = Some(HsrBackend::BallTree);
+    let src = filled_kv(11, 64, 1, 1, 8, backend);
+    let tokens: Vec<u32> = (0..64).map(|i| i % 251).collect();
+    let mut store = PrefixStore::with_tier(
+        1 << 10,
+        16,
+        backend,
+        PrefixCacheMode::Min(1),
+        &tier_mem(SpillPolicy::RebuildOnRefault),
+    );
+    let n0 = store.publish_segment(None, &tokens[..16], 0, &src, 0, 0).expect("fits");
+    let n1 = store.publish_segment(Some(n0), &tokens[16..32], 16, &src, 16, 0).expect("fits");
+    let n2 = store.publish_segment(Some(n1), &tokens[32..48], 32, &src, 32, 0).expect("fits");
+    // Finite want_free keeps the spill path (usize::MAX means teardown):
+    // all three nodes demote in place and stay matchable.
+    store.make_room(store.pool.total_blocks());
+    for n in [n0, n1, n2] {
+        assert!(store.pool.is_cold(store.radix.segment_of(n)));
+        assert!(store.pool.is_matchable(store.radix.segment_of(n)));
+    }
+    let mut prompt = tokens[..48].to_vec();
+    prompt.push(999);
+    // Budget 20 affords the first 16-token node, not the second.
+    let (chain, matched) = store.lookup_budgeted(&prompt, 20);
+    assert_eq!(chain.len(), 1);
+    assert_eq!(matched, 16);
+    assert!(store.pool.holds_blocks(store.radix.segment_of(chain[0])));
+    assert!(store.pool.is_cold(store.radix.segment_of(n1)), "past-budget node stays cold");
+    // Unbudgeted lookup promotes the remainder of the chain.
+    let (chain, matched) = store.lookup_budgeted(&prompt, usize::MAX);
+    assert_eq!(chain.len(), 3);
+    assert_eq!(matched, 48);
+    for &n in &chain {
+        assert!(store.pool.holds_blocks(store.radix.segment_of(n)));
+    }
+    assert_eq!(store.pool.tier_stats().segments_refaulted, 3);
+    store.make_room(usize::MAX);
+    assert_eq!(store.pool.free_blocks(), store.pool.total_blocks());
+    assert_eq!(store.pool.spill_live_bytes(), 0);
+}
+
+/// Randomized publish/evict/refault churn with a shared dedup'd child:
+/// after any interleaving, full teardown leaves the block ledger exact —
+/// no double-free, no leaked block, no leaked spill extent.
+#[test]
+fn churn_publish_evict_refault_no_leak() {
+    for (seed, policy) in
+        [(101u64, SpillPolicy::RebuildOnRefault), (202u64, SpillPolicy::SerializeHsr)]
+    {
+        let backend = Some(HsrBackend::BallTree);
+        let src = filled_kv(17, 64, 1, 1, 8, backend);
+        let variants: Vec<Vec<u32>> =
+            (0..6u32).map(|s| (0..32).map(|i| (i * 3 + s * 41 + 5) % 64).collect()).collect();
+        let shared: Vec<u32> = (0..16).map(|i| 500 + i).collect();
+        // 32 blocks of 16 tokens: tight enough that publishes contend.
+        let mut store = PrefixStore::with_tier(
+            512,
+            16,
+            backend,
+            PrefixCacheMode::Min(1),
+            &tier_mem(policy),
+        );
+        // Deterministic prologue so every tier path is exercised
+        // regardless of how the churn schedule lands: publish, dedup a
+        // child under a second parent, demote everything, refault.
+        let r0 = store.publish_segment(None, &variants[0], 0, &src, 0, 0).expect("fits");
+        store.publish_segment(Some(r0), &shared, 32, &src, 32, 0).expect("fits");
+        let r1 = store.publish_segment(None, &variants[1], 0, &src, 0, 0).expect("fits");
+        store.publish_segment(Some(r1), &shared, 32, &src, 32, 0).expect("dedups");
+        store.make_room(store.pool.total_blocks());
+        let mut probe = variants[0].clone();
+        probe.push(1000);
+        let (chain, _) = store.lookup(&probe);
+        assert!(!chain.is_empty(), "demoted prefix must refault on lookup");
+
+        let mut rng = Rng::new(seed);
+        for _ in 0..400 {
+            match rng.below(4) {
+                0 | 1 => {
+                    // Publish a variant root (and sometimes a dedup'd
+                    // child) unless it is already fully cached.
+                    let v = rng.below(variants.len());
+                    let mut probe = variants[v].clone();
+                    probe.push(1000);
+                    let (chain, matched) = store.lookup(&probe);
+                    let mut root = if matched >= 32 {
+                        Some(chain[0])
+                    } else {
+                        store.publish_segment(None, &variants[v], 0, &src, 0, 0)
+                    };
+                    if root.is_none() {
+                        store.make_room(4);
+                        root = store.publish_segment(None, &variants[v], 0, &src, 0, 0);
+                    }
+                    if let Some(root) = root {
+                        if rng.below(2) == 0 {
+                            let _ = store.publish_segment(Some(root), &shared, 32, &src, 32, 0);
+                        }
+                    }
+                }
+                2 => {
+                    store.make_room(rng.below(16) + 1);
+                }
+                _ => {
+                    let v = rng.below(variants.len());
+                    let mut probe = variants[v].clone();
+                    probe.push(1001);
+                    let (chain, _) = store.lookup(&probe);
+                    // Every handed-out node is hot.
+                    for &n in &chain {
+                        assert!(store.pool.holds_blocks(store.radix.segment_of(n)));
+                    }
+                }
+            }
+        }
+        let stats = store.pool.tier_stats();
+        assert!(stats.dedup_hits >= 1, "policy={policy:?}");
+        assert!(stats.segments_spilled >= 1, "policy={policy:?}");
+        assert!(stats.segments_refaulted >= 1, "policy={policy:?}");
+        store.make_room(usize::MAX);
+        assert_eq!(store.pool.segment_count(), 0, "policy={policy:?}");
+        assert_eq!(store.pool.free_blocks(), store.pool.total_blocks(), "policy={policy:?}");
+        assert_eq!(store.pool.spill_live_bytes(), 0, "policy={policy:?}");
+        assert_eq!(store.pool.cold_tokens(), 0, "policy={policy:?}");
+        assert_eq!(store.pool.cached_tokens(), 0, "policy={policy:?}");
+        store.pool.debug_assert_all_free();
+    }
+}
+
+/// Engine-level: under a hot cap too small for the working set, a
+/// resubmitted prompt refaults its demoted prefix instead of
+/// re-prefilling — with outputs bit-identical to the spill-off engine —
+/// and full teardown leaks zero blocks across both tiers.
+#[test]
+fn engine_refaults_instead_of_reprefilling() {
+    let model = Arc::new(Model::synthetic(81, 2, 2, 8));
+    // Three distinct 96-token prompts overflow a 320-token hot cap once
+    // tails are accounted; the fourth submission repeats the first.
+    let mut schedule: Vec<Vec<u32>> = (0..3).map(|s| prompt_bytes(s, 96)).collect();
+    schedule.push(schedule[0].clone());
+    let run = |spill: SpillConfig| {
+        let mut eng = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                policy: AttentionPolicy::TopR(RSpec::paper()),
+                hsr_backend: Some(HsrBackend::BallTree),
+                prefix_cache: PrefixCacheMode::default(),
+                cache_capacity_tokens: 320,
+                block_tokens: 16,
+                spill,
+                scheduler: SchedulerConfig { prefill_chunk: 16, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let mut outs = Vec::new();
+        for p in &schedule {
+            eng.submit(
+                p.clone(),
+                GenerationParams {
+                    max_new_tokens: 6,
+                    temperature: 0.0,
+                    stop_token: None,
+                    deadline: None,
+                },
+            );
+            eng.run_to_completion();
+            let mut done = eng.take_finished();
+            assert_eq!(done.len(), 1);
+            outs.push(done.pop().unwrap().tokens);
+        }
+        let stats = eng.prefix_store().pool.tier_stats();
+        let leaked = eng.reclaim_and_count_leaks();
+        (outs, eng.metrics.clone(), leaked, stats)
+    };
+    let (off_outs, off_m, off_leak, off_stats) = run(SpillConfig::Off);
+    let (mem_outs, mem_m, mem_leak, mem_stats) = run(SpillConfig::Memory);
+    assert_eq!(off_outs, mem_outs, "spill must never change outputs");
+    assert_eq!(off_outs[0], off_outs[3], "greedy resubmit reproduces");
+    assert_eq!(off_leak, 0);
+    assert_eq!(mem_leak, 0);
+    assert_eq!(off_stats.segments_spilled, 0);
+    assert!(mem_stats.segments_spilled >= 1, "hot-cap pressure must demote");
+    assert!(mem_stats.segments_refaulted >= 1, "resubmit must refault");
+    // The refaulted chain is adopted: materially more prefill skipped
+    // than the spill-off engine, whose evicted prefix re-prefilled.
+    assert!(
+        mem_m.prefill_tokens_skipped >= off_m.prefill_tokens_skipped + 48,
+        "refault must skip re-prefill (off {} vs mem {})",
+        off_m.prefill_tokens_skipped,
+        mem_m.prefill_tokens_skipped
+    );
+    // Tier counters surfaced on the engine metrics match the pool.
+    assert_eq!(mem_m.segments_spilled, mem_stats.segments_spilled);
+    assert_eq!(mem_m.segments_refaulted, mem_stats.segments_refaulted);
+    assert_eq!(mem_m.spill_bytes, mem_stats.spill_bytes);
+    assert_eq!(mem_m.dedup_hits, mem_stats.dedup_hits);
+    assert_eq!(mem_m.kv_blocks_leaked, 0);
+}

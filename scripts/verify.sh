@@ -23,6 +23,11 @@
 #  * benches/e2e_serving.rs --overload-only   → BENCH_robustness.json
 #    (admission control at 4x the sustainable rate: shed rate and the
 #    p50/p99 latency of the accepted requests; synthetic model)
+#  * benches/e2e_serving.rs --tiered-only     → BENCH_kv_tiers.json
+#    (tiered KV: working set 2-4x the hot cap driven twice — phase-2
+#    prefill skip with refault vs re-prefill — plus a 32-tenant
+#    identical-doc dedup sweep, physical vs logical segment bytes;
+#    synthetic model)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -70,6 +75,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== overload admission-control smoke (BENCH_robustness.json) =="
     cargo bench --bench e2e_serving -- --overload-only
     echo "report: $(cd .. && pwd)/BENCH_robustness.json"
+
+    echo "== tiered KV spill/dedup smoke (BENCH_kv_tiers.json) =="
+    cargo bench --bench e2e_serving -- --tiered-only
+    echo "report: $(cd .. && pwd)/BENCH_kv_tiers.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
