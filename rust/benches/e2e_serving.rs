@@ -18,7 +18,9 @@
 //! --overload-requests N, --overload-prompt N, --overload-gen N,
 //! --tiered-requests N, --tiered-prompt N, --tiered-gen N,
 //! --tiered-hot-blocks N, --tiered-policy rebuild|serialize,
-//! --tiered-tenants N.
+//! --tiered-tenants N, --scenarios-only (run just the fork/join
+//! sampling + beam scenarios), --scenario-requests N,
+//! --scenario-prompt N, --scenario-gen N.
 
 use hsr_attn::bench::banner;
 use hsr_attn::engine::serving::{Engine, EngineConfig};
@@ -67,7 +69,7 @@ fn drive(mut eng: Engine, prompts: Vec<Vec<u32>>, gen: usize) -> RunResult {
     for p in prompts {
         eng.submit(
             p,
-            GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None, deadline: None },
+            GenerationParams { max_new_tokens: gen, ..Default::default() },
         );
     }
     let requests = eng.metrics.requests_submitted;
@@ -301,10 +303,8 @@ fn stream_cohort(
             c.send(&WireRequest {
                 prompt,
                 max_new_tokens: gen,
-                temperature: 0.0,
-                stop_token: None,
-                deadline_ms: None,
                 stream: true,
+                ..Default::default()
             })
             .ok()?;
             let mut ttft_ms: Option<f64> = None;
@@ -471,12 +471,7 @@ fn overload_section(args: &Args) {
             corpus[s..s + prompt_len].to_vec()
         })
         .collect();
-    let params = GenerationParams {
-        max_new_tokens: gen,
-        temperature: 0.0,
-        stop_token: None,
-        deadline: None,
-    };
+    let params = GenerationParams { max_new_tokens: gen, ..Default::default() };
     println!("\n== overload: admission control at 4x the sustainable rate (2 workers) ==");
 
     // Calibrate closed-loop with the default (generous) caps.
@@ -567,12 +562,7 @@ fn drive_phase(eng: &mut Engine, prompts: &[Vec<u32>], gen: usize) -> TierPhase 
     for p in prompts {
         eng.submit(
             p.clone(),
-            GenerationParams {
-                max_new_tokens: gen,
-                temperature: 0.0,
-                stop_token: None,
-                deadline: None,
-            },
+            GenerationParams { max_new_tokens: gen, ..Default::default() },
         );
     }
     let t0 = Instant::now();
@@ -770,6 +760,205 @@ fn tiered_kv_section(args: &Args) {
     }
 }
 
+struct ScenarioRun {
+    wall_s: f64,
+    steady_tok_per_s: f64,
+    gen_tokens: u64,
+    /// Peak over the run of `Engine::kv_bytes()` — physical is blocks
+    /// actually allocated, logical is what every sibling would cost if
+    /// nothing were shared. The gap is the COW-fork + prefix-cache win.
+    peak_physical_kv: u64,
+    peak_logical_kv: u64,
+    prefill_skip_pct: f64,
+    sequence_forks: u64,
+    fork_shared_tokens: u64,
+    beam_prunes: u64,
+    choices: usize,
+    leaked: usize,
+}
+
+impl ScenarioRun {
+    fn sharing_ratio(&self) -> f64 {
+        self.peak_logical_kv as f64 / self.peak_physical_kv.max(1) as f64
+    }
+}
+
+/// One fork/join scenario: `requests` identical prompts (the shared
+/// system-prompt setting) decoded with the given group shape, stepping
+/// manually so peak physical-vs-logical KV bytes are sampled mid-run
+/// while every sibling is live.
+fn scenario(
+    model: Arc<Model>,
+    requests: usize,
+    prompt: &[u32],
+    params: GenerationParams,
+) -> ScenarioRun {
+    let width = params.beam_width.max(params.best_of).max(params.n).max(1) as usize;
+    let mut eng = Engine::new(
+        model,
+        EngineConfig {
+            policy: AttentionPolicy::TopR(RSpec::paper()),
+            hsr_backend: Some(HsrBackend::BallTree),
+            prefix_cache: PrefixCacheMode::default(),
+            scheduler: SchedulerConfig {
+                max_batch: requests * width,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    for _ in 0..requests {
+        eng.submit(prompt.to_vec(), params);
+    }
+    let t0 = Instant::now();
+    let (mut steady_ns, mut steady_tok) = (0u128, 0u64);
+    let (mut peak_phys, mut peak_logical) = (0u64, 0u64);
+    while eng.has_work() {
+        let was_steady = eng.steady_state();
+        let g0 = eng.metrics.generated_tokens;
+        let ts = Instant::now();
+        let processed = eng.step();
+        if was_steady {
+            steady_ns += ts.elapsed().as_nanos();
+            steady_tok += eng.metrics.generated_tokens - g0;
+        }
+        let (phys, logical) = eng.kv_bytes();
+        peak_phys = peak_phys.max(phys);
+        peak_logical = peak_logical.max(logical);
+        if processed == 0 {
+            eng.run_to_completion();
+            break;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let choices: usize = eng.take_finished().iter().map(|r| r.choices.len().max(1)).sum();
+    let m = eng.metrics.clone();
+    let leaked = eng.reclaim_and_count_leaks();
+    ScenarioRun {
+        wall_s,
+        steady_tok_per_s: if steady_ns > 0 {
+            steady_tok as f64 / (steady_ns as f64 * 1e-9)
+        } else {
+            0.0
+        },
+        gen_tokens: m.generated_tokens,
+        peak_physical_kv: peak_phys,
+        peak_logical_kv: peak_logical,
+        prefill_skip_pct: 100.0 * m.prefix_skip_rate(),
+        sequence_forks: m.sequence_forks,
+        fork_shared_tokens: m.fork_shared_tokens,
+        beam_prunes: m.beam_prunes,
+        choices,
+        leaked,
+    }
+}
+
+/// Fork/join scenarios section (BENCH_scenarios.json): parallel
+/// sampling at n=1/4/16 plus width-4 beam search over COW-forked
+/// chains, all on a shared prompt. Reports peak physical-vs-logical KV
+/// bytes (the block-sharing win), prefill-skip %, and steady tok/s.
+/// Synthetic model, so it always runs.
+fn scenarios_section(args: &Args) {
+    let requests = args.usize_or("scenario-requests", 8);
+    let prompt_len = args.usize_or("scenario-prompt", 192);
+    let gen = args.usize_or("scenario-gen", 24);
+    let model = Arc::new(Model::synthetic(90, 2, 4, 8));
+    let corpus = corpus();
+    let prompt = &corpus[..prompt_len];
+    println!(
+        "\n== fork/join scenarios: {requests} requests x (shared prompt {prompt_len} + gen {gen}), \
+         sampling n=1/4/16 + beam w=4 =="
+    );
+    let cases: Vec<(&str, GenerationParams)> = vec![
+        (
+            "sampling_n1",
+            GenerationParams { max_new_tokens: gen, ..Default::default() },
+        ),
+        (
+            "sampling_n4",
+            GenerationParams {
+                max_new_tokens: gen,
+                temperature: 1.0,
+                n: 4,
+                ..Default::default()
+            },
+        ),
+        (
+            "sampling_n16",
+            GenerationParams {
+                max_new_tokens: gen,
+                temperature: 1.0,
+                n: 16,
+                ..Default::default()
+            },
+        ),
+        (
+            "beam_w4",
+            GenerationParams { max_new_tokens: gen, beam_width: 4, ..Default::default() },
+        ),
+    ];
+    let mut results: Vec<(&str, ScenarioRun)> = Vec::new();
+    for (name, params) in cases {
+        let r = scenario(Arc::clone(&model), requests, prompt, params);
+        results.push((name, r));
+    }
+    println!(
+        "{:<14} {:>8} {:>13} {:>12} {:>12} {:>9} {:>13} {:>8}",
+        "scenario", "wall s", "steady tok/s", "phys KV", "logical KV", "share x", "prefill skip",
+        "choices"
+    );
+    for (name, r) in &results {
+        println!(
+            "{:<14} {:>8.2} {:>13.1} {:>12} {:>12} {:>8.1}x {:>12.1}% {:>8}",
+            name,
+            r.wall_s,
+            r.steady_tok_per_s,
+            r.peak_physical_kv,
+            r.peak_logical_kv,
+            r.sharing_ratio(),
+            r.prefill_skip_pct,
+            r.choices,
+        );
+        assert_eq!(r.leaked, 0, "scenario {name} leaked KV blocks");
+    }
+    let n16 = &results.iter().find(|(n, _)| *n == "sampling_n16").expect("n16 ran").1;
+    println!(
+        "\nn=16 sampling: {} forks share {} prompt tokens -> {:.1}x logical/physical KV; \
+         beam prunes {}",
+        n16.sequence_forks,
+        n16.fork_shared_tokens,
+        n16.sharing_ratio(),
+        results.iter().find(|(n, _)| *n == "beam_w4").map_or(0, |(_, r)| r.beam_prunes),
+    );
+
+    let mut root = Json::obj();
+    root.set("requests", requests.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen", gen.into())
+        .set("backend", "balltree".into());
+    for (name, r) in &results {
+        let mut o = Json::obj();
+        o.set("wall_s", r.wall_s.into())
+            .set("steady_tok_per_s", r.steady_tok_per_s.into())
+            .set("gen_tokens", r.gen_tokens.into())
+            .set("peak_physical_kv_bytes", r.peak_physical_kv.into())
+            .set("peak_logical_kv_bytes", r.peak_logical_kv.into())
+            .set("kv_sharing_ratio", r.sharing_ratio().into())
+            .set("prefill_tokens_skipped_pct", r.prefill_skip_pct.into())
+            .set("sequence_forks", r.sequence_forks.into())
+            .set("fork_shared_tokens", r.fork_shared_tokens.into())
+            .set("beam_prunes", r.beam_prunes.into())
+            .set("choices", r.choices.into())
+            .set("kv_blocks_leaked", r.leaked.into());
+        root.set(name, o);
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scenarios.json");
+    match std::fs::write(path, root.to_string() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     banner("e2e_serving", "headline: sparse vs dense serving + shared-prefix KV store");
     let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
@@ -786,6 +975,10 @@ fn main() {
         tiered_kv_section(&args);
         return;
     }
+    if args.flag("scenarios-only") {
+        scenarios_section(&args);
+        return;
+    }
     shared_prefix_section(&args);
     if args.flag("shared-only") {
         return;
@@ -793,6 +986,7 @@ fn main() {
     streaming_affinity_section(&args);
     overload_section(&args);
     tiered_kv_section(&args);
+    scenarios_section(&args);
 
     if !artifacts_dir().join("manifest.json").exists() {
         eprintln!("\nartifacts missing — run `make artifacts`; skipping sparse-vs-dense section");

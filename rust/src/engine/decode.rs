@@ -203,6 +203,38 @@ pub(crate) fn group_by_chain(chains: &[&[u32]]) -> Vec<Vec<usize>> {
     groups
 }
 
+/// Log-probability of `token` under log-softmax of `logits` — the
+/// (temperature-independent) score a beam/best-of hypothesis accrues
+/// per step. Accumulated in f64 so long hypotheses don't lose the
+/// small differences beam pruning decides on.
+pub(crate) fn token_logprob(logits: &[f32], token: u32) -> f64 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&l| (l as f64 - max).exp()).sum();
+    logits[token as usize] as f64 - max - lse.ln()
+}
+
+/// The `w` highest-log-probability tokens of one logits row, best
+/// first; ties break toward the smaller token id so beam expansion is
+/// fully deterministic. Returns fewer than `w` entries only when the
+/// vocabulary is smaller than `w`.
+pub(crate) fn top_w(logits: &[f32], w: usize) -> Vec<(u32, f64)> {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&l| (l as f64 - max).exp()).sum();
+    let norm = max + lse.ln();
+    let mut scored: Vec<(u32, f64)> = logits
+        .iter()
+        .enumerate()
+        .map(|(t, &l)| (t as u32, l as f64 - norm))
+        .collect();
+    scored.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    scored.truncate(w);
+    scored
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -434,5 +466,26 @@ mod tests {
         all.sort_unstable();
         assert_eq!(all, (0..7).collect::<Vec<_>>());
         assert!(group_by_chain(&[]).is_empty());
+    }
+
+    #[test]
+    fn top_w_is_sorted_deterministic_and_normalized() {
+        let logits = [0.0f32, 2.0, 2.0, -1.0];
+        let top = top_w(&logits, 3);
+        assert_eq!(top.len(), 3);
+        // Ties (tokens 1 and 2 share a logit) break toward the smaller id.
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 2);
+        assert_eq!(top[2].0, 0);
+        assert!(top[0].1 == top[1].1 && top[1].1 > top[2].1);
+        // Log-probs exponentiate back to a distribution.
+        let total: f64 = (0..logits.len())
+            .map(|t| token_logprob(&logits, t as u32).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12, "sum={total}");
+        // Requesting more than the vocab just returns the vocab.
+        assert_eq!(top_w(&logits, 10).len(), 4);
+        // Best token agrees with argmax (greedy ↔ beam-1 consistency).
+        assert_eq!(top_w(&logits, 1)[0].0, crate::model::transformer::argmax(&logits));
     }
 }

@@ -110,6 +110,23 @@ pub struct Metrics {
     /// (engine-side `ttft` starts later, at sequence admission; this
     /// includes router queueing).
     pub ttft_wire: Histogram,
+    // --- fork/join (parallel sampling + beam) counters ---
+    /// Grouped requests admitted (parallel-sampling n/best_of ≥ 2 or
+    /// beam width ≥ 2); each emits exactly one multi-choice response.
+    pub group_requests: u64,
+    /// Mid-decode sequence forks (sampling fan-outs + beam expansions
+    /// + explicit `fork_request` calls).
+    pub sequence_forks: u64,
+    /// KV tokens a freshly forked sibling shares via the chain instead
+    /// of recomputing or copying (its `prefix_len` at fork time).
+    pub fork_shared_tokens: u64,
+    /// Forks that could not publish the parent tail (pool pressure) and
+    /// fell back to recompute: the child re-prefills privately, still
+    /// bit-identical, just without physical sharing.
+    pub fork_recompute_fallbacks: u64,
+    /// Beam hypotheses pruned (blocks and chain refs released without a
+    /// response; the survivors carry the beam forward).
+    pub beam_prunes: u64,
 }
 
 impl Metrics {
@@ -155,6 +172,11 @@ impl Metrics {
         self.affinity_hits += other.affinity_hits;
         self.affinity_fallbacks += other.affinity_fallbacks;
         self.ttft_wire.merge(&other.ttft_wire);
+        self.group_requests += other.group_requests;
+        self.sequence_forks += other.sequence_forks;
+        self.fork_shared_tokens += other.fork_shared_tokens;
+        self.fork_recompute_fallbacks += other.fork_recompute_fallbacks;
+        self.beam_prunes += other.beam_prunes;
     }
 
     /// Fraction of demanded prefill tokens skipped via the shared-prefix
@@ -207,7 +229,9 @@ impl Metrics {
              {} worker panics / {} restarts; peak queue {}; {} leaked blocks\n\
              stream:   {} tokens_streamed / {} streams_severed / \
              {} slow_consumer_sheds; ttft_ms p50 {} (wire); \
-             affinity {} hits / {} fallbacks",
+             affinity {} hits / {} fallbacks\n\
+             fork:     {} groups / {} forks / {} shared tokens / \
+             {} recompute fallbacks / {} beam prunes",
             self.requests_submitted,
             self.requests_completed,
             self.requests_preempted,
@@ -247,6 +271,11 @@ impl Metrics {
             crate::util::stats::fmt_ns(self.ttft_wire.percentile_ns(50.0) as f64),
             self.affinity_hits,
             self.affinity_fallbacks,
+            self.group_requests,
+            self.sequence_forks,
+            self.fork_shared_tokens,
+            self.fork_recompute_fallbacks,
+            self.beam_prunes,
         )
     }
 }
@@ -330,6 +359,25 @@ mod tests {
         let s = a.summary();
         assert!(s.contains("7 spilled / 2 refaulted"), "{s}");
         assert!(s.contains("dedup 7 hits / 4096 bytes saved"), "{s}");
+    }
+
+    #[test]
+    fn fork_counters_merge_and_render() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.group_requests = 2;
+        a.sequence_forks = 5;
+        b.sequence_forks = 3;
+        b.fork_shared_tokens = 640;
+        b.fork_recompute_fallbacks = 1;
+        b.beam_prunes = 6;
+        a.merge(&b);
+        assert_eq!(a.group_requests, 2);
+        assert_eq!(a.sequence_forks, 8);
+        assert_eq!(a.fork_shared_tokens, 640);
+        let s = a.summary();
+        assert!(s.contains("2 groups / 8 forks / 640 shared tokens"), "{s}");
+        assert!(s.contains("1 recompute fallbacks / 6 beam prunes"), "{s}");
     }
 
     #[test]

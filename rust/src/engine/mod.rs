@@ -22,7 +22,7 @@ pub mod stream;
 
 pub use decode::GenerationDecoding;
 pub use prefill::{PrefillResult, PromptPrefilling};
-pub use request::{FinishReason, GenerationParams, Request, RequestId, Response};
+pub use request::{Choice, FinishReason, GenerationParams, Request, RequestId, Response};
 pub use router::{Outcome, RequestError, Router, RouterConfig, SubmitError};
 pub use scheduler::{PreemptPolicy, SchedulerConfig};
 pub use serving::{Engine, EngineConfig, Fault, FaultKind, FaultPlan};

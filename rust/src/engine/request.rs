@@ -20,6 +20,19 @@ pub struct GenerationParams {
     /// (blocks and chain refs released) with
     /// [`FinishReason::DeadlineExceeded`]; None → no deadline.
     pub deadline: Option<Instant>,
+    /// Parallel samples to return (the wire `"n"`). Values ≥ 2 fork the
+    /// sequence after its first token so all samples share the prompt
+    /// KV chain; the response carries one [`Choice`] per sample.
+    pub n: u32,
+    /// Candidates to generate (the wire `"best_of"`); 0 → same as `n`.
+    /// When larger than `n`, the extra candidates are generated and the
+    /// `n` best by cumulative log-probability are returned.
+    pub best_of: u32,
+    /// Beam-search width (the wire `"beam_width"`); 0 or 1 → off.
+    /// Overrides `n`/`best_of`: decoding keeps the `beam_width` highest
+    /// cumulative-log-probability hypotheses, forking on expansion and
+    /// pruning losers each step.
+    pub beam_width: u32,
 }
 
 impl Default for GenerationParams {
@@ -29,6 +42,26 @@ impl Default for GenerationParams {
             temperature: 0.0,
             stop_token: None,
             deadline: None,
+            n: 1,
+            best_of: 0,
+            beam_width: 0,
+        }
+    }
+}
+
+impl GenerationParams {
+    /// Beam search requested?
+    pub fn is_beam(&self) -> bool {
+        self.beam_width >= 2
+    }
+
+    /// Sibling sequences this request decodes concurrently: the beam
+    /// width, else max(n, best_of). 1 → plain single-sequence request.
+    pub fn group_width(&self) -> u32 {
+        if self.is_beam() {
+            self.beam_width
+        } else {
+            self.n.max(1).max(self.best_of)
         }
     }
 }
@@ -62,6 +95,22 @@ pub enum FinishReason {
     Cancelled,
 }
 
+/// One completed sibling of a grouped (parallel-sampling / beam)
+/// request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Choice {
+    /// Stable sibling index (0 = the original submission's lineage;
+    /// forked siblings get the next free index at fork time). Matches
+    /// the `sibling` tag on stream frames.
+    pub index: u32,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Cumulative log-probability of `tokens` under the model's
+    /// (temperature-independent) softmax — the beam score. 0.0 for
+    /// plain requests.
+    pub logprob: f64,
+}
+
 /// Completed request.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -73,6 +122,10 @@ pub struct Response {
     /// Time to first generated token.
     pub ttft_ms: f64,
     pub prompt_len: usize,
+    /// Per-sibling results of a grouped request, ranked best-first
+    /// (`tokens`/`finish` above mirror the best choice). Empty for
+    /// plain single-sequence requests.
+    pub choices: Vec<Choice>,
 }
 
 /// Engine-internal sequence state.
@@ -113,9 +166,65 @@ pub(crate) struct Sequence {
     /// folded tokens through prefill without re-pushing them, so the
     /// wire sequence stays contiguous across preemptions.
     pub stream: Option<Arc<StreamSink>>,
+    /// Per-sequence sampling RNG, seeded from the engine seed and the
+    /// request id; forks give each sibling an independent stream
+    /// ([`crate::util::rng::Rng::fork`]) so siblings diverge
+    /// deterministically. Greedy decoding never draws from it.
+    pub rng: crate::util::rng::Rng,
+    /// Group primary's request id when this sequence belongs to a
+    /// parallel-sampling group or beam (the primary points at itself);
+    /// `None` for standalone sequences.
+    pub group: Option<RequestId>,
+    /// Sibling index within the group (0 = the original submission).
+    pub sibling: u32,
+    /// Cumulative log-probability of `generated` (beam score /
+    /// best-of ranking key). Only maintained for grouped sequences.
+    pub score: f64,
+    /// Logits of the last prompt token, stashed when a group primary
+    /// seeds its first generated token so sampling-group siblings can
+    /// draw their own first token from the same distribution at
+    /// fan-out (taken and dropped there).
+    pub seed_logits: Option<Vec<f32>>,
 }
 
 impl Sequence {
+    /// Split this sequence mid-decode: the sibling shares every KV
+    /// chain segment the parent has adopted and clones the generated
+    /// tokens, but starts with a **fresh private tail** (no blocks, no
+    /// rows — the caller publishes the parent's tail into the chain
+    /// first, see the engine's publish-on-fork path) and a forked RNG.
+    /// The caller assigns the id, takes chain references for the
+    /// child, and seeds its tail calibration.
+    pub fn fork(&mut self, id: RequestId, hsr: Option<crate::hsr::HsrBackend>) -> Sequence {
+        let kv = crate::model::kv::KvState::new(
+            self.kv.n_layers,
+            self.kv.n_heads,
+            self.kv.d_head,
+            hsr,
+        );
+        Sequence {
+            id,
+            prompt: self.prompt.clone(),
+            params: self.params,
+            generated: self.generated.clone(),
+            kv,
+            submitted: self.submitted,
+            first_token_at: self.first_token_at,
+            blocks: Vec::new(),
+            prefilled: self.prefilled,
+            folded: self.folded,
+            prefix: self.prefix.clone(),
+            prefix_len: self.prefix_len,
+            priority: self.priority,
+            attempts: self.attempts,
+            stream: self.stream.clone(),
+            rng: self.rng.fork(),
+            group: self.group,
+            sibling: self.sibling,
+            score: self.score,
+            seed_logits: None,
+        }
+    }
     /// Total tokens this sequence attends over: shared prefix + tail.
     /// (Diagnostics; block accounting uses [`Sequence::tail_tokens`].)
     #[allow(dead_code)]

@@ -682,6 +682,7 @@ impl Router {
                         latency_ms: 0.0,
                         ttft_ms: 0.0,
                         prompt_len: req.prompt.len(),
+                        choices: Vec::new(),
                     }),
                 );
                 return true;

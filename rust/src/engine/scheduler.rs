@@ -42,6 +42,11 @@ pub struct SchedulerConfig {
     /// at the first cold node past the budget and the rest stays cold
     /// for a later lookup. Effectively unbounded by default.
     pub refault_token_budget: usize,
+    /// Cap on sibling sequences one request may fan out to (parallel
+    /// sampling `n`/`best_of` and beam width are clamped to this at
+    /// admission). Bounds how much of the pool and batch a single
+    /// grouped request can claim.
+    pub max_group_width: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -54,6 +59,7 @@ impl Default for SchedulerConfig {
             prefix_headroom_blocks: 1,
             max_waiting: usize::MAX,
             refault_token_budget: 1 << 20,
+            max_group_width: 16,
         }
     }
 }

@@ -28,7 +28,7 @@
 
 use super::metrics::Metrics;
 use super::request::{
-    FinishReason, GenerationParams, Request, RequestId, Response, Sequence,
+    Choice, FinishReason, GenerationParams, Request, RequestId, Response, Sequence,
 };
 use super::scheduler::SchedulerConfig;
 use crate::attention::session::AttentionConfig;
@@ -39,10 +39,10 @@ use crate::kvstore::{
 use crate::model::kv::KvState;
 use crate::model::transformer::RSpec;
 use crate::model::transformer::{
-    sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
+    argmax, sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
 };
 use crate::model::Model;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -223,11 +223,44 @@ pub struct Engine {
     finished: Vec<Response>,
     ws: Workspace,
     bws: BatchWorkspace,
-    rng: crate::util::rng::Rng,
+    /// Aggregation state for grouped requests (parallel sampling /
+    /// beam search), keyed by the submitted request id; every sibling
+    /// sequence carries `group == Some(gid)` pointing here.
+    groups: HashMap<RequestId, Group>,
     pub metrics: Metrics,
     next_id: RequestId,
     /// `step()` calls so far (drives deterministic fault injection).
     steps: u64,
+}
+
+/// One grouped request's aggregation state: parallel sampling
+/// (`n`/`best_of`) or beam search (`beam_width`). The primary sequence
+/// and every sibling forked from it record their terminal [`Choice`]
+/// here; when the last live sibling lands, the group emits exactly ONE
+/// multi-choice [`Response`] under the submitted request id.
+struct Group {
+    /// Beam search (joint ranking + pruning) vs independent sampling.
+    beam: bool,
+    /// Choices returned to the caller (`n`, or the beam width).
+    keep: usize,
+    /// Candidates decoded (`max(n, best_of)`, or the beam width) —
+    /// clamped to [`SchedulerConfig::max_group_width`] at admission.
+    spawn: usize,
+    /// Siblings still running or waiting.
+    live: usize,
+    /// Next sibling index to hand out at fork.
+    next_sibling: u32,
+    /// Initial fan-out happened (sampling) / beam seeded its first
+    /// expansion. Until then only the primary exists.
+    forked: bool,
+    /// Terminal choices recorded so far (unranked until emission).
+    results: Vec<Choice>,
+    /// The submitted prompt: sibling prompts mutate under preemption
+    /// folds, but the response and panic salvage need the original.
+    prompt: Vec<u32>,
+    submitted: Instant,
+    /// Earliest first-token instant across siblings (group TTFT).
+    first_token_at: Option<Instant>,
 }
 
 impl Engine {
@@ -253,7 +286,7 @@ impl Engine {
             finished: Vec::new(),
             ws,
             bws,
-            rng: crate::util::rng::Rng::new(cfg.seed),
+            groups: HashMap::new(),
             metrics: Metrics::default(),
             next_id: cfg.id_offset + 1,
             steps: 0,
@@ -280,6 +313,16 @@ impl Engine {
             prefix_len: 0,
             attempts: req.attempts,
             stream: req.stream,
+            // Sampling draws come from a per-sequence stream so forked
+            // siblings diverge deterministically (the child's rng forks
+            // from the parent's) without perturbing anyone else's draws.
+            rng: crate::util::rng::Rng::new(
+                self.cfg.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+            group: None,
+            sibling: 0,
+            score: 0.0,
+            seed_logits: None,
         }
     }
 
@@ -308,7 +351,33 @@ impl Engine {
     fn enqueue_request(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
-        let seq = self.new_sequence(req);
+        let mut seq = self.new_sequence(req);
+        let width = seq.params.group_width() as usize;
+        if width >= 2 {
+            let spawn = width.min(self.cfg.scheduler.max_group_width.max(1));
+            let keep = if seq.params.is_beam() {
+                spawn
+            } else {
+                (seq.params.n.max(1) as usize).min(spawn)
+            };
+            self.groups.insert(
+                seq.id,
+                Group {
+                    beam: seq.params.is_beam(),
+                    keep,
+                    spawn,
+                    live: 1,
+                    next_sibling: 1,
+                    forked: false,
+                    results: Vec::new(),
+                    prompt: seq.prompt.clone(),
+                    submitted: seq.submitted,
+                    first_token_at: None,
+                },
+            );
+            seq.group = Some(seq.id);
+            self.metrics.group_requests += 1;
+        }
         self.waiting.push_back(seq);
     }
 
@@ -360,6 +429,10 @@ impl Engine {
         self.abort_expired();
         self.abort_severed();
         self.admit();
+        // Fork grouped primaries that finished prefill last step, before
+        // the walk runs stop/length checks — a group must fan out even
+        // when its very first token already terminates each sibling.
+        self.fan_out_groups();
         let model = Arc::clone(&self.model);
         let mut tokens = 0usize;
         let budget = self.cfg.scheduler.step_token_budget.max(1);
@@ -449,8 +522,26 @@ impl Engine {
                         // Logits of the last prompt token seed the first
                         // generated token.
                         if seq.prefilled + t + 1 == seq.prompt.len() {
-                            let next =
-                                sample(&logits, seq.params.temperature, &mut self.rng);
+                            // Beam groups seed greedily: the seed must
+                            // equal the rank-0 beam candidate (argmax and
+                            // `top_w` break ties the same way, smallest
+                            // token id) so the token already streamed
+                            // stays the primary's hypothesis at fan-out.
+                            let next = if seq.params.is_beam() {
+                                argmax(&logits)
+                            } else {
+                                sample(&logits, seq.params.temperature, &mut seq.rng)
+                            };
+                            if let Some(gid) = seq.group {
+                                seq.score +=
+                                    super::decode::token_logprob(&logits, next);
+                                // Fan-out replaces this pending token per
+                                // sibling from the same distribution.
+                                if self.groups.get(&gid).is_some_and(|g| !g.forked)
+                                {
+                                    seq.seed_logits = Some(logits.clone());
+                                }
+                            }
                             seq.generated.push(next);
                             seq.first_token_at = Some(Instant::now());
                             // Folded tokens re-fed after a preemption go
@@ -458,7 +549,7 @@ impl Engine {
                             // genuinely new token is streamed, so the wire
                             // sequence stays contiguous across preemptions.
                             if let Some(sink) = &seq.stream {
-                                if sink.push_token(next) {
+                                if sink.push_token(next, seq.sibling) {
                                     self.metrics.tokens_streamed += 1;
                                 }
                             }
@@ -583,8 +674,28 @@ impl Engine {
         let logits =
             model.decode_step_batch_shared(&tokens, &mut views, &groups, policy, bws, stats);
         drop(views);
+        // Beam-group members don't sample: their continuations are
+        // ranked jointly per group below (forking the winners, pruning
+        // the losers). Everyone else samples from their own rng stream.
+        let beam_rows: Vec<(RequestId, usize)> = ids
+            .iter()
+            .filter_map(|&sid| {
+                let i = self.running.iter().position(|s| s.id == sid)?;
+                let beam = self.running[i]
+                    .group
+                    .is_some_and(|g| self.groups.get(&g).is_some_and(|gr| gr.beam));
+                let bpos = members
+                    .iter()
+                    .position(|&(_, s)| s == sid)
+                    .expect("member list covers ids");
+                beam.then_some((sid, bpos))
+            })
+            .collect();
         // Sample in submission-priority order (the `ids` order).
         for &sid in ids {
+            if beam_rows.iter().any(|&(s, _)| s == sid) {
+                continue;
+            }
             let bpos = members
                 .iter()
                 .position(|&(_, s)| s == sid)
@@ -595,7 +706,10 @@ impl Engine {
                 .position(|s| s.id == sid)
                 .expect("no sequence finishes during the batch");
             let seq = &mut self.running[i];
-            let next = sample(&logits[bpos], seq.params.temperature, &mut self.rng);
+            let next = sample(&logits[bpos], seq.params.temperature, &mut seq.rng);
+            if seq.group.is_some() {
+                seq.score += super::decode::token_logprob(&logits[bpos], next);
+            }
             seq.generated.push(next);
             if seq.first_token_at.is_none() {
                 seq.first_token_at = Some(Instant::now());
@@ -605,11 +719,404 @@ impl Engine {
                 // A refused push means the consumer overran the buffer;
                 // the sink is now severed and abort_severed() sheds this
                 // sequence at the top of the next step.
-                if sink.push_token(next) {
+                if sink.push_token(next, seq.sibling) {
                     self.metrics.tokens_streamed += 1;
                 }
             }
         }
+        // Beam expansion: one joint ranking per group.
+        if !beam_rows.is_empty() {
+            let mut beam_gids: Vec<RequestId> = beam_rows
+                .iter()
+                .filter_map(|&(sid, _)| {
+                    self.running.iter().find(|s| s.id == sid)?.group
+                })
+                .collect();
+            beam_gids.sort_unstable();
+            beam_gids.dedup();
+            for gid in beam_gids {
+                self.beam_step(gid, &beam_rows, &logits);
+            }
+        }
+    }
+
+    /// One beam-search step for group `gid`: every live member's top-w
+    /// continuations are ranked together by cumulative log-probability;
+    /// the best `spawn` survive. A member's first selection continues it
+    /// in place; extra selections fork it (COW — the just-fed tail row
+    /// is frozen into the shared chain first); a member with no
+    /// selection is pruned, releasing its blocks and chain references
+    /// without emitting a response. Fully deterministic: ties break by
+    /// sibling order, then token id.
+    fn beam_step(
+        &mut self,
+        gid: RequestId,
+        rows: &[(RequestId, usize)],
+        logits: &[Vec<f32>],
+    ) {
+        let spawn = match self.groups.get(&gid) {
+            Some(g) => g.spawn,
+            None => return,
+        };
+        // Group members present in this batch, in sibling order.
+        let mut mem: Vec<(u32, RequestId, usize, f64)> = rows
+            .iter()
+            .filter_map(|&(sid, bpos)| {
+                let s = self.running.iter().find(|s| s.id == sid)?;
+                (s.group == Some(gid)).then_some((s.sibling, sid, bpos, s.score))
+            })
+            .collect();
+        mem.sort_unstable_by_key(|&(sib, ..)| sib);
+        if mem.is_empty() {
+            return;
+        }
+        // Globally ranked candidates: (cumulative score, member, token).
+        let mut cands: Vec<(f64, usize, u32)> = Vec::new();
+        for (mi, &(_, _, bpos, score)) in mem.iter().enumerate() {
+            for (tok, lp) in super::decode::top_w(&logits[bpos], spawn) {
+                cands.push((score + lp, mi, tok));
+            }
+        }
+        cands.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        cands.truncate(spawn);
+        let mut assigned: Vec<Vec<(u32, f64)>> = vec![Vec::new(); mem.len()];
+        for &(score, mi, tok) in &cands {
+            assigned[mi].push((tok, score));
+        }
+        // Survivors first: forks clone the member BEFORE its own
+        // continuation is pushed, so every fork shares the exact fed
+        // state. Pruning is deferred so ids stay resolvable throughout.
+        for (mi, &(_, sid, _, _)) in mem.iter().enumerate() {
+            if assigned[mi].is_empty() {
+                continue;
+            }
+            for &(tok, score) in &assigned[mi][1..] {
+                let new_id = self.next_id;
+                self.next_id += 1;
+                let idx = self
+                    .running
+                    .iter()
+                    .position(|s| s.id == sid)
+                    .expect("beam member lives until pruned");
+                let loc = self.fork_running(idx, new_id, |child| {
+                    child.generated.push(tok);
+                    child.score = score;
+                });
+                self.metrics.generated_tokens += 1;
+                self.stream_child_token(new_id, loc);
+            }
+            let idx = self
+                .running
+                .iter()
+                .position(|s| s.id == sid)
+                .expect("forking never removes the parent");
+            let (tok, score) = assigned[mi][0];
+            let seq = &mut self.running[idx];
+            seq.generated.push(tok);
+            seq.score = score;
+            if seq.first_token_at.is_none() {
+                seq.first_token_at = Some(Instant::now());
+            }
+            self.metrics.generated_tokens += 1;
+            if let Some(sink) = &seq.stream {
+                if sink.push_token(tok, seq.sibling) {
+                    self.metrics.tokens_streamed += 1;
+                }
+            }
+        }
+        for (mi, &(_, sid, _, _)) in mem.iter().enumerate() {
+            if !assigned[mi].is_empty() {
+                continue;
+            }
+            if let Some(idx) = self.running.iter().position(|s| s.id == sid) {
+                self.prune_sibling(idx);
+            }
+        }
+    }
+
+    /// Fan each unforked grouped primary out into its siblings, once it
+    /// is decode-ready (prefill done, seed token pending). Sampling
+    /// children redraw the pending token from the stashed seed
+    /// distribution with their own forked rng; beam children take the
+    /// rank-1.. candidates (the primary keeps rank 0 == its greedy
+    /// seed). All siblings share the full prefix chain — including the
+    /// prompt rows just computed — via publish-on-fork.
+    fn fan_out_groups(&mut self) {
+        let gids: Vec<RequestId> = self
+            .running
+            .iter()
+            .filter(|s| {
+                s.sibling == 0
+                    && s.prefilled >= s.prompt.len()
+                    && !s.generated.is_empty()
+                    && s.group.is_some_and(|g| {
+                        self.groups.get(&g).is_some_and(|gr| !gr.forked)
+                    })
+            })
+            .map(|s| s.group.expect("filtered on group"))
+            .collect();
+        for gid in gids {
+            self.fan_out_one(gid);
+        }
+    }
+
+    fn fan_out_one(&mut self, gid: RequestId) {
+        let Some(pidx) = self.running.iter().position(|s| s.id == gid) else {
+            return;
+        };
+        let (spawn, beam) = match self.groups.get(&gid) {
+            Some(g) => (g.spawn, g.beam),
+            None => return,
+        };
+        let seed_logits = self.running[pidx].seed_logits.take();
+        let beam_cands = match (&seed_logits, beam) {
+            (Some(l), true) => super::decode::top_w(l, spawn),
+            _ => Vec::new(),
+        };
+        let n_children = if beam { beam_cands.len().min(spawn) } else { spawn };
+        let seed_ref = seed_logits.as_deref();
+        for rank in 1..n_children {
+            let new_id = self.next_id;
+            self.next_id += 1;
+            let pidx = self
+                .running
+                .iter()
+                .position(|s| s.id == gid)
+                .expect("primary stays running across fan-out");
+            let cand = beam_cands.get(rank).copied();
+            let loc = self.fork_running(pidx, new_id, |child| {
+                // Replace the pending seed token with this sibling's own
+                // draw / beam candidate; the score swaps accordingly.
+                // (If the stash was lost — cannot happen in the current
+                // flow — the child keeps the parent's token and diverges
+                // through its forked rng on later steps.)
+                if let Some(l) = seed_ref {
+                    let (tok, lp) = match cand {
+                        Some(c) => c,
+                        None => {
+                            let t =
+                                sample(l, child.params.temperature, &mut child.rng);
+                            (t, super::decode::token_logprob(l, t))
+                        }
+                    };
+                    let replaced =
+                        child.generated.last_mut().expect("primary was seeded");
+                    child.score +=
+                        lp - super::decode::token_logprob(l, *replaced);
+                    *replaced = tok;
+                }
+            });
+            self.stream_child_token(new_id, loc);
+        }
+        if let Some(g) = self.groups.get_mut(&gid) {
+            g.forked = true;
+        }
+    }
+
+    /// COW-fork `running[idx]`: freeze its private tail into the shared
+    /// chain (publish-on-fork) so parent and child both reference every
+    /// row computed so far — prompt AND generated — then clone the
+    /// sequence with a fresh empty tail and a forked rng. `mutate` runs
+    /// on the child before it is scheduled (sibling token replacement /
+    /// beam candidate assignment). Returns the child's running index,
+    /// or `None` when pool pressure forced the recompute fallback: the
+    /// child folds its tokens into the prompt and re-prefills privately
+    /// from the waiting queue — deterministic model, so still
+    /// bit-identical, just without sharing.
+    fn fork_running(
+        &mut self,
+        idx: usize,
+        new_id: RequestId,
+        mutate: impl FnOnce(&mut Sequence),
+    ) -> Option<usize> {
+        let published = self.publish_tail(idx);
+        let parent = &mut self.running[idx];
+        let mut child = parent.fork(new_id, self.cfg.hsr_backend);
+        if let Some(gid) = parent.group {
+            if let Some(g) = self.groups.get_mut(&gid) {
+                child.sibling = g.next_sibling;
+                g.next_sibling += 1;
+                g.live += 1;
+            }
+        }
+        mutate(&mut child);
+        self.metrics.sequence_forks += 1;
+        if published {
+            self.metrics.fork_shared_tokens += child.prefix_len as u64;
+            self.store.radix.ref_chain(&child.prefix);
+            self.store.seed_calib(&child.prefix, &mut child.kv);
+            self.running.push(child);
+            Some(self.running.len() - 1)
+        } else {
+            self.metrics.fork_recompute_fallbacks += 1;
+            // No refs were taken for the child; drop its chain view and
+            // fold everything into its prompt for private recompute.
+            child.prefix.clear();
+            child.prefix_len = 0;
+            child.prefilled = 0;
+            let mut prompt = std::mem::take(&mut child.prompt);
+            prompt.extend(child.generated[child.folded..].iter().copied());
+            child.folded = child.generated.len();
+            child.prompt = prompt;
+            self.waiting.push_front(child);
+            None
+        }
+    }
+
+    /// Freeze `running[idx]`'s private tail — the prompt remainder plus
+    /// every generated token already fed to the model — into a
+    /// refcounted chain segment: publish, take the parent's reference
+    /// on the new node, release the tail blocks and restart with a
+    /// fresh calibrated tail. No-op (true) when the tail is already
+    /// empty; false when the pool cannot hold the segment even after
+    /// LRU-evicting unreferenced prefixes (the caller falls back to
+    /// recompute-fork).
+    fn publish_tail(&mut self, idx: usize) -> bool {
+        let seq = &self.running[idx];
+        debug_assert!(
+            seq.prefilled >= seq.prompt.len(),
+            "fork requires a decode-ready sequence"
+        );
+        let tail_len = seq.kv.len();
+        if tail_len == 0 {
+            return true;
+        }
+        // Tail rows cover prompt[prefix_len..] then generated[..fed].
+        let fed = tail_len - (seq.prompt.len() - seq.prefix_len);
+        let tail_tokens: Vec<u32> = seq.prompt[seq.prefix_len..]
+            .iter()
+            .chain(seq.generated[..fed].iter())
+            .copied()
+            .collect();
+        let (node, evicted) = self.store.publish_evicting(
+            seq.prefix.last().copied(),
+            &tail_tokens,
+            seq.prefix_len,
+            &seq.kv,
+            0,
+        );
+        self.metrics.prefix_segments_evicted += evicted as u64;
+        let Some(node) = node else { return false };
+        self.metrics.prefix_tokens_inserted += tail_tokens.len() as u64;
+        let seq = &mut self.running[idx];
+        self.store.radix.ref_chain(std::slice::from_ref(&node));
+        seq.prefix.push(node);
+        seq.prefix_len += tail_tokens.len();
+        self.store.pool.release(&mut seq.blocks);
+        let c = &self.model.cfg;
+        seq.kv = KvState::new(c.n_layers, c.n_heads, c.d_head, self.cfg.hsr_backend);
+        self.store.seed_calib(&seq.prefix, &mut seq.kv);
+        true
+    }
+
+    /// Remove a beam loser: blocks and chain references released, no
+    /// response emitted — the group's surviving hypotheses carry its
+    /// outcome. (Defensively aggregates if this was somehow the last
+    /// live sibling; the top-ranked candidate always continues some
+    /// member, so that cannot happen in the normal flow.)
+    fn prune_sibling(&mut self, idx: usize) {
+        let mut seq = self.running.swap_remove(idx);
+        self.store.pool.release(&mut seq.blocks);
+        self.store.radix.deref_chain(&seq.prefix);
+        self.metrics.beam_prunes += 1;
+        if let Some(gid) = seq.group {
+            let empty = match self.groups.get_mut(&gid) {
+                Some(g) => {
+                    g.live -= 1;
+                    g.live == 0
+                }
+                None => false,
+            };
+            if empty {
+                self.emit_group_response(gid);
+            }
+        }
+    }
+
+    /// Stream a freshly forked child's newest token. The child sits in
+    /// `running` (COW fork) or at the waiting front (recompute
+    /// fallback); either way its pending token was just assigned and
+    /// must reach the wire exactly once.
+    fn stream_child_token(&mut self, id: RequestId, loc: Option<usize>) {
+        let seq = match loc {
+            Some(i) => &self.running[i],
+            None => match self.waiting.iter().find(|s| s.id == id) {
+                Some(s) => s,
+                None => return,
+            },
+        };
+        let tok = match (&seq.stream, seq.generated.last()) {
+            (Some(_), Some(&t)) => t,
+            _ => return,
+        };
+        let sink = seq.stream.as_ref().expect("matched above");
+        if sink.push_token(tok, seq.sibling) {
+            self.metrics.tokens_streamed += 1;
+        }
+    }
+
+    /// Fork a running, decode-ready sequence mid-decode — the external
+    /// face of publish-on-fork (tests, benches, agentic fork/join
+    /// traces). The child gets the next engine id, shares the full
+    /// chain — prompt AND generated rows — and continues independently:
+    /// a standalone fork is its own request with its own terminal
+    /// response; forking a grouped sibling adds a sibling to its group.
+    /// Returns the child's id, or `None` if `id` isn't a running,
+    /// decode-ready sequence.
+    pub fn fork_request(&mut self, id: RequestId) -> Option<RequestId> {
+        let idx = self.running.iter().position(|s| s.id == id)?;
+        {
+            let s = &self.running[idx];
+            if s.prefilled < s.prompt.len() || s.generated.is_empty() {
+                return None;
+            }
+        }
+        let new_id = self.next_id;
+        self.next_id += 1;
+        if self.running[idx].group.is_none() {
+            self.metrics.requests_submitted += 1;
+        }
+        self.fork_running(idx, new_id, |_| {});
+        Some(new_id)
+    }
+
+    /// Generated-token count of an in-flight request (running or
+    /// waiting); `None` once finished. Lets tests and the scenario
+    /// bench trigger forks at a precise generation depth.
+    pub fn generated_len(&self, id: RequestId) -> Option<usize> {
+        self.running
+            .iter()
+            .chain(self.waiting.iter())
+            .find(|s| s.id == id)
+            .map(|s| s.generated.len())
+    }
+
+    /// (physical, logical) KV payload bytes. Physical counts each pool
+    /// block in use once — a chain segment shared by many siblings
+    /// lands once, however many reference it. Logical sums every
+    /// in-flight sequence's attended coverage (shared chain + private
+    /// tail) — what an engine without sharing would hold. Their ratio
+    /// is the fork/prefix sharing factor the scenario bench reports.
+    pub fn kv_bytes(&self) -> (u64, u64) {
+        let c = &self.model.cfg;
+        let bpt = (c.n_layers * c.n_heads * c.d_head * 2 * std::mem::size_of::<f32>())
+            as u64;
+        let used = (self.store.pool.total_blocks() - self.store.pool.free_blocks())
+            as u64;
+        let physical = used * self.cfg.block_tokens as u64 * bpt;
+        let logical = self
+            .running
+            .iter()
+            .chain(self.waiting.iter())
+            .map(|s| (s.prefix_len + s.kv.len()) as u64)
+            .sum::<u64>()
+            * bpt;
+        (physical, logical)
     }
 
     /// True once every admitted prompt is fully prefilled and nothing is
@@ -749,6 +1256,27 @@ impl Engine {
     /// true if found. The request still reaches exactly one terminal
     /// outcome: a `Cancelled` response carrying whatever was generated.
     pub fn cancel(&mut self, id: RequestId) -> bool {
+        if self.groups.contains_key(&id) {
+            self.metrics.disconnect_aborts += 1;
+            // Fan the cancel out to every sibling; the group aggregates
+            // into its single terminal response as the last one lands.
+            loop {
+                if let Some(i) =
+                    self.running.iter().position(|s| s.group == Some(id))
+                {
+                    self.finish(i, FinishReason::Cancelled);
+                    continue;
+                }
+                if let Some(j) =
+                    self.waiting.iter().position(|s| s.group == Some(id))
+                {
+                    self.drop_waiting(j, FinishReason::Cancelled);
+                    continue;
+                }
+                break;
+            }
+            return true;
+        }
         if let Some(i) = self.running.iter().position(|s| s.id == id) {
             self.metrics.disconnect_aborts += 1;
             self.finish(i, FinishReason::Cancelled);
@@ -788,7 +1316,18 @@ impl Engine {
         let mut dead = Vec::new();
         let drained: Vec<Sequence> =
             self.waiting.drain(..).chain(self.running.drain(..)).collect();
+        // Group siblings collapse back to ONE request under the
+        // submitted id — the router owes exactly one terminal outcome
+        // per accepted request, never one per sibling.
+        let mut grouped: Vec<(RequestId, Vec<Sequence>)> = Vec::new();
         for seq in drained {
+            if let Some(gid) = seq.group {
+                match grouped.iter_mut().find(|(g, _)| *g == gid) {
+                    Some((_, v)) => v.push(seq),
+                    None => grouped.push((gid, vec![seq])),
+                }
+                continue;
+            }
             let fresh = seq.generated.is_empty() && seq.folded == 0;
             let emitted = seq
                 .stream
@@ -808,6 +1347,37 @@ impl Engine {
                 dead.push((req, emitted));
             }
         }
+        for (gid, sibs) in grouped {
+            let g = self.groups.remove(&gid);
+            // Retryable only if the group never fanned out, recorded no
+            // choices, and its lone sequence made no visible progress.
+            let fresh = sibs.len() == 1
+                && sibs[0].generated.is_empty()
+                && sibs[0].folded == 0
+                && g.as_ref().is_none_or(|g| g.results.is_empty() && !g.forked);
+            let prompt =
+                g.map(|g| g.prompt).unwrap_or_else(|| sibs[0].prompt.clone());
+            let emitted = sibs[0]
+                .stream
+                .as_ref()
+                .map(|s| s.tokens_pushed())
+                .unwrap_or_else(|| {
+                    sibs.iter().map(|s| s.generated.len() as u64).sum()
+                });
+            let req = Request {
+                id: gid,
+                prompt,
+                params: sibs[0].params,
+                attempts: sibs[0].attempts,
+                stream: sibs[0].stream.clone(),
+            };
+            if fresh {
+                retry.push(req);
+            } else {
+                dead.push((req, emitted));
+            }
+        }
+        self.groups.clear();
         (retry, dead)
     }
 
@@ -995,6 +1565,9 @@ impl Engine {
     }
 
     fn emit_response(&mut self, seq: Sequence, reason: FinishReason) {
+        if seq.group.is_some() {
+            return self.record_group_choice(seq, reason);
+        }
         let latency = seq.submitted.elapsed();
         let ttft = seq
             .first_token_at
@@ -1010,6 +1583,79 @@ impl Engine {
             latency_ms: latency.as_secs_f64() * 1e3,
             ttft_ms: ttft.as_secs_f64() * 1e3,
             prompt_len: seq.prompt.len(),
+            choices: Vec::new(),
+        });
+    }
+
+    /// A grouped sibling finished: record its [`Choice`]; when it was
+    /// the last live sibling, aggregate and emit the group's single
+    /// response under the submitted request id.
+    fn record_group_choice(&mut self, mut seq: Sequence, reason: FinishReason) {
+        let gid = seq.group.expect("caller checked");
+        let Some(g) = self.groups.get_mut(&gid) else {
+            // Group already aggregated — a double-finish would be a bug,
+            // but never drop an outcome on the floor: emit standalone.
+            seq.group = None;
+            return self.emit_response(seq, reason);
+        };
+        if let Some(t) = seq.first_token_at {
+            g.first_token_at = Some(match g.first_token_at {
+                Some(prev) if prev <= t => prev,
+                _ => t,
+            });
+        }
+        g.results.push(Choice {
+            index: seq.sibling,
+            tokens: seq.generated,
+            finish: reason,
+            logprob: seq.score,
+        });
+        g.live -= 1;
+        let done = g.live == 0;
+        if done {
+            self.emit_group_response(gid);
+        }
+    }
+
+    /// Rank and emit the single multi-choice response of a completed
+    /// group: clean finishes (Length/StopToken) first, then cumulative
+    /// log-probability descending, then sibling index — truncated to
+    /// `keep` (a `best_of > n` run drops its extra candidates here).
+    /// The best choice mirrors into the response's flat `tokens` /
+    /// `finish` fields so plain single-answer consumers keep working.
+    fn emit_group_response(&mut self, gid: RequestId) {
+        let Some(mut g) = self.groups.remove(&gid) else { return };
+        let clean = |f: FinishReason| {
+            matches!(f, FinishReason::Length | FinishReason::StopToken)
+        };
+        g.results.sort_by(|a, b| {
+            clean(b.finish)
+                .cmp(&clean(a.finish))
+                .then(
+                    b.logprob
+                        .partial_cmp(&a.logprob)
+                        .unwrap_or(std::cmp::Ordering::Equal),
+                )
+                .then(a.index.cmp(&b.index))
+        });
+        g.results.truncate(g.keep.max(1));
+        let latency = g.submitted.elapsed();
+        let ttft = g
+            .first_token_at
+            .map(|t| t.duration_since(g.submitted))
+            .unwrap_or(latency);
+        self.metrics.requests_completed += 1;
+        self.metrics.request_latency.record(latency);
+        self.metrics.ttft.record(ttft);
+        let best = g.results.first();
+        self.finished.push(Response {
+            id: gid,
+            tokens: best.map(|c| c.tokens.clone()).unwrap_or_default(),
+            finish: best.map(|c| c.finish).unwrap_or(FinishReason::Aborted),
+            latency_ms: latency.as_secs_f64() * 1e3,
+            ttft_ms: ttft.as_secs_f64() * 1e3,
+            prompt_len: g.prompt.len(),
+            choices: g.results,
         });
     }
 

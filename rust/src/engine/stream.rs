@@ -37,9 +37,14 @@ use std::time::{Duration, Instant};
 pub struct StreamEvent {
     /// 0-based, contiguous: the consumer sees `seq = 0, 1, 2, ...` with
     /// no gaps up to the terminal frame (a full buffer severs the
-    /// stream instead of skipping tokens).
+    /// stream instead of skipping tokens). Grouped requests interleave
+    /// siblings on one stream — `seq` stays globally contiguous while
+    /// `sibling` says which hypothesis a token belongs to.
     pub seq: u64,
     pub token: u32,
+    /// Sibling index of the sequence that produced this token (0 for
+    /// plain requests; forked sampling/beam siblings tag their own).
+    pub sibling: u32,
 }
 
 /// Result of one [`StreamSink::recv_timeout`] call.
@@ -93,7 +98,7 @@ impl StreamSink {
     /// Offer one token. Returns `false` — and permanently severs the
     /// stream — if the consumer has fallen `cap` tokens behind (or the
     /// stream was already severed/closed). Never blocks.
-    pub fn push_token(&self, token: u32) -> bool {
+    pub fn push_token(&self, token: u32, sibling: u32) -> bool {
         let mut st = lock_ok(&self.state);
         if st.severed || st.closed {
             return false;
@@ -109,7 +114,7 @@ impl StreamSink {
         if st.first_token.is_none() {
             st.first_token = Some(self.born.elapsed());
         }
-        st.queue.push_back(StreamEvent { seq, token });
+        st.queue.push_back(StreamEvent { seq, token, sibling });
         drop(st);
         self.cv.notify_all();
         true
@@ -172,42 +177,42 @@ mod tests {
     #[test]
     fn push_recv_in_order_then_closed() {
         let sink = StreamSink::new(8);
-        assert!(sink.push_token(10));
-        assert!(sink.push_token(11));
+        assert!(sink.push_token(10, 0));
+        assert!(sink.push_token(11, 0));
         sink.close();
         assert_eq!(
             sink.recv_timeout(Duration::from_millis(10)),
-            StreamRecv::Event(StreamEvent { seq: 0, token: 10 })
+            StreamRecv::Event(StreamEvent { seq: 0, token: 10, sibling: 0 })
         );
         assert_eq!(
             sink.recv_timeout(Duration::from_millis(10)),
-            StreamRecv::Event(StreamEvent { seq: 1, token: 11 })
+            StreamRecv::Event(StreamEvent { seq: 1, token: 11, sibling: 0 })
         );
         assert_eq!(sink.recv_timeout(Duration::from_millis(10)), StreamRecv::Closed);
         assert!(sink.wire_ttft().is_some());
         // Pushes after close are refused without severing semantics
         // mattering (the stream is already terminal).
-        assert!(!sink.push_token(99));
+        assert!(!sink.push_token(99, 0));
         assert_eq!(sink.tokens_pushed(), 2);
     }
 
     #[test]
     fn overflow_severs_and_never_drops_silently() {
         let sink = StreamSink::new(2);
-        assert!(sink.push_token(1));
-        assert!(sink.push_token(2));
-        assert!(!sink.push_token(3), "push into a full buffer must fail");
+        assert!(sink.push_token(1, 0));
+        assert!(sink.push_token(2, 0));
+        assert!(!sink.push_token(3, 0), "push into a full buffer must fail");
         assert!(sink.is_severed());
-        assert!(!sink.push_token(4), "a severed stream accepts nothing more");
+        assert!(!sink.push_token(4, 0), "a severed stream accepts nothing more");
         // Delivered tokens stay contiguous: 0, 1, then nothing past the
         // severing point until close.
         assert_eq!(
             sink.recv_timeout(Duration::from_millis(5)),
-            StreamRecv::Event(StreamEvent { seq: 0, token: 1 })
+            StreamRecv::Event(StreamEvent { seq: 0, token: 1, sibling: 0 })
         );
         assert_eq!(
             sink.recv_timeout(Duration::from_millis(5)),
-            StreamRecv::Event(StreamEvent { seq: 1, token: 2 })
+            StreamRecv::Event(StreamEvent { seq: 1, token: 2, sibling: 0 })
         );
         assert_eq!(sink.recv_timeout(Duration::from_millis(5)), StreamRecv::Empty);
         sink.close();

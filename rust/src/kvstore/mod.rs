@@ -297,6 +297,33 @@ impl PrefixStore {
             .create_segment_fresh(tokens, start, source, src_offset)?;
         Some(self.radix.insert_child(parent, seg))
     }
+
+    /// Publish-on-fork path: like [`PrefixStore::publish_segment`] but
+    /// willing to LRU-evict unreferenced cached prefixes to make room
+    /// (a fork *must* freeze the parent's tail to share it, so it gets
+    /// first claim on cold cache, never on live sequences). The caller
+    /// must hold references on every chain node it needs alive —
+    /// eviction never touches referenced nodes. Returns the node (None
+    /// if the pool is too small even after eviction) and the number of
+    /// segments evicted, for the caller's metrics.
+    pub fn publish_evicting(
+        &mut self,
+        parent: Option<NodeId>,
+        tokens: &[u32],
+        start: usize,
+        source: &KvState,
+        src_offset: usize,
+    ) -> (Option<NodeId>, usize) {
+        let mut evicted = 0;
+        let need = self.pool.blocks_for(tokens.len());
+        if self.pool.free_blocks() < need {
+            evicted = self.radix.evict_lru(&mut self.pool, need);
+        }
+        (
+            self.publish_segment(parent, tokens, start, source, src_offset, 0),
+            evicted,
+        )
+    }
 }
 
 #[cfg(test)]

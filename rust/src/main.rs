@@ -171,6 +171,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
                     std::time::Instant::now()
                         + std::time::Duration::from_millis(deadline_ms as u64)
                 }),
+                ..Default::default()
             },
         )
         .map_err(|e| anyhow::anyhow!("submit rejected: {e}"))?;

@@ -14,7 +14,10 @@
 //!   ← {"id": 7, "event": "done", "tokens_streamed": 1, ...}
 //! with exactly one terminal frame (`done`/`error`/`cancelled`) per
 //! stream, contiguous `seq` numbers, and `keepalive` frames while
-//! decode is busy.
+//! decode is busy. Grouped requests (`"n"`/`"best_of"`/`"beam_width"`
+//! ≥ 2) interleave sibling-tagged token frames on the one connection
+//! and end with exactly one terminal frame **per sibling**, each tagged
+//! `sibling`/`siblings` (see the protocol module docs).
 //!
 //! Connections are handled by a thread each; generation runs on the
 //! router's supervised engine workers (std::thread — the vendored
@@ -46,9 +49,11 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub use protocol::{
-    parse_frame, parse_request, render_cancelled_frame, render_done_frame,
-    render_error, render_keepalive, render_request, render_response,
-    render_stream_error, render_token_frame, StreamFrame, WireRequest,
+    parse_frame, parse_request, render_cancelled_frame,
+    render_cancelled_frame_sibling, render_choice_done_frame,
+    render_done_frame, render_error, render_keepalive, render_request,
+    render_response, render_stream_error, render_stream_error_sibling,
+    render_token_frame, StreamFrame, WireRequest,
 };
 
 /// Connection-handling knobs.
@@ -299,47 +304,134 @@ fn submit_error_line(e: SubmitError) -> String {
     }
 }
 
-/// Map a terminal [`Outcome`] to the stream's single terminal frame. A
-/// severed sink takes precedence: the engine sheds a slow consumer
-/// with `Cancelled`, but on the wire that is a `slow_consumer` error.
-fn terminal_frame_for(
-    outcome: &Outcome,
-    streamed: u64,
-    severed: bool,
-    tokenizer: &ByteTokenizer,
-) -> String {
-    if severed {
-        return render_stream_error(
-            outcome.id(),
-            "slow_consumer",
-            "client fell a full send-buffer behind; stream shed",
-            streamed,
-            None,
-        );
-    }
-    match outcome {
-        Outcome::Done(resp) => match resp.finish {
-            FinishReason::Length | FinishReason::StopToken => {
-                render_done_frame(resp, streamed, tokenizer)
-            }
-            FinishReason::DeadlineExceeded => {
-                render_cancelled_frame(resp.id, "deadline", streamed)
-            }
-            FinishReason::Cancelled => render_cancelled_frame(resp.id, "cancelled", streamed),
-            FinishReason::Aborted => render_cancelled_frame(resp.id, "aborted", streamed),
-        },
-        Outcome::Failed(err) => {
-            render_stream_error(err.id, err.code, &err.message, streamed, err.retry_after_ms)
-        }
+/// Wire reason closing a sibling whose choice carries `finish`.
+fn cancel_reason(finish: FinishReason) -> &'static str {
+    match finish {
+        FinishReason::DeadlineExceeded => "deadline",
+        FinishReason::Cancelled => "cancelled",
+        _ => "aborted",
     }
 }
 
-/// Drive one accepted streaming request to its terminal frame. Writes
-/// `token` frames as the engine pushes them, `keepalive` frames across
-/// idle gaps, and exactly one terminal frame — unless the client goes
-/// away first (write failure / disconnect probe), in which case the
-/// request is cancelled and `Err` tells the caller to drop the
-/// connection (nobody is listening for a terminal frame).
+/// Map a terminal [`Outcome`] to the stream's terminal frames — one per
+/// sibling the client observed (streamed tokens or a surviving choice;
+/// sibling 0 always counts). Plain single-sequence streams get the one
+/// untagged frame of the pre-fork wire format. A severed sink takes
+/// precedence: the engine sheds a slow consumer with `Cancelled`, but
+/// on the wire that is a `slow_consumer` error (per sibling, so grouped
+/// clients still see every stream closed).
+fn terminal_frames_for(
+    outcome: &Outcome,
+    streamed_by: &HashMap<u32, u64>,
+    severed: bool,
+    tokenizer: &ByteTokenizer,
+) -> Vec<String> {
+    let mut observed: Vec<u32> = streamed_by.keys().copied().collect();
+    if let Outcome::Done(resp) = outcome {
+        observed.extend(resp.choices.iter().map(|c| c.index));
+    }
+    observed.push(0);
+    observed.sort_unstable();
+    observed.dedup();
+    let streamed = |s: u32| streamed_by.get(&s).copied().unwrap_or(0);
+    let grouped = observed.len() > 1
+        || matches!(outcome, Outcome::Done(resp) if resp.choices.len() > 1);
+    if !grouped {
+        let frame = if severed {
+            render_stream_error(
+                outcome.id(),
+                "slow_consumer",
+                "client fell a full send-buffer behind; stream shed",
+                streamed(0),
+                None,
+            )
+        } else {
+            match outcome {
+                Outcome::Done(resp) => match resp.finish {
+                    FinishReason::Length | FinishReason::StopToken => {
+                        render_done_frame(resp, streamed(0), tokenizer)
+                    }
+                    finish => render_cancelled_frame(resp.id, cancel_reason(finish), streamed(0)),
+                },
+                Outcome::Failed(err) => render_stream_error(
+                    err.id,
+                    err.code,
+                    &err.message,
+                    streamed(0),
+                    err.retry_after_ms,
+                ),
+            }
+        };
+        return vec![frame];
+    }
+    let siblings = observed.len() as u32;
+    observed
+        .iter()
+        .map(|&s| {
+            if severed {
+                return render_stream_error_sibling(
+                    outcome.id(),
+                    "slow_consumer",
+                    "client fell a full send-buffer behind; stream shed",
+                    streamed(s),
+                    None,
+                    s,
+                    siblings,
+                );
+            }
+            match outcome {
+                Outcome::Failed(err) => render_stream_error_sibling(
+                    err.id,
+                    err.code,
+                    &err.message,
+                    streamed(s),
+                    err.retry_after_ms,
+                    s,
+                    siblings,
+                ),
+                Outcome::Done(resp) => {
+                    match resp.choices.iter().find(|c| c.index == s) {
+                        Some(choice) => match choice.finish {
+                            FinishReason::Length | FinishReason::StopToken => {
+                                render_choice_done_frame(
+                                    resp,
+                                    choice,
+                                    siblings,
+                                    streamed(s),
+                                    tokenizer,
+                                )
+                            }
+                            finish => render_cancelled_frame_sibling(
+                                resp.id,
+                                cancel_reason(finish),
+                                streamed(s),
+                                s,
+                                siblings,
+                            ),
+                        },
+                        // Streamed but no surviving choice: a pruned
+                        // beam loser or a dropped best_of candidate.
+                        None => render_cancelled_frame_sibling(
+                            resp.id,
+                            "pruned",
+                            streamed(s),
+                            s,
+                            siblings,
+                        ),
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Drive one accepted streaming request to its terminal frames. Writes
+/// sibling-tagged `token` frames as the engine pushes them, `keepalive`
+/// frames across idle gaps, and exactly one terminal frame per
+/// observed sibling — unless the client goes away first (write failure
+/// / disconnect probe), in which case the request is cancelled and
+/// `Err` tells the caller to drop the connection (nobody is listening
+/// for terminal frames).
 #[allow(clippy::too_many_arguments)]
 fn stream_request(
     writer: &mut TcpStream,
@@ -352,30 +444,38 @@ fn stream_request(
     tokenizer: &ByteTokenizer,
 ) -> Result<()> {
     let deadline = Instant::now() + cfg.request_timeout;
-    let mut streamed: u64 = 0;
+    // Per-sibling token counts: each sibling's terminal frame reports
+    // its own `tokens_streamed` truncation point.
+    let mut streamed_by: HashMap<u32, u64> = HashMap::new();
     let mut last_write = Instant::now();
     loop {
         match sink.recv_timeout(Duration::from_millis(50)) {
             StreamRecv::Event(ev) => {
-                let frame = render_token_frame(id, ev.seq, ev.token, tokenizer);
+                let frame = render_token_frame(id, ev.seq, ev.token, ev.sibling, tokenizer);
                 if write_line(writer, &frame).is_err() {
                     router.cancel(id);
                     anyhow::bail!("client write failed mid-stream");
                 }
-                streamed += 1;
+                *streamed_by.entry(ev.sibling).or_insert(0) += 1;
                 last_write = Instant::now();
             }
             StreamRecv::Closed => {
                 // The router inserts the outcome before closing the
                 // sink, so it is already present; the timeout is pure
                 // defensiveness.
-                let frame = match router.wait_for_outcome(id, Duration::from_secs(1)) {
+                let frames = match router.wait_for_outcome(id, Duration::from_secs(1)) {
                     Some(outcome) => {
-                        terminal_frame_for(&outcome, streamed, sink.is_severed(), tokenizer)
+                        terminal_frames_for(&outcome, &streamed_by, sink.is_severed(), tokenizer)
                     }
-                    None => render_cancelled_frame(id, "aborted", streamed),
+                    None => vec![render_cancelled_frame(
+                        id,
+                        "aborted",
+                        streamed_by.values().sum(),
+                    )],
                 };
-                write_line(writer, &frame)?;
+                for frame in &frames {
+                    write_line(writer, frame)?;
+                }
                 return Ok(());
             }
             StreamRecv::Empty => {
@@ -387,11 +487,13 @@ fn stream_request(
                 if timed_out || stop.load(Ordering::Relaxed) {
                     // Server-side cut: cancel and emit the terminal
                     // frame ourselves (the engine's own outcome stays
-                    // in the table; this frame is the stream's one
-                    // terminal).
+                    // in the table). One untagged frame closes the
+                    // whole stream — clients treat a server cut as
+                    // stream-wide.
                     router.cancel(id);
                     let reason = if timed_out { "timeout" } else { "aborted" };
-                    write_line(writer, &render_cancelled_frame(id, reason, streamed))?;
+                    let total: u64 = streamed_by.values().sum();
+                    write_line(writer, &render_cancelled_frame(id, reason, total))?;
                     return Ok(());
                 }
                 if last_write.elapsed() >= cfg.keepalive {
@@ -450,6 +552,9 @@ fn handle_conn(
             deadline: req
                 .deadline_ms
                 .map(|ms| Instant::now() + Duration::from_millis(ms)),
+            n: req.n,
+            best_of: req.best_of,
+            beam_width: req.beam_width,
         };
         if req.stream {
             match router.submit_streaming(prompt, params) {
@@ -531,6 +636,9 @@ impl Client {
             stop_token: None,
             deadline_ms: None,
             stream: false,
+            n: 1,
+            best_of: 0,
+            beam_width: 0,
         })
     }
 
@@ -562,11 +670,15 @@ impl Client {
     }
 
     /// Send a streaming request and collect every frame through the
-    /// terminal one (inclusive). A plain error line (stream refused
-    /// before it started — overload, bad request) becomes an `Err`.
+    /// last terminal one (inclusive): grouped streams carry one
+    /// terminal frame per sibling, counted via the `siblings` tag. A
+    /// plain error line (stream refused before it started — overload,
+    /// bad request) becomes an `Err`.
     pub fn stream_generate(&mut self, req: &WireRequest) -> Result<Vec<StreamFrame>> {
         self.send(req)?;
         let mut frames = Vec::new();
+        let mut terminals: u32 = 0;
+        let mut expected: u32 = 1;
         loop {
             let mut line = String::new();
             self.reader.read_line(&mut line)?;
@@ -574,14 +686,14 @@ impl Client {
             let Ok(frame) = parse_frame(&line) else {
                 anyhow::bail!("stream refused: {}", line.trim());
             };
-            let terminal = matches!(
-                frame,
-                StreamFrame::Done { .. }
-                    | StreamFrame::Error { .. }
-                    | StreamFrame::Cancelled { .. }
-            );
+            if let Some(n) = frame.siblings() {
+                expected = expected.max(n);
+            }
+            if frame.is_terminal() {
+                terminals += 1;
+            }
             frames.push(frame);
-            if terminal {
+            if terminals >= expected {
                 return Ok(frames);
             }
         }

@@ -21,8 +21,22 @@
 //!   the terminal frame says k;
 //! * `keepalive` frames may appear between tokens while decode is busy
 //!   (prefill, queueing) and carry no data — clients skip them.
+//!
+//! # Grouped requests (parallel sampling / beam search)
+//!
+//! A request with `"n"`/`"best_of"` ≥ 2 or `"beam_width"` ≥ 2 decodes
+//! several sibling hypotheses off one shared prompt. Buffered replies
+//! gain a `choices` array (ranked best-first; the flat `text`/`finish`
+//! mirror the best choice). Streams interleave siblings on one
+//! connection: every frame carries a `sibling` index (omitted when 0,
+//! so plain streams are byte-identical to the pre-fork wire format),
+//! `seq` stays globally contiguous across the whole stream, and every
+//! sibling gets **exactly one terminal frame**, tagged with its
+//! `sibling` plus the total `siblings` count (omitted when 1) so
+//! clients know how many terminals to await. Beam losers and dropped
+//! `best_of` candidates close with `cancelled`/`"pruned"`.
 
-use crate::engine::{FinishReason, Response};
+use crate::engine::{Choice, FinishReason, Response};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::Json;
 use anyhow::Result;
@@ -40,6 +54,33 @@ pub struct WireRequest {
     /// Stream tokens as they decode (`token` frames + one terminal
     /// frame) instead of one buffered response line.
     pub stream: bool,
+    /// Parallel samples to return (`"n"`); clamped to [1, 64]. Values
+    /// ≥ 2 return a `choices` array.
+    pub n: u32,
+    /// Candidates to decode (`"best_of"`, 0 → same as `n`); clamped to
+    /// [0, 64]. The best `n` by cumulative log-probability come back.
+    pub best_of: u32,
+    /// Beam-search width (`"beam_width"`, 0/1 → off); clamped to
+    /// [0, 32]. Overrides `n`/`best_of`.
+    pub beam_width: u32,
+}
+
+impl Default for WireRequest {
+    /// The wire defaults: what [`parse_request`] fills in for every
+    /// omitted field (the empty prompt itself would be rejected).
+    fn default() -> Self {
+        WireRequest {
+            prompt: String::new(),
+            max_new_tokens: 64,
+            temperature: 0.0,
+            stop_token: None,
+            deadline_ms: None,
+            stream: false,
+            n: 1,
+            best_of: 0,
+            beam_width: 0,
+        }
+    }
 }
 
 /// Parse a request line.
@@ -65,7 +106,32 @@ pub fn parse_request(line: &str) -> Result<WireRequest> {
         .and_then(|x| x.as_usize())
         .map(|ms| ms as u64);
     let stream = v.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
-    Ok(WireRequest { prompt, max_new_tokens, temperature, stop_token, deadline_ms, stream })
+    let n = v
+        .get("n")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(1)
+        .clamp(1, 64) as u32;
+    let best_of = v
+        .get("best_of")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(0)
+        .min(64) as u32;
+    let beam_width = v
+        .get("beam_width")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(0)
+        .min(32) as u32;
+    Ok(WireRequest {
+        prompt,
+        max_new_tokens,
+        temperature,
+        stop_token,
+        deadline_ms,
+        stream,
+        n,
+        best_of,
+        beam_width,
+    })
 }
 
 /// Render a request line (the inverse of [`parse_request`] for values
@@ -85,6 +151,15 @@ pub fn render_request(req: &WireRequest) -> String {
     if req.stream {
         o.set("stream", true.into());
     }
+    if req.n != 1 {
+        o.set("n", (req.n as usize).into());
+    }
+    if req.best_of != 0 {
+        o.set("best_of", (req.best_of as usize).into());
+    }
+    if req.beam_width != 0 {
+        o.set("beam_width", (req.beam_width as usize).into());
+    }
     o.to_string()
 }
 
@@ -99,7 +174,9 @@ pub fn finish_str(finish: FinishReason) -> &'static str {
     }
 }
 
-/// Render a response line.
+/// Render a response line. Grouped responses (parallel sampling /
+/// beam) carry a ranked `choices` array; `text`/`finish` mirror the
+/// best choice so single-answer consumers keep working.
 pub fn render_response(resp: &Response, tokenizer: &ByteTokenizer) -> String {
     let mut o = Json::obj();
     o.set("id", resp.id.into())
@@ -108,6 +185,21 @@ pub fn render_response(resp: &Response, tokenizer: &ByteTokenizer) -> String {
         .set("ttft_ms", resp.ttft_ms.into())
         .set("prompt_len", resp.prompt_len.into())
         .set("finish", finish_str(resp.finish).into());
+    if !resp.choices.is_empty() {
+        let arr: Vec<Json> = resp
+            .choices
+            .iter()
+            .map(|c| {
+                let mut co = Json::obj();
+                co.set("index", (c.index as usize).into())
+                    .set("text", tokenizer.decode(&c.tokens).into())
+                    .set("finish", finish_str(c.finish).into())
+                    .set("logprob", c.logprob.into());
+                co
+            })
+            .collect();
+        o.set("choices", Json::Arr(arr));
+    }
     o.to_string()
 }
 
@@ -125,11 +217,15 @@ pub fn render_error(code: &str, message: &str, retry_after_ms: Option<u64>) -> S
 /// One parsed streaming frame (see the module docs for the grammar).
 #[derive(Debug, Clone, PartialEq)]
 pub enum StreamFrame {
-    /// One generated token; `seq` is 0-based and contiguous.
-    Token { id: u64, seq: u64, token: u32, text: String },
-    /// Terminal: clean finish. `tokens_streamed` equals the number of
-    /// `token` frames that preceded it; `text` is the full decoded
-    /// generation (buffered-response parity).
+    /// One generated token; `seq` is 0-based and contiguous across the
+    /// whole stream (all siblings interleaved); `sibling` says which
+    /// hypothesis of a grouped request produced it (0 for plain
+    /// streams; omitted on the wire when 0).
+    Token { id: u64, seq: u64, token: u32, text: String, sibling: u32 },
+    /// Terminal: clean finish of one sibling (`sibling`/`siblings`
+    /// default 0/1 for plain streams and are omitted on the wire
+    /// then). `tokens_streamed` counts this sibling's own `token`
+    /// frames; `text` is the sibling's full decoded generation.
     Done {
         id: u64,
         tokens_streamed: u64,
@@ -138,36 +234,92 @@ pub enum StreamFrame {
         latency_ms: f64,
         ttft_ms: f64,
         prompt_len: usize,
+        sibling: u32,
+        siblings: u32,
     },
-    /// Terminal: the request failed after `tokens_streamed` tokens went
-    /// out (truncation point). `code` is a stable short code
-    /// (`worker_failed`, `slow_consumer`, ...).
+    /// Terminal: the sibling failed after `tokens_streamed` of its
+    /// tokens went out (truncation point). `code` is a stable short
+    /// code (`worker_failed`, `slow_consumer`, ...).
     Error {
         id: u64,
         code: String,
         message: String,
         tokens_streamed: u64,
         retry_after_ms: Option<u64>,
+        sibling: u32,
+        siblings: u32,
     },
-    /// Terminal: the stream was cut short deliberately
-    /// (`reason` ∈ deadline / cancelled / aborted / timeout).
-    Cancelled { id: u64, reason: String, tokens_streamed: u64 },
+    /// Terminal: the sibling's stream was cut short deliberately
+    /// (`reason` ∈ deadline / cancelled / aborted / timeout / pruned —
+    /// `pruned` closes beam losers and dropped `best_of` candidates).
+    Cancelled {
+        id: u64,
+        reason: String,
+        tokens_streamed: u64,
+        sibling: u32,
+        siblings: u32,
+    },
     /// Non-terminal heartbeat while decode is busy; carries no data.
     Keepalive { id: u64 },
 }
 
+impl StreamFrame {
+    /// Terminal frames end one sibling's stream; a full stream is over
+    /// after `siblings()` of them.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            StreamFrame::Done { .. }
+                | StreamFrame::Error { .. }
+                | StreamFrame::Cancelled { .. }
+        )
+    }
+
+    /// Total terminal frames this stream will carry (from any terminal
+    /// frame's `siblings` tag); `None` for non-terminal frames.
+    pub fn siblings(&self) -> Option<u32> {
+        match self {
+            StreamFrame::Done { siblings, .. }
+            | StreamFrame::Error { siblings, .. }
+            | StreamFrame::Cancelled { siblings, .. } => Some(*siblings),
+            _ => None,
+        }
+    }
+}
+
+/// Tag a frame object with `sibling`/`siblings`, omitting the plain
+/// defaults (0 and 1) so single-sequence streams keep the pre-fork
+/// byte format.
+fn tag_sibling(o: &mut Json, sibling: u32, siblings: u32) {
+    if sibling != 0 {
+        o.set("sibling", (sibling as usize).into());
+    }
+    if siblings != 1 {
+        o.set("siblings", (siblings as usize).into());
+    }
+}
+
 /// Render a `token` frame.
-pub fn render_token_frame(id: u64, seq: u64, token: u32, tokenizer: &ByteTokenizer) -> String {
+pub fn render_token_frame(
+    id: u64,
+    seq: u64,
+    token: u32,
+    sibling: u32,
+    tokenizer: &ByteTokenizer,
+) -> String {
     let mut o = Json::obj();
     o.set("id", id.into())
         .set("event", "token".into())
         .set("seq", seq.into())
         .set("token", (token as u64).into())
         .set("text", tokenizer.decode(&[token]).into());
+    tag_sibling(&mut o, sibling, 1);
     o.to_string()
 }
 
-/// Render the terminal `done` frame for a cleanly finished stream.
+/// Render the terminal `done` frame for a cleanly finished plain
+/// (single-sequence) stream. Grouped streams render one
+/// [`render_choice_done_frame`] per surviving choice instead.
 pub fn render_done_frame(
     resp: &Response,
     tokens_streamed: u64,
@@ -185,13 +337,50 @@ pub fn render_done_frame(
     o.to_string()
 }
 
-/// Render a terminal `error` frame.
+/// Render the terminal `done` frame of one grouped-stream sibling: the
+/// choice's own text/finish/logprob, the group's latency/ttft, and the
+/// `sibling`/`siblings` tags.
+pub fn render_choice_done_frame(
+    resp: &Response,
+    choice: &Choice,
+    siblings: u32,
+    tokens_streamed: u64,
+    tokenizer: &ByteTokenizer,
+) -> String {
+    let mut o = Json::obj();
+    o.set("id", resp.id.into())
+        .set("event", "done".into())
+        .set("tokens_streamed", tokens_streamed.into())
+        .set("finish", finish_str(choice.finish).into())
+        .set("text", tokenizer.decode(&choice.tokens).into())
+        .set("logprob", choice.logprob.into())
+        .set("latency_ms", resp.latency_ms.into())
+        .set("ttft_ms", resp.ttft_ms.into())
+        .set("prompt_len", resp.prompt_len.into());
+    tag_sibling(&mut o, choice.index, siblings);
+    o.to_string()
+}
+
+/// Render a terminal `error` frame (plain stream: sibling 0 of 1).
 pub fn render_stream_error(
     id: u64,
     code: &str,
     message: &str,
     tokens_streamed: u64,
     retry_after_ms: Option<u64>,
+) -> String {
+    render_stream_error_sibling(id, code, message, tokens_streamed, retry_after_ms, 0, 1)
+}
+
+/// Render one sibling's terminal `error` frame.
+pub fn render_stream_error_sibling(
+    id: u64,
+    code: &str,
+    message: &str,
+    tokens_streamed: u64,
+    retry_after_ms: Option<u64>,
+    sibling: u32,
+    siblings: u32,
 ) -> String {
     let mut o = Json::obj();
     o.set("id", id.into())
@@ -202,16 +391,29 @@ pub fn render_stream_error(
     if let Some(ms) = retry_after_ms {
         o.set("retry_after_ms", ms.into());
     }
+    tag_sibling(&mut o, sibling, siblings);
     o.to_string()
 }
 
-/// Render a terminal `cancelled` frame.
+/// Render a terminal `cancelled` frame (plain stream: sibling 0 of 1).
 pub fn render_cancelled_frame(id: u64, reason: &str, tokens_streamed: u64) -> String {
+    render_cancelled_frame_sibling(id, reason, tokens_streamed, 0, 1)
+}
+
+/// Render one sibling's terminal `cancelled` frame.
+pub fn render_cancelled_frame_sibling(
+    id: u64,
+    reason: &str,
+    tokens_streamed: u64,
+    sibling: u32,
+    siblings: u32,
+) -> String {
     let mut o = Json::obj();
     o.set("id", id.into())
         .set("event", "cancelled".into())
         .set("reason", reason.into())
         .set("tokens_streamed", tokens_streamed.into());
+    tag_sibling(&mut o, sibling, siblings);
     o.to_string()
 }
 
@@ -227,12 +429,16 @@ pub fn render_keepalive(id: u64) -> String {
 pub fn parse_frame(line: &str) -> Result<StreamFrame> {
     let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let id = v.req_usize("id")? as u64;
+    // Absent sibling tags mean "plain stream": sibling 0, 1 terminal.
+    let sibling = v.get("sibling").and_then(|x| x.as_usize()).unwrap_or(0) as u32;
+    let siblings = v.get("siblings").and_then(|x| x.as_usize()).unwrap_or(1) as u32;
     match v.req_str("event")? {
         "token" => Ok(StreamFrame::Token {
             id,
             seq: v.req_usize("seq")? as u64,
             token: v.req_usize("token")? as u32,
             text: v.req_str("text")?.to_string(),
+            sibling,
         }),
         "done" => Ok(StreamFrame::Done {
             id,
@@ -242,6 +448,8 @@ pub fn parse_frame(line: &str) -> Result<StreamFrame> {
             latency_ms: v.req_f64("latency_ms")?,
             ttft_ms: v.req_f64("ttft_ms")?,
             prompt_len: v.req_usize("prompt_len")?,
+            sibling,
+            siblings,
         }),
         "error" => Ok(StreamFrame::Error {
             id,
@@ -252,11 +460,15 @@ pub fn parse_frame(line: &str) -> Result<StreamFrame> {
                 .get("retry_after_ms")
                 .and_then(|x| x.as_usize())
                 .map(|ms| ms as u64),
+            sibling,
+            siblings,
         }),
         "cancelled" => Ok(StreamFrame::Cancelled {
             id,
             reason: v.req_str("reason")?.to_string(),
             tokens_streamed: v.req_usize("tokens_streamed")? as u64,
+            sibling,
+            siblings,
         }),
         "keepalive" => Ok(StreamFrame::Keepalive { id }),
         other => anyhow::bail!("unknown stream event {other:?}"),
@@ -303,8 +515,10 @@ mod tests {
             latency_ms: 1.5,
             ttft_ms: 0.5,
             prompt_len: 3,
+            choices: Vec::new(),
         };
         let line = render_response(&resp, &ByteTokenizer);
+        assert!(!line.contains("choices"), "plain responses carry no choices array");
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.req_str("text").unwrap(), "hi");
         assert_eq!(v.req_usize("id").unwrap(), 9);
@@ -320,21 +534,53 @@ mod tests {
             stop_token: Some(10),
             deadline_ms: Some(250),
             stream: false,
+            n: 1,
+            best_of: 0,
+            beam_width: 0,
         };
         let parsed = parse_request(&render_request(&req)).unwrap();
         assert_eq!(parsed, req);
         let req = WireRequest { stream: true, ..req };
         let line = render_request(&req);
         assert!(line.contains("\"stream\":true"));
+        // Default group fields stay off the wire entirely.
+        assert!(!line.contains("\"n\""));
+        assert!(!line.contains("best_of"));
+        assert!(!line.contains("beam_width"));
         assert_eq!(parse_request(&line).unwrap(), req);
     }
 
     #[test]
+    fn grouped_request_fields_roundtrip() {
+        let req = WireRequest {
+            prompt: "p".to_string(),
+            max_new_tokens: 4,
+            temperature: 0.75,
+            stop_token: None,
+            deadline_ms: None,
+            stream: true,
+            n: 4,
+            best_of: 8,
+            beam_width: 3,
+        };
+        assert_eq!(parse_request(&render_request(&req)).unwrap(), req);
+        // Clamps: n in 1..=64, best_of/beam_width capped.
+        let r = parse_request(r#"{"prompt":"x","n":0}"#).unwrap();
+        assert_eq!(r.n, 1);
+        let r = parse_request(r#"{"prompt":"x","n":1000,"best_of":1000,"beam_width":1000}"#)
+            .unwrap();
+        assert_eq!((r.n, r.best_of, r.beam_width), (64, 64, 32));
+    }
+
+    #[test]
     fn stream_frames_roundtrip() {
-        let f = parse_frame(&render_token_frame(7, 3, 104, &ByteTokenizer)).unwrap();
+        let token_line = render_token_frame(7, 3, 104, 0, &ByteTokenizer);
+        // Plain frames stay byte-compatible: no sibling tags when 0/1.
+        assert!(!token_line.contains("sibling"));
+        let f = parse_frame(&token_line).unwrap();
         assert_eq!(
             f,
-            StreamFrame::Token { id: 7, seq: 3, token: 104, text: "h".to_string() }
+            StreamFrame::Token { id: 7, seq: 3, token: 104, text: "h".to_string(), sibling: 0 }
         );
         let resp = Response {
             id: 7,
@@ -343,8 +589,11 @@ mod tests {
             latency_ms: 1.5,
             ttft_ms: 0.5,
             prompt_len: 3,
+            choices: Vec::new(),
         };
-        let f = parse_frame(&render_done_frame(&resp, 2, &ByteTokenizer)).unwrap();
+        let done_line = render_done_frame(&resp, 2, &ByteTokenizer);
+        assert!(!done_line.contains("sibling"));
+        let f = parse_frame(&done_line).unwrap();
         assert_eq!(
             f,
             StreamFrame::Done {
@@ -355,6 +604,8 @@ mod tests {
                 latency_ms: 1.5,
                 ttft_ms: 0.5,
                 prompt_len: 3,
+                sibling: 0,
+                siblings: 1,
             }
         );
         let f = parse_frame(&render_stream_error(7, "worker_failed", "boom", 2, Some(50)))
@@ -367,6 +618,8 @@ mod tests {
                 message: "boom".to_string(),
                 tokens_streamed: 2,
                 retry_after_ms: Some(50),
+                sibling: 0,
+                siblings: 1,
             }
         );
         let f = parse_frame(&render_cancelled_frame(7, "deadline", 2)).unwrap();
@@ -376,10 +629,108 @@ mod tests {
                 id: 7,
                 reason: "deadline".to_string(),
                 tokens_streamed: 2,
+                sibling: 0,
+                siblings: 1,
             }
         );
         let f = parse_frame(&render_keepalive(7)).unwrap();
         assert_eq!(f, StreamFrame::Keepalive { id: 7 });
+    }
+
+    #[test]
+    fn sibling_tagged_frames_roundtrip() {
+        let f = parse_frame(&render_token_frame(7, 9, 104, 2, &ByteTokenizer)).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Token { id: 7, seq: 9, token: 104, text: "h".to_string(), sibling: 2 }
+        );
+        let resp = Response {
+            id: 7,
+            tokens: vec![104],
+            finish: FinishReason::Length,
+            latency_ms: 2.0,
+            ttft_ms: 1.0,
+            prompt_len: 3,
+            choices: Vec::new(),
+        };
+        let choice = Choice {
+            index: 2,
+            tokens: vec![104, 105],
+            finish: FinishReason::StopToken,
+            logprob: -1.25,
+        };
+        let line = render_choice_done_frame(&resp, &choice, 4, 2, &ByteTokenizer);
+        let f = parse_frame(&line).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Done {
+                id: 7,
+                tokens_streamed: 2,
+                finish: "stop".to_string(),
+                text: "hi".to_string(),
+                latency_ms: 2.0,
+                ttft_ms: 1.0,
+                prompt_len: 3,
+                sibling: 2,
+                siblings: 4,
+            }
+        );
+        assert_eq!(f.siblings(), Some(4));
+        assert!(f.is_terminal());
+        let f = parse_frame(&render_stream_error_sibling(
+            7, "worker_failed", "boom", 1, None, 1, 3,
+        ))
+        .unwrap();
+        assert_eq!(f.siblings(), Some(3));
+        let f = parse_frame(&render_cancelled_frame_sibling(7, "pruned", 0, 3, 4)).unwrap();
+        assert_eq!(
+            f,
+            StreamFrame::Cancelled {
+                id: 7,
+                reason: "pruned".to_string(),
+                tokens_streamed: 0,
+                sibling: 3,
+                siblings: 4,
+            }
+        );
+        assert!(!StreamFrame::Keepalive { id: 7 }.is_terminal());
+        assert_eq!(StreamFrame::Keepalive { id: 7 }.siblings(), None);
+    }
+
+    #[test]
+    fn grouped_response_renders_choices() {
+        let resp = Response {
+            id: 11,
+            tokens: vec![104, 105],
+            finish: FinishReason::Length,
+            latency_ms: 1.5,
+            ttft_ms: 0.5,
+            prompt_len: 3,
+            choices: vec![
+                Choice {
+                    index: 0,
+                    tokens: vec![104, 105],
+                    finish: FinishReason::Length,
+                    logprob: -0.5,
+                },
+                Choice {
+                    index: 2,
+                    tokens: vec![105],
+                    finish: FinishReason::StopToken,
+                    logprob: -0.75,
+                },
+            ],
+        };
+        let v = Json::parse(&render_response(&resp, &ByteTokenizer)).unwrap();
+        let arr = match v.get("choices") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("expected choices array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req_usize("index").unwrap(), 0);
+        assert_eq!(arr[0].req_str("text").unwrap(), "hi");
+        assert_eq!(arr[1].req_str("finish").unwrap(), "stop");
+        assert!((arr[1].req_f64("logprob").unwrap() + 0.75).abs() < 1e-9);
     }
 
     #[test]
@@ -400,6 +751,7 @@ mod tests {
             latency_ms: 0.0,
             ttft_ms: 0.0,
             prompt_len: 1,
+            choices: Vec::new(),
         };
         let v = Json::parse(&render_response(&resp, &ByteTokenizer)).unwrap();
         assert_eq!(v.req_str("finish").unwrap(), "deadline");

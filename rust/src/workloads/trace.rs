@@ -1,6 +1,24 @@
 //! Serving-trace generation for the end-to-end benches: Poisson arrivals
 //! with log-normal-ish prompt lengths and geometric output lengths,
 //! loosely shaped after public LLM serving traces.
+//!
+//! Besides the plain open-loop trace ([`generate`]), two structured
+//! workloads exercise the engine's prefix-sharing paths:
+//!
+//! * [`generate_multi_turn`] — chat sessions whose turns re-arrive with
+//!   the full previous context as a shared prefix (radix-cache hits);
+//! * [`generate_fork_join`] — agentic DAGs: a root request forks into
+//!   `branches` siblings off the same context (sometimes as one grouped
+//!   `"n"`-request), whose results a join request then extends.
+//!
+//! # Determinism
+//!
+//! Every request's content is drawn from a child [`Rng`] forked off the
+//! trace stream (one `fork()` draw per request/session), so request *i*
+//! depends only on the seed and its index — never on how many samples
+//! earlier requests happened to consume. Changing output-length
+//! parameters therefore cannot shift arrival times or prompt lengths,
+//! and extending a trace keeps its existing prefix bit-identical.
 
 use crate::util::rng::Rng;
 
@@ -9,10 +27,21 @@ use crate::util::rng::Rng;
 pub struct TraceRequest {
     /// Arrival time in seconds from trace start.
     pub arrival_s: f64,
-    /// Prompt length in tokens.
+    /// Prompt length in tokens (including any shared prefix).
     pub prompt_len: usize,
     /// Number of tokens to generate.
     pub max_new_tokens: usize,
+    /// Leading prompt tokens shared verbatim with an earlier request of
+    /// the same session (0 → fresh prompt). An engine with prefix
+    /// caching skips their prefill.
+    pub shared_prefix_len: usize,
+    /// Session / DAG this request belongs to (plain traces: one
+    /// session per request).
+    pub session: usize,
+    /// Parallel samples to request (the wire `"n"`); 1 → plain.
+    pub n: u32,
+    /// Beam width (the wire `"beam_width"`); 0 → off.
+    pub beam_width: u32,
 }
 
 /// Trace generation parameters.
@@ -46,26 +75,217 @@ impl Default for TraceParams {
     }
 }
 
-/// Generate `count` requests.
+/// Draw one (prompt length, output length) pair.
+fn sample_lengths(r: &mut Rng, params: &TraceParams) -> (usize, usize) {
+    let prompt = (r.normal(params.prompt_log_mean, params.prompt_log_std))
+        .exp()
+        .round() as usize;
+    let prompt_len = prompt.clamp(params.prompt_min, params.prompt_max);
+    // Geometric with the given mean: p = 1/mean.
+    let p = (1.0 / params.mean_new_tokens).clamp(1e-6, 1.0);
+    let mut new_tokens = 1usize;
+    while new_tokens < params.max_new_tokens && !r.bool(p) {
+        new_tokens += 1;
+    }
+    (prompt_len, new_tokens)
+}
+
+/// Geometric draw with the given mean (≥ 1, capped).
+fn sample_count(r: &mut Rng, mean: f64, cap: usize) -> usize {
+    let p = (1.0 / mean.max(1.0)).clamp(1e-6, 1.0);
+    let mut k = 1usize;
+    while k < cap && !r.bool(p) {
+        k += 1;
+    }
+    k
+}
+
+/// Generate `count` independent requests.
 pub fn generate(rng: &mut Rng, params: &TraceParams, count: usize) -> Vec<TraceRequest> {
     let mut t = 0.0f64;
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
+    for i in 0..count {
         if params.rate.is_finite() {
             t += rng.exponential(params.rate);
         }
-        let prompt = (rng.normal(params.prompt_log_mean, params.prompt_log_std))
-            .exp()
-            .round() as usize;
-        let prompt_len = prompt.clamp(params.prompt_min, params.prompt_max);
-        // Geometric with the given mean: p = 1/mean.
-        let p = (1.0 / params.mean_new_tokens).clamp(1e-6, 1.0);
-        let mut new_tokens = 1usize;
-        while new_tokens < params.max_new_tokens && !rng.bool(p) {
-            new_tokens += 1;
-        }
-        out.push(TraceRequest { arrival_s: t, prompt_len, max_new_tokens: new_tokens });
+        let mut r = rng.fork();
+        let (prompt_len, new_tokens) = sample_lengths(&mut r, params);
+        out.push(TraceRequest {
+            arrival_s: t,
+            prompt_len,
+            max_new_tokens: new_tokens,
+            shared_prefix_len: 0,
+            session: i,
+            n: 1,
+            beam_width: 0,
+        });
     }
+    out
+}
+
+/// Multi-turn (chat) workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiTurnParams {
+    pub base: TraceParams,
+    /// Mean turns per session (geometric, ≥ 1, capped at 32).
+    pub mean_turns: f64,
+    /// Mean client think time between a reply and the next turn (s).
+    pub think_s: f64,
+}
+
+impl Default for MultiTurnParams {
+    fn default() -> Self {
+        MultiTurnParams { base: TraceParams::default(), mean_turns: 3.0, think_s: 2.0 }
+    }
+}
+
+/// Generate `sessions` chat sessions. Turn `k+1` of a session re-arrives
+/// with the whole of turn `k`'s context (prompt + generated reply) as
+/// its shared prefix, plus a fresh user message; the result is sorted by
+/// arrival time (sessions interleave).
+pub fn generate_multi_turn(
+    rng: &mut Rng,
+    params: &MultiTurnParams,
+    sessions: usize,
+) -> Vec<TraceRequest> {
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    for sid in 0..sessions {
+        if params.base.rate.is_finite() {
+            t += rng.exponential(params.base.rate);
+        }
+        let mut r = rng.fork();
+        let turns = sample_count(&mut r, params.mean_turns, 32);
+        let mut arrival = t;
+        let mut context = 0usize;
+        for _ in 0..turns {
+            let (user_len, new_tokens) = sample_lengths(&mut r, &params.base);
+            out.push(TraceRequest {
+                arrival_s: arrival,
+                prompt_len: context + user_len,
+                max_new_tokens: new_tokens,
+                shared_prefix_len: context,
+                session: sid,
+                n: 1,
+                beam_width: 0,
+            });
+            context += user_len + new_tokens;
+            arrival += r.exponential(1.0 / params.think_s.max(1e-9));
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    out
+}
+
+/// Agentic fork/join DAG workload parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ForkJoinParams {
+    pub base: TraceParams,
+    /// Sibling branches per fork point (≥ 1).
+    pub branches: usize,
+    /// Fork/join rounds per DAG.
+    pub rounds: usize,
+    /// Mean gap between a round's replies and the next round (s).
+    pub think_s: f64,
+    /// Probability a fork round arrives as ONE grouped request
+    /// (`n = branches`, decoded as COW-forked siblings in-engine)
+    /// instead of `branches` separate sharing arrivals.
+    pub grouped_prob: f64,
+}
+
+impl Default for ForkJoinParams {
+    fn default() -> Self {
+        ForkJoinParams {
+            base: TraceParams::default(),
+            branches: 4,
+            rounds: 2,
+            think_s: 1.0,
+            grouped_prob: 0.5,
+        }
+    }
+}
+
+/// Generate `dags` fork/join DAGs. Each DAG: a root request, then per
+/// round either `branches` sibling requests sharing the root's full
+/// context (prefix-cache fan-out) or one grouped `n = branches`
+/// request (in-engine COW fork), followed by a join request that
+/// extends the shared context with a digest of the branch outputs.
+/// Sorted by arrival time.
+pub fn generate_fork_join(
+    rng: &mut Rng,
+    params: &ForkJoinParams,
+    dags: usize,
+) -> Vec<TraceRequest> {
+    let branches = params.branches.max(1);
+    let mut t = 0.0f64;
+    let mut out = Vec::new();
+    for did in 0..dags {
+        if params.base.rate.is_finite() {
+            t += rng.exponential(params.base.rate);
+        }
+        let mut r = rng.fork();
+        let think = |r: &mut Rng| r.exponential(1.0 / params.think_s.max(1e-9));
+        let (root_prompt, root_out) = sample_lengths(&mut r, &params.base);
+        out.push(TraceRequest {
+            arrival_s: t,
+            prompt_len: root_prompt,
+            max_new_tokens: root_out,
+            shared_prefix_len: 0,
+            session: did,
+            n: 1,
+            beam_width: 0,
+        });
+        let mut context = root_prompt + root_out;
+        let mut arrival = t + think(&mut r);
+        for _ in 0..params.rounds {
+            let mut digest = 0usize;
+            if r.bool(params.grouped_prob) {
+                // The whole fork round as one grouped request; the
+                // engine forks the siblings off a shared KV chain.
+                let (instr, branch_out) = sample_lengths(&mut r, &params.base);
+                out.push(TraceRequest {
+                    arrival_s: arrival,
+                    prompt_len: context + instr,
+                    max_new_tokens: branch_out,
+                    shared_prefix_len: context,
+                    session: did,
+                    n: branches as u32,
+                    beam_width: 0,
+                });
+                digest = branch_out.min(32);
+            } else {
+                for _ in 0..branches {
+                    let (instr, branch_out) = sample_lengths(&mut r, &params.base);
+                    out.push(TraceRequest {
+                        arrival_s: arrival,
+                        prompt_len: context + instr,
+                        max_new_tokens: branch_out,
+                        shared_prefix_len: context,
+                        session: did,
+                        n: 1,
+                        beam_width: 0,
+                    });
+                    digest += branch_out.min(32);
+                }
+            }
+            // Join: re-arrives on the shared context with the branch
+            // digests appended, after the branches had time to finish.
+            arrival += think(&mut r);
+            let (join_instr, join_out) = sample_lengths(&mut r, &params.base);
+            out.push(TraceRequest {
+                arrival_s: arrival,
+                prompt_len: context + digest + join_instr,
+                max_new_tokens: join_out,
+                shared_prefix_len: context,
+                session: did,
+                n: 1,
+                beam_width: 0,
+            });
+            context += digest + join_instr + join_out;
+            arrival += think(&mut r);
+        }
+    }
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
     out
 }
 
@@ -121,5 +341,114 @@ mod tests {
         let mean: f64 =
             trace.iter().map(|r| r.max_new_tokens as f64).sum::<f64>() / trace.len() as f64;
         assert!((mean - 20.0).abs() < 2.0, "mean={mean}");
+    }
+
+    /// Golden determinism: the same seed yields the same trace, for all
+    /// three generators.
+    #[test]
+    fn same_seed_same_trace() {
+        let params = TraceParams::default();
+        let a = generate(&mut Rng::new(7), &params, 100);
+        let b = generate(&mut Rng::new(7), &params, 100);
+        assert_eq!(a, b);
+        let mt = MultiTurnParams::default();
+        let a = generate_multi_turn(&mut Rng::new(7), &mt, 20);
+        let b = generate_multi_turn(&mut Rng::new(7), &mt, 20);
+        assert_eq!(a, b);
+        let fj = ForkJoinParams::default();
+        let a = generate_fork_join(&mut Rng::new(7), &fj, 10);
+        let b = generate_fork_join(&mut Rng::new(7), &fj, 10);
+        assert_eq!(a, b);
+    }
+
+    /// Extending a trace must not perturb its existing prefix: request
+    /// `i` draws from its own forked stream, so it only depends on the
+    /// seed and `i`.
+    #[test]
+    fn longer_trace_keeps_its_prefix() {
+        let params = TraceParams::default();
+        let short = generate(&mut Rng::new(11), &params, 10);
+        let long = generate(&mut Rng::new(11), &params, 40);
+        assert_eq!(&long[..10], &short[..]);
+    }
+
+    /// Output-length knobs must not shift arrivals or prompt lengths —
+    /// the variable-draw geometric loop runs on the per-request fork,
+    /// not on the shared trace stream.
+    #[test]
+    fn output_length_params_do_not_shift_arrivals() {
+        let a_params = TraceParams { mean_new_tokens: 4.0, max_new_tokens: 8, ..Default::default() };
+        let b_params =
+            TraceParams { mean_new_tokens: 64.0, max_new_tokens: 256, ..Default::default() };
+        let a = generate(&mut Rng::new(13), &a_params, 200);
+        let b = generate(&mut Rng::new(13), &b_params, 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.prompt_len, y.prompt_len);
+        }
+    }
+
+    #[test]
+    fn multi_turn_prefixes_grow_within_sessions() {
+        let mut rng = Rng::new(17);
+        let trace = generate_multi_turn(&mut rng, &MultiTurnParams::default(), 40);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "sorted by arrival");
+        }
+        let sessions = trace.iter().map(|r| r.session).max().unwrap() + 1;
+        let mut saw_multi = false;
+        for sid in 0..sessions {
+            // Per session (already arrival-ordered), the shared prefix
+            // is exactly the previous turn's full context.
+            let mut context = 0usize;
+            let mut turns = 0;
+            for r in trace.iter().filter(|r| r.session == sid) {
+                assert_eq!(r.shared_prefix_len, context);
+                assert!(r.prompt_len > r.shared_prefix_len);
+                context = r.prompt_len + r.max_new_tokens;
+                turns += 1;
+            }
+            saw_multi |= turns > 1;
+        }
+        assert!(saw_multi, "mean_turns=3 over 40 sessions must yield a multi-turn one");
+    }
+
+    #[test]
+    fn fork_join_rounds_share_the_dag_context() {
+        let mut rng = Rng::new(19);
+        let params = ForkJoinParams { grouped_prob: 0.5, ..Default::default() };
+        let trace = generate_fork_join(&mut rng, &params, 30);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s, "sorted by arrival");
+        }
+        let dags = trace.iter().map(|r| r.session).max().unwrap() + 1;
+        let (mut saw_grouped, mut saw_fanout) = (false, false);
+        for did in 0..dags {
+            let reqs: Vec<&TraceRequest> =
+                trace.iter().filter(|r| r.session == did).collect();
+            // Exactly one root; everything after shares a prefix.
+            assert_eq!(reqs.iter().filter(|r| r.shared_prefix_len == 0).count(), 1);
+            for r in &reqs {
+                assert!(r.prompt_len > r.shared_prefix_len);
+                if r.n > 1 {
+                    assert_eq!(r.n as usize, params.branches);
+                    saw_grouped = true;
+                }
+            }
+            // Sibling fan-out: several requests sharing one identical
+            // prefix length (a fork round that wasn't grouped).
+            for i in 0..reqs.len() {
+                let twins = reqs
+                    .iter()
+                    .filter(|r| {
+                        r.shared_prefix_len == reqs[i].shared_prefix_len
+                            && r.shared_prefix_len > 0
+                    })
+                    .count();
+                saw_fanout |= twins >= params.branches;
+            }
+        }
+        assert!(saw_grouped, "grouped_prob=0.5 over 30 DAGs must yield a grouped round");
+        assert!(saw_fanout, "must yield an un-grouped fan-out round too");
     }
 }

@@ -29,12 +29,7 @@ fn prompt(text: &str) -> Vec<u32> {
 }
 
 fn params(gen: usize) -> GenerationParams {
-    GenerationParams {
-        max_new_tokens: gen,
-        temperature: 0.0,
-        stop_token: None,
-        deadline: None,
-    }
+    GenerationParams { max_new_tokens: gen, ..Default::default() }
 }
 
 /// Run `f` on a helper thread and fail loudly if it exceeds `secs` —
@@ -293,10 +288,7 @@ fn chaos_panics_disconnects_and_overload() {
                         let line = hsr_attn::server::render_request(&WireRequest {
                             prompt: format!("disconnector {i} "),
                             max_new_tokens: 64,
-                            temperature: 0.0,
-                            stop_token: None,
-                            deadline_ms: None,
-                            stream: false,
+                            ..Default::default()
                         });
                         let _ = s.write_all(line.as_bytes());
                         let _ = s.write_all(b"\n");
@@ -313,11 +305,9 @@ fn chaos_panics_disconnects_and_overload() {
                     let req = WireRequest {
                         prompt: format!("chaos client {i} request {j} "),
                         max_new_tokens: 8,
-                        temperature: 0.0,
-                        stop_token: None,
                         // A few requests expire instantly: "deadline" finish.
                         deadline_ms: (i % 5 == 1 && j == 1).then_some(0),
-                        stream: false,
+                        ..Default::default()
                     };
                     match c.request(&req) {
                         Ok(v) if v.get("finish").is_some() => tally.0 += 1,
@@ -403,10 +393,8 @@ fn streaming_over_tcp_is_contiguous_with_one_terminal_done() {
             .stream_generate(&WireRequest {
                 prompt: "stream me a dozen tokens ".to_string(),
                 max_new_tokens: 12,
-                temperature: 0.0,
-                stop_token: None,
-                deadline_ms: None,
                 stream: true,
+                ..Default::default()
             })
             .expect("an unloaded pool must stream");
 
@@ -513,10 +501,8 @@ fn client_disconnect_mid_stream_cancels_without_leaks() {
         c.send(&WireRequest {
             prompt: "disconnecting mid stream ".to_string(),
             max_new_tokens: 4096,
-            temperature: 0.0,
-            stop_token: None,
-            deadline_ms: None,
             stream: true,
+            ..Default::default()
         })
         .unwrap();
         // Prove the stream is live, then vanish without a goodbye.

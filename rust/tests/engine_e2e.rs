@@ -42,7 +42,7 @@ fn single_request_greedy_deterministic() {
         );
         eng.submit(
             prompt("the merchant carries "),
-            GenerationParams { max_new_tokens: 24, temperature: 0.0, stop_token: None, deadline: None },
+            GenerationParams { max_new_tokens: 24, ..Default::default() },
         );
         eng.run_to_completion();
         let mut done = eng.take_finished();
@@ -68,7 +68,7 @@ fn sparse_policy_matches_dense_when_r_covers_cache() {
         let mut eng = Engine::new(model.clone(), EngineConfig { policy, ..Default::default() });
         eng.submit(
             prompt("remember: alder keeps the "),
-            GenerationParams { max_new_tokens: 16, temperature: 0.0, stop_token: None, deadline: None },
+            GenerationParams { max_new_tokens: 16, ..Default::default() },
         );
         eng.run_to_completion();
         eng.take_finished().pop().unwrap().tokens
@@ -94,7 +94,7 @@ fn sparse_topr_paper_spec_generates_and_accounts() {
     );
     eng.submit(
         prompt("the gardener sells dried herbs "),
-        GenerationParams { max_new_tokens: 32, temperature: 0.0, stop_token: None, deadline: None },
+        GenerationParams { max_new_tokens: 32, ..Default::default() },
     );
     eng.run_to_completion();
     let r = eng.take_finished().pop().unwrap();
@@ -121,7 +121,7 @@ fn batch_of_requests_all_complete() {
     for t in texts {
         ids.push(eng.submit(
             prompt(t),
-            GenerationParams { max_new_tokens: 12, temperature: 0.0, stop_token: None, deadline: None },
+            GenerationParams { max_new_tokens: 12, ..Default::default() },
         ));
     }
     eng.run_to_completion();
@@ -160,7 +160,7 @@ fn preemption_under_cache_pressure_still_completes() {
             prompt(&format!(
                 "request number {i} with a moderately long prompt text here "
             )),
-            GenerationParams { max_new_tokens: 40, temperature: 0.0, stop_token: None, deadline: None },
+            GenerationParams { max_new_tokens: 40, ..Default::default() },
         );
     }
     eng.run_to_completion();
@@ -188,7 +188,7 @@ fn oversized_request_is_aborted_not_deadlocked() {
     );
     eng.submit(
         prompt(&"x".repeat(100)),
-        GenerationParams { max_new_tokens: 8, temperature: 0.0, stop_token: None, deadline: None },
+        GenerationParams { max_new_tokens: 8, ..Default::default() },
     );
     eng.run_to_completion(); // must not hang
     let done = eng.take_finished();
@@ -210,6 +210,7 @@ fn stop_token_halts_generation() {
             temperature: 0.0,
             stop_token: Some(b'.' as u32),
             deadline: None,
+            ..Default::default()
         },
     );
     eng.run_to_completion();
@@ -233,7 +234,7 @@ fn router_distributes_across_workers() {
         router
             .submit(
                 prompt(&format!("parallel request {i} ")),
-                GenerationParams { max_new_tokens: 8, temperature: 0.0, stop_token: None, deadline: None },
+                GenerationParams { max_new_tokens: 8, ..Default::default() },
             )
             .expect("router accepts within default caps");
     }

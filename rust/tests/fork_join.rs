@@ -1,0 +1,695 @@
+//! Fork/join decode scenarios: COW-forked chains under parallel
+//! sampling (`n`/`best_of`), beam search (`beam_width`), and explicit
+//! mid-decode forks ([`Engine::fork_request`]).
+//!
+//! The acceptance bar: a sequence forked at generation depth k must
+//! produce **bit-identical** outputs to an independent full decode —
+//! across every HSR backend (incl. the no-index ablation), both
+//! attention policies, and every decode thread count — because
+//! publish-on-fork freezes the exact rows both lineages already attend
+//! over. Grouped requests must share the prompt chain physically
+//! (private-tail blocks only), emit exactly one ranked multi-choice
+//! response, and unwind without leaking a block, spill extent, or
+//! chain reference under randomized fork/cancel/preempt churn. Like
+//! `tests/prefix_cache.rs`, everything runs on `Model::synthetic` with
+//! `d_head <= 8`, where float equality can be asserted exactly.
+
+use hsr_attn::engine::serving::{Engine, EngineConfig};
+use hsr_attn::engine::{
+    Fault, FaultKind, FaultPlan, FinishReason, GenerationParams, Router,
+    SchedulerConfig,
+};
+use hsr_attn::hsr::HsrBackend;
+use hsr_attn::model::transformer::{AttentionPolicy, RSpec};
+use hsr_attn::model::Model;
+use hsr_attn::server::{Client, Server, StreamFrame, WireRequest};
+use hsr_attn::util::rng::Rng;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn prompt_bytes(seed: u32, len: usize) -> Vec<u32> {
+    (0..len as u32).map(|i| (i * 11 + seed * 37 + 3) % 256).collect()
+}
+
+fn engine(
+    model: &Arc<Model>,
+    policy: AttentionPolicy,
+    backend: Option<HsrBackend>,
+    threads: usize,
+) -> Engine {
+    Engine::new(
+        Arc::clone(model),
+        EngineConfig {
+            policy,
+            hsr_backend: backend,
+            cache_capacity_tokens: 1 << 16,
+            block_tokens: 16,
+            decode_threads: threads,
+            ..Default::default()
+        },
+    )
+}
+
+/// Independent full decode of `prompt` (the fork-free reference).
+fn baseline(
+    model: &Arc<Model>,
+    policy: AttentionPolicy,
+    backend: Option<HsrBackend>,
+    prompt: &[u32],
+    gen: usize,
+) -> Vec<u32> {
+    let mut eng = engine(model, policy, backend, 1);
+    eng.submit(
+        prompt.to_vec(),
+        GenerationParams { max_new_tokens: gen, ..Default::default() },
+    );
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    done.pop().unwrap().tokens
+}
+
+/// Decode `prompt`, fork at generation depth `k`, run both lineages to
+/// completion; returns (parent tokens, child tokens, metrics, leaks).
+fn fork_at(
+    model: &Arc<Model>,
+    policy: AttentionPolicy,
+    backend: Option<HsrBackend>,
+    threads: usize,
+    prompt: &[u32],
+    gen: usize,
+    k: usize,
+) -> (Vec<u32>, Vec<u32>, hsr_attn::engine::metrics::Metrics, usize) {
+    let mut eng = engine(model, policy, backend, threads);
+    let id = eng.submit(
+        prompt.to_vec(),
+        GenerationParams { max_new_tokens: gen, ..Default::default() },
+    );
+    let mut guard = 0;
+    while eng.generated_len(id).is_some_and(|g| g < k) {
+        eng.step();
+        guard += 1;
+        assert!(guard < 10_000, "never reached generation depth {k}");
+    }
+    let child = eng.fork_request(id).expect("a decode-ready sequence must fork");
+    assert!(child > id, "child ids extend the engine's id space");
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    done.sort_by_key(|r| r.id);
+    assert_eq!(done.len(), 2, "parent and child each land a response");
+    assert_eq!((done[0].id, done[1].id), (id, child));
+    let metrics = eng.metrics.clone();
+    let leaks = eng.reclaim_and_count_leaks();
+    (done.remove(0).tokens, done.pop().unwrap().tokens, metrics, leaks)
+}
+
+/// The headline property: fork-at-step-k is bit-identical to an
+/// independent decode of the same prompt — parent AND child — across
+/// HSR backends (incl. the no-index ablation), attention policies, and
+/// decode thread counts (1 = serial, 0 = one shard per core).
+#[test]
+fn fork_at_step_k_bit_identity_all_backends_policies_threads() {
+    let model = Arc::new(Model::synthetic(88, 2, 2, 8));
+    let prompt = prompt_bytes(7, 48);
+    let gen = 10;
+    let k = 4;
+    let cases: Vec<(AttentionPolicy, Option<HsrBackend>)> = vec![
+        (AttentionPolicy::Dense, Some(HsrBackend::BallTree)),
+        (AttentionPolicy::Dense, None),
+        (AttentionPolicy::TopR(RSpec::paper()), Some(HsrBackend::BallTree)),
+        (AttentionPolicy::TopR(RSpec::paper()), Some(HsrBackend::Projected)),
+        (AttentionPolicy::TopR(RSpec::paper()), Some(HsrBackend::Brute)),
+        (AttentionPolicy::TopR(RSpec::paper()), None),
+        (AttentionPolicy::TopR(RSpec::Fixed(24)), Some(HsrBackend::BallTree)),
+        (AttentionPolicy::TopR(RSpec::Fixed(24)), Some(HsrBackend::Brute)),
+    ];
+    for (policy, backend) in cases {
+        let reference = baseline(&model, policy, backend, &prompt, gen);
+        assert_eq!(reference.len(), gen);
+        for threads in [1usize, 0] {
+            let ctx = format!("policy={policy:?} backend={backend:?} threads={threads}");
+            let (parent, child, m, leaks) =
+                fork_at(&model, policy, backend, threads, &prompt, gen, k);
+            assert_eq!(parent, reference, "{ctx}: parent diverged after fork");
+            assert_eq!(child, reference, "{ctx}: child diverged from lineage");
+            assert_eq!(m.sequence_forks, 1, "{ctx}");
+            // The 64k-token pool always fits the tail: publish-on-fork,
+            // never the recompute fallback — and the child adopts every
+            // row computed so far (prompt + k generated).
+            assert_eq!(m.fork_recompute_fallbacks, 0, "{ctx}");
+            assert!(
+                m.fork_shared_tokens >= (prompt.len() + k) as u64,
+                "{ctx}: fork must share the full computed chain (shared {})",
+                m.fork_shared_tokens
+            );
+            assert_eq!(leaks, 0, "{ctx}: fork leaked KV blocks");
+        }
+    }
+}
+
+/// Forking is depth-independent: every fork depth from the first token
+/// to the second-to-last reproduces the reference decode exactly.
+#[test]
+fn fork_at_every_depth_matches_reference() {
+    let model = Arc::new(Model::synthetic(89, 2, 2, 8));
+    let prompt = prompt_bytes(11, 40);
+    let gen = 8;
+    let policy = AttentionPolicy::TopR(RSpec::paper());
+    let backend = Some(HsrBackend::BallTree);
+    let reference = baseline(&model, policy, backend, &prompt, gen);
+    for k in 1..gen {
+        let (parent, child, _, leaks) =
+            fork_at(&model, policy, backend, 1, &prompt, gen, k);
+        assert_eq!(parent, reference, "k={k}");
+        assert_eq!(child, reference, "k={k}");
+        assert_eq!(leaks, 0, "k={k}");
+    }
+}
+
+/// n=16 parallel sampling shares the prompt chain physically: once all
+/// siblings are fanned out, the pool holds the published chain once
+/// plus sixteen private tails — far below the logical (unshared)
+/// footprint — and the request resolves to ONE response with 16
+/// distinct-index choices.
+#[test]
+fn parallel_sampling_n16_allocates_private_tails_only() {
+    let model = Arc::new(Model::synthetic(90, 2, 2, 8));
+    let mut eng = Engine::new(
+        Arc::clone(&model),
+        EngineConfig {
+            policy: AttentionPolicy::TopR(RSpec::paper()),
+            cache_capacity_tokens: 1 << 16,
+            block_tokens: 16,
+            scheduler: SchedulerConfig { max_batch: 16, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let prompt = prompt_bytes(3, 128);
+    let gid = eng.submit(
+        prompt.clone(),
+        GenerationParams {
+            max_new_tokens: 6,
+            temperature: 1.0,
+            n: 16,
+            ..Default::default()
+        },
+    );
+    let mut guard = 0;
+    while eng.running_len() < 16 {
+        eng.step();
+        guard += 1;
+        assert!(guard < 10_000, "sampling group never fanned out to 16 siblings");
+    }
+    eng.step(); // every sibling decodes at least one private-tail row
+    let (physical, logical) = eng.kv_bytes();
+    assert!(physical > 0 && logical > 0);
+    assert!(
+        physical * 3 <= logical,
+        "siblings must share the prompt chain: physical {physical} vs logical {logical}"
+    );
+    assert_eq!(eng.metrics.sequence_forks, 15);
+    assert!(
+        eng.metrics.fork_shared_tokens >= 15 * prompt.len() as u64,
+        "each fork must adopt the full prompt chain (shared {})",
+        eng.metrics.fork_shared_tokens
+    );
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1, "a grouped request emits exactly one response");
+    let resp = done.pop().unwrap();
+    assert_eq!(resp.id, gid);
+    assert_eq!(resp.prompt_len, prompt.len());
+    assert_eq!(resp.choices.len(), 16);
+    let indices: HashSet<u32> = resp.choices.iter().map(|c| c.index).collect();
+    assert_eq!(indices.len(), 16, "sibling indices must be distinct");
+    for c in &resp.choices {
+        assert_eq!(c.finish, FinishReason::Length);
+        assert_eq!(c.tokens.len(), 6);
+    }
+    assert_eq!(resp.tokens, resp.choices[0].tokens, "flat fields mirror the best choice");
+    assert_eq!(eng.metrics.group_requests, 1);
+    assert_eq!(eng.reclaim_and_count_leaks(), 0, "sampling group leaked KV blocks");
+}
+
+/// Grouped sampling is deterministic: the same seed reproduces every
+/// choice — tokens AND cumulative log-probabilities — exactly.
+#[test]
+fn parallel_sampling_is_seed_deterministic() {
+    let model = Arc::new(Model::synthetic(91, 2, 2, 8));
+    let run = || {
+        let mut eng = engine(
+            &model,
+            AttentionPolicy::TopR(RSpec::paper()),
+            Some(HsrBackend::BallTree),
+            1,
+        );
+        eng.submit(
+            prompt_bytes(5, 64),
+            GenerationParams {
+                max_new_tokens: 8,
+                temperature: 1.0,
+                n: 6,
+                ..Default::default()
+            },
+        );
+        eng.run_to_completion();
+        let mut done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(eng.reclaim_and_count_leaks(), 0);
+        done.pop().unwrap().choices
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must reproduce every choice bit-for-bit");
+    assert_eq!(a.len(), 6);
+}
+
+/// Width-4 beam search: one response, four ranked hypotheses (cumulative
+/// log-probability descending), all sharing the prompt chain.
+#[test]
+fn beam_search_emits_ranked_choices() {
+    let model = Arc::new(Model::synthetic(92, 2, 2, 8));
+    let mut eng = engine(
+        &model,
+        AttentionPolicy::TopR(RSpec::paper()),
+        Some(HsrBackend::BallTree),
+        1,
+    );
+    let gid = eng.submit(
+        prompt_bytes(9, 64),
+        GenerationParams { max_new_tokens: 12, beam_width: 4, ..Default::default() },
+    );
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    let resp = done.pop().unwrap();
+    assert_eq!(resp.id, gid);
+    assert_eq!(resp.choices.len(), 4, "a width-4 beam keeps 4 hypotheses");
+    for pair in resp.choices.windows(2) {
+        assert!(
+            pair[0].logprob >= pair[1].logprob,
+            "choices must rank by cumulative log-probability descending"
+        );
+    }
+    for c in &resp.choices {
+        assert_eq!(c.finish, FinishReason::Length);
+        assert_eq!(c.tokens.len(), 12);
+        assert!(c.logprob < 0.0, "a 12-token hypothesis has negative log-probability");
+    }
+    let indices: HashSet<u32> = resp.choices.iter().map(|c| c.index).collect();
+    assert_eq!(indices.len(), 4);
+    assert_eq!(eng.metrics.group_requests, 1);
+    assert!(eng.metrics.sequence_forks >= 3, "beam must fan out past the primary");
+    assert_eq!(eng.reclaim_and_count_leaks(), 0, "beam leaked KV blocks");
+}
+
+/// `best_of > n`: six candidates decode, the best two by cumulative
+/// log-probability come back.
+#[test]
+fn best_of_decodes_extra_candidates_returns_n() {
+    let model = Arc::new(Model::synthetic(93, 2, 2, 8));
+    let mut eng = engine(
+        &model,
+        AttentionPolicy::TopR(RSpec::paper()),
+        Some(HsrBackend::BallTree),
+        1,
+    );
+    eng.submit(
+        prompt_bytes(13, 48),
+        GenerationParams {
+            max_new_tokens: 6,
+            temperature: 1.0,
+            n: 2,
+            best_of: 6,
+            ..Default::default()
+        },
+    );
+    eng.run_to_completion();
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1);
+    let resp = done.pop().unwrap();
+    assert_eq!(resp.choices.len(), 2, "best_of candidates beyond n are dropped");
+    assert!(resp.choices[0].logprob >= resp.choices[1].logprob);
+    assert_eq!(eng.metrics.sequence_forks, 5, "all six candidates must decode");
+    assert_eq!(eng.reclaim_and_count_leaks(), 0);
+}
+
+/// Cancelling a grouped request mid-decode fans out to every sibling
+/// and still aggregates into exactly one terminal response.
+#[test]
+fn group_cancel_fans_out_without_leaks() {
+    let model = Arc::new(Model::synthetic(94, 2, 2, 8));
+    let mut eng = engine(
+        &model,
+        AttentionPolicy::TopR(RSpec::paper()),
+        Some(HsrBackend::BallTree),
+        1,
+    );
+    let gid = eng.submit(
+        prompt_bytes(17, 64),
+        GenerationParams {
+            max_new_tokens: 1_000,
+            temperature: 1.0,
+            n: 8,
+            ..Default::default()
+        },
+    );
+    let mut guard = 0;
+    while eng.running_len() < 8 {
+        eng.step();
+        guard += 1;
+        assert!(guard < 10_000, "group never fanned out");
+    }
+    assert!(eng.cancel(gid), "a live group must be cancellable");
+    assert!(!eng.cancel(gid), "double cancel must be a no-op");
+    let mut done = eng.take_finished();
+    assert_eq!(done.len(), 1, "the cancelled group aggregates into one response");
+    let resp = done.pop().unwrap();
+    assert_eq!(resp.id, gid);
+    assert_eq!(resp.finish, FinishReason::Cancelled);
+    assert!(!resp.choices.is_empty());
+    assert!(resp.choices.iter().all(|c| c.finish == FinishReason::Cancelled));
+    assert_eq!(eng.reclaim_and_count_leaks(), 0, "group cancel leaked KV blocks");
+}
+
+/// Randomized fork/join/prune/cancel/preempt churn over plain requests,
+/// sampling groups, beams, and explicit mid-decode forks — on a pool
+/// small enough to force preemption and the recompute-fork fallback.
+/// Every accepted request reaches exactly one terminal response and
+/// teardown leaves the ledger exact: zero leaked blocks, zero live
+/// spill bytes, zero chain references.
+#[test]
+fn fork_join_churn_zero_leaks() {
+    let model = Arc::new(Model::synthetic(95, 2, 2, 8));
+    for seed in [0xf0cc_u64, 0x10ad, 0xbead] {
+        let mut eng = Engine::new(
+            Arc::clone(&model),
+            EngineConfig {
+                policy: AttentionPolicy::TopR(RSpec::paper()),
+                cache_capacity_tokens: 512,
+                block_tokens: 16,
+                scheduler: SchedulerConfig {
+                    max_batch: 6,
+                    prefill_chunk: 16,
+                    step_token_budget: 64,
+                    ..Default::default()
+                },
+                seed,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(seed);
+        // (id, grouped): grouped forks add a sibling to the group (no
+        // extra response); ungrouped forks are full requests.
+        let mut known: Vec<(u64, bool)> = Vec::new();
+        let mut expected = 0usize;
+        for _ in 0..120 {
+            match rng.below(10) {
+                0..=2 => {
+                    let p = prompt_bytes(rng.below(1 << 20) as u32, rng.range(16, 49));
+                    let id = eng.submit(
+                        p,
+                        GenerationParams {
+                            max_new_tokens: rng.range(4, 17),
+                            ..Default::default()
+                        },
+                    );
+                    known.push((id, false));
+                    expected += 1;
+                }
+                3 => {
+                    let p = prompt_bytes(rng.below(1 << 20) as u32, rng.range(16, 49));
+                    let id = eng.submit(
+                        p,
+                        GenerationParams {
+                            max_new_tokens: rng.range(4, 13),
+                            temperature: 1.0,
+                            n: rng.range(2, 5) as u32,
+                            ..Default::default()
+                        },
+                    );
+                    known.push((id, true));
+                    expected += 1;
+                }
+                4 => {
+                    let p = prompt_bytes(rng.below(1 << 20) as u32, rng.range(16, 49));
+                    let id = eng.submit(
+                        p,
+                        GenerationParams {
+                            max_new_tokens: rng.range(4, 13),
+                            beam_width: rng.range(2, 5) as u32,
+                            ..Default::default()
+                        },
+                    );
+                    known.push((id, true));
+                    expected += 1;
+                }
+                5 if !known.is_empty() => {
+                    let (id, grouped) = known[rng.below(known.len())];
+                    if let Some(child) = eng.fork_request(id) {
+                        if !grouped {
+                            known.push((child, false));
+                            expected += 1;
+                        }
+                    }
+                }
+                6 if !known.is_empty() => {
+                    let (id, _) = known[rng.below(known.len())];
+                    // A finished id is a no-op false; either way its
+                    // response was already counted at submission.
+                    let _ = eng.cancel(id);
+                }
+                _ => {
+                    for _ in 0..rng.range(1, 9) {
+                        eng.step();
+                    }
+                }
+            }
+        }
+        eng.run_to_completion();
+        let done = eng.take_finished();
+        assert_eq!(
+            done.len(),
+            expected,
+            "seed={seed:#x}: every request needs exactly one terminal response"
+        );
+        let m = eng.metrics.clone();
+        assert!(m.group_requests >= 1, "seed={seed:#x}: churn must admit groups");
+        assert!(m.sequence_forks >= 1, "seed={seed:#x}: churn must fork");
+        assert_eq!(
+            eng.reclaim_and_count_leaks(),
+            0,
+            "seed={seed:#x}: churn leaked KV blocks"
+        );
+        assert_eq!(
+            eng.prefix_store().pool.spill_live_bytes(),
+            0,
+            "seed={seed:#x}: churn leaked spill extents"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming × fork: per-sibling frames over TCP — clean runs, dropped
+// best_of candidates ("pruned"), and a worker kill mid-beam.
+// ---------------------------------------------------------------------
+
+/// Per-sibling frame accounting of a grouped stream: token frames per
+/// sibling, exactly one terminal per observed sibling, and each
+/// terminal's `tokens_streamed` naming that sibling's own count.
+/// Returns (tokens per sibling, terminal frames per sibling).
+fn tally_grouped(frames: &[StreamFrame]) -> (HashMap<u32, u64>, HashMap<u32, &StreamFrame>) {
+    let mut tokens: HashMap<u32, u64> = HashMap::new();
+    let mut terminals: HashMap<u32, &StreamFrame> = HashMap::new();
+    let mut next_seq = 0u64;
+    for f in frames {
+        match f {
+            StreamFrame::Token { seq, sibling, .. } => {
+                assert_eq!(*seq, next_seq, "seq stays globally contiguous");
+                next_seq += 1;
+                *tokens.entry(*sibling).or_insert(0) += 1;
+            }
+            StreamFrame::Keepalive { .. } => {}
+            StreamFrame::Done { sibling, tokens_streamed, .. }
+            | StreamFrame::Error { sibling, tokens_streamed, .. }
+            | StreamFrame::Cancelled { sibling, tokens_streamed, .. } => {
+                assert!(
+                    terminals.insert(*sibling, f).is_none(),
+                    "sibling {sibling} got two terminal frames"
+                );
+                assert_eq!(
+                    *tokens_streamed,
+                    tokens.get(sibling).copied().unwrap_or(0),
+                    "sibling {sibling} terminal must carry its own token count"
+                );
+            }
+        }
+    }
+    (tokens, terminals)
+}
+
+#[test]
+fn grouped_stream_delivers_one_terminal_per_sibling() {
+    let model = Arc::new(Model::synthetic(96, 2, 2, 8));
+    let router = Arc::new(Router::new(model, EngineConfig::default(), 2));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let frames = c
+        .stream_generate(&WireRequest {
+            prompt: "stream four parallel samples ".to_string(),
+            max_new_tokens: 6,
+            temperature: 1.0,
+            stream: true,
+            n: 4,
+            ..Default::default()
+        })
+        .expect("an unloaded pool must stream");
+    let (tokens, terminals) = tally_grouped(&frames);
+    assert_eq!(terminals.len(), 4, "one terminal frame per sibling");
+    assert_eq!(tokens.values().sum::<u64>(), 4 * 6);
+    for (sib, f) in &terminals {
+        match f {
+            StreamFrame::Done { finish, siblings, .. } => {
+                assert_eq!(finish, "length");
+                assert_eq!(*siblings, 4, "sibling {sib} must announce the group size");
+            }
+            other => panic!("sibling {sib}: expected done, got {other:?}"),
+        }
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().expect("server thread").expect("serve exits cleanly");
+    let router = Arc::try_unwrap(router).ok().expect("router released");
+    let m = router.shutdown();
+    assert_eq!(m.tokens_streamed, 4 * 6);
+    assert_eq!(m.kv_blocks_leaked, 0);
+}
+
+/// `best_of > n` over the wire: dropped candidates streamed tokens but
+/// have no surviving choice — their streams close with a `pruned`
+/// cancelled frame; the winner closes with `done`.
+#[test]
+fn dropped_best_of_candidates_close_with_pruned_frames() {
+    let model = Arc::new(Model::synthetic(97, 2, 2, 8));
+    let router = Arc::new(Router::new(model, EngineConfig::default(), 1));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let frames = c
+        .stream_generate(&WireRequest {
+            prompt: "three candidates one winner ".to_string(),
+            max_new_tokens: 5,
+            temperature: 1.0,
+            stream: true,
+            n: 1,
+            best_of: 3,
+            ..Default::default()
+        })
+        .expect("stream");
+    let (_, terminals) = tally_grouped(&frames);
+    assert_eq!(terminals.len(), 3, "all three candidates streamed");
+    let mut done = 0;
+    let mut pruned = 0;
+    for f in terminals.values() {
+        match f {
+            StreamFrame::Done { finish, .. } => {
+                assert_eq!(finish, "length");
+                done += 1;
+            }
+            StreamFrame::Cancelled { reason, .. } => {
+                assert_eq!(reason, "pruned");
+                pruned += 1;
+            }
+            other => panic!("unexpected terminal {other:?}"),
+        }
+    }
+    assert_eq!((done, pruned), (1, 2), "one winner, two dropped candidates");
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().expect("server thread").expect("serve exits cleanly");
+    let router = Arc::try_unwrap(router).ok().expect("router released");
+    assert_eq!(router.shutdown().kv_blocks_leaked, 0);
+}
+
+/// Worker kill mid-beam: the panic lands after every hypothesis has
+/// streamed tokens, so each observed sibling must still close with
+/// exactly one terminal frame — a `worker_failed` error carrying that
+/// sibling's own truncation point.
+#[test]
+fn worker_kill_mid_beam_closes_every_sibling_stream() {
+    let model = Arc::new(Model::synthetic(98, 2, 2, 8));
+    let cfg = EngineConfig {
+        faults: FaultPlan::none()
+            .with(Fault { worker: 0, step: 12, kind: FaultKind::Panic }),
+        ..Default::default()
+    };
+    let router = Arc::new(Router::new(model, cfg, 1));
+    let server = Server::bind(router.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stop = server.stop_handle();
+    let srv = std::thread::spawn(move || server.serve());
+
+    let mut c = Client::connect(&addr).unwrap();
+    let frames = c
+        .stream_generate(&WireRequest {
+            prompt: "beam that dies mid flight ".to_string(),
+            max_new_tokens: 64,
+            stream: true,
+            beam_width: 4,
+            ..Default::default()
+        })
+        .expect("frames arrive up to and including the per-sibling errors");
+    let (tokens, terminals) = tally_grouped(&frames);
+    assert!(
+        terminals.len() >= 2,
+        "panic at step 12 lands after the beam fanned out (saw {} siblings)",
+        terminals.len()
+    );
+    assert_eq!(
+        terminals.len(),
+        tokens.len().max(1),
+        "every sibling that streamed gets its own terminal frame"
+    );
+    for (sib, f) in &terminals {
+        match f {
+            StreamFrame::Error { code, siblings, .. } => {
+                assert_eq!(code, "worker_failed", "sibling {sib}");
+                assert_eq!(*siblings, terminals.len() as u32, "sibling {sib}");
+            }
+            other => panic!("sibling {sib}: expected worker_failed error, got {other:?}"),
+        }
+    }
+    assert!(tokens.values().sum::<u64>() >= 2, "progress must precede the panic");
+
+    // The pool must recover: a fresh request succeeds post-restart.
+    let mut ok = false;
+    for _ in 0..100 {
+        if let Ok(mut probe) = Client::connect(&addr) {
+            if let Ok(v) = probe.generate("post recovery probe ", 4) {
+                if v.get("finish").is_some() {
+                    ok = true;
+                    break;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(ok, "server unresponsive after the mid-beam worker kill");
+
+    stop.store(true, Ordering::Relaxed);
+    srv.join().expect("server thread").expect("serve exits cleanly");
+    let router = Arc::try_unwrap(router).ok().expect("router released");
+    let m = router.shutdown();
+    assert_eq!(m.worker_panics, 1);
+    assert_eq!(m.worker_restarts, 1);
+    assert_eq!(m.kv_blocks_leaked, 0);
+}

@@ -53,7 +53,7 @@ fn run_engine(
         .map(|p| {
             eng.submit(
                 p.clone(),
-                GenerationParams { max_new_tokens: gen, temperature: 0.0, stop_token: None, deadline: None },
+                GenerationParams { max_new_tokens: gen, ..Default::default() },
             )
         })
         .collect();

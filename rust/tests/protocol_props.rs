@@ -4,11 +4,12 @@
 //! `parse_frame`, and well-formed requests and streaming frames must
 //! survive a render → parse round trip.
 
-use hsr_attn::engine::{FinishReason, Response};
+use hsr_attn::engine::{Choice, FinishReason, Response};
 use hsr_attn::model::tokenizer::ByteTokenizer;
 use hsr_attn::server::{
-    parse_frame, parse_request, render_cancelled_frame, render_done_frame,
-    render_keepalive, render_request, render_stream_error, render_token_frame,
+    parse_frame, parse_request, render_cancelled_frame_sibling,
+    render_choice_done_frame, render_done_frame, render_keepalive,
+    render_request, render_stream_error_sibling, render_token_frame,
     StreamFrame, WireRequest,
 };
 use hsr_attn::util::json::Json;
@@ -36,6 +37,23 @@ fn random_request(rng: &mut Rng) -> WireRequest {
         stop_token: rng.bool(0.5).then(|| rng.below(256) as u32),
         deadline_ms: rng.bool(0.5).then(|| rng.range(1, 60_000) as u64),
         stream: rng.bool(0.5),
+        // Grouped-request fields, inside their clamp ranges so parsing
+        // stays identity (n in [1, 64]; best_of ≤ 64; beam_width ≤ 32).
+        n: rng.range(1, 65) as u32,
+        best_of: rng.below(65) as u32,
+        beam_width: rng.below(33) as u32,
+    }
+}
+
+/// Random `(sibling, siblings)` tags: half the time the plain-stream
+/// defaults (0, 1) — whose rendering must omit both keys — and half the
+/// time a grouped stream with a coherent `sibling < siblings`.
+fn random_tags(rng: &mut Rng) -> (u32, u32) {
+    if rng.bool(0.5) {
+        let siblings = rng.range(2, 9) as u32;
+        (rng.below(siblings as usize) as u32, siblings)
+    } else {
+        (0, 1)
     }
 }
 
@@ -49,9 +67,10 @@ fn random_frame(rng: &mut Rng) -> (StreamFrame, String) {
         0 => {
             let seq = rng.below(4096) as u64;
             let token = rng.below(256) as u32;
-            let line = render_token_frame(id, seq, token, &ByteTokenizer);
+            let sibling = if rng.bool(0.5) { rng.below(8) as u32 } else { 0 };
+            let line = render_token_frame(id, seq, token, sibling, &ByteTokenizer);
             let text = ByteTokenizer.decode(&[token]);
-            (StreamFrame::Token { id, seq, token, text }, line)
+            (StreamFrame::Token { id, seq, token, text, sibling }, line)
         }
         1 => {
             let tokens: Vec<u32> =
@@ -61,6 +80,7 @@ fn random_frame(rng: &mut Rng) -> (StreamFrame, String) {
             } else {
                 FinishReason::StopToken
             };
+            let (sibling, siblings) = random_tags(rng);
             let resp = Response {
                 id,
                 tokens: tokens.clone(),
@@ -68,8 +88,19 @@ fn random_frame(rng: &mut Rng) -> (StreamFrame, String) {
                 latency_ms: rng.below(4000) as f64 * 0.25,
                 ttft_ms: rng.below(400) as f64 * 0.25,
                 prompt_len: rng.range(1, 512),
+                choices: Vec::new(),
             };
-            let line = render_done_frame(&resp, streamed, &ByteTokenizer);
+            let line = if siblings == 1 {
+                render_done_frame(&resp, streamed, &ByteTokenizer)
+            } else {
+                let choice = Choice {
+                    index: sibling,
+                    tokens: tokens.clone(),
+                    finish,
+                    logprob: -(rng.below(400) as f64) * 0.25,
+                };
+                render_choice_done_frame(&resp, &choice, siblings, streamed, &ByteTokenizer)
+            };
             let frame = StreamFrame::Done {
                 id,
                 tokens_streamed: streamed,
@@ -79,29 +110,40 @@ fn random_frame(rng: &mut Rng) -> (StreamFrame, String) {
                 latency_ms: resp.latency_ms,
                 ttft_ms: resp.ttft_ms,
                 prompt_len: resp.prompt_len,
+                sibling,
+                siblings,
             };
             (frame, line)
         }
         2 => {
             let retry = rng.bool(0.5).then(|| rng.below(1000) as u64);
-            let line =
-                render_stream_error(id, "worker_failed", "it broke", streamed, retry);
+            let (sibling, siblings) = random_tags(rng);
+            let line = render_stream_error_sibling(
+                id, "worker_failed", "it broke", streamed, retry, sibling, siblings,
+            );
             let frame = StreamFrame::Error {
                 id,
                 code: "worker_failed".to_string(),
                 message: "it broke".to_string(),
                 tokens_streamed: streamed,
                 retry_after_ms: retry,
+                sibling,
+                siblings,
             };
             (frame, line)
         }
         3 => {
-            let reason = ["deadline", "cancelled", "aborted", "timeout"][rng.below(4)];
-            let line = render_cancelled_frame(id, reason, streamed);
+            let reason =
+                ["deadline", "cancelled", "aborted", "timeout", "pruned"][rng.below(5)];
+            let (sibling, siblings) = random_tags(rng);
+            let line =
+                render_cancelled_frame_sibling(id, reason, streamed, sibling, siblings);
             let frame = StreamFrame::Cancelled {
                 id,
                 reason: reason.to_string(),
                 tokens_streamed: streamed,
+                sibling,
+                siblings,
             };
             (frame, line)
         }
@@ -124,7 +166,8 @@ fn random_byte_soup_never_panics() {
 fn random_json_shaped_soup_never_panics() {
     // Soup biased toward JSON syntax characters reaches deeper into the
     // parser than uniform bytes do.
-    let pool: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnul\\/ promptmax_new_tokens";
+    let pool: &[u8] =
+        b"{}[]\",:0123456789.eE+-truefalsnul\\/ promptmax_new_tokensbest_ofbeam_width";
     let mut rng = Rng::new(0x1234);
     for _ in 0..2000 {
         let len = rng.below(160);
@@ -212,7 +255,7 @@ fn frame_byte_soup_never_panics() {
     // Soup biased toward the frame grammar's own vocabulary reaches
     // deeper into the event dispatch than uniform bytes do.
     let pool: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnul\\/ ideventtokenseqdone\
-        errorcancelledkeepalivetokens_streamedfinishreason";
+        errorcancelledkeepalivetokens_streamedfinishreasonsiblingsprunedlogprob";
     for _ in 0..2000 {
         let len = rng.below(160);
         let bytes: Vec<u8> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();

@@ -28,6 +28,10 @@
 #    prefill skip with refault vs re-prefill — plus a 32-tenant
 #    identical-doc dedup sweep, physical vs logical segment bytes;
 #    synthetic model)
+#  * benches/e2e_serving.rs --scenarios-only  → BENCH_scenarios.json
+#    (fork/join decode scenarios: parallel sampling n=1/4/16 and
+#    width-4 beam search on COW-forked chains — peak physical vs
+#    logical KV bytes, prefill-skip %, steady tok/s; synthetic model)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -79,6 +83,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== tiered KV spill/dedup smoke (BENCH_kv_tiers.json) =="
     cargo bench --bench e2e_serving -- --tiered-only
     echo "report: $(cd .. && pwd)/BENCH_kv_tiers.json"
+
+    echo "== fork/join scenarios smoke (BENCH_scenarios.json) =="
+    cargo bench --bench e2e_serving -- --scenarios-only
+    echo "report: $(cd .. && pwd)/BENCH_scenarios.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
