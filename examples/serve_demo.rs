@@ -12,6 +12,7 @@
 //!       --affinity on|off   prefix-affinity routing for the trace replay
 //!       --send-buffer N     per-stream token buffer (slow consumers shed)
 //!       --stream            append a live per-token streaming demo over TCP
+//!                           (ends with a {"cmd":"stats"} metrics scrape)
 //!
 //! Always ends with the tiered-KV showcase: a hot cap far below the
 //! working set forces the cached prefix out, the cold tier demotes it
@@ -191,6 +192,41 @@ fn run_streaming(model: Arc<Model>, rcfg: RouterConfig, opts: DemoOpts) {
                 println!("stream cancelled after {tokens_streamed} tokens: {reason}");
             }
             StreamFrame::Keepalive { .. } => {}
+        }
+    }
+
+    // Live metrics scrape over the same connection — the
+    // `{"cmd":"stats"}` admin frame any operator tool can send (see
+    // README § Observability for the snapshot schema).
+    match client.stats() {
+        Ok(snap) => {
+            let counter = |name: &str| {
+                snap.get("counters")
+                    .and_then(|c| c.get(name))
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(0.0)
+            };
+            println!(
+                "stats scrape: {:.0} requests completed, {:.0} tokens generated \
+                 ({:.0} streamed), fired fraction {:.4}",
+                counter("requests_completed"),
+                counter("generated_tokens"),
+                counter("tokens_streamed"),
+                snap.get("fired_fraction_overall")
+                    .and_then(|v| v.as_f64())
+                    .unwrap_or(1.0),
+            );
+        }
+        Err(e) => println!("stats scrape failed: {e}"),
+    }
+    if let Ok(text) = client.stats_prometheus() {
+        println!("prometheus excerpt:");
+        for line in text
+            .lines()
+            .filter(|l| l.starts_with("hsr_requests_") || l.starts_with("hsr_generated_"))
+            .take(4)
+        {
+            println!("  {line}");
         }
     }
 

@@ -222,6 +222,31 @@ impl AttentionSession {
         &self.index
     }
 
+    /// Fraction of reported points that arrived via whole-subtree bulk
+    /// reports (no per-point inner product) across all `run` calls so
+    /// far — the output-sensitivity Corollary 3.1 buys. Guarded: 0.0
+    /// before any query.
+    pub fn bulk_report_fraction(&self) -> f64 {
+        crate::obs::telemetry::ratio_or(
+            self.stats.bulk_reported as f64,
+            self.stats.reported as f64,
+            0.0,
+        )
+    }
+
+    /// Accumulated work counters plus fallbacks as JSON, for trace
+    /// dumps and diagnostics.
+    pub fn telemetry_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("nodes_visited", self.stats.nodes_visited.into())
+            .set("points_scanned", self.stats.points_scanned.into())
+            .set("bulk_reported", self.stats.bulk_reported.into())
+            .set("reported", self.stats.reported.into())
+            .set("fallbacks", self.fallbacks.into())
+            .set("bulk_report_fraction", self.bulk_report_fraction().into());
+        o
+    }
+
     /// Append a generated token's key — Theorem D.2's auto-regressive
     /// growth, amortized-logarithmic via the dynamic index.
     pub fn append_key(&mut self, key: &[f32]) {
@@ -812,6 +837,34 @@ mod tests {
             assert!(linf(&out, &want) < 1e-4, "backend={backend:?}");
             assert!(fired.iter().sum::<usize>() > 0);
         }
+    }
+
+    /// Telemetry accessors are guarded on a fresh session and populate
+    /// after a run.
+    #[test]
+    fn telemetry_guarded_and_populates() {
+        let mut rng = Rng::new(307);
+        let inst = AttentionInstance::gaussian(&mut rng, 16, 300, 8);
+        let bias = inst.params.practical_bias(inst.n) as f32;
+        let mut session = AttentionConfig::new(
+            AttentionKind::Relu { alpha: 2, bias },
+            HsrBackend::BallTree,
+        )
+        .with_bias(bias)
+        .build(&inst.k, inst.d);
+        // Before any query: ratios are defined (no NaN), counters zero.
+        assert_eq!(session.bulk_report_fraction(), 0.0);
+        let js = session.telemetry_json();
+        assert_eq!(js.req_usize("reported").unwrap(), 0);
+        let mut out = vec![0f32; inst.m * inst.d];
+        let mut fired = vec![0usize; inst.m];
+        session.run(&inst.q, &inst.v, &mut out, &mut fired);
+        let js = session.telemetry_json();
+        let work = js.req_usize("points_scanned").unwrap()
+            + js.req_usize("nodes_visited").unwrap();
+        assert!(work > 0);
+        let frac = js.req_f64("bulk_report_fraction").unwrap();
+        assert!((0.0..=1.0).contains(&frac), "frac={frac}");
     }
 
     /// plan() + execute() is the same computation run() performs —

@@ -1,10 +1,17 @@
 //! Engine metrics: counters + latency histograms, cheap enough for the
 //! token hot loop, merged across workers by the router.
 
+use crate::obs::telemetry::{ratio_or, SparsityHist};
 use crate::util::stats::Histogram;
 
 /// Aggregated serving metrics.
-#[derive(Debug, Clone, Default)]
+///
+/// `merge` is associative and commutative (worker-order-independent):
+/// every field is an integer sum, a max-merged gauge, an exact-merge
+/// histogram, or — for the one f64 — an addition whose test inputs are
+/// dyadic rationals. The live stats endpoint depends on this: snapshots
+/// merge per-worker copies in whatever order the router walks them.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
     pub requests_submitted: u64,
     pub requests_completed: u64,
@@ -19,6 +26,7 @@ pub struct Metrics {
     pub ttft: Histogram,
     /// HSR instrumentation totals.
     pub hsr_points_scanned: u64,
+    pub hsr_nodes_visited: u64,
     pub hsr_reported: u64,
     pub attended_entries: u64,
     pub dense_equivalent_entries: u64,
@@ -127,6 +135,10 @@ pub struct Metrics {
     /// Beam hypotheses pruned (blocks and chain refs released without a
     /// response; the survivors carry the beam forward).
     pub beam_prunes: u64,
+    // --- sparsity telemetry ---
+    /// Empirical fired-entry fraction per context-length bucket,
+    /// reported against the paper's `n^{4/5}` envelope.
+    pub fired_fraction: SparsityHist,
 }
 
 impl Metrics {
@@ -140,6 +152,7 @@ impl Metrics {
         self.request_latency.merge(&other.request_latency);
         self.ttft.merge(&other.ttft);
         self.hsr_points_scanned += other.hsr_points_scanned;
+        self.hsr_nodes_visited += other.hsr_nodes_visited;
         self.hsr_reported += other.hsr_reported;
         self.attended_entries += other.attended_entries;
         self.dense_equivalent_entries += other.dense_equivalent_entries;
@@ -177,27 +190,27 @@ impl Metrics {
         self.fork_shared_tokens += other.fork_shared_tokens;
         self.fork_recompute_fallbacks += other.fork_recompute_fallbacks;
         self.beam_prunes += other.beam_prunes;
+        self.fired_fraction.merge(&other.fired_fraction);
     }
 
     /// Fraction of demanded prefill tokens skipped via the shared-prefix
     /// cache (the bench's "prefill tokens skipped"); always in [0, 1].
     pub fn prefix_skip_rate(&self) -> f64 {
-        if self.prefill_tokens_demanded == 0 {
-            return 0.0;
-        }
-        self.prefill_tokens_skipped as f64 / self.prefill_tokens_demanded as f64
+        ratio_or(
+            self.prefill_tokens_skipped as f64,
+            self.prefill_tokens_demanded as f64,
+            0.0,
+        )
     }
 
     /// Fraction of radix lookups that adopted a cached chain.
     pub fn prefix_hit_rate(&self) -> f64 {
-        if self.prefix_lookups == 0 {
-            return 0.0;
-        }
-        self.prefix_hits as f64 / self.prefix_lookups as f64
+        ratio_or(self.prefix_hits as f64, self.prefix_lookups as f64, 0.0)
     }
 
     pub fn record_step_stats(&mut self, s: &crate::model::transformer::StepStats) {
         self.hsr_points_scanned += s.hsr.points_scanned as u64;
+        self.hsr_nodes_visited += s.hsr.nodes_visited as u64;
         self.hsr_reported += s.hsr.reported as u64;
         self.attended_entries += s.attended as u64;
         self.dense_equivalent_entries += s.dense_equivalent as u64;
@@ -207,10 +220,11 @@ impl Metrics {
     /// Fraction of attention entries actually computed vs dense
     /// (1 − this = the Table-1 "sparsity ratio" realized by the engine).
     pub fn attended_fraction(&self) -> f64 {
-        if self.dense_equivalent_entries == 0 {
-            return 1.0;
-        }
-        self.attended_entries as f64 / self.dense_equivalent_entries as f64
+        ratio_or(
+            self.attended_entries as f64,
+            self.dense_equivalent_entries as f64,
+            1.0,
+        )
     }
 
     /// Human-readable summary block.
@@ -378,6 +392,120 @@ mod tests {
         let s = a.summary();
         assert!(s.contains("2 groups / 8 forks / 640 shared tokens"), "{s}");
         assert!(s.contains("1 recompute fallbacks / 6 beam prunes"), "{s}");
+    }
+
+    /// Deterministic pseudo-random `Metrics` value touching every field
+    /// class: integer counters, the max-merged gauge, both histograms,
+    /// the f64 accumulator (dyadic rationals so f64 addition is exact),
+    /// and the sparsity histogram.
+    fn arb_metrics(seed: u64) -> Metrics {
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let mut m = Metrics::default();
+        m.requests_submitted = next() % 100;
+        m.requests_completed = next() % 100;
+        m.requests_preempted = next() % 10;
+        m.prompt_tokens = next() % 10_000;
+        m.generated_tokens = next() % 10_000;
+        m.hsr_points_scanned = next() % 100_000;
+        m.hsr_nodes_visited = next() % 100_000;
+        m.hsr_reported = next() % 10_000;
+        m.attended_entries = next() % 10_000;
+        m.dense_equivalent_entries = next() % 100_000;
+        m.calibration_fallbacks = next() % 10;
+        m.prefix_lookups = next() % 100;
+        m.prefix_hits = next() % 100;
+        m.prefill_tokens_skipped = next() % 1000;
+        m.prefill_tokens_demanded = next() % 1000;
+        m.prefix_tokens_inserted = next() % 1000;
+        m.prefix_segments_evicted = next() % 50;
+        m.prefix_sheds = next() % 5;
+        m.grouped_decode_rows = next() % 500;
+        m.segments_spilled = next() % 50;
+        m.segments_refaulted = next() % 50;
+        m.spill_bytes = next() % 1_000_000;
+        m.refault_rebuild_ms = (next() % 64) as f64 * 0.25;
+        m.dedup_hits = next() % 50;
+        m.dedup_bytes_saved = next() % 100_000;
+        m.requests_rejected = next() % 20;
+        m.requests_failed = next() % 20;
+        m.deadline_aborts = next() % 10;
+        m.disconnect_aborts = next() % 10;
+        m.worker_panics = next() % 4;
+        m.worker_restarts = next() % 4;
+        m.kv_blocks_leaked = next() % 2;
+        m.queue_depth_peak = next() % 64;
+        m.tokens_streamed = next() % 10_000;
+        m.streams_severed = next() % 10;
+        m.slow_consumer_sheds = next() % 10;
+        m.affinity_hits = next() % 100;
+        m.affinity_fallbacks = next() % 100;
+        m.group_requests = next() % 10;
+        m.sequence_forks = next() % 20;
+        m.fork_shared_tokens = next() % 5000;
+        m.fork_recompute_fallbacks = next() % 5;
+        m.beam_prunes = next() % 20;
+        for _ in 0..(next() % 8) {
+            m.step_latency.record_ns(1_000 + next() % 10_000_000);
+            m.request_latency.record_ns(1_000 + next() % 100_000_000);
+            m.ttft.record_ns(1_000 + next() % 50_000_000);
+            m.ttft_wire.record_ns(1_000 + next() % 50_000_000);
+        }
+        for _ in 0..(next() % 6) {
+            let ctx = 1 + (next() % 100_000) as usize;
+            let dense = 1 + next() % 100_000;
+            m.fired_fraction.record(ctx, next() % (dense + 1), dense);
+        }
+        m
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        // The stats endpoint merges per-worker metrics in whatever
+        // order the router walks its slots; the result must not depend
+        // on that order. Histogram and sparsity merges included.
+        for seed in 0..32u64 {
+            let a = arb_metrics(seed * 3 + 1);
+            let b = arb_metrics(seed * 3 + 2);
+            let c = arb_metrics(seed * 3 + 3);
+            // (a ⊕ b) ⊕ c
+            let mut ab_c = a.clone();
+            ab_c.merge(&b);
+            ab_c.merge(&c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c, a_bc, "associativity failed at seed {seed}");
+            // a ⊕ b == b ⊕ a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab, ba, "commutativity failed at seed {seed}");
+            // Identity: merging a default is a no-op.
+            let mut id = a.clone();
+            id.merge(&Metrics::default());
+            assert_eq!(id, a, "identity failed at seed {seed}");
+        }
+    }
+
+    #[test]
+    fn empty_engine_ratios_are_guarded() {
+        // Satellite: every ratio on a fresh engine goes through the
+        // shared zero-denominator helper and stays finite.
+        let m = Metrics::default();
+        assert_eq!(m.prefix_skip_rate(), 0.0);
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        assert_eq!(m.attended_fraction(), 1.0);
+        assert_eq!(m.fired_fraction.overall_fraction(), 1.0);
+        assert!(m.summary().lines().count() >= 9, "summary renders empty");
     }
 
     #[test]

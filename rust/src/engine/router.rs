@@ -161,6 +161,12 @@ struct WorkerState {
     /// Queued + running requests owned by this worker.
     in_flight: AtomicUsize,
     alive: AtomicBool,
+    /// Latest metrics snapshot published by the worker after each engine
+    /// turn, so live `stats_snapshot()` scrapes see in-flight progress.
+    /// Cleared (under `Shared::metrics` → `published` lock order) when
+    /// the engine's counters merge into `Shared::metrics` at worker exit
+    /// or panic — a worker's counters are never counted twice.
+    published: Mutex<Metrics>,
 }
 
 #[derive(Default)]
@@ -480,10 +486,14 @@ impl Shared {
             // toggled on a live router: report what we have.
             None => (-1, "none", 0, 0),
         };
+        // Same monotonic clock as trace events and stats snapshots, so
+        // reqlog lines merge-sort into one timeline with trace dumps.
+        let ts = crate::obs::clock::now_us();
         match outcome {
             Outcome::Done(r) => eprintln!(
-                "reqlog id={} outcome=done finish={} prompt={} tokens={} \
+                "reqlog ts_us={} id={} outcome=done finish={} prompt={} tokens={} \
                  latency_ms={:.1} ttft_ms={:.1} worker={} affinity={} retries={}",
+                ts,
                 id,
                 finish_tag(r.finish),
                 r.prompt_len,
@@ -495,9 +505,9 @@ impl Shared {
                 retries,
             ),
             Outcome::Failed(e) => eprintln!(
-                "reqlog id={} outcome=failed code={} prompt={} tokens=0 \
+                "reqlog ts_us={} id={} outcome=failed code={} prompt={} tokens=0 \
                  latency_ms=0.0 ttft_ms=0.0 worker={} affinity={} retries={}",
-                id, e.code, meta_prompt, worker, affinity, retries,
+                ts, id, e.code, meta_prompt, worker, affinity, retries,
             ),
         }
     }
@@ -546,6 +556,7 @@ impl Router {
                 cv: Condvar::new(),
                 in_flight: AtomicUsize::new(0),
                 alive: AtomicBool::new(true),
+                published: Mutex::new(Metrics::default()),
             })
             .collect();
         let shared = Arc::new(Shared {
@@ -801,6 +812,41 @@ impl Router {
         }
     }
 
+    /// Live, non-destructive metrics aggregate across the pool: the
+    /// shared totals already merged from exited/panicked engines, plus
+    /// each worker's last published per-turn snapshot, plus the
+    /// router-level robustness counters — the same aggregation
+    /// `shutdown` performs, without stopping anything. Safe to call
+    /// from any thread while traffic flows; the `{"cmd":"stats"}` admin
+    /// frame and the `--metrics-interval` reporter are thin callers.
+    pub fn stats_snapshot(&self) -> Metrics {
+        let s = &self.shared;
+        let mut merged = Metrics::default();
+        {
+            // metrics → published lock order matches the worker exit and
+            // panic paths, so every worker's counters appear exactly
+            // once per scrape (either still published, or merged).
+            let shared_m = lock_ok(&s.metrics);
+            merged.merge(&shared_m);
+            for w in &s.workers {
+                merged.merge(&lock_ok(&w.published));
+            }
+        }
+        merged.requests_rejected += s.rejected.load(Ordering::Relaxed);
+        merged.requests_failed += s.failed.load(Ordering::Relaxed);
+        merged.disconnect_aborts += s.cancelled_in_queue.load(Ordering::Relaxed);
+        merged.worker_panics += s.worker_panics.load(Ordering::Relaxed);
+        merged.worker_restarts += s.worker_restarts.load(Ordering::Relaxed);
+        merged.queue_depth_peak = merged
+            .queue_depth_peak
+            .max(s.queue_depth_peak.load(Ordering::Relaxed));
+        merged.affinity_hits += s.affinity_hits.load(Ordering::Relaxed);
+        merged.affinity_fallbacks += s.affinity_fallbacks.load(Ordering::Relaxed);
+        merged.streams_severed += s.streams_severed.load(Ordering::Relaxed);
+        merged.ttft_wire.merge(&lock_ok(&s.ttft_wire));
+        merged
+    }
+
     /// Graceful shutdown: stop admitting, let workers drain, merge
     /// their metrics. Blocks until all in-flight work completes.
     pub fn shutdown(self) -> Metrics {
@@ -935,6 +981,8 @@ fn worker_loop(widx: usize, shared: Arc<Shared>) {
         }));
         match turn {
             Ok((done, rejected)) => {
+                // Publish this engine's live counters for stats scrapes.
+                *lock_ok(&me.published) = engine.metrics.clone();
                 for resp in done {
                     shared.publish(widx, Outcome::Done(resp));
                 }
@@ -967,7 +1015,16 @@ fn worker_loop(widx: usize, shared: Arc<Shared>) {
     let leaked = engine.reclaim_and_count_leaks();
     let mut m = engine.metrics.clone();
     m.kv_blocks_leaked += leaked as u64;
-    lock_ok(&shared.metrics).merge(&m);
+    {
+        // Lock order metrics → published (stats_snapshot takes the
+        // same order): merging into the shared totals and clearing the
+        // live slot is atomic w.r.t. scrapes, so no scrape ever sees
+        // this worker's counters both merged and published.
+        let mut shared_m = lock_ok(&shared.metrics);
+        let mut pubm = lock_ok(&me.published);
+        shared_m.merge(&m);
+        *pubm = Metrics::default();
+    }
     me.alive.store(false, Ordering::Release);
 }
 
@@ -990,7 +1047,19 @@ fn recover_from_panic(widx: usize, shared: &Shared, mut engine: Engine) -> Engin
     // submissions by their new engine, so they leave this snapshot.
     let mut m = engine.metrics.clone();
     m.requests_submitted = m.requests_submitted.saturating_sub(redispatch.len() as u64);
-    lock_ok(&shared.metrics).merge(&m);
+    {
+        // Same metrics → published lock order as the worker exit path.
+        let mut shared_m = lock_ok(&shared.metrics);
+        let mut pubm = lock_ok(&me.published);
+        shared_m.merge(&m);
+        *pubm = Metrics::default();
+    }
+    // Dump the dead engine's flight-recorder ring before discarding it:
+    // the span timeline leading up to the panic is exactly what a
+    // post-mortem needs.
+    if let Some(path) = engine.recorder.dump_panic(widx) {
+        eprintln!("trace: worker {widx} flight recorder dumped to {}", path.display());
+    }
     drop(engine); // pool/radix state is untrusted — discard wholesale
     let fresh = worker_engine(shared, widx, FaultPlan::none());
     shared.worker_restarts.fetch_add(1, Ordering::Relaxed);

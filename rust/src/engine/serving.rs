@@ -38,6 +38,8 @@ use crate::kvstore::{
 };
 use crate::model::kv::KvState;
 use crate::model::transformer::RSpec;
+use crate::obs::clock;
+use crate::obs::trace::{FlightRecorder, SpanKind, TraceConfig};
 use crate::model::transformer::{
     argmax, sample, AttentionPolicy, BatchWorkspace, StepStats, Workspace,
 };
@@ -167,6 +169,9 @@ pub struct EngineConfig {
     /// consults the plan at the top of every `step`; the router filters
     /// it per worker.
     pub faults: FaultPlan,
+    /// Flight-recorder tracing (ring size, trace dir, on/off). Each
+    /// engine owns one [`FlightRecorder`] built from this.
+    pub trace: TraceConfig,
 }
 
 impl Default for EngineConfig {
@@ -184,6 +189,7 @@ impl Default for EngineConfig {
             id_offset: 0,
             decode_threads: 0,
             faults: FaultPlan::none(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -228,6 +234,14 @@ pub struct Engine {
     /// sequence carries `group == Some(gid)` pointing here.
     groups: HashMap<RequestId, Group>,
     pub metrics: Metrics,
+    /// Flight recorder: bounded ring of span events on the shared
+    /// engine clock (see [`crate::obs::trace`]). The router dumps it on
+    /// worker panic; terminal outcomes dump per-request timelines when
+    /// a trace dir is configured.
+    pub recorder: FlightRecorder,
+    /// Submission timestamp (shared clock, µs) per queued request,
+    /// consumed at admission for the queue-wait span.
+    arrivals: HashMap<RequestId, u64>,
     next_id: RequestId,
     /// `step()` calls so far (drives deterministic fault injection).
     steps: u64,
@@ -288,6 +302,8 @@ impl Engine {
             bws,
             groups: HashMap::new(),
             metrics: Metrics::default(),
+            recorder: FlightRecorder::new(&cfg.trace),
+            arrivals: HashMap::new(),
             next_id: cfg.id_offset + 1,
             steps: 0,
             model,
@@ -351,6 +367,9 @@ impl Engine {
     fn enqueue_request(&mut self, req: Request) {
         self.metrics.requests_submitted += 1;
         self.metrics.prompt_tokens += req.prompt.len() as u64;
+        if self.recorder.enabled() {
+            self.arrivals.insert(req.id, clock::now_us());
+        }
         let mut seq = self.new_sequence(req);
         let width = seq.params.group_width() as usize;
         if width >= 2 {
@@ -551,6 +570,12 @@ impl Engine {
                             if let Some(sink) = &seq.stream {
                                 if sink.push_token(next, seq.sibling) {
                                     self.metrics.tokens_streamed += 1;
+                                    self.recorder.record(
+                                        sid,
+                                        SpanKind::StreamSend,
+                                        seq.sibling as u64,
+                                        next as u64,
+                                    );
                                 }
                             }
                         }
@@ -558,6 +583,12 @@ impl Engine {
                 }
                 seq.prefilled += chunk;
                 tokens += chunk;
+                self.recorder.record(
+                    sid,
+                    SpanKind::PrefillChunk,
+                    chunk as u64,
+                    (seq.prompt.len() - seq.prefilled.min(seq.prompt.len())) as u64,
+                );
                 // Publish the freshly computed range so siblings (and
                 // future identical prompts) can adopt it.
                 let headroom = self.cfg.scheduler.prefix_headroom_blocks;
@@ -587,6 +618,27 @@ impl Engine {
             }
         }
         self.decode_batch(&decode_ids, &mut stats);
+        if self.recorder.enabled() {
+            // Engine-wide spans (request id 0): one decode-step event
+            // and one HSR-traversal rollup per step, not per row — the
+            // per-request rings stay dominated by request-scoped spans.
+            if !decode_ids.is_empty() {
+                self.recorder.record(
+                    0,
+                    SpanKind::DecodeStep,
+                    decode_ids.len() as u64,
+                    t0.elapsed().as_micros() as u64,
+                );
+            }
+            if stats.dense_equivalent > 0 {
+                self.recorder.record(
+                    0,
+                    SpanKind::HsrTraversal,
+                    stats.attended as u64,
+                    stats.dense_equivalent as u64,
+                );
+            }
+        }
         self.metrics.record_step_stats(&stats);
         self.sync_tier_metrics();
         if tokens > 0 {
@@ -601,6 +653,26 @@ impl Engine {
     /// Set-style, not additive: both sides are totals for this engine.
     fn sync_tier_metrics(&mut self) {
         let s = self.store.pool.tier_stats();
+        if self.recorder.enabled() {
+            // The pool counters are cumulative totals; the difference
+            // against the last sync is this step's tier activity.
+            let spilled =
+                s.segments_spilled.saturating_sub(self.metrics.segments_spilled);
+            if spilled > 0 {
+                self.recorder.record(0, SpanKind::Spill, spilled, s.spill_bytes);
+            }
+            let refaulted = s
+                .segments_refaulted
+                .saturating_sub(self.metrics.segments_refaulted);
+            if refaulted > 0 {
+                self.recorder.record(
+                    0,
+                    SpanKind::Refault,
+                    refaulted,
+                    s.segments_refaulted,
+                );
+            }
+        }
         self.metrics.segments_spilled = s.segments_spilled;
         self.metrics.segments_refaulted = s.segments_refaulted;
         self.metrics.spill_bytes = s.spill_bytes;
@@ -671,9 +743,33 @@ impl Engine {
             }
         }
         debug_assert_eq!(views.len(), members.len());
+        let att0 = stats.attended;
+        let den0 = stats.dense_equivalent;
         let logits =
             model.decode_step_batch_shared(&tokens, &mut views, &groups, policy, bws, stats);
         drop(views);
+        // Fired-fraction telemetry: this batch's attended/dense deltas,
+        // apportioned per member by its context length. The batch shares
+        // one traversal, so per-row splits are an estimate — but the
+        // fraction (attended / dense-equivalent) is exact in aggregate
+        // and is what the n^{-1/5} envelope check consumes.
+        let d_att = (stats.attended - att0) as u64;
+        let d_den = (stats.dense_equivalent - den0) as u64;
+        if d_den > 0 {
+            for &(i, _) in &members {
+                let seq = &self.running[i];
+                let ctx = (seq.prefix_len + seq.kv.len()) as u64;
+                if ctx == 0 {
+                    continue;
+                }
+                let fired = ((d_att as u128 * ctx as u128) / d_den as u128) as u64;
+                self.metrics.fired_fraction.record(
+                    ctx as usize,
+                    fired.min(ctx),
+                    ctx,
+                );
+            }
+        }
         // Beam-group members don't sample: their continuations are
         // ranked jointly per group below (forking the winners, pruning
         // the losers). Everyone else samples from their own rng stream.
@@ -721,6 +817,12 @@ impl Engine {
                 // sequence at the top of the next step.
                 if sink.push_token(next, seq.sibling) {
                     self.metrics.tokens_streamed += 1;
+                    self.recorder.record(
+                        sid,
+                        SpanKind::StreamSend,
+                        seq.sibling as u64,
+                        next as u64,
+                    );
                 }
             }
         }
@@ -826,6 +928,12 @@ impl Engine {
             if let Some(sink) = &seq.stream {
                 if sink.push_token(tok, seq.sibling) {
                     self.metrics.tokens_streamed += 1;
+                    self.recorder.record(
+                        sid,
+                        SpanKind::StreamSend,
+                        seq.sibling as u64,
+                        tok as u64,
+                    );
                 }
             }
         }
@@ -1055,8 +1163,10 @@ impl Engine {
             _ => return,
         };
         let sink = seq.stream.as_ref().expect("matched above");
-        if sink.push_token(tok, seq.sibling) {
+        let sibling = seq.sibling;
+        if sink.push_token(tok, sibling) {
             self.metrics.tokens_streamed += 1;
+            self.recorder.record(id, SpanKind::StreamSend, sibling as u64, tok as u64);
         }
     }
 
@@ -1439,6 +1549,25 @@ impl Engine {
             // Every admission demands a full-prompt prefill (preempted
             // re-admissions included) — the skip-rate denominator.
             self.metrics.prefill_tokens_demanded += seq.prompt.len() as u64;
+            if self.recorder.enabled() {
+                // Queue-wait covers submission → first admission only
+                // (the arrival stamp is consumed here; re-admissions
+                // after preemption record just the admit span).
+                if let Some(t0) = self.arrivals.remove(&seq.id) {
+                    self.recorder.record(
+                        seq.id,
+                        SpanKind::QueueWait,
+                        clock::now_us().saturating_sub(t0),
+                        self.waiting.len() as u64,
+                    );
+                }
+                self.recorder.record(
+                    seq.id,
+                    SpanKind::Admit,
+                    seq.prompt.len() as u64,
+                    matched as u64,
+                );
+            }
             if matched > 0 {
                 self.store.radix.ref_chain(&chain);
                 seq.prefix = chain;
@@ -1576,6 +1705,20 @@ impl Engine {
         self.metrics.requests_completed += 1;
         self.metrics.request_latency.record(latency);
         self.metrics.ttft.record(ttft);
+        self.arrivals.remove(&seq.id);
+        if self.recorder.enabled() {
+            let clean = matches!(
+                reason,
+                FinishReason::Length | FinishReason::StopToken
+            );
+            self.recorder.record(
+                seq.id,
+                SpanKind::Outcome,
+                seq.generated.len() as u64,
+                u64::from(!clean),
+            );
+            self.recorder.dump_request(seq.id);
+        }
         self.finished.push(Response {
             id: seq.id,
             tokens: seq.generated,
@@ -1647,7 +1790,18 @@ impl Engine {
         self.metrics.requests_completed += 1;
         self.metrics.request_latency.record(latency);
         self.metrics.ttft.record(ttft);
+        self.arrivals.remove(&gid);
         let best = g.results.first();
+        if self.recorder.enabled() {
+            let cleanly = best.is_some_and(|c| clean(c.finish));
+            self.recorder.record(
+                gid,
+                SpanKind::Outcome,
+                best.map(|c| c.tokens.len()).unwrap_or(0) as u64,
+                u64::from(!cleanly),
+            );
+            self.recorder.dump_request(gid);
+        }
         self.finished.push(Response {
             id: gid,
             tokens: best.map(|c| c.tokens.clone()).unwrap_or_default(),

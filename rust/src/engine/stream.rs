@@ -68,6 +68,9 @@ struct SinkState {
     closed: bool,
     /// Wire TTFT: set when the first token enters the channel.
     first_token: Option<Duration>,
+    /// Same instant on the shared monotonic engine clock (µs), so wire
+    /// TTFT merge-sorts with trace events and reqlog lines.
+    first_token_ts_us: Option<u64>,
 }
 
 /// Bounded per-request streaming channel (see module docs).
@@ -113,6 +116,7 @@ impl StreamSink {
         st.pushed += 1;
         if st.first_token.is_none() {
             st.first_token = Some(self.born.elapsed());
+            st.first_token_ts_us = Some(crate::obs::clock::now_us());
         }
         st.queue.push_back(StreamEvent { seq, token, sibling });
         drop(st);
@@ -143,6 +147,13 @@ impl StreamSink {
     /// later, at sequence admission). `None` until a token was pushed.
     pub fn wire_ttft(&self) -> Option<Duration> {
         lock_ok(&self.state).first_token
+    }
+
+    /// First-token instant on the shared monotonic engine clock
+    /// ([`crate::obs::clock::now_us`]), for correlating wire delivery
+    /// with flight-recorder spans. `None` until a token was pushed.
+    pub fn first_token_ts_us(&self) -> Option<u64> {
+        lock_ok(&self.state).first_token_ts_us
     }
 
     /// Receive the next event, blocking up to `timeout` (Condvar-

@@ -128,6 +128,41 @@ pub struct TierStats {
     pub dedup_bytes_saved: u64,
 }
 
+impl TierStats {
+    /// Fraction of spilled segments that later refaulted (0.0 while
+    /// nothing has spilled — guarded like every metrics ratio).
+    pub fn refault_rate(&self) -> f64 {
+        crate::obs::telemetry::ratio_or(
+            self.segments_refaulted as f64,
+            self.segments_spilled as f64,
+            0.0,
+        )
+    }
+
+    /// Mean refault rebuild cost in milliseconds (0.0 with no refaults).
+    pub fn mean_rebuild_ms(&self) -> f64 {
+        crate::obs::telemetry::ratio_or(
+            self.refault_rebuild_ns as f64 / 1e6,
+            self.segments_refaulted as f64,
+            0.0,
+        )
+    }
+
+    /// JSON form for bench reports and trace dumps.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("segments_spilled", self.segments_spilled.into())
+            .set("segments_refaulted", self.segments_refaulted.into())
+            .set("spill_bytes", self.spill_bytes.into())
+            .set("refault_rebuild_ms", (self.refault_rebuild_ns as f64 / 1e6).into())
+            .set("dedup_hits", self.dedup_hits.into())
+            .set("dedup_bytes_saved", self.dedup_bytes_saved.into())
+            .set("refault_rate", self.refault_rate().into())
+            .set("mean_rebuild_ms", self.mean_rebuild_ms().into());
+        o
+    }
+}
+
 // --- cold-record codec -------------------------------------------------
 //
 // record := 'K' version=1 flags
@@ -337,6 +372,28 @@ mod tests {
     use super::*;
     use crate::hsr::{HalfSpaceReport, QueryStats};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn tier_stats_ratios_guard_zero_denominators() {
+        let empty = TierStats::default();
+        assert_eq!(empty.refault_rate(), 0.0);
+        assert_eq!(empty.mean_rebuild_ms(), 0.0);
+        let js = empty.to_json();
+        assert_eq!(js.req_usize("segments_spilled").unwrap(), 0);
+        let busy = TierStats {
+            segments_spilled: 8,
+            segments_refaulted: 2,
+            spill_bytes: 4096,
+            refault_rebuild_ns: 3_000_000,
+            dedup_hits: 1,
+            dedup_bytes_saved: 512,
+        };
+        assert!((busy.refault_rate() - 0.25).abs() < 1e-12);
+        assert!((busy.mean_rebuild_ms() - 1.5).abs() < 1e-12);
+        let js = busy.to_json();
+        assert!((js.req_f64("refault_rate").unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(js.req_usize("dedup_hits").unwrap(), 1);
+    }
 
     fn frozen_kv(seed: u64, rows: usize, d: usize, backend: Option<HsrBackend>) -> KvState {
         let mut rng = Rng::new(seed);

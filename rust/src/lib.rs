@@ -46,6 +46,7 @@ pub mod hsr;
 pub mod kernel;
 pub mod kvstore;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod util;

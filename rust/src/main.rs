@@ -41,6 +41,12 @@ const USAGE: &str = "usage: hsr-attn <serve|generate|table1|info> [--flags]\n\
                                                        preferred worker is dead/saturated\n\
   --send-buffer <N>                                    per-stream token buffer (serve);\n\
                                                        a consumer this far behind is shed\n\
+  --trace <on|off>                                     flight-recorder span tracing\n\
+                                                       (default on; rings dump on panic)\n\
+  --trace-dir <dir>                                    also write per-request JSONL\n\
+                                                       timelines and panic dumps here\n\
+  --metrics-interval <secs>                            periodic stderr metrics line\n\
+                                                       (serve; 0 = off)\n\
   --deadline-ms <N>                                    request deadline (generate)";
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -99,6 +105,19 @@ fn engine_config(args: &Args) -> EngineConfig {
     if hot_blocks > 0 {
         cfg.cache_capacity_tokens = hot_blocks * cfg.block_tokens;
     }
+    cfg.trace.enabled = match args.str_or("trace", "on") {
+        "off" => false,
+        "on" => true,
+        other => {
+            eprintln!("invalid --trace '{other}' (want on|off)");
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let trace_dir = args.str_or("trace-dir", "");
+    if !trace_dir.is_empty() {
+        cfg.trace.trace_dir = Some(PathBuf::from(trace_dir));
+    }
     cfg
 }
 
@@ -146,6 +165,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let router =
         Arc::new(Router::with_config(model, engine_config(args), workers, rcfg));
+    let metrics_interval = args.usize_or("metrics-interval", 0);
+    if metrics_interval > 0 {
+        // Periodic stderr reporter: one compact delta line per interval
+        // off the same live snapshot the {"cmd":"stats"} frame serves.
+        // Detached on purpose — it dies with the process.
+        let router = Arc::clone(&router);
+        std::thread::Builder::new()
+            .name("metrics-reporter".to_string())
+            .spawn(move || {
+                let mut prev: Option<hsr_attn::obs::Snapshot> = None;
+                loop {
+                    std::thread::sleep(std::time::Duration::from_secs(
+                        metrics_interval as u64,
+                    ));
+                    let snap = hsr_attn::obs::Snapshot::of(&router.stats_snapshot());
+                    eprintln!("{}", snap.delta_line(prev.as_ref()));
+                    prev = Some(snap);
+                }
+            })
+            .expect("spawn metrics reporter");
+    }
     let server = Server::bind_with(router, addr, scfg)?;
     println!("hsr-attn serving on {} ({} workers)", server.local_addr()?, workers);
     println!("protocol: one JSON object per line, e.g.");

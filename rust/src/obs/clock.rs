@@ -1,0 +1,35 @@
+//! The single monotonic engine clock.
+//!
+//! Every observability timestamp in the process — flight-recorder trace
+//! events, `reqlog` stderr lines, metrics snapshots — is microseconds
+//! since one process-wide anchor, so per-worker ring dumps and request
+//! logs merge-sort into one coherent timeline. The anchor is lazily
+//! initialized on first use and never moves; the clock is monotonic
+//! because [`std::time::Instant`] is.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process-wide monotonic epoch (first call
+/// anchors the epoch at 0).
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_shared() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+        // Two observers on different threads read the same epoch.
+        let t = std::thread::spawn(now_us).join().unwrap();
+        assert!(t >= a);
+    }
+}

@@ -1,0 +1,462 @@
+//! Metrics export surface: a snapshot/delta registry over
+//! [`Metrics`](crate::engine::metrics::Metrics) with a Prometheus-style
+//! text exposition and a JSON form.
+//!
+//! The registry is one static table of `(name, kind, help, accessor)`
+//! rows — the metric-name catalog the README documents — so the JSON
+//! snapshot, the Prometheus text, the periodic stderr line, and the
+//! bench validators all agree on names by construction. Snapshots are
+//! cheap value copies; [`Snapshot::delta_line`] renders rates between
+//! two of them for the `--metrics-interval` reporter.
+
+use super::clock;
+use super::telemetry::ratio_or;
+use crate::engine::metrics::Metrics;
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+use std::fmt::Write as _;
+
+/// Exposition kind of one registry row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone non-decreasing over an engine's lifetime.
+    Counter,
+    /// Point-in-time value (peaks, ratios).
+    Gauge,
+}
+
+/// One registry row: a named scalar over [`Metrics`].
+pub struct MetricDef {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    pub help: &'static str,
+    get: fn(&Metrics) -> f64,
+}
+
+macro_rules! counters {
+    ($(($name:ident, $help:expr)),* $(,)?) => {
+        &[$(MetricDef {
+            name: stringify!($name),
+            kind: MetricKind::Counter,
+            help: $help,
+            get: |m: &Metrics| m.$name as f64,
+        }),*]
+    };
+}
+
+/// Counter rows (field name == metric name).
+static COUNTERS: &[MetricDef] = counters![
+    (requests_submitted, "Requests accepted by an engine"),
+    (requests_completed, "Requests that reached a terminal response"),
+    (requests_preempted, "Sequences preempted under memory pressure"),
+    (requests_rejected, "Requests shed by admission control"),
+    (requests_failed, "Requests answered with a terminal structured error"),
+    (prompt_tokens, "Prompt tokens admitted"),
+    (generated_tokens, "Tokens decoded"),
+    (hsr_points_scanned, "Keys scanned by HSR traversals"),
+    (hsr_nodes_visited, "HSR tree nodes visited by traversals"),
+    (hsr_reported, "Keys reported (fired) by HSR traversals"),
+    (attended_entries, "Attention entries actually computed"),
+    (dense_equivalent_entries, "Entries dense attention would compute"),
+    (calibration_fallbacks, "Top-r calibration fallbacks to dense scan"),
+    (prefix_lookups, "Radix prefix-cache probes"),
+    (prefix_hits, "Probes that adopted a cached chain"),
+    (prefill_tokens_skipped, "Prompt tokens skipped via adopted prefixes"),
+    (prefill_tokens_demanded, "Prompt tokens demanded of prefill"),
+    (prefix_tokens_inserted, "Prompt tokens published as shared segments"),
+    (prefix_segments_evicted, "Cached segments LRU-evicted"),
+    (prefix_sheds, "Adopted chains shed by wedged sequences"),
+    (grouped_decode_rows, "Decode rows answered in shared-prefix groups"),
+    (segments_spilled, "Segments demoted to the compressed cold tier"),
+    (segments_refaulted, "Cold segments promoted back on prefix match"),
+    (spill_bytes, "Compressed bytes written to the spill store"),
+    (dedup_hits, "Publishes deduplicated against resident segments"),
+    (dedup_bytes_saved, "Payload bytes dedup hits did not duplicate"),
+    (deadline_aborts, "Sequences aborted past their deadline"),
+    (disconnect_aborts, "Sequences cancelled by client disconnect"),
+    (worker_panics, "Worker threads that panicked"),
+    (worker_restarts, "Panicked workers restarted in place"),
+    (kv_blocks_leaked, "KV blocks unreturned after drain (0 when correct)"),
+    (tokens_streamed, "Tokens accepted into stream sinks"),
+    (streams_severed, "Streams truncated before a clean finish"),
+    (slow_consumer_sheds, "Streams shed for slow consumers"),
+    (affinity_hits, "Dispatches that followed the prefix-affinity sketch"),
+    (affinity_fallbacks, "Sketch hints degraded to least-loaded"),
+    (group_requests, "Grouped (sampling/beam) requests admitted"),
+    (sequence_forks, "Mid-decode sequence forks"),
+    (fork_shared_tokens, "KV tokens shared by forked siblings"),
+    (fork_recompute_fallbacks, "Forks that fell back to recompute"),
+    (beam_prunes, "Beam hypotheses pruned"),
+];
+
+/// Gauge rows (ratios and peaks; not monotone).
+static GAUGES: &[MetricDef] = &[
+    MetricDef {
+        name: "queue_depth_peak",
+        kind: MetricKind::Gauge,
+        help: "Peak queued+running requests across the pool",
+        get: |m| m.queue_depth_peak as f64,
+    },
+    MetricDef {
+        name: "refault_rebuild_ms",
+        kind: MetricKind::Gauge,
+        help: "Milliseconds spent rebuilding refaulted segments",
+        get: |m| m.refault_rebuild_ms,
+    },
+    MetricDef {
+        name: "prefix_skip_rate",
+        kind: MetricKind::Gauge,
+        help: "Fraction of demanded prefill tokens skipped",
+        get: |m| m.prefix_skip_rate(),
+    },
+    MetricDef {
+        name: "prefix_hit_rate",
+        kind: MetricKind::Gauge,
+        help: "Fraction of radix lookups that hit",
+        get: |m| m.prefix_hit_rate(),
+    },
+    MetricDef {
+        name: "attended_fraction",
+        kind: MetricKind::Gauge,
+        help: "Attention entries computed vs dense equivalent",
+        get: |m| m.attended_fraction(),
+    },
+    MetricDef {
+        name: "dedup_hit_rate",
+        kind: MetricKind::Gauge,
+        help: "Segment publishes resolved by content dedup",
+        get: |m| {
+            ratio_or(
+                m.dedup_hits as f64,
+                (m.dedup_hits + m.prefix_tokens_inserted.min(u64::MAX)) as f64,
+                0.0,
+            )
+        },
+    },
+];
+
+/// The latency histograms exported alongside the scalars.
+static HISTOGRAMS: &[(&str, fn(&Metrics) -> &Histogram)] = &[
+    ("step_latency_ns", |m| &m.step_latency),
+    ("request_latency_ns", |m| &m.request_latency),
+    ("ttft_ns", |m| &m.ttft),
+    ("ttft_wire_ns", |m| &m.ttft_wire),
+];
+
+/// Every scalar row, counters first (iteration order is the catalog
+/// order the README documents).
+pub fn registry() -> impl Iterator<Item = &'static MetricDef> {
+    COUNTERS.iter().chain(GAUGES.iter())
+}
+
+/// Names of the counter rows (the monotone set scrape validators
+/// check).
+pub fn counter_names() -> Vec<&'static str> {
+    COUNTERS.iter().map(|d| d.name).collect()
+}
+
+/// Value snapshot of one histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnap {
+    pub name: &'static str,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub mean_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub max_ns: u64,
+    /// `(upper_bound_ns, cumulative_count)`; the final bound is `None`
+    /// (+Inf).
+    pub buckets: Vec<(Option<u64>, u64)>,
+}
+
+impl HistSnap {
+    fn of(name: &'static str, h: &Histogram) -> HistSnap {
+        let mut cum = 0u64;
+        let buckets = h
+            .buckets()
+            .map(|(bound, count)| {
+                cum += count;
+                (bound, cum)
+            })
+            .collect();
+        HistSnap {
+            name,
+            count: h.count(),
+            sum_ns: h.sum_ns(),
+            mean_ns: h.mean_ns(),
+            p50_ns: h.percentile_ns(50.0),
+            p99_ns: h.percentile_ns(99.0),
+            max_ns: h.max_ns(),
+            buckets,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("count", self.count.into())
+            .set("sum_ns", self.sum_ns.into())
+            .set("mean_ns", self.mean_ns.into())
+            .set("p50_ns", self.p50_ns.into())
+            .set("p99_ns", self.p99_ns.into())
+            .set("max_ns", self.max_ns.into());
+        // Only non-empty cumulative buckets; the full ladder is 28 rows
+        // of mostly zeros.
+        let arr: Vec<Json> = self
+            .buckets
+            .iter()
+            .filter(|(_, cum)| *cum > 0)
+            .map(|(bound, cum)| {
+                let mut b = Json::obj();
+                match bound {
+                    Some(ns) => b.set("le_ns", (*ns).into()),
+                    None => b.set("le_ns", "+Inf".into()),
+                };
+                b.set("count", (*cum).into());
+                b
+            })
+            .collect();
+        o.set("buckets", Json::Arr(arr));
+        o
+    }
+}
+
+/// A point-in-time copy of every exported value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// Microseconds on the shared engine clock when the snapshot was
+    /// taken.
+    pub ts_us: u64,
+    /// `(name, kind, value)` in registry order.
+    pub values: Vec<(&'static str, MetricKind, f64)>,
+    pub histograms: Vec<HistSnap>,
+    /// Fired-fraction histogram summary (per context-length bucket).
+    pub fired_fraction: Json,
+    pub fired_fraction_overall: f64,
+    pub fired_fraction_count: u64,
+}
+
+impl Snapshot {
+    /// Snapshot a merged [`Metrics`] value.
+    pub fn of(m: &Metrics) -> Snapshot {
+        Snapshot {
+            ts_us: clock::now_us(),
+            values: registry().map(|d| (d.name, d.kind, (d.get)(m))).collect(),
+            histograms: HISTOGRAMS
+                .iter()
+                .map(|(name, get)| HistSnap::of(name, get(m)))
+                .collect(),
+            fired_fraction: m.fired_fraction.to_json(),
+            fired_fraction_overall: m.fired_fraction.overall_fraction(),
+            fired_fraction_count: m.fired_fraction.count(),
+        }
+    }
+
+    /// Value of a named scalar row.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.iter().find(|(n, _, _)| *n == name).map(|(_, _, v)| *v)
+    }
+
+    /// JSON form: `{"ts_us":..,"counters":{..},"gauges":{..},
+    /// "histograms":{..},"fired_fraction":[..]}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        let mut gauges = Json::obj();
+        for (name, kind, v) in &self.values {
+            match kind {
+                MetricKind::Counter => counters.set(name, (*v).into()),
+                MetricKind::Gauge => gauges.set(name, (*v).into()),
+            };
+        }
+        let mut hists = Json::obj();
+        for h in &self.histograms {
+            hists.set(h.name, h.to_json());
+        }
+        let mut o = Json::obj();
+        o.set("ts_us", self.ts_us.into())
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+            .set("fired_fraction", self.fired_fraction.clone())
+            .set("fired_fraction_overall", self.fired_fraction_overall.into())
+            .set("fired_fraction_count", self.fired_fraction_count.into());
+        o
+    }
+
+    /// Prometheus-style text exposition: `# HELP`/`# TYPE` pairs per
+    /// scalar, cumulative `_bucket{le=..}` ladders plus `_sum`/`_count`
+    /// per histogram, all under the `hsr_` namespace.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for d in registry() {
+            let v = self.get(d.name).unwrap_or(0.0);
+            let kind = match d.kind {
+                MetricKind::Counter => "counter",
+                MetricKind::Gauge => "gauge",
+            };
+            let _ = writeln!(out, "# HELP hsr_{} {}", d.name, d.help);
+            let _ = writeln!(out, "# TYPE hsr_{} {}", d.name, kind);
+            let _ = writeln!(out, "hsr_{} {}", d.name, fmt_value(v));
+        }
+        for h in &self.histograms {
+            let _ = writeln!(out, "# TYPE hsr_{} histogram", h.name);
+            for (bound, cum) in &h.buckets {
+                match bound {
+                    Some(ns) => {
+                        let _ = writeln!(
+                            out,
+                            "hsr_{}_bucket{{le=\"{ns}\"}} {cum}",
+                            h.name
+                        );
+                    }
+                    None => {
+                        let _ = writeln!(
+                            out,
+                            "hsr_{}_bucket{{le=\"+Inf\"}} {cum}",
+                            h.name
+                        );
+                    }
+                }
+            }
+            let _ = writeln!(out, "hsr_{}_sum {}", h.name, h.sum_ns);
+            let _ = writeln!(out, "hsr_{}_count {}", h.name, h.count);
+        }
+        let _ = writeln!(out, "# TYPE hsr_fired_fraction_overall gauge");
+        let _ = writeln!(
+            out,
+            "hsr_fired_fraction_overall {}",
+            fmt_value(self.fired_fraction_overall)
+        );
+        out
+    }
+
+    /// One compact stderr line for the `--metrics-interval` reporter:
+    /// absolute totals plus per-second rates against `prev`.
+    pub fn delta_line(&self, prev: Option<&Snapshot>) -> String {
+        let get = |name: &str| self.get(name).unwrap_or(0.0);
+        let mut line = format!(
+            "metrics ts_us={} completed={} generated={} rejected={} \
+             panics={} attended={:.2}%",
+            self.ts_us,
+            get("requests_completed") as u64,
+            get("generated_tokens") as u64,
+            get("requests_rejected") as u64,
+            get("worker_panics") as u64,
+            100.0 * get("attended_fraction"),
+        );
+        if let Some(p) = prev {
+            let dt_s = (self.ts_us.saturating_sub(p.ts_us)) as f64 / 1e6;
+            let rate = |name: &str| {
+                ratio_or(get(name) - p.get(name).unwrap_or(0.0), dt_s, 0.0)
+            };
+            let _ = write!(
+                line,
+                " tok_per_s={:.1} req_per_s={:.2}",
+                rate("generated_tokens"),
+                rate("requests_completed"),
+            );
+        }
+        line
+    }
+}
+
+/// Plain decimal rendering (Prometheus has no use for `1e6` noise on
+/// integral counters).
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics::default();
+        m.requests_submitted = 5;
+        m.requests_completed = 4;
+        m.generated_tokens = 128;
+        m.attended_entries = 25;
+        m.dense_equivalent_entries = 100;
+        m.prefill_tokens_demanded = 200;
+        m.prefill_tokens_skipped = 50;
+        m.step_latency.record_ns(2_000_000);
+        m.step_latency.record_ns(4_000_000);
+        m.fired_fraction.record(1024, 128, 1024);
+        m
+    }
+
+    #[test]
+    fn snapshot_json_has_catalog_and_histograms() {
+        let snap = Snapshot::of(&sample_metrics());
+        let js = snap.to_json();
+        let counters = js.get("counters").unwrap();
+        for name in counter_names() {
+            assert!(counters.get(name).is_some(), "missing counter {name}");
+        }
+        assert_eq!(counters.req_usize("generated_tokens").unwrap(), 128);
+        let gauges = js.get("gauges").unwrap();
+        assert!((gauges.req_f64("attended_fraction").unwrap() - 0.25).abs() < 1e-12);
+        assert!((gauges.req_f64("prefix_skip_rate").unwrap() - 0.25).abs() < 1e-12);
+        let hists = js.get("histograms").unwrap();
+        let step = hists.get("step_latency_ns").unwrap();
+        assert_eq!(step.req_usize("count").unwrap(), 2);
+        assert!(step.req_f64("mean_ns").unwrap() > 0.0);
+        let ff = js.get("fired_fraction").unwrap().as_arr().unwrap();
+        assert_eq!(ff.len(), 1);
+        assert_eq!(ff[0].req_usize("ctx_log2").unwrap(), 10);
+        // The whole snapshot survives a JSON round trip.
+        let rt = Json::parse(&js.to_string()).unwrap();
+        assert_eq!(rt, js);
+    }
+
+    #[test]
+    fn empty_engine_snapshot_is_finite() {
+        // Satellite: zero-denominator guards — a snapshot of a fresh
+        // engine must emit finite numbers everywhere, never NaN/inf.
+        let snap = Snapshot::of(&Metrics::default());
+        for (name, _, v) in &snap.values {
+            assert!(v.is_finite(), "{name} must be finite on empty metrics");
+        }
+        assert_eq!(snap.get("prefix_skip_rate"), Some(0.0));
+        assert_eq!(snap.get("prefix_hit_rate"), Some(0.0));
+        assert_eq!(snap.get("attended_fraction"), Some(1.0));
+        assert_eq!(snap.get("dedup_hit_rate"), Some(0.0));
+        assert!(snap.fired_fraction_overall.is_finite());
+        let text = snap.to_prometheus();
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let snap = Snapshot::of(&sample_metrics());
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE hsr_requests_completed counter"));
+        assert!(text.contains("hsr_requests_completed 4"));
+        assert!(text.contains("# TYPE hsr_queue_depth_peak gauge"));
+        assert!(text.contains("# TYPE hsr_step_latency_ns histogram"));
+        assert!(text.contains("hsr_step_latency_ns_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("hsr_step_latency_ns_count 2"));
+        // Cumulative ladder is non-decreasing.
+        let step = &snap.histograms[0];
+        assert!(step.buckets.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(step.buckets.last().unwrap().1, 2);
+    }
+
+    #[test]
+    fn delta_line_reports_rates() {
+        let prev = Snapshot::of(&sample_metrics());
+        let mut m2 = sample_metrics();
+        m2.generated_tokens += 100;
+        let mut cur = Snapshot::of(&m2);
+        cur.ts_us = prev.ts_us + 2_000_000; // +2s
+        let line = cur.delta_line(Some(&prev));
+        assert!(line.starts_with("metrics ts_us="), "{line}");
+        assert!(line.contains("tok_per_s=50.0"), "{line}");
+        // Without a previous snapshot: totals only, no rates.
+        assert!(!cur.delta_line(None).contains("tok_per_s"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Observability: flight-recorder tracing, sparsity telemetry, and the
+//! metrics export surface.
+//!
+//! Three pillars, one subsystem:
+//!
+//! * [`trace`] — a bounded per-worker ring buffer of timestamped span
+//!   events ([`FlightRecorder`]) correlated by request id. Supervisors
+//!   dump the ring as JSONL on worker panic; `--trace-dir` also writes
+//!   per-request timelines at terminal outcomes.
+//! * [`telemetry`] — per-context-length fired-fraction histograms
+//!   ([`SparsityHist`]) checking empirical sparsity against the paper's
+//!   `n^{4/5}` decode envelope, plus the shared [`ratio_or`] guard for
+//!   every metrics ratio.
+//! * [`export`] — a snapshot/delta registry ([`Snapshot`]) over the
+//!   engine's merged `Metrics` with Prometheus-style text exposition
+//!   and a JSON form, served by the `{"cmd":"stats"}` admin frame and
+//!   the `--metrics-interval` stderr reporter.
+//!
+//! Everything stamps time with [`clock::now_us`] — one process-wide
+//! monotonic clock — so `reqlog` lines, trace dumps, and snapshots
+//! merge-sort into a single timeline.
+
+pub mod clock;
+pub mod export;
+pub mod telemetry;
+pub mod trace;
+
+pub use export::{MetricKind, Snapshot};
+pub use telemetry::{ratio_or, SparsityHist};
+pub use trace::{FlightRecorder, SpanKind, TraceConfig, TraceEvent};

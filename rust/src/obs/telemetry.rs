@@ -1,0 +1,224 @@
+//! Sparsity telemetry: per-context-length fired-fraction histograms
+//! that check the engine's empirical sparsity against the paper's
+//! `n^{4/5}` decode envelope, plus the shared zero-denominator ratio
+//! helper every metrics rate goes through.
+
+use crate::util::json::Json;
+
+/// `num / den`, or `default` when the denominator is zero — the one
+/// shared guard for every metrics ratio (`prefix_skip_rate`,
+/// `attended_fraction`, hit rates), so an empty-engine snapshot never
+/// divides by zero or emits NaN.
+#[inline]
+pub fn ratio_or(num: f64, den: f64, default: f64) -> f64 {
+    if den == 0.0 {
+        default
+    } else {
+        num / den
+    }
+}
+
+/// Context lengths are bucketed by `log2`: bucket `i` covers
+/// `[2^i, 2^(i+1))` tokens, up to 2^20 (1M) and beyond in the last.
+pub const CTX_BUCKETS: usize = 21;
+
+/// Per-bucket accumulator. Totals are integers so merging is exactly
+/// associative and commutative (the property the multi-worker stats
+/// aggregation depends on); min/max track the per-observation fraction.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+struct Bucket {
+    /// Observations (decode rows) in this context-length bucket.
+    count: u64,
+    /// Total attention entries actually computed.
+    fired: u64,
+    /// Total dense-equivalent entries (context length per row summed).
+    dense: u64,
+    /// Smallest single-observation fired fraction (0 when empty).
+    min_frac: f64,
+    /// Largest single-observation fired fraction.
+    max_frac: f64,
+}
+
+/// Histogram of empirical fired-entry fractions keyed by context
+/// length, reported against the paper's `n^{4/5}` envelope (a fired
+/// *fraction* of `n^{-1/5}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparsityHist {
+    buckets: Vec<Bucket>,
+}
+
+impl Default for SparsityHist {
+    fn default() -> Self {
+        SparsityHist { buckets: vec![Bucket::default(); CTX_BUCKETS] }
+    }
+}
+
+/// Bucket index for a context length (log2, clamped to the table).
+fn bucket_of(ctx_len: usize) -> usize {
+    (usize::BITS - 1 - ctx_len.max(1).leading_zeros()) as usize
+}
+
+impl SparsityHist {
+    /// The paper's fired-fraction envelope at context length `n`:
+    /// decode touches `O(n^{4/5})` entries, a fraction of `n^{-1/5}`.
+    pub fn envelope(ctx_len: usize) -> f64 {
+        if ctx_len == 0 {
+            return 1.0;
+        }
+        (ctx_len as f64).powf(-0.2)
+    }
+
+    /// Record one observation: a decode row over `ctx_len` cached
+    /// tokens fired `fired` of `dense` dense-equivalent entries.
+    pub fn record(&mut self, ctx_len: usize, fired: u64, dense: u64) {
+        if dense == 0 {
+            return;
+        }
+        let b = &mut self.buckets[bucket_of(ctx_len).min(CTX_BUCKETS - 1)];
+        let frac = fired as f64 / dense as f64;
+        if b.count == 0 {
+            b.min_frac = frac;
+            b.max_frac = frac;
+        } else {
+            b.min_frac = b.min_frac.min(frac);
+            b.max_frac = b.max_frac.max(frac);
+        }
+        b.count += 1;
+        b.fired += fired;
+        b.dense += dense;
+    }
+
+    /// Merge another histogram (exactly associative and commutative:
+    /// integer sums plus min/max).
+    pub fn merge(&mut self, other: &SparsityHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            if b.count == 0 {
+                continue;
+            }
+            if a.count == 0 {
+                a.min_frac = b.min_frac;
+                a.max_frac = b.max_frac;
+            } else {
+                a.min_frac = a.min_frac.min(b.min_frac);
+                a.max_frac = a.max_frac.max(b.max_frac);
+            }
+            a.count += b.count;
+            a.fired += b.fired;
+            a.dense += b.dense;
+        }
+    }
+
+    /// Total observations across buckets.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.count).sum()
+    }
+
+    /// Mean fired fraction across everything recorded (1.0 when empty:
+    /// an engine that never pruned is dense).
+    pub fn overall_fraction(&self) -> f64 {
+        let fired: u64 = self.buckets.iter().map(|b| b.fired).sum();
+        let dense: u64 = self.buckets.iter().map(|b| b.dense).sum();
+        ratio_or(fired as f64, dense as f64, 1.0)
+    }
+
+    /// JSON summary: one entry per non-empty bucket with the mean /
+    /// min / max fired fraction and the paper envelope `n^{-1/5}` at
+    /// the bucket's lower edge.
+    pub fn to_json(&self) -> Json {
+        let arr: Vec<Json> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.count > 0)
+            .map(|(i, b)| {
+                let lo = 1usize << i;
+                let mut o = Json::obj();
+                o.set("ctx_log2", i.into())
+                    .set("ctx_lo", lo.into())
+                    .set("count", b.count.into())
+                    .set("fired", b.fired.into())
+                    .set("dense", b.dense.into())
+                    .set(
+                        "mean_fraction",
+                        ratio_or(b.fired as f64, b.dense as f64, 1.0).into(),
+                    )
+                    .set("min_fraction", b.min_frac.into())
+                    .set("max_fraction", b.max_frac.into())
+                    .set("envelope", Self::envelope(lo).into());
+                o
+            })
+            .collect();
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_or_guards_zero_denominators() {
+        assert_eq!(ratio_or(3.0, 0.0, 0.0), 0.0);
+        assert_eq!(ratio_or(3.0, 0.0, 1.0), 1.0);
+        assert!((ratio_or(1.0, 4.0, 0.0) - 0.25).abs() < 1e-12);
+        assert!(ratio_or(0.0, 0.0, 0.5).is_finite());
+    }
+
+    #[test]
+    fn buckets_by_log2_context() {
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(0), 0, "degenerate context clamps to 0");
+    }
+
+    #[test]
+    fn record_and_summarize() {
+        let mut h = SparsityHist::default();
+        h.record(1000, 100, 1000); // 10% fired at ctx ~1k
+        h.record(1000, 300, 1000);
+        h.record(8, 8, 8); // dense tiny context
+        assert_eq!(h.count(), 3);
+        let js = h.to_json();
+        let arr = js.as_arr().unwrap();
+        assert_eq!(arr.len(), 2, "two non-empty buckets");
+        let big = arr.iter().find(|o| o.req_usize("ctx_log2").unwrap() == 9).unwrap();
+        assert_eq!(big.req_usize("count").unwrap(), 2);
+        assert!((big.req_f64("mean_fraction").unwrap() - 0.2).abs() < 1e-12);
+        assert!((big.req_f64("min_fraction").unwrap() - 0.1).abs() < 1e-12);
+        assert!((big.req_f64("max_fraction").unwrap() - 0.3).abs() < 1e-12);
+        // Envelope is n^{-1/5} of the bucket's lower edge.
+        let env = big.req_f64("envelope").unwrap();
+        assert!((env - (512f64).powf(-0.2)).abs() < 1e-12);
+        // Empty histogram is "dense" by convention.
+        assert_eq!(SparsityHist::default().overall_fraction(), 1.0);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mk = |obs: &[(usize, u64, u64)]| {
+            let mut h = SparsityHist::default();
+            for &(c, f, d) in obs {
+                h.record(c, f, d);
+            }
+            h
+        };
+        let a = mk(&[(100, 10, 100), (5000, 40, 5000)]);
+        let b = mk(&[(100, 90, 100)]);
+        let c = mk(&[(64, 64, 64), (5000, 10, 5000)]);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "associative");
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "commutative");
+    }
+}

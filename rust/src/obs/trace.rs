@@ -1,0 +1,356 @@
+//! Flight recorder: a bounded per-worker ring buffer of timestamped
+//! span events, correlated by request id on the shared monotonic
+//! engine clock ([`super::clock`]).
+//!
+//! The recorder is built for postmortems, not for sampling profilers:
+//! recording one event is a timestamp read plus a ring-slot write (no
+//! allocation, no lock, no I/O), cheap enough to stay on in production.
+//! Three consumers drain it:
+//!
+//! * **Panic dumps** — when a worker panics, the supervisor dumps the
+//!   dead engine's ring as JSONL (`panic_worker<W>.jsonl` under the
+//!   trace dir, or stderr when none is configured) before discarding
+//!   the engine, so the last `ring_capacity` events leading up to the
+//!   fault survive it.
+//! * **Per-request timelines** — with a trace dir configured, each
+//!   request's events are filtered out of the ring at its terminal
+//!   outcome and written to `req_<id>.jsonl` continuously.
+//! * **Tests/tools** — [`FlightRecorder::events`] returns the ring
+//!   oldest-first for in-process inspection.
+
+use super::clock;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// What a trace event marks. Engine-wide events (decode steps, HSR
+/// traversal totals, tier activity) carry request id 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// A request was admitted to the running set; `a` = prompt tokens,
+    /// `b` = tokens adopted from the shared-prefix cache.
+    Admit,
+    /// Time the request spent queued before admission; `a` = wait in
+    /// microseconds, `b` = waiting-queue depth at admission.
+    QueueWait,
+    /// One chunk of prompt prefill; `a` = chunk tokens, `b` = prompt
+    /// tokens still pending after the chunk.
+    PrefillChunk,
+    /// One batched decode step (engine-wide); `a` = rows decoded,
+    /// `b` = step wall time in microseconds.
+    DecodeStep,
+    /// HSR traversal work of one step (engine-wide); `a` = entries
+    /// attended, `b` = dense-equivalent entries.
+    HsrTraversal,
+    /// Segments demoted to the cold tier (engine-wide); `a` = segments,
+    /// `b` = cumulative spill bytes.
+    Spill,
+    /// Cold segments promoted back (engine-wide); `a` = segments,
+    /// `b` = cumulative refaults.
+    Refault,
+    /// One token accepted into a stream sink; `a` = sibling index,
+    /// `b` = the token.
+    StreamSend,
+    /// Terminal outcome; `a` = generated tokens, `b` = 0 for a clean
+    /// finish, 1 otherwise.
+    Outcome,
+}
+
+impl SpanKind {
+    /// Stable wire name (the `span` field of dumped JSONL lines).
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::PrefillChunk => "prefill_chunk",
+            SpanKind::DecodeStep => "decode_step",
+            SpanKind::HsrTraversal => "hsr_traversal",
+            SpanKind::Spill => "spill",
+            SpanKind::Refault => "refault",
+            SpanKind::StreamSend => "stream_send",
+            SpanKind::Outcome => "outcome",
+        }
+    }
+}
+
+/// One timestamped span event. `a`/`b` are two span-kind-specific
+/// payload words (see [`SpanKind`]) — fixed-width so recording never
+/// allocates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Microseconds on the shared monotonic engine clock.
+    pub ts_us: u64,
+    /// Correlating request id (0 for engine-wide events).
+    pub req: u64,
+    pub kind: SpanKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+impl TraceEvent {
+    /// JSON object form (`{"ts_us":..,"req":..,"span":..,"a":..,"b":..}`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("ts_us", self.ts_us.into())
+            .set("req", self.req.into())
+            .set("span", self.kind.name().into())
+            .set("a", self.a.into())
+            .set("b", self.b.into());
+        o
+    }
+}
+
+/// Flight-recorder knobs, carried on
+/// [`EngineConfig`](crate::engine::EngineConfig).
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Record span events at all. On by default — the `BENCH_obs.json`
+    /// section holds steady decode within 3% of tracing off.
+    pub enabled: bool,
+    /// Ring size in events; the ring keeps the newest `ring_capacity`
+    /// events and overwrites the oldest beyond it.
+    pub ring_capacity: usize,
+    /// Directory for continuous per-request timelines
+    /// (`req_<id>.jsonl`) and panic dumps (`panic_worker<W>.jsonl`).
+    /// `None` keeps tracing in-memory only (panic dumps then go to
+    /// stderr).
+    pub trace_dir: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, ring_capacity: 4096, trace_dir: None }
+    }
+}
+
+/// Bounded ring of [`TraceEvent`]s (see module docs).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    enabled: bool,
+    trace_dir: Option<PathBuf>,
+    ring: Vec<TraceEvent>,
+    cap: usize,
+    /// Next slot to overwrite once the ring is full.
+    next: usize,
+    /// Total events ever recorded (≥ `ring.len()`; the difference is
+    /// how many the ring has already forgotten).
+    recorded: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: &TraceConfig) -> FlightRecorder {
+        let cap = cfg.ring_capacity.max(1);
+        FlightRecorder {
+            enabled: cfg.enabled,
+            trace_dir: cfg.trace_dir.clone(),
+            ring: Vec::with_capacity(if cfg.enabled { cap.min(1024) } else { 0 }),
+            cap,
+            next: 0,
+            recorded: 0,
+        }
+    }
+
+    /// A recorder that drops everything (tracing off).
+    pub fn disabled() -> FlightRecorder {
+        FlightRecorder::new(&TraceConfig {
+            enabled: false,
+            ring_capacity: 1,
+            trace_dir: None,
+        })
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Where per-request timelines and panic dumps go, if anywhere.
+    pub fn trace_dir(&self) -> Option<&Path> {
+        self.trace_dir.as_deref()
+    }
+
+    /// Record one span event: a clock read and a ring write. No-op when
+    /// tracing is off.
+    #[inline]
+    pub fn record(&mut self, req: u64, kind: SpanKind, a: u64, b: u64) {
+        if !self.enabled {
+            return;
+        }
+        let ev = TraceEvent { ts_us: clock::now_us(), req, kind, a, b };
+        if self.ring.len() < self.cap {
+            self.ring.push(ev);
+        } else {
+            self.ring[self.next] = ev;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.recorded += 1;
+    }
+
+    /// Events currently held (≤ ring capacity).
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total events ever recorded, including those the ring forgot.
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// The ring's events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.ring.len());
+        if self.ring.len() == self.cap {
+            out.extend_from_slice(&self.ring[self.next..]);
+            out.extend_from_slice(&self.ring[..self.next]);
+        } else {
+            out.extend_from_slice(&self.ring);
+        }
+        out
+    }
+
+    /// Write the ring (oldest first) as JSONL; returns lines written.
+    pub fn dump_jsonl<W: Write>(&self, w: &mut W) -> std::io::Result<usize> {
+        let events = self.events();
+        for ev in &events {
+            writeln!(w, "{}", ev.to_json())?;
+        }
+        Ok(events.len())
+    }
+
+    /// Postmortem dump after a worker panic: the whole ring as JSONL to
+    /// `<trace_dir>/panic_worker<widx>.jsonl` (appending, so repeated
+    /// panics of one worker accumulate), or to stderr when no trace dir
+    /// is configured. Returns the file path when one was written.
+    /// Never panics — supervision calls this on the salvage path.
+    pub fn dump_panic(&self, widx: usize) -> Option<PathBuf> {
+        if !self.enabled || self.ring.is_empty() {
+            return None;
+        }
+        if let Some(dir) = &self.trace_dir {
+            let path = dir.join(format!("panic_worker{widx}.jsonl"));
+            let file = std::fs::create_dir_all(dir)
+                .and_then(|_| {
+                    std::fs::OpenOptions::new().create(true).append(true).open(&path)
+                });
+            if let Ok(mut f) = file {
+                if self.dump_jsonl(&mut f).is_ok() {
+                    return Some(path);
+                }
+            }
+            return None;
+        }
+        let mut err = std::io::stderr().lock();
+        for ev in self.events() {
+            let _ = writeln!(err, "trace worker={widx} {}", ev.to_json());
+        }
+        None
+    }
+
+    /// Continuous per-request timeline: filter this request's events
+    /// out of the ring and write them to `<trace_dir>/req_<id>.jsonl`.
+    /// No-op without a trace dir. Called at the request's terminal
+    /// outcome, when its whole timeline is in the ring (or the oldest
+    /// spans have aged out, in which case the tail still lands).
+    pub fn dump_request(&self, req: u64) -> Option<PathBuf> {
+        let dir = self.trace_dir.as_ref()?;
+        if !self.enabled {
+            return None;
+        }
+        let events: Vec<TraceEvent> =
+            self.events().into_iter().filter(|e| e.req == req).collect();
+        if events.is_empty() {
+            return None;
+        }
+        let path = dir.join(format!("req_{req}.jsonl"));
+        std::fs::create_dir_all(dir).ok()?;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .ok()?;
+        for ev in &events {
+            writeln!(f, "{}", ev.to_json()).ok()?;
+        }
+        Some(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_keeps_newest_in_order() {
+        let mut r = FlightRecorder::new(&TraceConfig {
+            enabled: true,
+            ring_capacity: 4,
+            trace_dir: None,
+        });
+        for i in 0..10u64 {
+            r.record(i, SpanKind::DecodeStep, i, 0);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.recorded(), 10);
+        let evs = r.events();
+        let reqs: Vec<u64> = evs.iter().map(|e| e.req).collect();
+        assert_eq!(reqs, vec![6, 7, 8, 9]);
+        // Timestamps are non-decreasing on the shared clock.
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = FlightRecorder::disabled();
+        r.record(1, SpanKind::Admit, 2, 3);
+        assert!(r.is_empty());
+        assert_eq!(r.recorded(), 0);
+        assert!(r.dump_panic(0).is_none());
+        assert!(r.dump_request(1).is_none());
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let mut r = FlightRecorder::new(&TraceConfig::default());
+        r.record(7, SpanKind::Admit, 40, 16);
+        r.record(7, SpanKind::Outcome, 8, 0);
+        let mut buf = Vec::new();
+        assert_eq!(r.dump_jsonl(&mut buf).unwrap(), 2);
+        let text = String::from_utf8(buf).unwrap();
+        for line in text.lines() {
+            let v = Json::parse(line).unwrap();
+            assert_eq!(v.req_usize("req").unwrap(), 7);
+            assert!(v.req_usize("ts_us").is_ok());
+            assert!(matches!(
+                v.req_str("span").unwrap(),
+                "admit" | "outcome"
+            ));
+        }
+    }
+
+    #[test]
+    fn panic_and_request_dumps_write_files() {
+        let dir = std::env::temp_dir().join(format!(
+            "hsr_trace_test_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = FlightRecorder::new(&TraceConfig {
+            enabled: true,
+            ring_capacity: 64,
+            trace_dir: Some(dir.clone()),
+        });
+        r.record(3, SpanKind::Admit, 10, 0);
+        r.record(0, SpanKind::DecodeStep, 1, 5);
+        r.record(3, SpanKind::Outcome, 2, 0);
+        let p = r.dump_panic(1).expect("panic dump path");
+        assert!(std::fs::metadata(&p).unwrap().len() > 0);
+        let q = r.dump_request(3).expect("request dump path");
+        let body = std::fs::read_to_string(&q).unwrap();
+        assert_eq!(body.lines().count(), 2, "only request 3's events");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

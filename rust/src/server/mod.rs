@@ -49,11 +49,14 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 pub use protocol::{
-    parse_frame, parse_request, render_cancelled_frame,
-    render_cancelled_frame_sibling, render_choice_done_frame,
-    render_done_frame, render_error, render_keepalive, render_request,
-    render_response, render_stream_error, render_stream_error_sibling,
-    render_token_frame, StreamFrame, WireRequest,
+    parse_admin, parse_frame, parse_request, parse_stats_response,
+    render_cancelled_frame, render_cancelled_frame_sibling,
+    render_choice_done_frame, render_done_frame, render_error,
+    render_keepalive, render_request, render_response,
+    render_stats_request, render_stats_response,
+    render_stats_text_response, render_stream_error,
+    render_stream_error_sibling, render_token_frame, AdminCmd,
+    StatsFormat, StatsReply, StreamFrame, WireRequest,
 };
 
 /// Connection-handling knobs.
@@ -537,6 +540,31 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
+        // Admin frames ({"cmd":...}) carry no prompt and are answered
+        // inline — dispatched before request parsing so a stats scrape
+        // works on any connection, including mid-chaos ones.
+        if let Some(admin) = parse_admin(&line) {
+            match admin {
+                Ok(AdminCmd::Stats { format }) => {
+                    let snap =
+                        crate::obs::Snapshot::of(&router.stats_snapshot());
+                    let reply = match format {
+                        StatsFormat::Json => render_stats_response(snap.to_json()),
+                        StatsFormat::Prometheus => {
+                            render_stats_text_response(&snap.to_prometheus())
+                        }
+                    };
+                    write_line(&mut writer, &reply)?;
+                }
+                Err(e) => {
+                    write_line(
+                        &mut writer,
+                        &render_error("bad_request", &e.to_string(), None),
+                    )?;
+                }
+            }
+            continue;
+        }
         let req = match parse_request(&line) {
             Ok(req) => req,
             Err(e) => {
@@ -659,6 +687,36 @@ impl Client {
         self.stream.write_all(b"\n")?;
         self.stream.flush()?;
         Ok(())
+    }
+
+    /// Scrape the server's live metrics snapshot (`{"cmd":"stats"}`).
+    pub fn stats(&mut self) -> Result<crate::util::json::Json> {
+        self.stream.write_all(render_stats_request(StatsFormat::Json).as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "connection closed by server");
+        match parse_stats_response(&line)? {
+            StatsReply::Json(v) => Ok(v),
+            StatsReply::Text(_) => anyhow::bail!("expected json stats reply"),
+        }
+    }
+
+    /// Scrape the Prometheus text exposition
+    /// (`{"cmd":"stats","format":"prometheus"}`).
+    pub fn stats_prometheus(&mut self) -> Result<String> {
+        self.stream
+            .write_all(render_stats_request(StatsFormat::Prometheus).as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "connection closed by server");
+        match parse_stats_response(&line)? {
+            StatsReply::Text(t) => Ok(t),
+            StatsReply::Json(_) => anyhow::bail!("expected prometheus stats reply"),
+        }
     }
 
     /// Read one streaming frame (blocks until a line arrives).

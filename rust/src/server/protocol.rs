@@ -214,6 +214,115 @@ pub fn render_error(code: &str, message: &str, retry_after_ms: Option<u64>) -> S
     o.to_string()
 }
 
+/// Encoding of a `stats` admin reply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatsFormat {
+    /// Structured snapshot (`{"event":"stats","stats":{...}}`).
+    Json,
+    /// Prometheus text exposition carried as one JSON string
+    /// (`{"event":"stats","format":"prometheus","text":"..."}`).
+    Prometheus,
+}
+
+impl StatsFormat {
+    /// Stable wire name (the request's `format` field).
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            StatsFormat::Json => "json",
+            StatsFormat::Prometheus => "prometheus",
+        }
+    }
+}
+
+/// Parsed admin frame: `{"cmd": ...}` lines on a serving connection,
+/// dispatched *before* request parsing (they carry no prompt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdminCmd {
+    /// Live metrics scrape: `{"cmd":"stats"}`, optionally with
+    /// `"format":"prometheus"` for text exposition.
+    Stats { format: StatsFormat },
+}
+
+/// Detect and parse an admin frame. Returns `None` when the line is
+/// not an admin frame at all (no parseable object with a `cmd` key) —
+/// the caller falls through to [`parse_request`] and its error paths —
+/// and `Some(Err(..))` for a `cmd` frame that is malformed (unknown
+/// command or bad format), which deserves a structured error reply
+/// rather than an "empty prompt" one.
+pub fn parse_admin(line: &str) -> Option<Result<AdminCmd>> {
+    let v = Json::parse(line).ok()?;
+    let cmd = v.get("cmd")?.as_str();
+    Some(match cmd {
+        Some("stats") => {
+            match v.get("format").map(|f| f.as_str()) {
+                None | Some(Some("json")) => {
+                    Ok(AdminCmd::Stats { format: StatsFormat::Json })
+                }
+                Some(Some("prometheus")) => {
+                    Ok(AdminCmd::Stats { format: StatsFormat::Prometheus })
+                }
+                Some(other) => Err(anyhow::anyhow!(
+                    "unknown stats format {:?}",
+                    other.unwrap_or("<non-string>")
+                )),
+            }
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown admin command {other:?}")),
+        None => Err(anyhow::anyhow!("admin 'cmd' must be a string")),
+    })
+}
+
+/// Render a `stats` admin request line.
+pub fn render_stats_request(format: StatsFormat) -> String {
+    let mut o = Json::obj();
+    o.set("cmd", "stats".into());
+    if format != StatsFormat::Json {
+        o.set("format", format.wire_name().into());
+    }
+    o.to_string()
+}
+
+/// Render the JSON-snapshot reply to a `stats` admin frame.
+pub fn render_stats_response(stats: Json) -> String {
+    let mut o = Json::obj();
+    o.set("event", "stats".into()).set("stats", stats);
+    o.to_string()
+}
+
+/// Render the Prometheus-text reply to a `stats` admin frame (the
+/// exposition rides as one JSON string so the connection stays a
+/// JSON-lines stream).
+pub fn render_stats_text_response(text: &str) -> String {
+    let mut o = Json::obj();
+    o.set("event", "stats".into())
+        .set("format", "prometheus".into())
+        .set("text", text.into());
+    o.to_string()
+}
+
+/// One parsed `stats` reply, either encoding.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StatsReply {
+    /// Structured snapshot object.
+    Json(Json),
+    /// Prometheus text exposition.
+    Text(String),
+}
+
+/// Parse a `stats` reply line (the inverse of the render pair above).
+pub fn parse_stats_response(line: &str) -> Result<StatsReply> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    anyhow::ensure!(v.req_str("event")? == "stats", "not a stats reply");
+    if v.get("format").and_then(|f| f.as_str()) == Some("prometheus") {
+        return Ok(StatsReply::Text(v.req_str("text")?.to_string()));
+    }
+    let stats = v
+        .get("stats")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("stats reply missing 'stats' object"))?;
+    Ok(StatsReply::Json(stats))
+}
+
 /// One parsed streaming frame (see the module docs for the grammar).
 #[derive(Debug, Clone, PartialEq)]
 pub enum StreamFrame {
@@ -758,6 +867,54 @@ mod tests {
         resp.finish = FinishReason::Cancelled;
         let v = Json::parse(&render_response(&resp, &ByteTokenizer)).unwrap();
         assert_eq!(v.req_str("finish").unwrap(), "cancelled");
+    }
+
+    #[test]
+    fn admin_frames_parse_and_roundtrip() {
+        // Plain stats request, default JSON format.
+        let cmd = parse_admin(r#"{"cmd":"stats"}"#).unwrap().unwrap();
+        assert_eq!(cmd, AdminCmd::Stats { format: StatsFormat::Json });
+        assert_eq!(
+            parse_admin(&render_stats_request(StatsFormat::Json)).unwrap().unwrap(),
+            AdminCmd::Stats { format: StatsFormat::Json }
+        );
+        assert_eq!(
+            parse_admin(&render_stats_request(StatsFormat::Prometheus))
+                .unwrap()
+                .unwrap(),
+            AdminCmd::Stats { format: StatsFormat::Prometheus }
+        );
+        // Explicit format names.
+        let cmd = parse_admin(r#"{"cmd":"stats","format":"prometheus"}"#)
+            .unwrap()
+            .unwrap();
+        assert_eq!(cmd, AdminCmd::Stats { format: StatsFormat::Prometheus });
+        // Non-admin lines fall through (None), malformed admin errors.
+        assert!(parse_admin(r#"{"prompt":"x"}"#).is_none());
+        assert!(parse_admin("not json").is_none());
+        assert!(parse_admin(r#"{"cmd":"reboot"}"#).unwrap().is_err());
+        assert!(parse_admin(r#"{"cmd":7}"#).unwrap().is_err());
+        assert!(parse_admin(r#"{"cmd":"stats","format":"xml"}"#).unwrap().is_err());
+    }
+
+    #[test]
+    fn stats_replies_roundtrip() {
+        let mut snap = Json::obj();
+        snap.set("ts_us", 42usize.into());
+        let line = render_stats_response(snap.clone());
+        match parse_stats_response(&line).unwrap() {
+            StatsReply::Json(v) => assert_eq!(v.req_usize("ts_us").unwrap(), 42),
+            other => panic!("expected json reply, got {other:?}"),
+        }
+        let text = "# TYPE hsr_generated_tokens counter\nhsr_generated_tokens 7\n";
+        let line = render_stats_text_response(text);
+        match parse_stats_response(&line).unwrap() {
+            StatsReply::Text(t) => assert_eq!(t, text),
+            other => panic!("expected text reply, got {other:?}"),
+        }
+        assert!(parse_stats_response(r#"{"event":"token"}"#).is_err());
+        assert!(parse_stats_response(r#"{"event":"stats"}"#).is_err());
+        assert!(parse_stats_response("not json").is_err());
     }
 
     #[test]

@@ -97,7 +97,7 @@ pub fn power_fit(xs: &[f64], ys: &[f64]) -> Option<(f64, f64)> {
 
 /// A latency histogram over fixed log-spaced buckets (nanoseconds),
 /// cheap enough for the engine hot path.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Histogram {
     /// Bucket upper bounds in ns (last is +inf).
     bounds: Vec<u64>,
@@ -161,6 +161,20 @@ impl Histogram {
     /// Maximum observed value in ns.
     pub fn max_ns(&self) -> u64 {
         self.max_ns
+    }
+
+    /// Sum of all observations in ns.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns
+    }
+
+    /// Per-bucket `(upper_bound_ns, count)` pairs in ascending order;
+    /// the final overflow bucket has bound `None` (+inf). Counts are
+    /// per-bucket, not cumulative.
+    pub fn buckets(&self) -> impl Iterator<Item = (Option<u64>, u64)> + '_ {
+        self.counts.iter().enumerate().map(move |(i, &c)| {
+            (self.bounds.get(i).copied(), c)
+        })
     }
 
     /// Approximate percentile (bucket upper bound), p in [0,100].

@@ -13,6 +13,7 @@ use hsr_attn::engine::{
     Outcome, Router, RouterConfig, SchedulerConfig, StreamRecv,
 };
 use hsr_attn::model::Model;
+use hsr_attn::obs::TraceConfig;
 use hsr_attn::server::{Client, Server, ServerConfig, StreamFrame, WireRequest};
 use std::io::Write;
 use std::net::TcpStream;
@@ -215,9 +216,15 @@ fn router_restarts_panicked_worker_and_answers_everything() {
 /// disconnecting without reading, and a few zero-deadline requests —
 /// every request must reach exactly one terminal outcome, the server
 /// must answer after recovery, and the block ledger must balance.
+/// Tracing rides along: `{"cmd":"stats"}` scrapes must return valid
+/// snapshots mid-chaos, and both panics must leave non-empty
+/// flight-recorder dumps under the trace dir.
 #[test]
 fn chaos_panics_disconnects_and_overload() {
     with_watchdog(180, || {
+        let trace_dir = std::env::temp_dir()
+            .join(format!("hsr_chaos_trace_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&trace_dir);
         let cfg = EngineConfig {
             cache_capacity_tokens: 1 << 14,
             block_tokens: 16,
@@ -230,6 +237,10 @@ fn chaos_panics_disconnects_and_overload() {
             faults: FaultPlan::none()
                 .with(Fault { worker: 1, step: 12, kind: FaultKind::Panic })
                 .with(Fault { worker: 2, step: 20, kind: FaultKind::Panic }),
+            trace: TraceConfig {
+                trace_dir: Some(trace_dir.clone()),
+                ..Default::default()
+            },
             ..Default::default()
         };
         let rcfg = RouterConfig {
@@ -318,6 +329,40 @@ fn chaos_panics_disconnects_and_overload() {
                 tally
             }));
         }
+        // Mid-chaos scraper: the `{"cmd":"stats"}` admin surface must
+        // keep returning valid snapshots while panics, sheds, and
+        // disconnects are in flight — connection failures are tolerated
+        // (the pool is deliberately overloaded), protocol errors and
+        // panics are not.
+        let scraper = {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut scrapes = 0usize;
+                for k in 0..12 {
+                    if let Ok(mut c) = Client::connect(&addr) {
+                        if let Ok(v) = c.stats() {
+                            for key in ["ts_us", "counters", "gauges", "histograms"] {
+                                assert!(
+                                    v.get(key).is_some(),
+                                    "mid-chaos stats snapshot missing '{key}'"
+                                );
+                            }
+                            scrapes += 1;
+                        }
+                        if k % 3 == 0 {
+                            if let Ok(text) = c.stats_prometheus() {
+                                assert!(
+                                    text.contains("hsr_"),
+                                    "prometheus exposition empty mid-chaos"
+                                );
+                            }
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                scrapes
+            })
+        };
         let mut ok = 0;
         let mut err = 0;
         let mut io_err = 0;
@@ -336,6 +381,8 @@ fn chaos_panics_disconnects_and_overload() {
             "every sent request needs exactly one wire-level resolution"
         );
         assert!(ok >= 1, "some requests must actually complete");
+        let scrapes = scraper.join().expect("stats scraper thread");
+        assert!(scrapes >= 1, "no stats scrape succeeded during the chaos run");
 
         // Phase 3 — the pool must still answer after both panics.
         let mut recovered = false;
@@ -371,6 +418,27 @@ fn chaos_panics_disconnects_and_overload() {
         assert!(m.requests_rejected >= burst_shed as u64);
         assert!(m.deadline_aborts >= 1, "the pre-expired request must abort");
         assert!(m.requests_completed >= ok as u64);
+
+        // Both panicked workers (1 and 2, which each ran 12+ engine
+        // steps before the fault fired) must have left a parseable,
+        // non-empty flight-recorder dump.
+        for widx in [1usize, 2] {
+            let dump = trace_dir.join(format!("panic_worker{widx}.jsonl"));
+            let data = std::fs::read_to_string(&dump).unwrap_or_else(|e| {
+                panic!("missing flight-recorder dump {}: {e}", dump.display())
+            });
+            assert!(
+                data.lines().count() >= 1,
+                "flight-recorder dump {} is empty",
+                dump.display()
+            );
+            for line in data.lines() {
+                let v = hsr_attn::util::json::Json::parse(line)
+                    .unwrap_or_else(|e| panic!("dump line not JSON ({e}): {line:?}"));
+                assert!(v.get("ts_us").is_some() && v.get("span").is_some());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&trace_dir);
     });
 }
 

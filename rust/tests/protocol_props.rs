@@ -7,10 +7,11 @@
 use hsr_attn::engine::{Choice, FinishReason, Response};
 use hsr_attn::model::tokenizer::ByteTokenizer;
 use hsr_attn::server::{
-    parse_frame, parse_request, render_cancelled_frame_sibling,
-    render_choice_done_frame, render_done_frame, render_keepalive,
-    render_request, render_stream_error_sibling, render_token_frame,
-    StreamFrame, WireRequest,
+    parse_admin, parse_frame, parse_request, parse_stats_response,
+    render_cancelled_frame_sibling, render_choice_done_frame, render_done_frame,
+    render_keepalive, render_request, render_stats_request, render_stats_response,
+    render_stats_text_response, render_stream_error_sibling, render_token_frame,
+    AdminCmd, StatsFormat, StatsReply, StreamFrame, WireRequest,
 };
 use hsr_attn::util::json::Json;
 use hsr_attn::util::rng::Rng;
@@ -261,6 +262,137 @@ fn frame_byte_soup_never_panics() {
         let bytes: Vec<u8> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();
         let line = String::from_utf8_lossy(&bytes).into_owned();
         let _ = parse_frame(&line);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Admin frames ({"cmd":"stats"}) and their replies: render ↔ parse
+// identity for both encodings, and parse_admin / parse_stats_response
+// must never panic on hostile bytes.
+// ---------------------------------------------------------------------
+
+/// A random snapshot-shaped payload: nested objects with exactly-
+/// representable numbers (multiples of 0.25) and keys drawn from the
+/// escape-heavy [`PROMPT_CHARS`] pool, so the render → parse identity
+/// exercises the string escaper on both keys and values.
+fn random_stats_payload(rng: &mut Rng) -> Json {
+    let mut counters = Json::obj();
+    for _ in 0..rng.range(1, 7) {
+        let key: String = (0..rng.range(1, 12))
+            .map(|_| PROMPT_CHARS[rng.below(PROMPT_CHARS.len())])
+            .collect();
+        counters.set(&key, ((rng.below(1 << 20)) as f64 * 0.25).into());
+    }
+    let buckets: Vec<Json> = (0..rng.below(4))
+        .map(|i| {
+            let mut b = Json::obj();
+            b.set("ctx_log2", i.into())
+                .set("mean_fraction", (rng.below(5) as f64 * 0.25).into());
+            b
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("ts_us", rng.below(1 << 30).into())
+        .set("counters", counters)
+        .set("fired_fraction", Json::Arr(buckets));
+    o
+}
+
+#[test]
+fn stats_request_render_parse_round_trip() {
+    for format in [StatsFormat::Json, StatsFormat::Prometheus] {
+        let line = render_stats_request(format);
+        match parse_admin(&line) {
+            Some(Ok(AdminCmd::Stats { format: parsed })) => assert_eq!(
+                parsed, format,
+                "render->parse must be identity for {line:?}"
+            ),
+            other => panic!("stats request {line:?} parsed as {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn stats_reply_render_parse_round_trip() {
+    let mut rng = Rng::new(0x57a7);
+    for _ in 0..500 {
+        let payload = random_stats_payload(&mut rng);
+        let line = render_stats_response(payload.clone());
+        match parse_stats_response(&line) {
+            Ok(StatsReply::Json(v)) => assert_eq!(
+                v, payload,
+                "render->parse must be identity for {line:?}"
+            ),
+            other => panic!("json stats reply {line:?} parsed as {other:?}"),
+        }
+        // Prometheus text with the same hostile character pool: the
+        // exposition rides as one JSON string and must survive intact.
+        let text: String = (0..rng.below(64))
+            .map(|_| PROMPT_CHARS[rng.below(PROMPT_CHARS.len())])
+            .collect();
+        let line = render_stats_text_response(&text);
+        match parse_stats_response(&line) {
+            Ok(StatsReply::Text(t)) => assert_eq!(
+                t, text,
+                "render->parse must be identity for {line:?}"
+            ),
+            other => panic!("text stats reply {line:?} parsed as {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn admin_byte_soup_never_panics() {
+    let mut rng = Rng::new(0xad41);
+    for _ in 0..2000 {
+        let len = rng.below(200);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_admin(&line); // None/Err is fine; a panic fails
+        let _ = parse_stats_response(&line);
+    }
+    // Soup biased toward the admin grammar's own vocabulary reaches
+    // deeper into the dispatch than uniform bytes do.
+    let pool: &[u8] = b"{}[]\",:0123456789.eE+-truefalsnul\\/ \
+        cmdstatsformatjsonprometheuseventtextcountersgaugeshistograms";
+    for _ in 0..2000 {
+        let len = rng.below(160);
+        let bytes: Vec<u8> = (0..len).map(|_| pool[rng.below(pool.len())]).collect();
+        let line = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_admin(&line);
+        let _ = parse_stats_response(&line);
+    }
+}
+
+#[test]
+fn admin_truncations_and_mutations_never_panic() {
+    let mut rng = Rng::new(0xface);
+    let mut lines: Vec<String> = vec![
+        render_stats_request(StatsFormat::Json),
+        render_stats_request(StatsFormat::Prometheus),
+    ];
+    for _ in 0..50 {
+        lines.push(render_stats_response(random_stats_payload(&mut rng)));
+        lines.push(render_stats_text_response("# TYPE hsr_x counter\nhsr_x 1\n"));
+    }
+    for line in &lines {
+        for cut in 0..line.len() {
+            if line.is_char_boundary(cut) {
+                let _ = parse_admin(&line[..cut]);
+                let _ = parse_stats_response(&line[..cut]);
+            }
+        }
+    }
+    for _ in 0..500 {
+        let mut bytes =
+            lines[rng.below(lines.len())].clone().into_bytes();
+        for _ in 0..rng.range(1, 4) {
+            let i = rng.below(bytes.len());
+            bytes[i] = rng.below(256) as u8;
+        }
+        let mutated = String::from_utf8_lossy(&bytes).into_owned();
+        let _ = parse_admin(&mutated);
+        let _ = parse_stats_response(&mutated);
     }
 }
 

@@ -32,6 +32,13 @@
 #    (fork/join decode scenarios: parallel sampling n=1/4/16 and
 #    width-4 beam search on COW-forked chains — peak physical vs
 #    logical KV bytes, prefill-skip %, steady tok/s; synthetic model)
+#  * benches/e2e_serving.rs --obs-only        → BENCH_obs.json
+#    (observability: flight-recorder on-vs-off steady tok/s against
+#    the 3% overhead budget, empirical fired-fraction per context
+#    length vs the n^{-1/5} envelope, and a live double {"cmd":"stats"}
+#    scrape over TCP — required snapshot keys and counter monotonicity
+#    are asserted inside the bench, so a bad export surface fails this
+#    script; synthetic model)
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -87,6 +94,10 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "== fork/join scenarios smoke (BENCH_scenarios.json) =="
     cargo bench --bench e2e_serving -- --scenarios-only
     echo "report: $(cd .. && pwd)/BENCH_scenarios.json"
+
+    echo "== observability smoke: tracing overhead + live stats scrapes (BENCH_obs.json) =="
+    cargo bench --bench e2e_serving -- --obs-only
+    echo "report: $(cd .. && pwd)/BENCH_obs.json"
 
     echo "== serving throughput smoke (skips without artifacts) =="
     cargo bench --bench e2e_serving
